@@ -1,0 +1,59 @@
+//! Draft-model speculation (paper §7.3): EAGLE-lite on Mixtral.
+//!
+//! Runs the real AOT `draft` model as the drafter: the drafter keeps its
+//! own KV cache in sync with the target (ingesting emitted tokens even
+//! when speculation is disabled — the dynamic-disable support the paper
+//! added to vLLM, §6), proposes K tokens by K single-token draft steps,
+//! and the target verifies. Compare the utility landscape against n-gram:
+//! higher drafting cost (~5%/K) but higher acceptance, so K=1 becomes the
+//! sweet spot and static-K stops losing (paper Fig. 17).
+//!
+//!     make artifacts && cargo run --release --example eagle_speculation
+
+use cascade::config::{DrafterKind, EngineConfig};
+use cascade::coordinator::engine::Engine;
+use cascade::coordinator::scheduler::{Budget, Scheduler};
+use cascade::models::{default_artifacts_dir, Registry};
+use cascade::spec::policy::PolicyKind;
+use cascade::util::table::Table;
+use cascade::workload::{RequestStream, Workload};
+
+fn main() -> anyhow::Result<()> {
+    let registry = Registry::load(default_artifacts_dir())?;
+
+    let mut table = Table::new(
+        "mixtral + EAGLE-lite vs n-gram (real backend, math task)",
+        &["drafter", "policy", "TPOT(sim)", "ETR", "speedup vs k0"],
+    );
+
+    for drafter in [DrafterKind::Ngram, DrafterKind::EagleLite] {
+        let mut base_tpot = None;
+        for policy in ["k0", "k1", "k3", "cascade"] {
+            let cfg = EngineConfig { model: "mixtral".into(), drafter, ..Default::default() };
+            let mut engine = Engine::real(&registry, cfg, PolicyKind::parse(policy)?.build())?;
+            let stream =
+                RequestStream::new(Workload::by_name("math").unwrap(), 0xEA61E, 200);
+            let mut sched =
+                Scheduler::new(stream, Budget { max_tokens: 400, max_requests: 100 });
+            let run = sched.run(&mut engine)?;
+            let tpot = run.tpot_s();
+            if policy == "k0" {
+                base_tpot = Some(tpot);
+            }
+            table.row(vec![
+                format!("{drafter:?}"),
+                policy.into(),
+                format!("{:.2}ms", tpot * 1e3),
+                format!("{:.2}", run.mean_etr()),
+                format!("{:.2}x", base_tpot.unwrap() / tpot),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "Expected shape (paper 7.3): with n-gram, math loses at every static K;\n\
+         with the higher-accuracy draft model the losses shrink or flip, and\n\
+         Cascade matches the best column in both drafter regimes."
+    );
+    Ok(())
+}

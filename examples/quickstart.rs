@@ -1,0 +1,59 @@
+//! Quickstart: load an AOT-compiled MoE, serve one request with Cascade,
+//! and print the decode trace.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the smallest end-to-end path through all three layers: the
+//! Pallas/JAX artifacts (L1/L2) execute under PJRT while the Rust
+//! coordinator (L3) drafts, verifies, rejection-samples, and lets the
+//! Cascade manager tune the speculation length from measured utility.
+
+use cascade::config::EngineConfig;
+use cascade::coordinator::engine::Engine;
+use cascade::models::{default_artifacts_dir, Registry};
+use cascade::spec::policy::PolicyKind;
+use cascade::workload::{RequestStream, Task, Workload};
+
+fn main() -> anyhow::Result<()> {
+    let registry = Registry::load(default_artifacts_dir())?;
+
+    // A Mixtral-topology MoE (8 experts, top-2) with the Cascade policy.
+    let cfg = EngineConfig { model: "mixtral".into(), ..Default::default() };
+    let mut engine = Engine::real(&registry, cfg, PolicyKind::parse("cascade")?.build())?;
+
+    // One code-generation request (synthetic HumanEval-like workload).
+    let mut stream = RequestStream::new(Workload::single(Task::Code), 7, 200);
+    let request = stream.next_request();
+    println!(
+        "prompt ({} tokens):\n{}",
+        request.prompt.len(),
+        cascade::tokenizer::decode(&request.prompt)
+    );
+
+    let metrics = engine.serve_request(&request)?;
+
+    println!("--- decode trace (first 24 iterations) ---");
+    println!("{:>4} {:>6} {:>8} {:>9} {:>9} {:>10}", "iter", "K", "drafted", "accepted", "phase", "iter-time");
+    for (i, it) in metrics.iters.iter().take(24).enumerate() {
+        println!(
+            "{:>4} {:>6} {:>8} {:>9} {:>9?} {:>9.2}ms",
+            i,
+            it.k_chosen,
+            it.drafted,
+            it.accepted,
+            it.phase,
+            it.cost.total() * 1e3
+        );
+    }
+
+    println!("\n--- summary ---");
+    println!("tokens emitted     : {}", metrics.tokens_emitted());
+    println!("iterations         : {}", metrics.iters.len());
+    println!("effective token rate: {:.2} tok/iter", metrics.etr());
+    println!("TPOT (simulated GPU): {:.2} ms", metrics.tpot_s() * 1e3);
+    println!(
+        "speedup vs 1 tok/iter at baseline cost: {:.2}x",
+        (engine.cost.baseline_cost().total() / metrics.tpot_s())
+    );
+    Ok(())
+}

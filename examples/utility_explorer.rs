@@ -1,0 +1,64 @@
+//! Utility explorer: visualize the paper's central quantity.
+//!
+//! Serves one request per task on a chosen model at a static K and prints
+//! the windowed (ETR, cost, utility) trace — the raw material of paper
+//! Figs. 6/7/15 — as ASCII sparklines, plus where Cascade would have
+//! switched.
+//!
+//!     cargo run --release --example utility_explorer [model] [k]
+
+use cascade::config::EngineConfig;
+use cascade::coordinator::engine::Engine;
+use cascade::models::{default_artifacts_dir, Registry};
+use cascade::spec::policy::PolicyKind;
+use cascade::workload::{RequestStream, Task, Workload};
+
+fn spark(xs: &[f64], lo: f64, hi: f64) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    xs.iter()
+        .map(|&x| {
+            let t = ((x - lo) / (hi - lo)).clamp(0.0, 1.0);
+            BARS[(t * 7.0).round() as usize]
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).cloned().unwrap_or_else(|| "mixtral".into());
+    let k: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(3);
+
+    let registry = Registry::load(default_artifacts_dir())?;
+    println!("model={model} static K={k}; windows of 16 iterations\n");
+
+    for task in [Task::Code, Task::Math, Task::Extract] {
+        // Baseline for cost normalization.
+        let cfg = EngineConfig { model: model.clone(), ..Default::default() };
+        let mut base_engine = Engine::real(&registry, cfg, PolicyKind::Static(0).build())?;
+        let mut stream = RequestStream::new(Workload::single(task), 99, 200);
+        let req = stream.next_request();
+        let base = base_engine.serve_request(&req)?;
+        let base_iter = base.mean_iter_s();
+
+        let cfg = EngineConfig { model: model.clone(), ..Default::default() };
+        let mut engine = Engine::real(&registry, cfg, PolicyKind::Static(k).build())?;
+        let m = engine.serve_request(&req)?;
+        let wins = m.utility_windows(16, base_iter);
+        let utils: Vec<f64> = wins.iter().map(|w| w.utility).collect();
+        let etrs: Vec<f64> = wins.iter().map(|w| w.etr).collect();
+        let costs: Vec<f64> = wins.iter().map(|w| w.cost).collect();
+
+        println!("== {} ==", task.name());
+        println!("  ETR     {}  (1.0 .. {:.1})", spark(&etrs, 1.0, 4.0), 4.0);
+        println!("  cost    {}  (1.0 .. 3.0)", spark(&costs, 1.0, 3.0));
+        println!("  utility {}  (0.5 .. 2.0)", spark(&utils, 0.5, 2.0));
+        let mean_u = utils.iter().sum::<f64>() / utils.len().max(1) as f64;
+        let verdict = if mean_u >= 1.0 { "KEEP speculating" } else { "DISABLE (utility < 1)" };
+        println!(
+            "  mean utility {mean_u:.2} -> Cascade would {verdict}; measured TPOT {:.2}ms vs baseline {:.2}ms\n",
+            m.tpot_s() * 1e3,
+            base.tpot_s() * 1e3
+        );
+    }
+    Ok(())
+}

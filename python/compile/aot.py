@@ -1,0 +1,161 @@
+"""AOT pipeline: lower every (model, token-count) step variant to HLO text.
+
+HLO *text* (not `.serialize()`d HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage: (cd python && python -m compile.aot --out-dir ../artifacts)
+
+Outputs:
+  artifacts/<model>/step_t<T>.hlo.txt   one per token-count variant
+  artifacts/manifest.json               configs + shapes + variant paths,
+                                        the Rust model registry's input
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import DECODE_TOKEN_VARIANTS, MODELS
+from .model import example_args, make_param_step_fn, make_step_fn
+from .weights import flatten_weights, make_weights
+
+MANIFEST_VERSION = 3
+
+# Fixed input for the cross-layer golden test: the Rust runtime executes the
+# T=3 artifact with these inputs and must reproduce the eager-JAX outputs.
+GOLDEN_T = 3
+GOLDEN_TOKENS = [7, 42, 255]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(cfg, weights, t, impl):
+    """Lower the param-step form: weights are runtime parameters (see
+    weights.flatten_weights for why constants cannot be used)."""
+    step = make_param_step_fn(cfg, t, impl=impl)
+    lowered = jax.jit(step).lower(*example_args(cfg, t, weights=weights))
+    return to_hlo_text(lowered)
+
+
+def build_model(cfg, out_dir, impl, variants):
+    weights = make_weights(cfg)
+    model_dir = os.path.join(out_dir, cfg.name)
+    os.makedirs(model_dir, exist_ok=True)
+
+    # Weights: index-prefixed keys so lexicographic order == parameter order.
+    flat = flatten_weights(weights)
+    npz_path = os.path.join(model_dir, "weights.npz")
+    np.savez(npz_path, **{f"{i:03d}.{name}": np.asarray(a)
+                          for i, (name, a) in enumerate(flat)})
+    entry = {
+        "config": cfg.to_dict(),
+        "impl": impl,
+        "weights": {
+            "path": os.path.join(cfg.name, "weights.npz"),
+            "count": len(flat),
+            "names": [name for name, _ in flat],
+            "params": int(sum(int(np.prod(a.shape)) for _, a in flat)),
+        },
+        "variants": {},
+        "io": {
+            "inputs": [
+                {"name": "tokens", "dtype": "i32", "shape": ["T"]},
+                {"name": "cache_len", "dtype": "i32", "shape": []},
+                {"name": "kv", "dtype": "f32",
+                 "shape": [cfg.layers, 2, cfg.max_seq, cfg.kv_dim]},
+                {"name": "router_state", "dtype": "f32",
+                 "shape": [cfg.layers, cfg.hidden]},
+            ],
+            "outputs": [
+                {"name": "logits", "dtype": "f32", "shape": ["T", cfg.vocab]},
+                {"name": "topk_idx", "dtype": "i32",
+                 "shape": [cfg.layers, "T", max(cfg.top_k, 1)]},
+                {"name": "kv_out", "dtype": "f32",
+                 "shape": [cfg.layers, 2, cfg.max_seq, cfg.kv_dim]},
+                {"name": "router_state_seq", "dtype": "f32",
+                 "shape": [cfg.layers, "T", cfg.hidden]},
+            ],
+        },
+    }
+    # Golden outputs: eager execution of the lowered step semantics on a
+    # fixed input. Consumed by rust/tests/runtime_golden.rs to prove the
+    # AOT artifact reproduces JAX numerics through the PJRT text path.
+    step = jax.jit(make_step_fn(cfg, weights, GOLDEN_T, impl=impl))
+    kv = jnp.zeros((cfg.layers, 2, cfg.max_seq, cfg.kv_dim), jnp.float32)
+    rs = jnp.zeros((cfg.layers, cfg.hidden), jnp.float32)
+    logits, topk, kv_out, rs_out = step(
+        jnp.array(GOLDEN_TOKENS, jnp.int32), jnp.int32(0), kv, rs)
+    entry["golden"] = {
+        "tokens": GOLDEN_TOKENS,
+        "t": GOLDEN_T,
+        "logits_row0_head": np.asarray(logits)[0, :8].tolist(),
+        "logits_sum": float(jnp.sum(logits)),
+        "logits_abs_sum": float(jnp.sum(jnp.abs(logits))),
+        "argmax": np.asarray(jnp.argmax(logits, axis=-1)).tolist(),
+        "topk_idx": np.asarray(topk).tolist(),
+        "kv_abs_sum": float(jnp.sum(jnp.abs(kv_out))),
+        "rstate_abs_sum": float(jnp.sum(jnp.abs(rs_out))),
+    }
+
+    for t in variants:
+        t0 = time.time()
+        text = lower_variant(cfg, weights, t, impl)
+        rel = os.path.join(cfg.name, f"step_t{t}.hlo.txt")
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(text)
+        entry["variants"][str(t)] = {
+            "path": rel,
+            "tokens": t,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "hlo_bytes": len(text),
+        }
+        print(f"  {cfg.name} T={t}: {len(text)/1e3:.0f} kB "
+              f"({time.time()-t0:.1f}s)")
+    return entry
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--models", default="all",
+                   help="comma-separated model names, or 'all'")
+    p.add_argument("--impl", default="pallas", choices=["pallas", "ref"],
+                   help="kernel implementation lowered into the HLO")
+    p.add_argument("--max-t", type=int, default=max(DECODE_TOKEN_VARIANTS))
+    args = p.parse_args()
+
+    names = list(MODELS) if args.models == "all" else args.models.split(",")
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": MANIFEST_VERSION, "impl": args.impl, "models": {}}
+    for name in names:
+        cfg = MODELS[name]
+        variants = [t for t in DECODE_TOKEN_VARIANTS if t <= args.max_t]
+        if cfg.prefill_chunk not in variants:
+            variants = variants + [cfg.prefill_chunk]
+        print(f"[aot] lowering {name} ({cfg.mirrors}) impl={args.impl}")
+        manifest["models"][name] = build_model(cfg, args.out_dir, args.impl, variants)
+
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Model zoo configs — "mini" mirrors of the paper's Table 1.
+
+Routing topology (experts / top-k / shared experts) matches the paper
+exactly; hidden sizes are scaled down so the CPU PJRT client can run them.
+Paper-scale parameter counts live on the Rust side (`cost/` module), which
+converts measured expert activations into GPU memory traffic.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    # mirrors of the paper's Table 1 rows (see DESIGN.md §3)
+    mirrors: str
+    hidden: int = 64
+    layers: int = 2
+    heads: int = 4
+    head_dim: int = 16
+    vocab: int = 320
+    ffn: int = 128            # per-expert (or dense) FFN width
+    n_experts: int = 0        # 0 => dense FFN
+    top_k: int = 0
+    n_shared: int = 0         # always-active shared experts (DeepSeek/Qwen)
+    affinity: float = 0.0     # router EMA mixing weight (expert-token affinity)
+    max_seq: int = 384
+    prefill_chunk: int = 64
+    seed: int = 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def kv_dim(self) -> int:
+        return self.heads * self.head_dim
+
+    def to_dict(self):
+        d = asdict(self)
+        d["is_moe"] = self.is_moe
+        return d
+
+
+# Decode/verify token-count variants: T = K+1 for speculation length K in 0..7,
+# matching the paper's K sweep (Figs. 4, 8).
+DECODE_TOKEN_VARIANTS = list(range(1, 9))
+
+MODELS = {
+    "mixtral": ModelConfig(
+        name="mixtral", mirrors="Mixtral-8x7B FP8",
+        n_experts=8, top_k=2, n_shared=0, affinity=0.0, seed=101,
+    ),
+    "phi": ModelConfig(
+        name="phi", mirrors="Phi-3.5-MoE FP8",
+        n_experts=16, top_k=2, n_shared=0, affinity=0.20, seed=102,
+    ),
+    "olmoe": ModelConfig(
+        name="olmoe", mirrors="OLMoE FP8",
+        n_experts=64, top_k=8, n_shared=0, affinity=0.75, ffn=64, seed=103,
+    ),
+    "deepseek": ModelConfig(
+        name="deepseek", mirrors="DeepSeekMoE-16B FP16",
+        n_experts=64, top_k=6, n_shared=2, affinity=0.40, ffn=64, seed=104,
+    ),
+    "qwen": ModelConfig(
+        name="qwen", mirrors="Qwen1.5-MoE FP16",
+        n_experts=60, top_k=4, n_shared=4, affinity=0.45, ffn=64, seed=105,
+    ),
+    # Dense baseline (paper Fig. 4, green curves).
+    "llama": ModelConfig(
+        name="llama", mirrors="LLaMA-3-8B dense FP16",
+        n_experts=0, top_k=0, ffn=256, seed=106,
+    ),
+    # EAGLE-lite draft model (paper §7.3): small dense LM.
+    "draft": ModelConfig(
+        name="draft", mirrors="EAGLE drafter (Mixtral)",
+        hidden=32, layers=1, heads=2, head_dim=16, ffn=64,
+        n_experts=0, top_k=0, seed=107,
+    ),
+}

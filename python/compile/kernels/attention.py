@@ -1,0 +1,113 @@
+"""Pallas kernel: cached causal decode attention with online softmax.
+
+Verification attends the T in-flight tokens (1 + K speculative) against the
+full KV cache. The paper (§2.4) notes attention is ~8% of MoE iteration time
+and stable with K; this kernel keeps it that way by streaming the KV cache
+through VMEM in blocks with a flash-style online-softmax accumulator, so the
+working set is independent of cache length.
+
+Schedule: grid = (heads, S/BS). The query block q[T, D] for head h stays
+VMEM-resident across all KV blocks; each step loads k/v[BS, D], updates the
+running max m[T], denominator l[T], and accumulator acc[T, D] (stored in the
+auxiliary outputs so the pattern is portable to interpret mode), and the
+final KV step normalizes. Masking (causality + cache length) is precomputed
+by the caller as bool[T, S] — on real TPU this would be fused via iota, but
+the mask is T·S bits and T ≤ 64, so it is VMEM-trivial either way.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *, scale, nb):
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                      # [T, D] (head-blocked)
+    k = k_ref[0]                      # [BS, D]
+    v = v_ref[0]                      # [BS, D]
+    mask = mask_ref[...]              # [T, BS]
+
+    s = jnp.dot(q, k.T) * scale       # [T, BS]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...][:, 0]         # [T]
+    l_prev = l_ref[...][:, 0]         # [T]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    # Guard fully-masked rows: exp(NEG_INF - NEG_INF) would be exp(0).
+    alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_cur))
+    p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)  # [T, BS]
+    l_cur = alpha * l_prev + jnp.sum(p, axis=1)
+
+    o_ref[0] = alpha[:, None] * o_ref[0] + jnp.dot(p, v)
+    m_ref[...] = m_cur[:, None]
+    l_ref[...] = l_cur[:, None]
+
+    @pl.when(b == nb - 1)
+    def _finalize():
+        l = l_ref[...][:, 0]
+        o_ref[0] = o_ref[0] / jnp.maximum(l, 1e-30)[:, None]
+
+
+def attention(q, k, v, mask, scale, *, block_s=128, interpret=True):
+    """Cached multi-head attention. See `ref.attention_ref` for semantics.
+
+    Args:
+      q:    f32[T, Hh, D]
+      k:    f32[S, Hh, D]  (cache already updated with the new tokens)
+      v:    f32[S, Hh, D]
+      mask: bool[T, S]
+      scale: float
+    Returns:
+      f32[T, Hh, D]
+    """
+    t, hh, d = q.shape
+    s = k.shape[0]
+    block_s = min(block_s, s)
+    assert s % block_s == 0, f"S={s} must be a multiple of block_s={block_s}"
+    nb = s // block_s
+
+    qh = jnp.transpose(q, (1, 0, 2))  # [Hh, T, D]
+    kh = jnp.transpose(k, (1, 0, 2))  # [Hh, S, D]
+    vh = jnp.transpose(v, (1, 0, 2))
+
+    out, _, _ = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, nb=nb),
+        grid=(hh, nb),
+        in_specs=[
+            pl.BlockSpec((1, t, d), lambda h, b: (h, 0, 0)),       # q resident
+            pl.BlockSpec((1, block_s, d), lambda h, b: (h, b, 0)),  # k streamed
+            pl.BlockSpec((1, block_s, d), lambda h, b: (h, b, 0)),  # v streamed
+            pl.BlockSpec((t, block_s), lambda h, b: (0, b)),        # mask
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t, d), lambda h, b: (h, 0, 0)),  # acc / output
+            pl.BlockSpec((t, 1), lambda h, b: (0, 0)),        # running max
+            pl.BlockSpec((t, 1), lambda h, b: (0, 0)),        # running denom
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((hh, t, d), q.dtype),
+            jax.ShapeDtypeStruct((t, 1), q.dtype),
+            jax.ShapeDtypeStruct((t, 1), q.dtype),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh, mask)
+    return jnp.transpose(out, (1, 0, 2))
+
+
+def vmem_bytes(t, d, block_s, dtype_bytes=4):
+    """VMEM working set per grid step (perf model, DESIGN §7)."""
+    resident = (t * d * 2 + 2 * t) * dtype_bytes          # q, acc, m, l
+    streamed = (2 * block_s * d) * dtype_bytes            # k, v block
+    scratch = (2 * t * block_s) * dtype_bytes             # scores, p
+    return resident + streamed + scratch

@@ -1,0 +1,95 @@
+"""Pallas kernel: top-k-routed Mixture-of-Experts FFN (SwiGLU).
+
+This is the paper's verification hot-spot: for T in-flight tokens (1 original
++ K speculative), each token routes to `top_k` of E experts, and iteration
+latency is governed by how many *unique* experts must be fetched (paper §2.4).
+
+Kernel schedule (TPU mapping, see DESIGN.md §Hardware-Adaptation):
+  grid = (E,) — one expert per grid step. Each step stages that expert's
+  (W1[e], W2[e]) block HBM→VMEM (the expensive movement the paper counts),
+  keeps the token block x[T,H] VMEM-resident across all steps, computes the
+  SwiGLU FFN for every token, and accumulates `gate_weight * y` into the
+  output block under the routing mask. Token counts are tiny (T ≤ 64) while
+  expert weights dominate bytes — the weight-stationary-per-expert schedule
+  is exactly how the data movement the paper models is laid out.
+
+Runs with interpret=True: CPU PJRT cannot execute Mosaic custom-calls, so
+the interpreter lowers the same schedule to portable HLO (a sequential scan
+over the expert grid with dynamic slices — semantics preserved).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_ffn_kernel(x_ref, idx_ref, gates_ref, w1_ref, w2_ref, o_ref, *, n_f):
+    e = pl.program_id(0)
+
+    # Zero the accumulator on the first expert step (the output block is
+    # revisited by every grid step).
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                        # [T, H]   (VMEM-resident)
+    w1 = w1_ref[...]                      # [1, H, 2F] — this expert's block
+    w2 = w2_ref[...]                      # [1, F, H]
+
+    # Per-token routing weight for expert e: sum over the top-k slots.
+    idx = idx_ref[...]                    # [T, K]
+    gates = gates_ref[...]                # [T, K]
+    weight = jnp.sum(jnp.where(idx == e, gates, 0.0), axis=1)  # [T]
+
+    h = jnp.dot(x, w1[0])                 # [T, 2F] — MXU matmul
+    gate, up = h[:, :n_f], h[:, n_f:]
+    act = gate * (1.0 / (1.0 + jnp.exp(-gate))) * up  # SwiGLU
+    y = jnp.dot(act, w2[0])               # [T, H]
+
+    o_ref[...] += weight[:, None] * y
+
+
+def moe_ffn(x, topk_idx, gates, w1, w2, *, interpret=True):
+    """Routed expert FFN. See `ref.moe_ffn_ref` for the semantics.
+
+    Args:
+      x:        f32[T, H]
+      topk_idx: i32[T, K]
+      gates:    f32[T, K]
+      w1:       f32[E, H, 2F]
+      w2:       f32[E, F, H]
+    Returns:
+      f32[T, H]
+    """
+    t, h = x.shape
+    e, _, f2 = w1.shape
+    n_f = f2 // 2
+    k = topk_idx.shape[1]
+    return pl.pallas_call(
+        functools.partial(_moe_ffn_kernel, n_f=n_f),
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((t, h), lambda i: (0, 0)),        # x: resident
+            pl.BlockSpec((t, k), lambda i: (0, 0)),        # topk_idx
+            pl.BlockSpec((t, k), lambda i: (0, 0)),        # gates
+            pl.BlockSpec((1, h, f2), lambda i: (i, 0, 0)),  # W1[e] streamed
+            pl.BlockSpec((1, n_f, h), lambda i: (i, 0, 0)),  # W2[e] streamed
+        ],
+        out_specs=pl.BlockSpec((t, h), lambda i: (0, 0)),  # accumulator
+        out_shape=jax.ShapeDtypeStruct((t, h), x.dtype),
+        interpret=interpret,
+    )(x, topk_idx, gates, w1, w2)
+
+
+def vmem_bytes(t, h, n_f, k, dtype_bytes=4):
+    """Estimated VMEM working set of one grid step (perf model, DESIGN §7).
+
+    Resident: x[T,H] + out[T,H] + idx/gates[T,K]*2; streamed per step:
+    W1[1,H,2F] + W2[1,F,H]; intermediates h[T,2F], act[T,F], y[T,H].
+    """
+    resident = (2 * t * h + 2 * t * k) * dtype_bytes
+    streamed = (h * 2 * n_f + n_f * h) * dtype_bytes
+    scratch = (t * 2 * n_f + t * n_f + t * h) * dtype_bytes
+    return resident + streamed + scratch

@@ -1,0 +1,58 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+These are the ground truth that `moe_ffn.py` and `attention.py` are tested
+against (pytest + hypothesis in python/tests/). They are also a selectable
+AOT implementation (`aot.py --impl ref`) used to cross-check whole-model
+numerics and as the fast path for large experiment sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def moe_ffn_ref(x, topk_idx, gates, w1, w2):
+    """Top-k routed expert FFN, SwiGLU activation.
+
+    Args:
+      x:        f32[T, H]   token activations
+      topk_idx: i32[T, K]   selected expert ids per token
+      gates:    f32[T, K]   routing weights per selected expert
+      w1:       f32[E, H, 2F]  fused gate+up projections
+      w2:       f32[E, F, H]   down projection
+    Returns:
+      f32[T, H]
+    """
+    E = w1.shape[0]
+    F = w1.shape[2] // 2
+    # Dense formulation: per-token per-expert weight (0 if not routed).
+    # weight[t, e] = sum_k gates[t, k] * [topk_idx[t, k] == e]
+    onehot = jnp.sum(
+        (topk_idx[:, :, None] == jnp.arange(E)[None, None, :]) * gates[:, :, None],
+        axis=1,
+    )  # [T, E]
+    h = jnp.einsum("th,ehf->etf", x, w1)  # [E, T, 2F]
+    act = silu(h[..., :F]) * h[..., F:]   # [E, T, F]
+    y = jnp.einsum("etf,efh->eth", act, w2)  # [E, T, H]
+    return jnp.einsum("eth,te->th", y, onehot)
+
+
+def attention_ref(q, k, v, mask, scale):
+    """Multi-head causal cached attention.
+
+    Args:
+      q:     f32[T, Hh, D]  queries for the T in-flight tokens
+      k:     f32[S, Hh, D]  full key cache (already updated with new tokens)
+      v:     f32[S, Hh, D]  full value cache
+      mask:  bool[T, S]     True where attention is allowed
+      scale: float
+    Returns:
+      f32[T, Hh, D]
+    """
+    scores = jnp.einsum("thd,shd->hts", q, k) * scale
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hts,shd->thd", p, v)

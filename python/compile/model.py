@@ -1,0 +1,219 @@
+"""L2: the MoE transformer decode/verify step function (JAX).
+
+One AOT-compiled `step` processes T in-flight tokens (T = 1 + K speculative
+draft tokens during verification, or a prefill chunk) against a functional
+KV cache. The router's top-k choices are *returned* so the Rust coordinator
+can count unique activated experts — the quantity that drives MoE
+verification cost in the paper (§2.4).
+
+Expert-token affinity (paper §2.4, [22,24]) is modeled explicitly: the
+router input mixes the current activation with a per-layer EMA of previous
+activations (`router_state`) weighted by `cfg.affinity`. High affinity
+(OLMoE) makes consecutive tokens route alike (cheap verification); zero
+affinity (Mixtral) reproduces the balls-in-buckets worst case.
+
+Step contract (all shapes static per (model, T) variant):
+  inputs : tokens i32[T], cache_len i32[], kv f32[L,2,S,KVD], rstate f32[L,H]
+  outputs: logits f32[T,V], topk_idx i32[L,T,Kr], kv_out, rstate_out
+with Kr = max(top_k, 1) (dense models emit -1s so the output arity is
+uniform across the zoo).
+
+Writes to the KV cache land at positions [cache_len, cache_len+T); the
+coordinator advances cache_len only by the number of *accepted* tokens, so
+rejected speculative KV entries are overwritten by the next step — the same
+lookahead-slot reuse vLLM's scheduler performs (paper Fig. 14).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import attention as attn_k
+from .kernels import moe_ffn as moe_k
+from .kernels import ref
+
+ROUTER_EMA = 0.5  # per-token decay of the affinity EMA state
+
+
+def rms_norm(x, g, eps=1e-5):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def _rope(x, positions, head_dim):
+    """Rotary position embedding over the last dim of [T, Hh, D]."""
+    half = head_dim // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(ang)[:, None, :], jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _router_inputs(x, state, affinity):
+    """Sequential EMA over the T tokens: token t routes on a mix of its own
+    activation and the EMA of activations before it.
+
+    Returns (router_in [T,H], state_seq [T,H]) where state_seq[i] is the EMA
+    *after* consuming token i. The full trajectory is returned (not just the
+    final state) so the serving engine can roll the router state back to the
+    last *accepted* speculative token — rejected drafts must not pollute
+    future routing (see rust/tests/runtime_golden.rs).
+    """
+
+    def body(s, xt):
+        r = (1.0 - affinity) * xt + affinity * s
+        s_next = ROUTER_EMA * s + (1.0 - ROUTER_EMA) * xt
+        return s_next, (r, s_next)
+
+    _, (r, state_seq) = jax.lax.scan(body, state, x)
+    return r, state_seq
+
+
+def _ffn_dense(x, layer, impl):
+    h = x @ layer["w1"]
+    f = layer["w2"].shape[0]
+    act = ref.silu(h[:, :f]) * h[:, f:]
+    return act @ layer["w2"]
+
+
+def _topk(logits, k):
+    """Iterative argmax top-k.
+
+    `jax.lax.top_k` lowers (jax >= 0.5) to a `topk(..., largest=true)` HLO
+    instruction that the xla_extension 0.5.1 text parser rejects; k <= 8 here
+    so k rounds of argmax+mask lower to plain reduces and parse everywhere.
+    Ties resolve to the lowest index, matching lax.top_k.
+    """
+    vals, idxs = [], []
+    masked = logits
+    for _ in range(k):
+        i = jnp.argmax(masked, axis=-1)                # [T]
+        v = jnp.take_along_axis(masked, i[:, None], axis=-1)[:, 0]
+        vals.append(v)
+        idxs.append(i.astype(jnp.int32))
+        masked = masked.at[jnp.arange(logits.shape[0]), i].set(-jnp.inf)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def _moe_block(x, layer, cfg: ModelConfig, state, impl):
+    """Returns (y [T,H], topk_idx [T,k], state_seq [T,H])."""
+    router_in, state_seq = _router_inputs(x, state, cfg.affinity)
+    logits = router_in @ layer["router"]               # [T, E]
+    gate_logits, topk_idx = _topk(logits, cfg.top_k)
+    gates = jax.nn.softmax(gate_logits, axis=-1)       # [T, k]
+
+    if impl == "pallas":
+        y = moe_k.moe_ffn(x, topk_idx, gates, layer["w1"], layer["w2"])
+    else:
+        y = ref.moe_ffn_ref(x, topk_idx, gates, layer["w1"], layer["w2"])
+
+    if cfg.n_shared > 0:
+        # Shared experts are always active (DeepSeek/Qwen, Table 1): route
+        # every token to each shared expert with unit gate.
+        t = x.shape[0]
+        sh_idx = jnp.tile(jnp.arange(cfg.n_shared, dtype=jnp.int32), (t, 1))
+        sh_gates = jnp.ones((t, cfg.n_shared), jnp.float32)
+        if impl == "pallas":
+            y = y + moe_k.moe_ffn(x, sh_idx, sh_gates, layer["shared_w1"], layer["shared_w2"])
+        else:
+            y = y + ref.moe_ffn_ref(x, sh_idx, sh_gates, layer["shared_w1"], layer["shared_w2"])
+    return y, topk_idx, state_seq
+
+
+def make_step_fn(cfg: ModelConfig, weights, t: int, impl: str = "pallas"):
+    """Builds step(tokens, cache_len, kv, rstate) for a fixed token count T."""
+    s, hh, d = cfg.max_seq, cfg.heads, cfg.head_dim
+    kr = max(cfg.top_k, 1)
+    scale = 1.0 / (d ** 0.5)
+
+    def step(tokens, cache_len, kv, rstate):
+        positions = cache_len + jnp.arange(t, dtype=jnp.int32)  # [T]
+        x = weights["embed"][tokens]                            # [T, H]
+        all_topk = []
+        new_rstate = []
+        kv_out = kv
+
+        for li, layer in enumerate(weights["layers"]):
+            xn = rms_norm(x, layer["attn_norm"])
+            q = _rope((xn @ layer["wq"]).reshape(t, hh, d), positions, d)
+            k_new = _rope((xn @ layer["wk"]).reshape(t, hh, d), positions, d)
+            v_new = (xn @ layer["wv"]).reshape(t, hh, d)
+
+            # Functional cache update at [cache_len, cache_len+T).
+            k_cache = jax.lax.dynamic_update_slice(
+                kv_out[li, 0], k_new.reshape(t, -1), (cache_len, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                kv_out[li, 1], v_new.reshape(t, -1), (cache_len, 0))
+            kv_out = kv_out.at[li, 0].set(k_cache).at[li, 1].set(v_cache)
+
+            # Causality + cache-length mask: token t_q attends to positions
+            # <= cache_len + t_q.
+            key_pos = jnp.arange(s, dtype=jnp.int32)[None, :]
+            mask = key_pos <= positions[:, None]                # [T, S]
+
+            kf = k_cache.reshape(s, hh, d)
+            vf = v_cache.reshape(s, hh, d)
+            if impl == "pallas":
+                o = attn_k.attention(q, kf, vf, mask, scale)
+            else:
+                o = ref.attention_ref(q, kf, vf, mask, scale)
+            x = x + o.reshape(t, -1) @ layer["wo"]
+
+            xn = rms_norm(x, layer["ffn_norm"])
+            if cfg.is_moe:
+                y, topk_idx, st = _moe_block(xn, layer, cfg, rstate[li], impl)
+            else:
+                y = _ffn_dense(xn, layer, impl)
+                topk_idx = jnp.full((t, kr), -1, jnp.int32)
+                st = jnp.tile(rstate[li][None, :], (t, 1))  # unchanged
+            x = x + y
+            all_topk.append(topk_idx)
+            new_rstate.append(st)
+
+        logits = rms_norm(x, weights["final_norm"]) @ weights["unembed"]
+        return (
+            logits,                                   # f32[T, V]
+            jnp.stack(all_topk),                      # i32[L, T, Kr]
+            kv_out,                                   # f32[L, 2, S, KVD]
+            # Per-token router-state trajectory: the engine commits the row
+            # at the last accepted position (rejected drafts roll back).
+            jnp.stack(new_rstate),                    # f32[L, T, H]
+        )
+
+    return step
+
+
+def make_param_step_fn(cfg: ModelConfig, t: int, impl: str = "pallas"):
+    """Step function taking flattened weights as leading parameters.
+
+    Weights must be arguments (not baked constants) for the AOT path:
+    `as_hlo_text` elides large constants, which the old XLA text parser
+    reads back as zeros. The Rust runtime uploads `weights.npz` once and
+    passes device buffers on every step.
+    """
+    from .weights import unflatten_weights
+
+    def step(flat_weights, tokens, cache_len, kv, rstate):
+        w = unflatten_weights(cfg, flat_weights)
+        return make_step_fn(cfg, w, t, impl=impl)(tokens, cache_len, kv, rstate)
+
+    return step
+
+
+def example_args(cfg: ModelConfig, t: int, weights=None):
+    """ShapeDtypeStructs for lowering; prepends flattened weight specs when
+    `weights` is given (the param-step form)."""
+    base = (
+        jax.ShapeDtypeStruct((t,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.layers, 2, cfg.max_seq, cfg.kv_dim), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.layers, cfg.hidden), jnp.float32),
+    )
+    if weights is None:
+        return base
+    from .weights import flatten_weights
+
+    flat = tuple(
+        jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in flatten_weights(weights)
+    )
+    return (flat,) + base

@@ -1,0 +1,98 @@
+"""Deterministic seeded weight generation for the model zoo.
+
+Weights are folded into the AOT HLO as constants, so the Rust request path
+feeds only (tokens, cache_len, kv, router_state). Seeding is per-model-name
+so artifacts are reproducible byte-for-byte across `make artifacts` runs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+
+
+def _init(key, shape, scale):
+    return (jax.random.normal(key, shape) * scale).astype(jnp.float32)
+
+
+def flatten_weights(w):
+    """Deterministic (name, array) flattening.
+
+    Weights are passed to the AOT step function as *parameters* (not baked
+    constants): `as_hlo_text` elides large constants as `{...}`, which the
+    xla_extension 0.5.1 text parser silently reads as zeros. The Rust
+    runtime loads `weights.npz` and feeds the arrays in exactly this order
+    (keys are index-prefixed in the npz, so lexicographic order matches).
+    """
+    items = [("embed", w["embed"]), ("final_norm", w["final_norm"]),
+             ("unembed", w["unembed"])]
+    for li, layer in enumerate(w["layers"]):
+        for key in sorted(layer.keys()):
+            items.append((f"layer{li}.{key}", layer[key]))
+    return items
+
+
+def unflatten_weights(cfg: ModelConfig, arrays):
+    """Inverse of `flatten_weights` given the model config."""
+    arrays = list(arrays)
+    w = {"embed": arrays[0], "final_norm": arrays[1], "unembed": arrays[2]}
+    i = 3
+    layers = []
+    # Key order must match flatten_weights: sorted layer keys.
+    template = _layer_keys(cfg)
+    for _ in range(cfg.layers):
+        layer = {}
+        for key in template:
+            layer[key] = arrays[i]
+            i += 1
+        layers.append(layer)
+    w["layers"] = layers
+    assert i == len(arrays), (i, len(arrays))
+    return w
+
+
+def _layer_keys(cfg: ModelConfig):
+    keys = ["attn_norm", "ffn_norm", "wk", "wo", "wq", "wv", "w1", "w2"]
+    if cfg.is_moe:
+        keys.append("router")
+        if cfg.n_shared > 0:
+            keys.extend(["shared_w1", "shared_w2"])
+    return sorted(keys)
+
+
+def make_weights(cfg: ModelConfig):
+    """Returns a pytree (dict) of all model parameters."""
+    key = jax.random.PRNGKey(cfg.seed)
+    ks = iter(jax.random.split(key, 16 + 8 * cfg.layers))
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab
+    kvd = cfg.kv_dim
+    s_attn = 0.6 / (h ** 0.5)
+    s_ffn = 0.6 / (h ** 0.5)
+
+    w = {
+        "embed": _init(next(ks), (v, h), 1.0),
+        "unembed": _init(next(ks), (h, v), 1.2 / (h ** 0.5)),
+        "final_norm": jnp.ones((h,), jnp.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.layers):
+        layer = {
+            "attn_norm": jnp.ones((h,), jnp.float32),
+            "ffn_norm": jnp.ones((h,), jnp.float32),
+            "wq": _init(next(ks), (h, kvd), s_attn),
+            "wk": _init(next(ks), (h, kvd), s_attn),
+            "wv": _init(next(ks), (h, kvd), s_attn),
+            "wo": _init(next(ks), (kvd, h), s_attn),
+        }
+        if cfg.is_moe:
+            layer["router"] = _init(next(ks), (h, cfg.n_experts), 1.5 / (h ** 0.5))
+            layer["w1"] = _init(next(ks), (cfg.n_experts, h, 2 * f), s_ffn)
+            layer["w2"] = _init(next(ks), (cfg.n_experts, f, h), s_ffn)
+            if cfg.n_shared > 0:
+                layer["shared_w1"] = _init(next(ks), (cfg.n_shared, h, 2 * f), s_ffn)
+                layer["shared_w2"] = _init(next(ks), (cfg.n_shared, f, h), s_ffn)
+        else:
+            layer["w1"] = _init(next(ks), (h, 2 * f), s_ffn)
+            layer["w2"] = _init(next(ks), (f, h), s_ffn)
+        w["layers"].append(layer)
+    return w

@@ -1,0 +1,113 @@
+"""Unit tests for L2 building blocks: custom top-k (the lax.top_k
+replacement that must parse under XLA 0.5.1), RoPE, RMSNorm, and the
+router-affinity EMA."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import ROUTER_EMA, _router_inputs, _rope, _topk, rms_norm
+
+
+class TestTopK:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        t=st.integers(1, 8),
+        e=st.sampled_from([4, 8, 16, 64]),
+        k=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_lax_top_k(self, t, e, k, seed):
+        k = min(k, e)
+        rng = np.random.default_rng(seed)
+        logits = jnp.asarray(rng.normal(size=(t, e)), jnp.float32)
+        vals, idxs = _topk(logits, k)
+        lvals, lidxs = jax.lax.top_k(logits, k)
+        np.testing.assert_allclose(vals, lvals, rtol=1e-6)
+        np.testing.assert_array_equal(idxs, lidxs)
+
+    def test_ties_pick_lowest_index(self):
+        logits = jnp.array([[1.0, 1.0, 0.5]], jnp.float32)
+        _, idxs = _topk(logits, 2)
+        assert idxs[0, 0] == 0 and idxs[0, 1] == 1
+
+    def test_k_equals_e(self):
+        logits = jnp.array([[0.3, 0.1, 0.2]], jnp.float32)
+        _, idxs = _topk(logits, 3)
+        assert set(np.asarray(idxs[0]).tolist()) == {0, 1, 2}
+
+
+class TestRmsNorm:
+    def test_unit_scale_normalizes(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(4, 32)) * 7.0, jnp.float32)
+        y = rms_norm(x, jnp.ones((32,), jnp.float32))
+        rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+    def test_scale_invariance(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(2, 16)), jnp.float32)
+        g = jnp.ones((16,), jnp.float32)
+        a = rms_norm(x, g)
+        b = rms_norm(5.0 * x, g)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+class TestRope:
+    def test_preserves_norm(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(3, 2, 16)), jnp.float32)
+        pos = jnp.array([0, 5, 77], jnp.int32)
+        y = _rope(x, pos, 16)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1), rtol=1e-5
+        )
+
+    def test_position_zero_is_identity(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(1, 2, 16)), jnp.float32)
+        y = _rope(x, jnp.array([0], jnp.int32), 16)
+        np.testing.assert_allclose(x, y, atol=1e-6)
+
+    def test_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m - n."""
+        rng = np.random.default_rng(4)
+        q = jnp.asarray(rng.normal(size=(1, 1, 16)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 1, 16)), jnp.float32)
+
+        def dot(m, n):
+            qm = _rope(q, jnp.array([m], jnp.int32), 16)
+            kn = _rope(k, jnp.array([n], jnp.int32), 16)
+            return float(jnp.sum(qm * kn))
+
+        np.testing.assert_allclose(dot(3, 1), dot(10, 8), rtol=1e-4)
+        np.testing.assert_allclose(dot(7, 7), dot(0, 0), rtol=1e-4)
+
+
+class TestRouterEma:
+    def test_zero_affinity_routes_on_activation(self):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+        s0 = jnp.zeros((8,), jnp.float32)
+        r, _ = _router_inputs(x, s0, 0.0)
+        np.testing.assert_allclose(r, x, atol=1e-7)
+
+    def test_state_seq_matches_manual_recurrence(self):
+        rng = np.random.default_rng(6)
+        x = jnp.asarray(rng.normal(size=(3, 4)), jnp.float32)
+        s0 = jnp.asarray(rng.normal(size=(4,)), jnp.float32)
+        _, seq = _router_inputs(x, s0, 0.5)
+        s = s0
+        for i in range(3):
+            s = ROUTER_EMA * s + (1.0 - ROUTER_EMA) * x[i]
+            np.testing.assert_allclose(seq[i], s, rtol=1e-6)
+
+    def test_full_affinity_ignores_current_token(self):
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.normal(size=(2, 4)), jnp.float32)
+        s0 = jnp.asarray(rng.normal(size=(4,)), jnp.float32)
+        r, _ = _router_inputs(x, s0, 1.0)
+        np.testing.assert_allclose(r[0], s0, atol=1e-7)

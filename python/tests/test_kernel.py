@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes/ranks; fixed cases pin the degenerate corners
+(single token, unanimous routing, zero gates, fully-masked rows, block
+boundaries). Tolerances are f32 accumulation-order tolerances.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import moe_ffn as moe_k
+from compile.kernels import ref
+
+RTOL, ATOL = 2e-5, 2e-5
+
+
+def _moe_case(rng, t, e, k, h=32, f=16, gate_scale=1.0):
+    x = jnp.asarray(rng.normal(size=(t, h)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, e, size=(t, k)), jnp.int32)
+    gates = jnp.asarray(rng.random(size=(t, k)) * gate_scale, jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(e, h, 2 * f)) * 0.2, jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(e, f, h)) * 0.2, jnp.float32)
+    return x, idx, gates, w1, w2
+
+
+class TestMoeFfn:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        t=st.integers(1, 16),
+        e=st.sampled_from([1, 2, 8, 16, 64]),
+        k=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, t, e, k, seed):
+        k = min(k, e)
+        rng = np.random.default_rng(seed)
+        args = _moe_case(rng, t, e, k)
+        out = moe_k.moe_ffn(*args)
+        want = ref.moe_ffn_ref(*args)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    def test_single_token_single_expert(self):
+        rng = np.random.default_rng(0)
+        args = _moe_case(rng, 1, 1, 1)
+        np.testing.assert_allclose(
+            moe_k.moe_ffn(*args), ref.moe_ffn_ref(*args), rtol=RTOL, atol=ATOL)
+
+    def test_zero_gates_give_zero_output(self):
+        rng = np.random.default_rng(1)
+        x, idx, _, w1, w2 = _moe_case(rng, 4, 8, 2)
+        gates = jnp.zeros_like(idx, dtype=jnp.float32)
+        out = moe_k.moe_ffn(x, idx, gates, w1, w2)
+        np.testing.assert_allclose(out, jnp.zeros_like(x), atol=1e-7)
+
+    def test_all_tokens_one_expert(self):
+        """Unanimous routing == plain dense SwiGLU through that expert."""
+        rng = np.random.default_rng(2)
+        x, _, _, w1, w2 = _moe_case(rng, 6, 8, 2)
+        idx = jnp.full((6, 2), 3, jnp.int32)
+        gates = jnp.concatenate(
+            [jnp.full((6, 1), 0.25), jnp.full((6, 1), 0.75)], axis=1
+        ).astype(jnp.float32)
+        out = moe_k.moe_ffn(x, idx, gates, w1, w2)
+        h = x @ w1[3]
+        f = w1.shape[2] // 2
+        dense = (ref.silu(h[:, :f]) * h[:, f:]) @ w2[3]
+        np.testing.assert_allclose(out, dense, rtol=RTOL, atol=ATOL)
+
+    def test_duplicate_expert_in_topk_sums_gates(self):
+        """idx [e, e] with gates [a, b] must equal idx [e] with gate a+b."""
+        rng = np.random.default_rng(3)
+        x, _, _, w1, w2 = _moe_case(rng, 3, 4, 2)
+        idx2 = jnp.full((3, 2), 1, jnp.int32)
+        g2 = jnp.asarray(rng.random(size=(3, 2)), jnp.float32)
+        idx1 = jnp.full((3, 1), 1, jnp.int32)
+        g1 = jnp.sum(g2, axis=1, keepdims=True)
+        np.testing.assert_allclose(
+            moe_k.moe_ffn(x, idx2, g2, w1, w2),
+            moe_k.moe_ffn(x, idx1, g1, w1, w2),
+            rtol=RTOL, atol=ATOL)
+
+    def test_linearity_in_gates(self):
+        rng = np.random.default_rng(4)
+        x, idx, gates, w1, w2 = _moe_case(rng, 5, 8, 2)
+        np.testing.assert_allclose(
+            moe_k.moe_ffn(x, idx, 2.0 * gates, w1, w2),
+            2.0 * moe_k.moe_ffn(x, idx, gates, w1, w2),
+            rtol=RTOL, atol=ATOL)
+
+
+def _attn_case(rng, t, s, hh=2, d=8, cache_len=None):
+    q = jnp.asarray(rng.normal(size=(t, hh, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(s, hh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(s, hh, d)), jnp.float32)
+    if cache_len is None:
+        cache_len = int(rng.integers(0, s - t + 1))
+    pos = cache_len + jnp.arange(t)
+    mask = jnp.arange(s)[None, :] <= pos[:, None]
+    return q, k, v, mask, 1.0 / (d ** 0.5)
+
+
+class TestAttention:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        t=st.integers(1, 8),
+        s=st.sampled_from([64, 128, 256, 384]),
+        hh=st.sampled_from([1, 2, 4]),
+        block_s=st.sampled_from([32, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, t, s, hh, block_s, seed):
+        rng = np.random.default_rng(seed)
+        q, k, v, mask, scale = _attn_case(rng, t, s, hh=hh)
+        out = attn_k.attention(q, k, v, mask, scale, block_s=block_s)
+        want = ref.attention_ref(q, k, v, mask, scale)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    def test_cache_len_zero(self):
+        """First decode step: only position 0 is attendable."""
+        rng = np.random.default_rng(5)
+        q, k, v, mask, scale = _attn_case(rng, 1, 128, cache_len=0)
+        out = attn_k.attention(q, k, v, mask, scale)
+        np.testing.assert_allclose(out, v[0][None], rtol=RTOL, atol=ATOL)
+
+    def test_block_boundary_mask(self):
+        """cache_len exactly at a KV-block boundary."""
+        rng = np.random.default_rng(6)
+        q, k, v, mask, scale = _attn_case(rng, 4, 256, cache_len=128)
+        out = attn_k.attention(q, k, v, mask, scale, block_s=128)
+        want = ref.attention_ref(q, k, v, mask, scale)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    def test_mask_excludes_stale_cache(self):
+        """Entries beyond the causal horizon must not affect the output."""
+        rng = np.random.default_rng(7)
+        q, k, v, mask, scale = _attn_case(rng, 2, 64, cache_len=10)
+        out1 = attn_k.attention(q, k, v, mask, scale)
+        k2 = k.at[20:].set(999.0)
+        v2 = v.at[20:].set(-999.0)
+        out2 = attn_k.attention(q, k2, v2, mask, scale)
+        np.testing.assert_allclose(out1, out2, rtol=RTOL, atol=ATOL)
+
+    def test_full_mask_row_is_finite(self):
+        """A fully-masked query row must not produce NaNs (guarded norm)."""
+        rng = np.random.default_rng(8)
+        q, k, v, _, scale = _attn_case(rng, 2, 64, cache_len=0)
+        mask = jnp.zeros((2, 64), bool).at[1, :4].set(True)
+        out = attn_k.attention(q, k, v, mask, scale)
+        assert bool(jnp.all(jnp.isfinite(out)))

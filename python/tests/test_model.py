@@ -1,0 +1,166 @@
+"""L2 contracts: step-function shapes, KV-cache consistency, impl parity,
+router affinity behaviour, shared experts, dense baseline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import MODELS, ModelConfig
+from compile.model import make_step_fn
+from compile.weights import make_weights
+
+SMALL = ModelConfig(name="tiny", mirrors="test", hidden=32, layers=2, heads=2,
+                    head_dim=8, vocab=64, ffn=32, n_experts=4, top_k=2,
+                    max_seq=64, prefill_chunk=8, seed=7)
+
+
+def _fresh_state(cfg):
+    kv = jnp.zeros((cfg.layers, 2, cfg.max_seq, cfg.kv_dim), jnp.float32)
+    rs = jnp.zeros((cfg.layers, cfg.hidden), jnp.float32)
+    return kv, rs
+
+
+@pytest.fixture(scope="module")
+def tiny_weights():
+    return make_weights(SMALL)
+
+
+class TestStepContract:
+    def test_output_shapes(self, tiny_weights):
+        step = jax.jit(make_step_fn(SMALL, tiny_weights, 3, impl="ref"))
+        kv, rs = _fresh_state(SMALL)
+        logits, topk, kv2, rs2 = step(jnp.array([1, 2, 3], jnp.int32), jnp.int32(0), kv, rs)
+        assert logits.shape == (3, SMALL.vocab)
+        assert topk.shape == (SMALL.layers, 3, SMALL.top_k)
+        assert kv2.shape == kv.shape
+        assert rs2.shape == (SMALL.layers, 3, SMALL.hidden)  # per-token trajectory
+        assert topk.dtype == jnp.int32
+
+    def test_topk_in_range(self, tiny_weights):
+        step = jax.jit(make_step_fn(SMALL, tiny_weights, 4, impl="ref"))
+        kv, rs = _fresh_state(SMALL)
+        _, topk, _, _ = step(jnp.array([5, 6, 7, 8], jnp.int32), jnp.int32(0), kv, rs)
+        assert bool(jnp.all((topk >= 0) & (topk < SMALL.n_experts)))
+
+    def test_pallas_matches_ref(self, tiny_weights):
+        kv, rs = _fresh_state(SMALL)
+        toks = jnp.array([3, 1, 4, 1, 5], jnp.int32)
+        outs = {}
+        for impl in ("ref", "pallas"):
+            step = jax.jit(make_step_fn(SMALL, tiny_weights, 5, impl=impl))
+            outs[impl] = step(toks, jnp.int32(0), kv, rs)
+        np.testing.assert_allclose(outs["ref"][0], outs["pallas"][0], rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(outs["ref"][1], outs["pallas"][1])
+
+    def test_incremental_equals_batch(self, tiny_weights):
+        """Feeding tokens one at a time through the KV cache must reproduce
+        the one-shot batch logits — the invariant speculation relies on."""
+        toks = [2, 9, 17, 33, 40, 41]
+        batch = jax.jit(make_step_fn(SMALL, tiny_weights, len(toks), impl="ref"))
+        kv, rs = _fresh_state(SMALL)
+        blogits, btopk, _, _ = batch(jnp.array(toks, jnp.int32), jnp.int32(0), kv, rs)
+
+        one = jax.jit(make_step_fn(SMALL, tiny_weights, 1, impl="ref"))
+        kv, rs = _fresh_state(SMALL)
+        for i, tk in enumerate(toks):
+            lg, tp, kv, rsq = one(jnp.array([tk], jnp.int32), jnp.int32(i), kv, rs)
+            rs = rsq[:, 0, :]
+            np.testing.assert_allclose(lg[0], blogits[i], rtol=3e-5, atol=3e-5)
+            np.testing.assert_allclose(tp[:, 0], btopk[:, i])
+
+    def test_rejected_tokens_overwritten(self, tiny_weights):
+        """Speculative KV slots written past cache_len must be harmlessly
+        overwritten when the next step reuses those positions."""
+        one = jax.jit(make_step_fn(SMALL, tiny_weights, 1, impl="ref"))
+        three = jax.jit(make_step_fn(SMALL, tiny_weights, 3, impl="ref"))
+        # Run A: verify 3 tokens at cache_len=2, accept only the first,
+        # then decode token X at cache_len=3.
+        kv, rs = _fresh_state(SMALL)
+        for i, tk in enumerate([1, 2]):
+            _, _, kv, rsq = one(jnp.array([tk], jnp.int32), jnp.int32(i), kv, rs)
+            rs = rsq[:, 0, :]
+        kv_a, rs_a = kv, rs
+        _, _, kv_spec, _ = three(jnp.array([7, 8, 9], jnp.int32), jnp.int32(2), kv_a, rs_a)
+        lg_a, _, _, _ = one(jnp.array([7], jnp.int32), jnp.int32(2), kv_spec, rs_a)
+        # Run B: same prefix, no speculation ever happened.
+        lg_b, _, _, _ = one(jnp.array([7], jnp.int32), jnp.int32(2), kv_a, rs_a)
+        np.testing.assert_allclose(lg_a[0], lg_b[0], rtol=3e-5, atol=3e-5)
+
+    def test_determinism(self, tiny_weights):
+        step = jax.jit(make_step_fn(SMALL, tiny_weights, 2, impl="ref"))
+        kv, rs = _fresh_state(SMALL)
+        a = step(jnp.array([1, 2], jnp.int32), jnp.int32(0), kv, rs)
+        b = step(jnp.array([1, 2], jnp.int32), jnp.int32(0), kv, rs)
+        np.testing.assert_array_equal(a[0], b[0])
+
+
+class TestAffinity:
+    def _unique_expert_rate(self, affinity, seed=11, steps=48):
+        cfg = ModelConfig(name="aff", mirrors="test", hidden=32, layers=1,
+                          heads=2, head_dim=8, vocab=64, ffn=32, n_experts=16,
+                          top_k=2, max_seq=64, prefill_chunk=8,
+                          affinity=affinity, seed=seed)
+        w = make_weights(cfg)
+        step = jax.jit(make_step_fn(cfg, w, 1, impl="ref"))
+        kv, rs = _fresh_state(cfg)
+        rng = np.random.default_rng(seed)
+        picks = []
+        for i in range(steps):
+            tk = int(rng.integers(0, cfg.vocab))
+            _, topk, kv, rsq = step(jnp.array([tk], jnp.int32), jnp.int32(i), kv, rs)
+            rs = rsq[:, 0, :]
+            picks.append(set(np.asarray(topk[0, 0]).tolist()))
+        # fraction of experts reused from the immediately previous token
+        reuse = [len(a & b) / cfg.top_k for a, b in zip(picks, picks[1:])]
+        return float(np.mean(reuse))
+
+    def test_affinity_increases_expert_reuse(self):
+        """The paper's expert-token affinity knob: higher affinity ⇒
+        consecutive tokens reuse experts more (cheaper verification)."""
+        low = self._unique_expert_rate(0.0)
+        high = self._unique_expert_rate(0.9)
+        assert high > low + 0.2, (low, high)
+
+
+class TestZoo:
+    @pytest.mark.parametrize("name", ["deepseek", "qwen"])
+    def test_shared_experts_contribute(self, name):
+        """Zeroing shared-expert weights must change the output."""
+        cfg = MODELS[name]
+        w = make_weights(cfg)
+        step = jax.jit(make_step_fn(cfg, w, 1, impl="ref"))
+        kv, rs = _fresh_state(cfg)
+        lg, _, _, _ = step(jnp.array([9], jnp.int32), jnp.int32(0), kv, rs)
+
+        w2 = jax.tree_util.tree_map(lambda x: x, w)
+        for layer in w2["layers"]:
+            layer["shared_w2"] = jnp.zeros_like(layer["shared_w2"])
+        step2 = jax.jit(make_step_fn(cfg, w2, 1, impl="ref"))
+        lg2, _, _, _ = step2(jnp.array([9], jnp.int32), jnp.int32(0), kv, rs)
+        assert float(jnp.max(jnp.abs(lg - lg2))) > 1e-4
+
+    def test_dense_model_emits_sentinel_topk(self):
+        cfg = MODELS["llama"]
+        w = make_weights(cfg)
+        step = jax.jit(make_step_fn(cfg, w, 2, impl="ref"))
+        kv, rs = _fresh_state(cfg)
+        _, topk, _, _ = step(jnp.array([1, 2], jnp.int32), jnp.int32(0), kv, rs)
+        assert bool(jnp.all(topk == -1))
+
+    @pytest.mark.parametrize("name", list(MODELS))
+    def test_zoo_step_runs(self, name):
+        cfg = MODELS[name]
+        w = make_weights(cfg)
+        step = jax.jit(make_step_fn(cfg, w, 2, impl="ref"))
+        kv, rs = _fresh_state(cfg)
+        lg, topk, _, _ = step(jnp.array([1, 2], jnp.int32), jnp.int32(0), kv, rs)
+        assert bool(jnp.all(jnp.isfinite(lg)))
+        kr = max(cfg.top_k, 1)
+        assert topk.shape == (cfg.layers, 2, kr)
+
+    def test_weights_deterministic(self):
+        a = make_weights(MODELS["mixtral"])
+        b = make_weights(MODELS["mixtral"])
+        np.testing.assert_array_equal(a["embed"], b["embed"])
+        np.testing.assert_array_equal(a["layers"][0]["router"], b["layers"][0]["router"])

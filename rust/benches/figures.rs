@@ -1,0 +1,53 @@
+//! End-to-end figure benches: regenerates a compact version of every paper
+//! table/figure (sim backend for the full matrix sweeps, real backend for
+//! the headline row) and reports the wall cost of each harness.
+//!
+//! `cargo bench --bench figures` — pass CASCADE_BENCH_FAST=1 for a smoke
+//! run. Full-budget regeneration is `make figures` (real backend).
+
+use cascade::experiments::{self, BackendKind, ExpCtx};
+use cascade::models::{default_artifacts_dir, Registry};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("CASCADE_BENCH_FAST").is_ok();
+    let tokens = if fast { 120 } else { 250 };
+
+    // Full matrix on the sim backend (covers every figure quickly).
+    let reg = Registry::load(default_artifacts_dir())?;
+    let mut ctx = ExpCtx::new(reg, BackendKind::Sim, tokens);
+    println!("== figure regeneration (sim backend, {tokens} tok/cell) ==");
+    for exp in experiments::all() {
+        let t0 = Instant::now();
+        let tables = (exp.run)(&mut ctx)?;
+        println!("\n--- {} ({:.1}s) ---", exp.id, t0.elapsed().as_secs_f64());
+        for t in tables {
+            println!("{}", t.render());
+        }
+    }
+
+    // Headline row (Fig. 13, mixtral) on the real backend for the record.
+    if !fast {
+        let reg = Registry::load(default_artifacts_dir())?;
+        let mut ctx = ExpCtx::new(reg, BackendKind::Real, 200);
+        println!("\n== headline check (real backend): mixtral row of Fig. 13 ==");
+        use cascade::experiments::RunSpec;
+        use cascade::spec::policy::PolicyKind;
+        use cascade::workload::Workload;
+        for w in ["code", "math"] {
+            let wl = Workload::by_name(w).unwrap();
+            for (label, p) in [
+                ("k3", PolicyKind::Static(3)),
+                ("cascade", PolicyKind::Cascade(Default::default())),
+            ] {
+                let t0 = Instant::now();
+                let s = ctx.speedup(&RunSpec::new("mixtral", wl.clone(), p))?;
+                println!(
+                    "mixtral/{w}/{label}: {s:.2}x vs no-spec  ({:.1}s wall)",
+                    t0.elapsed().as_secs_f64()
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Hot-path micro-benchmarks (in-tree harness; see `cascade::bench`).
+//!
+//! Covers every component on the per-iteration request path, plus the raw
+//! PJRT step for each verify width. These are the numbers the §Perf pass in
+//! EXPERIMENTS.md optimizes.
+
+use cascade::bench::Bench;
+use cascade::config::{CascadeParams, DrafterKind, EngineConfig};
+use cascade::coordinator::engine::Engine;
+use cascade::cost::GpuCostModel;
+use cascade::kv::KvBlockManager;
+use cascade::models::{default_artifacts_dir, paper_spec, Registry};
+use cascade::rng::Rng;
+use cascade::runtime::ModelRuntime;
+use cascade::sampling::sample_guided;
+use cascade::spec::manager::CascadeManager;
+use cascade::spec::{greedy_verify, NgramDrafter};
+use cascade::spec::policy::PolicyKind;
+use cascade::tokenizer;
+use cascade::workload::{RequestStream, Task, Workload};
+
+fn main() -> anyhow::Result<()> {
+    let reg = Registry::load(default_artifacts_dir())?;
+
+    // ---- pure components -------------------------------------------------
+    let mut b = Bench::new("component");
+
+    let code_text = {
+        let mut s = RequestStream::new(Workload::single(Task::Code), 1, 200);
+        let r = s.next_request();
+        let mut ctx = r.prompt.clone();
+        ctx.extend_from_slice(&r.reference);
+        ctx
+    };
+    let drafter = NgramDrafter::new(1, 4);
+    b.bench("ngram_propose_k3_ctx400", || drafter.propose(&code_text, 3));
+    b.bench("ngram_propose_k7_ctx400", || drafter.propose(&code_text, 7));
+
+    let drafts = [1u32, 2, 3, 4, 5, 6, 7];
+    let targets = [1u32, 2, 3, 9, 5, 6, 7, 8];
+    b.bench("rejection_verify_k7", || greedy_verify(&drafts, &targets));
+
+    let cost = GpuCostModel::new(paper_spec("mixtral")?, 2);
+    let uniq = [6usize, 7];
+    b.bench("cost_model_verify", || {
+        cost.verify_cost(&uniq, 8, 7, DrafterKind::Ngram).total()
+    });
+
+    let logits: Vec<f32> = (0..320).map(|i| (i as f32 * 0.37).sin()).collect();
+    let mut rng = Rng::new(7);
+    b.bench("guided_sample_v320", || {
+        sample_guided(&logits, Some(42), 48.0, 0.05, &mut rng)
+    });
+
+    b.bench("kv_reserve_commit", || {
+        let mut kv = KvBlockManager::new(384, 16);
+        for _ in 0..40 {
+            kv.reserve(4).unwrap();
+            kv.commit(2).unwrap();
+        }
+        kv.committed()
+    });
+
+    b.bench("cascade_manager_observe", || {
+        let mut mgr = CascadeManager::new(CascadeParams::default());
+        for _ in 0..64 {
+            let k = mgr.next_k();
+            mgr.observe(1.0 + k as f64 * 0.4, 0.02 * (1.0 + 0.3 * k as f64));
+        }
+        mgr.next_k()
+    });
+
+    b.bench("tokenizer_encode_1k", || {
+        tokenizer::encode("let x = 42; // the quick brown fox\n").len()
+    });
+
+    // ---- sim engine ------------------------------------------------------
+    let mut b = Bench::new("sim");
+    b.bench("sim_iteration_mixtral_code_k3", || {
+        // One short request through the sim engine (amortized per call).
+        let cfg = EngineConfig { model: "mixtral".into(), ..Default::default() };
+        let mut engine = Engine::sim(&reg, cfg, PolicyKind::Static(3).build()).unwrap();
+        let mut s = RequestStream::new(Workload::single(Task::Code), 3, 40);
+        engine.serve_request(&s.next_request()).unwrap().tokens_emitted()
+    });
+
+    // ---- real runtime (PJRT) ----------------------------------------------
+    let mut b = Bench::new("pjrt");
+    let mut rt = ModelRuntime::load(&reg, "mixtral")?;
+    rt.warmup()?;
+    for t in [1usize, 4, 8] {
+        let tokens: Vec<u32> = (0..t as u32).collect();
+        let mut state = rt.fresh_state();
+        b.bench(&format!("step_t{t}_mixtral"), || {
+            rt.step(&mut state, &tokens).unwrap().t
+        });
+    }
+    let mut rt = ModelRuntime::with_client(&reg, "olmoe", rt.client())?;
+    let mut state = rt.fresh_state();
+    b.bench("step_t8_olmoe_64exp", || {
+        rt.step(&mut state, &[0, 1, 2, 3, 4, 5, 6, 7]).unwrap().t
+    });
+
+    // ---- end-to-end serving iteration --------------------------------------
+    let mut b = Bench::new("e2e");
+    let cfg = EngineConfig { model: "mixtral".into(), ..Default::default() };
+    let mut engine = Engine::real(&reg, cfg, PolicyKind::Cascade(CascadeParams::default()).build())?;
+    let mut stream = RequestStream::new(Workload::single(Task::Code), 11, 60);
+    let reqs: Vec<_> = (0..3).map(|_| stream.next_request()).collect();
+    let mut i = 0usize;
+    b.bench("serve_request_60tok_cascade", || {
+        let r = &reqs[i % reqs.len()];
+        i += 1;
+        engine.serve_request(r).unwrap().tokens_emitted()
+    });
+    let wall_per_tok = engine.label();
+    b.report(&format!("engine {wall_per_tok}"), 1.0, "ok");
+
+    Ok(())
+}

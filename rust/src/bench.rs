@@ -1,0 +1,138 @@
+//! In-tree micro-benchmark harness (criterion-style output; the vendor set
+//! has no criterion). Used by `rust/benches/*.rs` via `harness = false`.
+//!
+//! Methodology: warm-up, then timed batches until both a minimum duration
+//! and a minimum iteration count are reached; reports mean / p50 / p95 and
+//! a robust min.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's measurements (ns per iteration).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    pub iters: u64,
+}
+
+impl Measurement {
+    fn sorted(&self) -> Vec<f64> {
+        let mut v = self.samples_ns.clone();
+        v.sort_by(|a, b| a.total_cmp(b));
+        v
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        let s = self.sorted();
+        let idx = ((s.len() - 1) as f64 * p).round() as usize;
+        s[idx]
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        self.sorted()[0]
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner. Collects results and prints a criterion-like report.
+pub struct Bench {
+    pub group: String,
+    pub min_duration: Duration,
+    pub min_samples: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // CASCADE_BENCH_FAST=1 shrinks runs (CI smoke).
+        let fast = std::env::var("CASCADE_BENCH_FAST").is_ok();
+        Self {
+            group: group.to_string(),
+            min_duration: if fast { Duration::from_millis(50) } else { Duration::from_millis(400) },
+            min_samples: if fast { 5 } else { 20 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (called once per iteration).
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Measurement {
+        // Warm-up: one call, then estimate batch size.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().max(Duration::from_nanos(20));
+        let batch = (Duration::from_millis(10).as_nanos() / once.as_nanos()).clamp(1, 10_000) as u64;
+
+        let mut samples = Vec::new();
+        let mut iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.min_duration || samples.len() < self.min_samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+            iters += batch;
+            if samples.len() > 5_000 {
+                break;
+            }
+        }
+        let m = Measurement { name: name.to_string(), samples_ns: samples, iters };
+        println!(
+            "{}/{:<40} mean {:>10}  p50 {:>10}  p95 {:>10}  min {:>10}  ({} iters)",
+            self.group,
+            m.name,
+            fmt_ns(m.mean_ns()),
+            fmt_ns(m.percentile_ns(0.5)),
+            fmt_ns(m.percentile_ns(0.95)),
+            fmt_ns(m.min_ns()),
+            m.iters
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Report a pre-measured quantity (e.g. end-to-end run stats).
+    pub fn report(&self, name: &str, value: f64, unit: &str) {
+        println!("{}/{:<40} {value:.3} {unit}", self.group, name);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("CASCADE_BENCH_FAST", "1");
+        let mut b = Bench::new("test");
+        let m = b.bench("noop-ish", || std::hint::black_box(3u64.wrapping_mul(7)));
+        assert!(m.mean_ns() >= 0.0);
+        assert!(m.iters > 0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Measurement {
+            name: "x".into(),
+            samples_ns: vec![5.0, 1.0, 9.0, 3.0, 7.0],
+            iters: 5,
+        };
+        assert_eq!(m.min_ns(), 1.0);
+        assert!(m.percentile_ns(0.5) <= m.percentile_ns(0.95));
+    }
+}

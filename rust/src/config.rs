@@ -1,0 +1,156 @@
+//! Serving, speculation, and Cascade configuration.
+//!
+//! `CascadeParams` carries the paper's only hyperparameters (§6): trial
+//! duration `t`, max test length `T = M·t`, and set duration `S`. Everything
+//! else is derived at runtime from measured utility.
+
+/// Maximum speculation length supported by the AOT artifacts (K ≤ 7 ⇒
+/// verify steps of T = K+1 ≤ 8 tokens, matching the paper's sweep).
+pub const MAX_K: usize = 7;
+
+/// Hyperparameters of the test-and-set policy (paper §5.3–§5.6, §6).
+#[derive(Debug, Clone)]
+pub struct CascadeParams {
+    /// Trial duration in iterations (paper: t = 4).
+    pub trial_iters: usize,
+    /// Maximum trials per test phase (paper: M = 4, so T = M·t = 16).
+    pub max_trials: usize,
+    /// Set-phase duration in iterations (paper: S = 16).
+    pub set_iters: usize,
+    /// Adaptive back-off: multiply S by this on each transition to K = 0
+    /// (paper §5.5: doubling).
+    pub backoff_factor: usize,
+    /// Upper bound on the backed-off set-phase length.
+    pub max_set_iters: usize,
+    /// Initial K for the first test phase when no history exists
+    /// (paper §7.4: K_start = 3).
+    pub k_start: usize,
+    /// Iterations of forced K=0 at request start used to measure the
+    /// no-speculation baseline (paper §5.3: "first few decode iterations",
+    /// e.g. 4).
+    pub baseline_iters: usize,
+    /// Refresh the no-speculation baseline every this many iterations
+    /// (paper §5.3: e.g. every 100).
+    pub baseline_refresh: usize,
+    /// Convergence early-exit: successive trial utilities within this
+    /// relative band end the test phase (paper §5.6: 10%).
+    pub converge_tol: f64,
+    /// Ablation switches (paper Fig. 18). All true = full Cascade.
+    pub enable_disable: bool,
+    pub enable_backoff: bool,
+    pub enable_hillclimb: bool,
+}
+
+impl Default for CascadeParams {
+    fn default() -> Self {
+        Self {
+            trial_iters: 4,
+            max_trials: 4,
+            set_iters: 16,
+            backoff_factor: 2,
+            max_set_iters: 512,
+            k_start: 3,
+            baseline_iters: 4,
+            baseline_refresh: 100,
+            converge_tol: 0.10,
+            enable_disable: true,
+            enable_backoff: true,
+            enable_hillclimb: true,
+        }
+    }
+}
+
+impl CascadeParams {
+    /// Ablation level for Fig. 18: 0 = none (static K_start), 1 = +disable,
+    /// 2 = +back-off, 3 = full (+hill-climb).
+    pub fn ablation(level: usize) -> Self {
+        Self {
+            enable_disable: level >= 1,
+            enable_backoff: level >= 2,
+            enable_hillclimb: level >= 3,
+            ..Self::default()
+        }
+    }
+
+    /// §7.5 sensitivity variants: scale (t, S) keeping T = 4t.
+    pub fn with_phases(trial_iters: usize, set_iters: usize) -> Self {
+        Self { trial_iters, set_iters, ..Self::default() }
+    }
+}
+
+/// Which drafter generates the speculative tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DrafterKind {
+    /// Prompt-lookup n-gram matching (paper's primary technique, [38]).
+    Ngram,
+    /// Draft-model speculation via the AOT `draft` model (paper §7.3;
+    /// EAGLE stand-in, see DESIGN.md §Substitutions).
+    EagleLite,
+}
+
+/// Engine-level configuration for one serving run.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Model zoo key (`mixtral`, `phi`, `olmoe`, `deepseek`, `qwen`, `llama`).
+    pub model: String,
+    pub drafter: DrafterKind,
+    /// N-gram drafter: max context n-gram length to match.
+    pub ngram_max: usize,
+    /// N-gram drafter: minimum match length.
+    pub ngram_min: usize,
+    /// Guided-decoding bias strength (DESIGN.md §Substitutions): the target
+    /// model's logits get `guide_strength` added at the reference token.
+    pub guide_strength: f32,
+    /// Per-request cap on generated tokens.
+    pub max_new_tokens: usize,
+    /// Deterministic seed for samplers and workloads.
+    pub seed: u64,
+    pub cascade: CascadeParams,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            model: "mixtral".into(),
+            drafter: DrafterKind::Ngram,
+            ngram_max: 4,
+            ngram_min: 1,
+            guide_strength: 48.0,
+            max_new_tokens: 200,
+            seed: 0xCA5CADE,
+            cascade: CascadeParams::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let p = CascadeParams::default();
+        assert_eq!(p.trial_iters, 4);
+        assert_eq!(p.max_trials, 4);
+        assert_eq!(p.set_iters, 16);
+        assert_eq!(p.trial_iters * p.max_trials, 16); // T = 16
+        assert_eq!(p.k_start, 3);
+    }
+
+    #[test]
+    fn ablation_levels() {
+        assert!(!CascadeParams::ablation(0).enable_disable);
+        let l1 = CascadeParams::ablation(1);
+        assert!(l1.enable_disable && !l1.enable_backoff);
+        let l3 = CascadeParams::ablation(3);
+        assert!(l3.enable_disable && l3.enable_backoff && l3.enable_hillclimb);
+    }
+
+    #[test]
+    fn sensitivity_variants_keep_t_eq_4t() {
+        let p = CascadeParams::with_phases(2, 8);
+        assert_eq!(p.trial_iters, 2);
+        assert_eq!(p.set_iters, 8);
+        assert_eq!(p.max_trials, 4);
+    }
+}

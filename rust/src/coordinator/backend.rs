@@ -1,0 +1,154 @@
+//! Target-model backend abstraction.
+//!
+//! The engine drives either the **real** backend (AOT HLO via PJRT — the
+//! production path) or the **sim** backend (`sim::SimBackend`, a trace-level
+//! model sharing the same interface, used for fast sweeps and property
+//! tests; cross-validated against the real backend in integration tests).
+
+use crate::models::MiniConfig;
+use crate::rng::Rng;
+use crate::runtime::{ModelRuntime, RequestState};
+use crate::sampling::sample_guided;
+use crate::tokenizer::PAD;
+use crate::workload::Request;
+use anyhow::Result;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Runtimes are shared across engines (one compile per model per process):
+/// PJRT executables and device-resident weights are expensive; request
+/// state is per-backend.
+pub type SharedRuntime = Rc<RefCell<ModelRuntime>>;
+
+/// Outputs of one target-model step over T in-flight tokens.
+#[derive(Debug, Clone)]
+pub struct BackendStep {
+    /// The target model's (guided-greedy) token for each position.
+    pub sampled: Vec<u32>,
+    /// Unique experts activated per mini layer across all T tokens — the
+    /// cost model's input. Empty for dense models.
+    pub unique_experts: Vec<usize>,
+}
+
+/// A target model the engine can serve with.
+pub trait Backend {
+    fn mini(&self) -> &MiniConfig;
+    fn name(&self) -> &'static str;
+
+    /// Reset state for a new request.
+    fn begin(&mut self, req: &Request) -> Result<()>;
+
+    /// Process the prompt and sample the first output token (guided by
+    /// `guide0`). Advances the committed cache past the prompt.
+    fn prefill(&mut self, prompt: &[u32], guide0: Option<u32>, eps: f64) -> Result<u32>;
+
+    /// Run one verify/decode step over `tokens` (1 original + K drafts).
+    /// `guides[i]` is the reference token the sampler is biased toward at
+    /// position `i`. Does **not** commit cache positions.
+    fn step(&mut self, tokens: &[u32], guides: &[Option<u32>], eps: f64) -> Result<BackendStep>;
+
+    /// Commit `n` in-flight positions (accepted prefix + correction).
+    fn advance(&mut self, n: usize);
+
+    /// Committed cache length.
+    fn cache_len(&self) -> usize;
+}
+
+/// Production backend: executes the AOT-compiled step HLO through PJRT.
+pub struct RealBackend {
+    pub runtime: SharedRuntime,
+    mini: MiniConfig,
+    state: RequestState,
+    guide_strength: f32,
+    rng: Rng,
+    seed: u64,
+    /// Last step's outputs, held until `advance` commits the router state
+    /// at the accepted position.
+    last_out: Option<crate::runtime::StepOutput>,
+}
+
+impl RealBackend {
+    pub fn new(runtime: ModelRuntime, guide_strength: f32, seed: u64) -> Self {
+        Self::shared(Rc::new(RefCell::new(runtime)), guide_strength, seed)
+    }
+
+    pub fn shared(runtime: SharedRuntime, guide_strength: f32, seed: u64) -> Self {
+        let state = runtime.borrow().fresh_state();
+        let mini = runtime.borrow().model.mini.clone();
+        Self { runtime, mini, state, guide_strength, rng: Rng::new(seed), seed, last_out: None }
+    }
+
+    /// Mean unique experts/layer over a step (telemetry convenience).
+    fn count_unique(&self, out: &crate::runtime::StepOutput, t: usize) -> Vec<usize> {
+        if self.mini.is_moe {
+            out.unique_experts_per_layer(t)
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+impl Backend for RealBackend {
+    fn mini(&self) -> &MiniConfig {
+        &self.mini
+    }
+
+    fn name(&self) -> &'static str {
+        "real"
+    }
+
+    fn begin(&mut self, req: &Request) -> Result<()> {
+        self.state = self.runtime.borrow().fresh_state();
+        self.rng = Rng::new(self.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        self.last_out = None;
+        Ok(())
+    }
+
+    fn prefill(&mut self, prompt: &[u32], guide0: Option<u32>, eps: f64) -> Result<u32> {
+        let chunk = self.mini().prefill_chunk;
+        let mut last_logits: Option<Vec<f32>> = None;
+        for piece in prompt.chunks(chunk) {
+            let valid = piece.len();
+            let mut tokens = piece.to_vec();
+            // Pad the trailing chunk: padded positions are written past the
+            // committed span and harmlessly overwritten later (the causal
+            // mask keeps them invisible to valid queries).
+            tokens.resize(chunk, PAD);
+            let out = self.runtime.borrow_mut().step(&mut self.state, &tokens)?;
+            self.runtime.borrow().commit_rstate(&mut self.state, &out, valid)?;
+            self.state.cache_len += valid;
+            last_logits = Some(out.logits_row(valid - 1).to_vec());
+        }
+        let logits = last_logits.expect("non-empty prompt");
+        Ok(sample_guided(&logits, guide0, self.guide_strength, eps, &mut self.rng))
+    }
+
+    fn step(&mut self, tokens: &[u32], guides: &[Option<u32>], eps: f64) -> Result<BackendStep> {
+        debug_assert_eq!(tokens.len(), guides.len());
+        let out = self.runtime.borrow_mut().step(&mut self.state, tokens)?;
+        let sampled = (0..tokens.len())
+            .map(|i| {
+                sample_guided(out.logits_row(i), guides[i], self.guide_strength, eps, &mut self.rng)
+            })
+            .collect();
+        let unique_experts = self.count_unique(&out, tokens.len());
+        self.last_out = Some(out);
+        Ok(BackendStep { sampled, unique_experts })
+    }
+
+    fn advance(&mut self, n: usize) {
+        self.state.cache_len += n;
+        // Commit the router-affinity state at the accepted position so
+        // rejected drafts cannot pollute future routing.
+        if let Some(out) = self.last_out.take() {
+            self.runtime
+                .borrow()
+                .commit_rstate(&mut self.state, &out, n)
+                .expect("rstate commit");
+        }
+    }
+
+    fn cache_len(&self) -> usize {
+        self.state.cache_len
+    }
+}

@@ -1,0 +1,328 @@
+//! The spec-decode serving engine (paper Fig. 14's worker, in Rust).
+//!
+//! Per decode iteration: ask the policy for K → draft K tokens → reserve
+//! lookahead KV slots → run one verify step over [last token, drafts…] →
+//! rejection-sample → commit accepted positions, roll back the rest →
+//! charge the cost model with the *measured* expert activations → feed the
+//! outcome back to the policy (Cascade's utility analyzer).
+
+use crate::config::{DrafterKind, EngineConfig, MAX_K};
+use crate::coordinator::backend::Backend;
+use crate::coordinator::eagle::{draft_eps, EagleLite};
+use crate::cost::GpuCostModel;
+use crate::kv::KvBlockManager;
+use crate::metrics::{IterRecord, RequestMetrics, RunMetrics};
+use crate::models::Registry;
+use crate::rng::Rng;
+use crate::runtime::ModelRuntime;
+use crate::spec::policy::{IterObs, SpecPolicy};
+use crate::spec::rejection::{greedy_verify, truncate_at_eos};
+use crate::spec::NgramDrafter;
+use crate::tokenizer::EOS;
+use crate::workload::Request;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// The drafter wired into the engine.
+pub enum EngineDrafter {
+    /// Prompt-lookup n-gram (model-free).
+    Ngram(NgramDrafter),
+    /// Draft-model speculation over the AOT `draft` model.
+    Eagle(EagleLite),
+    /// Trace-level draft model for sim-backend sweeps: proposes the
+    /// reference token with per-task accuracy; once it deviates, the rest
+    /// of the proposal is noise (a real drafter continues from its own
+    /// wrong token).
+    SimEagle { rng: Rng, seed: u64 },
+}
+
+impl EngineDrafter {
+    pub fn kind(&self) -> DrafterKind {
+        match self {
+            EngineDrafter::Ngram(_) => DrafterKind::Ngram,
+            _ => DrafterKind::EagleLite,
+        }
+    }
+}
+
+/// Serving engine for one model + policy + drafter.
+pub struct Engine {
+    pub cfg: EngineConfig,
+    pub backend: Box<dyn Backend>,
+    pub drafter: EngineDrafter,
+    pub cost: GpuCostModel,
+    pub policy: Box<dyn SpecPolicy>,
+    /// KV block size (vLLM-style pages).
+    pub kv_block: usize,
+}
+
+impl Engine {
+    pub fn new(
+        cfg: EngineConfig,
+        backend: Box<dyn Backend>,
+        drafter: EngineDrafter,
+        cost: GpuCostModel,
+        policy: Box<dyn SpecPolicy>,
+    ) -> Self {
+        Self { cfg, backend, drafter, cost, policy, kv_block: 16 }
+    }
+
+    /// Build a real-backend engine from the artifact registry.
+    pub fn real(
+        registry: &Registry,
+        cfg: EngineConfig,
+        policy: Box<dyn SpecPolicy>,
+    ) -> Result<Self> {
+        let runtime = ModelRuntime::load(registry, &cfg.model)
+            .with_context(|| format!("loading model {}", cfg.model))?;
+        let client = runtime.client();
+        let mini_layers = runtime.model.mini.layers;
+        let cost = GpuCostModel::new(runtime.model.paper.clone(), mini_layers);
+        let backend = Box::new(crate::coordinator::backend::RealBackend::new(
+            runtime,
+            cfg.guide_strength,
+            cfg.seed,
+        ));
+        let drafter = match cfg.drafter {
+            DrafterKind::Ngram => {
+                EngineDrafter::Ngram(NgramDrafter::new(cfg.ngram_min, cfg.ngram_max))
+            }
+            DrafterKind::EagleLite => {
+                let draft_rt = ModelRuntime::with_client(registry, "draft", client)
+                    .context("loading draft model")?;
+                EngineDrafter::Eagle(EagleLite::new(draft_rt, cfg.guide_strength, cfg.seed ^ 0xE1))
+            }
+        };
+        Ok(Self::new(cfg, backend, drafter, cost, policy))
+    }
+
+    /// Build a sim-backend engine (no HLO execution).
+    pub fn sim(registry: &Registry, cfg: EngineConfig, policy: Box<dyn SpecPolicy>) -> Result<Self> {
+        let model = registry.model(&cfg.model)?;
+        let cost = GpuCostModel::new(model.paper.clone(), model.mini.layers);
+        let backend = Box::new(crate::sim::SimBackend::new(model.mini.clone(), cfg.seed));
+        let drafter = match cfg.drafter {
+            DrafterKind::Ngram => {
+                EngineDrafter::Ngram(NgramDrafter::new(cfg.ngram_min, cfg.ngram_max))
+            }
+            DrafterKind::EagleLite => {
+                EngineDrafter::SimEagle { rng: Rng::new(cfg.seed ^ 0xE1), seed: cfg.seed ^ 0xE1 }
+            }
+        };
+        Ok(Self::new(cfg, backend, drafter, cost, policy))
+    }
+
+    /// Serve one request to completion; returns its full decode trace.
+    pub fn serve_request(&mut self, req: &Request) -> Result<RequestMetrics> {
+        let wall_start = Instant::now();
+        self.policy.reset();
+        self.backend.begin(req)?;
+
+        let max_seq = self.backend.mini().max_seq;
+        let mut kv = KvBlockManager::new(max_seq, self.kv_block);
+        let mut metrics = RequestMetrics {
+            id: req.id,
+            task: req.task.name().into(),
+            prompt_tokens: req.prompt.len(),
+            ..Default::default()
+        };
+
+        // ---- Prefill ----------------------------------------------------
+        anyhow::ensure!(
+            req.prompt.len() + 2 <= max_seq,
+            "prompt ({}) does not fit the {} window",
+            req.prompt.len(),
+            max_seq
+        );
+        kv.reserve(req.prompt.len())?;
+        kv.commit(req.prompt.len())?;
+        let guide0 = req.reference.first().copied();
+        let first = self.backend.prefill(&req.prompt, guide0, req.eps)?;
+        // Prefill charge: chunked full-parallel steps (excluded from TPOT).
+        let chunks = req.prompt.len().div_ceil(self.backend.mini().prefill_chunk);
+        metrics.prefill_s = chunks as f64 * self.cost.baseline_cost().total();
+
+        // Drafter request setup.
+        match &mut self.drafter {
+            EngineDrafter::Eagle(e) => {
+                e.begin(req)?;
+                e.ingest(&[first])?;
+            }
+            EngineDrafter::SimEagle { rng, seed } => {
+                *rng = Rng::new(*seed ^ req.id.wrapping_mul(0xD6E8_FEB8_6659_FD93));
+            }
+            EngineDrafter::Ngram(_) => {}
+        }
+
+        let mut output: Vec<u32> = vec![first];
+        let mut context: Vec<u32> = req.prompt.clone();
+        context.push(first);
+        let d_eps = draft_eps(req.task);
+        let mut finished = first == EOS;
+
+        // ---- Decode loop -------------------------------------------------
+        while !finished && output.len() < req.max_new_tokens {
+            let out_idx = output.len(); // next output index to produce
+            // Policy decision, capped by KV capacity, variant set, and the
+            // remaining output budget.
+            let mut k = self.policy.next_k().min(MAX_K);
+            let room = max_seq.saturating_sub(self.backend.cache_len() + 1);
+            k = k.min(room);
+            k = k.min(req.max_new_tokens.saturating_sub(out_idx).saturating_sub(1));
+            if room == 0 {
+                break; // window exhausted
+            }
+
+            // Reference guides for draft positions (draft i continues output
+            // index out_idx + i).
+            let ref_at = |j: usize| -> Option<u32> {
+                Some(req.reference.get(j).copied().unwrap_or(EOS))
+            };
+
+            // ---- Draft ---------------------------------------------------
+            let draft_wall = Instant::now();
+            let drafts: Vec<u32> = if k == 0 {
+                Vec::new()
+            } else {
+                match &mut self.drafter {
+                    EngineDrafter::Ngram(d) => d.propose(&context, k),
+                    EngineDrafter::Eagle(e) => {
+                        let guides: Vec<Option<u32>> = (0..k).map(|i| ref_at(out_idx + i)).collect();
+                        e.propose(k, &guides, d_eps)?
+                    }
+                    EngineDrafter::SimEagle { rng, .. } => {
+                        let mut out = Vec::with_capacity(k);
+                        let mut broken = false;
+                        for i in 0..k {
+                            let g = ref_at(out_idx + i).unwrap();
+                            if broken || rng.chance(d_eps) {
+                                broken = true;
+                                out.push(rng.below(320) as u32);
+                            } else {
+                                out.push(g);
+                            }
+                        }
+                        out
+                    }
+                }
+            };
+            let draft_wall_ns = draft_wall.elapsed().as_nanos() as u64;
+            let drafted = drafts.len();
+
+            // ---- Verify --------------------------------------------------
+            let t = 1 + drafted;
+            kv.reserve(t)?;
+            let mut tokens = Vec::with_capacity(t);
+            tokens.push(*output.last().unwrap());
+            tokens.extend_from_slice(&drafts);
+            let guides: Vec<Option<u32>> = (0..t).map(|i| ref_at(out_idx + i)).collect();
+
+            let iter_wall = Instant::now();
+            let step = self.backend.step(&tokens, &guides, req.eps)?;
+
+            // ---- Rejection sampling ---------------------------------------
+            let vr = greedy_verify(&drafts, &step.sampled);
+            let (emitted, eos_hit) = truncate_at_eos(&vr.emitted, EOS);
+            let advance = 1 + vr.accepted;
+            kv.commit(advance)?;
+            self.backend.advance(advance);
+
+            // Drafter stays in sync (even when speculation was off — the
+            // dynamic-disable requirement the paper implements in vLLM, §6).
+            match &mut self.drafter {
+                EngineDrafter::Eagle(e) => e.ingest(&emitted)?,
+                _ => {}
+            }
+
+            output.extend_from_slice(&emitted);
+            context.extend_from_slice(&emitted);
+            finished = eos_hit;
+
+            // ---- Cost + policy feedback ----------------------------------
+            let cost = self
+                .cost
+                .verify_cost(&step.unique_experts, t, drafted, self.drafter.kind());
+            let mean_unique = if step.unique_experts.is_empty() {
+                0.0
+            } else {
+                step.unique_experts.iter().sum::<usize>() as f64
+                    / step.unique_experts.len() as f64
+            };
+            let phase = self.policy.phase();
+            let obs = IterObs {
+                k_chosen: k,
+                drafted,
+                accepted: vr.accepted,
+                emitted: emitted.len(),
+                iter_s: cost.total(),
+            };
+            self.policy.observe(&obs);
+            metrics.iters.push(IterRecord {
+                k_chosen: k,
+                drafted,
+                accepted: vr.accepted,
+                emitted: emitted.len(),
+                cost,
+                wall_ns: iter_wall.elapsed().as_nanos() as u64 + draft_wall_ns,
+                unique_experts: mean_unique,
+                phase,
+            });
+        }
+
+        metrics.wall_total_ns = wall_start.elapsed().as_nanos() as u64;
+        Ok(metrics)
+    }
+
+    /// Serve a request list back-to-back (single-batch, FIFO).
+    pub fn serve_all(&mut self, reqs: &[Request]) -> Result<RunMetrics> {
+        let mut run = RunMetrics::default();
+        for req in reqs {
+            run.push(self.serve_request(req)?);
+        }
+        Ok(run)
+    }
+
+    /// Name for experiment tables.
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.cfg.model, self.policy.name())
+    }
+}
+
+/// Compact result of one serving run (for experiment tables).
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub model: String,
+    pub task: String,
+    pub policy: String,
+    pub tokens: usize,
+    pub tpot_s: f64,
+    pub etr: f64,
+    pub mean_iter_s: f64,
+    pub test_fraction: f64,
+    pub wall_s: f64,
+}
+
+impl RunSummary {
+    pub fn from_run(model: &str, task: &str, policy: &str, run: &RunMetrics) -> Self {
+        let iters: usize = run.requests.iter().map(|r| r.iters.len()).sum();
+        Self {
+            model: model.into(),
+            task: task.into(),
+            policy: policy.into(),
+            tokens: run.total_tokens(),
+            tpot_s: run.tpot_s(),
+            etr: run.mean_etr(),
+            mean_iter_s: if iters == 0 {
+                f64::NAN
+            } else {
+                run.total_decode_s() / iters as f64
+            },
+            test_fraction: run.test_phase_fraction(),
+            wall_s: run
+                .requests
+                .iter()
+                .map(|r| r.wall_total_ns as f64 / 1e9)
+                .sum(),
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! The L3 serving coordinator (paper Fig. 14): request scheduling, the
+//! spec-decode worker loop, drafter orchestration, KV management, and the
+//! Cascade policy integration. Single-batch serving, per the paper's
+//! low-latency focus.
+
+pub mod backend;
+pub mod eagle;
+pub mod engine;
+pub mod scheduler;
+
+pub use backend::{Backend, BackendStep, RealBackend};
+pub use engine::{Engine, RunSummary};
+pub use scheduler::Scheduler;

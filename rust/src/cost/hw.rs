@@ -1,0 +1,60 @@
+//! Hardware parameters of the simulated GPU (RTX 6000 Ada, the paper's
+//! testbed) plus CPU-side overheads.
+//!
+//! Calibration (see EXPERIMENTS.md §Calibration): `bw_efficiency` and
+//! `iter_overhead_s` are jointly fit so the analytic no-speculation
+//! baselines reproduce the iteration times the paper reports in §6 —
+//! Mixtral ≈ 28 ms and OLMoE ≈ 6 ms. All other models are *derived*, not
+//! fit.
+
+/// Simulated-hardware parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct HwParams {
+    /// Peak HBM bandwidth in bytes/s (RTX 6000 Ada: 960 GB/s).
+    pub hbm_bytes_per_s: f64,
+    /// Achieved fraction of peak bandwidth for weight streaming.
+    pub bw_efficiency: f64,
+    /// Fixed per-iteration overhead (kernel launches, framework).
+    pub iter_overhead_s: f64,
+    /// N-gram drafting cost per iteration (CPU context scan).
+    pub ngram_draft_s: f64,
+    /// Draft-model bytes moved per drafted token (EAGLE-lite, ~0.33B FP16).
+    pub eagle_draft_bytes: f64,
+    /// Rejection-sampling fixed cost when speculation is on.
+    pub reject_fixed_s: f64,
+    /// Rejection-sampling cost per draft token.
+    pub reject_per_token_s: f64,
+}
+
+impl Default for HwParams {
+    fn default() -> Self {
+        Self {
+            hbm_bytes_per_s: 960e9,
+            bw_efficiency: 0.53,
+            iter_overhead_s: 3.6e-3,
+            ngram_draft_s: 0.25e-3,
+            eagle_draft_bytes: 0.66e9, // 0.33B params * FP16
+            reject_fixed_s: 0.10e-3,
+            reject_per_token_s: 0.06e-3,
+        }
+    }
+}
+
+impl HwParams {
+    /// Effective achievable bandwidth (bytes/s).
+    pub fn eff_bw(&self) -> f64 {
+        self.hbm_bytes_per_s * self.bw_efficiency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let hw = HwParams::default();
+        assert!(hw.eff_bw() > 400e9 && hw.eff_bw() < 960e9);
+        assert!(hw.iter_overhead_s < 0.01);
+    }
+}

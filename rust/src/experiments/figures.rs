@@ -1,0 +1,440 @@
+//! One harness per paper table/figure. Each returns text tables whose rows
+//! mirror what the paper plots; EXPERIMENTS.md records paper-vs-measured.
+
+use crate::config::{CascadeParams, DrafterKind};
+use crate::experiments::runner::{ExpCtx, RunSpec};
+use crate::models::{ALL_MOE_MODELS, ALL_MODELS};
+use crate::spec::policy::PolicyKind;
+use crate::util::table::{ratio, Table};
+use crate::workload::{Task, Workload};
+use anyhow::Result;
+
+fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Table 1: the model zoo at paper scale + mini topology + calibrated
+/// baseline iteration time.
+pub fn table1(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 1: MoE models (paper scale -> cost model; mini topology -> HLO)",
+        &["model", "mirrors", "experts", "top-k", "shared", "total", "active", "bytes/p", "base iter"],
+    );
+    for name in ALL_MODELS {
+        let m = ctx.registry.model(name)?;
+        let cost = crate::cost::GpuCostModel::new(m.paper.clone(), m.mini.layers);
+        t.row(vec![
+            name.to_string(),
+            m.mini.mirrors.clone(),
+            m.paper.n_experts.to_string(),
+            m.paper.top_k.to_string(),
+            m.paper.n_shared.to_string(),
+            format!("{:.1}B", m.paper.total_params / 1e9),
+            format!("{:.1}B", m.paper.active_params / 1e9),
+            format!("{}", m.paper.dtype_bytes),
+            format!("{:.1}ms", cost.baseline_cost().total() * 1e3),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+/// Fig. 1(c): static-K n-gram speculation on Mixtral across the 7 tasks.
+/// Paper shape: every task has a losing K; math/extract lose at all K;
+/// worst case ≈ 1.5x slowdown.
+pub fn fig1c(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Fig 1c: Mixtral TPOT speedup vs no-spec (n-gram, static K)",
+        &["task", "K=1", "K=2", "K=3"],
+    );
+    for w in Workload::all_seven() {
+        let mut row = vec![w.name.clone()];
+        for k in 1..=3 {
+            let s = ctx.speedup(&RunSpec::new("mixtral", w.clone(), PolicyKind::Static(k)))?;
+            row.push(ratio(s));
+        }
+        t.row(row);
+    }
+    Ok(vec![t])
+}
+
+/// Fig. 4: dense (LLaMA) vs MoE (Mixtral), K = 1..7 — TPOT/ETR speedups
+/// (top) and iteration-time breakdown (bottom).
+pub fn fig4(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let tasks = [Task::Code, Task::Math, Task::Extract];
+    let mut top = Table::new(
+        "Fig 4 top: TPOT and ETR speedup vs K (dense llama vs MoE mixtral)",
+        &["model", "task", "K", "TPOT speedup", "ETR"],
+    );
+    let mut bottom = Table::new(
+        "Fig 4 bottom: iteration time breakdown (fractions of spec iteration)",
+        &["model", "task", "K", "verify/base", "draft%", "reject%", "iter ms"],
+    );
+    for model in ["llama", "mixtral"] {
+        for task in tasks {
+            let w = Workload::single(task);
+            let base = ctx.run(&RunSpec::new(model, w.clone(), PolicyKind::Static(0)))?;
+            let base_iter = base.0.mean_iter_s;
+            for k in 1..=7 {
+                let (s, run) = ctx.run(&RunSpec::new(model, w.clone(), PolicyKind::Static(k)))?;
+                top.row(vec![
+                    model.into(),
+                    w.name.clone(),
+                    k.to_string(),
+                    ratio(base.0.tpot_s / s.tpot_s),
+                    f2(s.etr),
+                ]);
+                // Breakdown averaged over iterations.
+                let iters: Vec<&crate::metrics::IterRecord> =
+                    run.requests.iter().flat_map(|r| &r.iters).collect();
+                let n = iters.len().max(1) as f64;
+                let mean = |f: fn(&crate::cost::IterCost) -> f64| {
+                    iters.iter().map(|r| f(&r.cost)).sum::<f64>() / n
+                };
+                let verify = mean(|c| c.base_s + c.expert_s + c.overhead_s);
+                let draft = mean(|c| c.draft_s);
+                let reject = mean(|c| c.reject_s);
+                let total = mean(|c| c.total());
+                bottom.row(vec![
+                    model.into(),
+                    w.name.clone(),
+                    k.to_string(),
+                    ratio(verify / base_iter),
+                    format!("{:.1}%", 100.0 * draft / total),
+                    format!("{:.1}%", 100.0 * reject / total),
+                    format!("{:.1}", total * 1e3),
+                ]);
+            }
+        }
+    }
+    Ok(vec![top, bottom])
+}
+
+/// Fig. 5: TPOT improvement across all 5 MoEs, 7 tasks, K in {1,2,3}.
+pub fn fig5(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Fig 5: TPOT speedup, 5 MoEs x 7 tasks x static K",
+        &["model", "task", "K=1", "K=2", "K=3"],
+    );
+    for model in ALL_MOE_MODELS {
+        for w in Workload::all_seven() {
+            let mut row = vec![model.to_string(), w.name.clone()];
+            for k in 1..=3 {
+                let s = ctx.speedup(&RunSpec::new(model, w.clone(), PolicyKind::Static(k)))?;
+                row.push(ratio(s));
+            }
+            t.row(row);
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Fig. 6: iteration-level ETR and cost variation for Phi + extraction at
+/// static K=3 (5 requests, 16-iteration windows).
+pub fn fig6(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let spec = RunSpec::new("phi", Workload::single(Task::Extract), PolicyKind::Static(3));
+    let base = ctx.run(&RunSpec { policy: PolicyKind::Static(0), ..spec.clone() })?;
+    let (_, run) = ctx.run(&spec)?;
+    let mut t = Table::new(
+        "Fig 6: windowed ETR and relative cost (phi + extract, K=3)",
+        &["request", "window", "ETR", "cost", "utility"],
+    );
+    for (ri, req) in run.requests.iter().take(5).enumerate() {
+        for w in req.utility_windows(16, base.0.mean_iter_s) {
+            t.row(vec![
+                format!("r{ri}"),
+                w.window.to_string(),
+                f2(w.etr),
+                f2(w.cost),
+                f2(w.utility),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Fig. 7: utility variation across requests for selected model/task/K
+/// combinations (16-iteration windows + harmonic-mean line).
+pub fn fig7(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let combos: [(&str, Task, usize); 4] = [
+        ("phi", Task::Extract, 3),
+        ("mixtral", Task::Math, 3),
+        ("olmoe", Task::Extract, 3),
+        ("qwen", Task::Code, 2),
+    ];
+    let mut tables = Vec::new();
+    for (model, task, k) in combos {
+        let spec = RunSpec::new(model, Workload::single(task), PolicyKind::Static(k));
+        let base = ctx.run(&RunSpec { policy: PolicyKind::Static(0), ..spec.clone() })?;
+        let (_, run) = ctx.run(&spec)?;
+        let mut t = Table::new(
+            format!("Fig 7: utility windows, {model} + {} @ K={k}", task.name()),
+            &["request", "window", "utility"],
+        );
+        for (ri, req) in run.requests.iter().take(5).enumerate() {
+            for w in req.utility_windows(16, base.0.mean_iter_s) {
+                t.row(vec![format!("r{ri}"), w.window.to_string(), f2(w.utility)]);
+            }
+        }
+        t.row(vec![
+            "harmonic-mean".into(),
+            "-".into(),
+            f2(run.harmonic_mean_utility(base.0.mean_iter_s)),
+        ]);
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+/// Fig. 8: speedup as a function of measured utility over 5 models x 3
+/// tasks x K in 0..7 — utility must predict speedup (paper: R^2 = 99.4%).
+pub fn fig8(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let tasks = [Task::Code, Task::Math, Task::Extract];
+    let mut t = Table::new(
+        "Fig 8: measured utility vs TPOT speedup (Theorem 4.2)",
+        &["model", "task", "K", "utility", "speedup"],
+    );
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for model in ALL_MOE_MODELS {
+        for task in tasks {
+            let w = Workload::single(task);
+            let base = ctx.run(&RunSpec::new(model, w.clone(), PolicyKind::Static(0)))?;
+            for k in 0..=7usize {
+                let (s, _) = ctx.run(&RunSpec::new(model, w.clone(), PolicyKind::Static(k)))?;
+                // Utility from mean ETR and mean iteration time (Def. 4.1).
+                let utility = s.etr / (s.mean_iter_s / base.0.mean_iter_s);
+                let speedup = base.0.tpot_s / s.tpot_s;
+                xs.push(utility);
+                ys.push(speedup);
+                t.row(vec![
+                    model.to_string(),
+                    w.name.clone(),
+                    k.to_string(),
+                    f3(utility),
+                    f3(speedup),
+                ]);
+            }
+        }
+    }
+    let r2 = r_squared(&xs, &ys);
+    let mut s = Table::new("Fig 8 summary", &["points", "R^2 (speedup ~ utility)"]);
+    s.row(vec![xs.len().to_string(), format!("{:.4}", r2)]);
+    Ok(vec![t, s])
+}
+
+/// Fig. 13 (headline): Cascade vs static-K on 5 MoEs x 7 tasks.
+/// Paper shape: static worst cases -26%/-38%/-54% for K=1/2/3; Cascade
+/// worst case -5%; Cascade beats best-static by 7-15% on average (except
+/// OLMoE ~ -3%).
+pub fn fig13(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let policies: Vec<(String, PolicyKind)> = vec![
+        ("K=1".into(), PolicyKind::Static(1)),
+        ("K=2".into(), PolicyKind::Static(2)),
+        ("K=3".into(), PolicyKind::Static(3)),
+        ("cascade".into(), PolicyKind::Cascade(CascadeParams::default())),
+    ];
+    let mut t = Table::new(
+        "Fig 13: TPOT speedup vs no-spec (n-gram)",
+        &["model", "task", "K=1", "K=2", "K=3", "cascade"],
+    );
+    let mut summary = Table::new(
+        "Fig 13 summary",
+        &["policy", "worst-case", "geomean", "wins-vs-best-static"],
+    );
+    let mut per_policy: Vec<Vec<f64>> = vec![Vec::new(); policies.len()];
+    let mut cascade_vs_best = 0usize;
+    let mut cells = 0usize;
+    for model in ALL_MOE_MODELS {
+        for w in Workload::all_seven() {
+            let mut row = vec![model.to_string(), w.name.clone()];
+            let mut vals = Vec::new();
+            for (pi, (_, p)) in policies.iter().enumerate() {
+                let s = ctx.speedup(&RunSpec::new(model, w.clone(), p.clone()))?;
+                per_policy[pi].push(s);
+                vals.push(s);
+                row.push(ratio(s));
+            }
+            let best_static = vals[..3].iter().cloned().fold(f64::MIN, f64::max);
+            if vals[3] >= best_static * 0.995 {
+                cascade_vs_best += 1;
+            }
+            cells += 1;
+            t.row(row);
+        }
+    }
+    for (pi, (name, _)) in policies.iter().enumerate() {
+        let v = &per_policy[pi];
+        let worst = v.iter().cloned().fold(f64::MAX, f64::min);
+        let geo = (v.iter().map(|x| x.ln()).sum::<f64>() / v.len() as f64).exp();
+        summary.row(vec![
+            name.clone(),
+            ratio(worst),
+            ratio(geo),
+            if pi == 3 { format!("{cascade_vs_best}/{cells}") } else { "-".into() },
+        ]);
+    }
+    Ok(vec![t, summary])
+}
+
+/// Fig. 15: iteration-level utility for Mixtral+math under static K=3 vs
+/// Cascade — Cascade must bound the slowdown near 5%.
+pub fn fig15(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let w = Workload::single(Task::Math);
+    let base = ctx.run(&RunSpec::new("mixtral", w.clone(), PolicyKind::Static(0)))?;
+    let mut tables = Vec::new();
+    for (label, policy) in [
+        ("static-k3", PolicyKind::Static(3)),
+        ("cascade", PolicyKind::Cascade(CascadeParams::default())),
+    ] {
+        let (s, run) = ctx.run(&RunSpec::new("mixtral", w.clone(), policy))?;
+        let mut t = Table::new(
+            format!("Fig 15: utility windows, mixtral + math, {label}"),
+            &["request", "window", "utility"],
+        );
+        for (ri, req) in run.requests.iter().take(4).enumerate() {
+            for win in req.utility_windows(16, base.0.mean_iter_s) {
+                t.row(vec![format!("r{ri}"), win.window.to_string(), f2(win.utility)]);
+            }
+        }
+        t.row(vec!["overall-speedup".into(), "-".into(), ratio(base.0.tpot_s / s.tpot_s)]);
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+/// Fig. 16: utility trace for the all-3 mix on Mixtral under Cascade over a
+/// long stream — Cascade adapts per request.
+pub fn fig16(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let w = Workload::by_name("all-3").unwrap();
+    let base = ctx.run(&RunSpec::new("mixtral", w.clone(), PolicyKind::Static(0)))?;
+    let mut spec = RunSpec::new("mixtral", w, PolicyKind::Cascade(CascadeParams::default()));
+    spec.max_tokens = ctx.tokens_per_cell * 2; // longer stream
+    let (s, run) = ctx.run(&spec)?;
+    let mut t = Table::new(
+        "Fig 16: per-request utility under Cascade (mixtral, all-3 mix)",
+        &["request", "task", "mean utility", "mean K", "tokens"],
+    );
+    for req in &run.requests {
+        let wins = req.utility_windows(16, base.0.mean_iter_s);
+        let mu = wins.iter().map(|w| w.utility).sum::<f64>() / wins.len().max(1) as f64;
+        let mk = req.iters.iter().map(|r| r.k_chosen as f64).sum::<f64>()
+            / req.iters.len().max(1) as f64;
+        t.row(vec![
+            format!("r{}", req.id),
+            req.task.clone(),
+            f2(mu),
+            f2(mk),
+            req.tokens_emitted().to_string(),
+        ]);
+    }
+    t.row(vec![
+        "overall".into(),
+        "-".into(),
+        ratio(base.0.tpot_s / s.tpot_s),
+        "-".into(),
+        s.tokens.to_string(),
+    ]);
+    Ok(vec![t])
+}
+
+/// Fig. 17: Cascade with EAGLE-lite speculation on Mixtral. Paper shape:
+/// static-K avoids slowdowns (higher draft accuracy), K=1 is best static,
+/// Cascade matches the best static everywhere.
+pub fn fig17(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Fig 17: Mixtral + EAGLE-lite, TPOT speedup vs no-spec",
+        &["task", "K=1", "K=2", "K=3", "cascade"],
+    );
+    for w in Workload::all_seven() {
+        let mut row = vec![w.name.clone()];
+        for policy in [
+            PolicyKind::Static(1),
+            PolicyKind::Static(2),
+            PolicyKind::Static(3),
+            PolicyKind::Cascade(CascadeParams::default()),
+        ] {
+            let s = ctx.speedup(
+                &RunSpec::new("mixtral", w.clone(), policy).with_drafter(DrafterKind::EagleLite),
+            )?;
+            row.push(ratio(s));
+        }
+        t.row(row);
+    }
+    Ok(vec![t])
+}
+
+/// Fig. 18: the three optimizations enabled incrementally (Mixtral, 7
+/// tasks). Level 0 = static K_start=3, +disable, +back-off, +hill-climb.
+pub fn fig18(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Fig 18: Cascade ablation on Mixtral (TPOT speedup vs no-spec)",
+        &["task", "none(K=3)", "+disable", "+back-off", "+hill-climb"],
+    );
+    for w in Workload::all_seven() {
+        let mut row = vec![w.name.clone()];
+        for level in 0..=3usize {
+            let s = ctx.speedup(&RunSpec::new(
+                "mixtral",
+                w.clone(),
+                PolicyKind::Cascade(CascadeParams::ablation(level)),
+            ))?;
+            row.push(ratio(s));
+        }
+        t.row(row);
+    }
+    Ok(vec![t])
+}
+
+/// §7.5: sensitivity to (t, S) with T = 4t.
+pub fn sensitivity(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "7.5: hyperparameter sensitivity (Mixtral, geomean over 7 tasks)",
+        &["t", "S", "geomean speedup"],
+    );
+    for (trial, set) in [(2usize, 8usize), (4, 16), (8, 32)] {
+        let mut vals = Vec::new();
+        for w in Workload::all_seven() {
+            let s = ctx.speedup(&RunSpec::new(
+                "mixtral",
+                w,
+                PolicyKind::Cascade(CascadeParams::with_phases(trial, set)),
+            ))?;
+            vals.push(s.ln());
+        }
+        let geo = (vals.iter().sum::<f64>() / vals.len() as f64).exp();
+        t.row(vec![trial.to_string(), set.to_string(), ratio(geo)]);
+    }
+    Ok(vec![t])
+}
+
+/// Coefficient of determination of the y = x predictor (utility predicts
+/// speedup 1:1 per Theorem 4.2).
+pub fn r_squared(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mean_y = ys.iter().sum::<f64>() / n;
+    let ss_tot: f64 = ys.iter().map(|y| (y - mean_y).powi(2)).sum();
+    let ss_res: f64 = xs.iter().zip(ys).map(|(x, y)| (y - x).powi(2)).sum();
+    1.0 - ss_res / ss_tot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r_squared_perfect_fit() {
+        let xs = [1.0, 2.0, 3.0];
+        assert!((r_squared(&xs, &xs) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r_squared_poor_fit_lower() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [3.0, 1.0, 2.0];
+        assert!(r_squared(&xs, &ys) < 0.5);
+    }
+}

@@ -1,0 +1,95 @@
+//! Experiment harnesses: one per table/figure in the paper's evaluation
+//! (see DESIGN.md §4 for the index). Each harness returns `Table`s that are
+//! printed and optionally written to `results/` as CSV.
+
+pub mod figures;
+pub mod related;
+pub mod runner;
+
+pub use runner::{BackendKind, ExpCtx, RunSpec};
+
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// A figure/table reproduction: id, paper caption, and the harness.
+pub struct Experiment {
+    pub id: &'static str,
+    pub caption: &'static str,
+    pub run: fn(&mut ExpCtx) -> Result<Vec<Table>>,
+}
+
+/// Registry of every reproduced table/figure.
+pub fn all() -> Vec<Experiment> {
+    vec![
+        Experiment { id: "table1", caption: "Model zoo (Table 1)", run: figures::table1 },
+        Experiment {
+            id: "fig1c",
+            caption: "Static-K n-gram speculation on Mixtral (Fig. 1c)",
+            run: figures::fig1c,
+        },
+        Experiment {
+            id: "fig4",
+            caption: "Dense vs MoE: TPOT/ETR and iteration breakdown, K=1..7 (Fig. 4)",
+            run: figures::fig4,
+        },
+        Experiment {
+            id: "fig5",
+            caption: "TPOT across 5 MoEs x 7 tasks x K in {1,2,3} (Fig. 5)",
+            run: figures::fig5,
+        },
+        Experiment {
+            id: "fig6",
+            caption: "Iteration-level ETR and cost, Phi + extract (Fig. 6)",
+            run: figures::fig6,
+        },
+        Experiment {
+            id: "fig7",
+            caption: "Per-request utility traces (Fig. 7)",
+            run: figures::fig7,
+        },
+        Experiment {
+            id: "fig8",
+            caption: "Speedup vs utility, 120 points (Fig. 8, Theorem 4.2)",
+            run: figures::fig8,
+        },
+        Experiment {
+            id: "fig13",
+            caption: "HEADLINE: Cascade vs static-K, 5 MoEs x 7 tasks (Fig. 13)",
+            run: figures::fig13,
+        },
+        Experiment {
+            id: "fig15",
+            caption: "Utility trace: Mixtral+math, static K=3 vs Cascade (Fig. 15)",
+            run: figures::fig15,
+        },
+        Experiment {
+            id: "fig16",
+            caption: "Utility trace: Mixtral + all-3 mix with Cascade (Fig. 16)",
+            run: figures::fig16,
+        },
+        Experiment {
+            id: "fig17",
+            caption: "Cascade with EAGLE-lite speculation on Mixtral (Fig. 17)",
+            run: figures::fig17,
+        },
+        Experiment {
+            id: "fig18",
+            caption: "Ablation: disable / back-off / hill-climb (Fig. 18)",
+            run: figures::fig18,
+        },
+        Experiment {
+            id: "sens",
+            caption: "Hyperparameter sensitivity t/S (paper 7.5)",
+            run: figures::sensitivity,
+        },
+        Experiment {
+            id: "related",
+            caption: "Lookahead/Medusa cost analysis (paper 8.1)",
+            run: related::related,
+        },
+    ]
+}
+
+pub fn by_id(id: &str) -> Option<Experiment> {
+    all().into_iter().find(|e| e.id == id)
+}

@@ -1,0 +1,98 @@
+//! §8 analysis: why the *other* speculation families are infeasible for
+//! MoEs (paper §8.1's Lookahead-Decoding and Medusa discussion), derived
+//! from the cost model rather than claimed.
+//!
+//! For a technique that puts `n` tokens in flight per iteration, the
+//! expected unique experts per layer under near-uniform routing is the
+//! balls-in-bins bound the paper uses in §2.4:
+//!
+//!   E[unique] = E · (1 − (1 − k/E)^n)
+//!
+//! The verification cost ratio follows from Table 1 bytes, and the ETR a
+//! technique must achieve just to break even is that ratio — giving the
+//! paper's "4x–8x cost, ETR rarely justifies it" conclusion for Medusa
+//! quantitatively.
+
+use crate::cost::GpuCostModel;
+use crate::experiments::runner::ExpCtx;
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// Expected unique experts per layer for `n` in-flight tokens.
+pub fn expected_unique(n_experts: usize, top_k: usize, n_tokens: usize) -> f64 {
+    let e = n_experts as f64;
+    let k = top_k as f64;
+    e * (1.0 - (1.0 - k / e).powi(n_tokens as i32))
+}
+
+/// The speculation families the paper's related work analyzes, with their
+/// in-flight token counts at typical settings.
+const TECHNIQUES: &[(&str, usize)] = &[
+    ("no speculation", 1),
+    ("n-gram / draft-model K=3", 4),
+    ("n-gram / draft-model K=7", 8),
+    ("Lookahead G=4, K=4", 17),  // G parallel n-grams + 1 (paper 8.1)
+    ("Medusa 4 heads, tree=64", 64), // 50-100x in-flight tokens (paper 8.1)
+];
+
+pub fn related(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "8.1 analysis: in-flight tokens -> verification cost (balls-in-bins + Table 1)",
+        &["model", "technique", "tokens", "E[unique]/layer", "verify cost", "break-even ETR"],
+    );
+    for name in ["mixtral", "olmoe"] {
+        let model = ctx.registry.model(name)?;
+        let cost = GpuCostModel::new(model.paper.clone(), model.mini.layers);
+        let base = cost.baseline_cost().verify_s();
+        for (tech, n) in TECHNIQUES {
+            let uniq = expected_unique(model.paper.n_experts, model.paper.top_k, *n);
+            let uniq_vec = vec![uniq.round() as usize; model.mini.layers];
+            let c = cost
+                .verify_cost(&uniq_vec, *n, n.saturating_sub(1), crate::config::DrafterKind::Ngram)
+                .verify_s();
+            t.row(vec![
+                name.into(),
+                tech.to_string(),
+                n.to_string(),
+                format!("{uniq:.1}/{}", model.paper.n_experts),
+                format!("{:.2}x", c / base),
+                format!("{:.2}", c / base),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unique_monotone_in_tokens() {
+        let a = expected_unique(8, 2, 1);
+        let b = expected_unique(8, 2, 4);
+        let c = expected_unique(8, 2, 64);
+        assert!(a < b && b < c);
+        assert!((a - 2.0).abs() < 1e-9); // one token activates exactly top_k
+        assert!(c <= 8.0 + 1e-9);
+    }
+
+    #[test]
+    fn paper_balls_in_bins_example() {
+        // Paper §2.4: Mixtral at K=7 (8 tokens, top-2 of 8) activates over
+        // seven unique experts on average — a ~3.5x increase.
+        let u = expected_unique(8, 2, 8);
+        assert!(u > 7.0, "{u}");
+        assert!((u / 2.0) > 3.4);
+    }
+
+    #[test]
+    fn medusa_saturates_experts() {
+        // Paper §8.1: Medusa's tree "would activate all experts every
+        // iteration".
+        let u = expected_unique(8, 2, 64);
+        assert!(u > 7.99);
+        let u64e = expected_unique(64, 8, 64);
+        assert!(u64e > 63.0);
+    }
+}

@@ -1,0 +1,206 @@
+//! Shared experiment runner: build an engine for a (model, task, policy,
+//! backend) cell, serve a token budget, summarize.
+//!
+//! Engines (and their compiled PJRT executables) are cached per model so a
+//! figure touching 5 models x 4 policies compiles each variant once.
+
+use crate::config::{DrafterKind, EngineConfig};
+use crate::coordinator::engine::{Engine, RunSummary};
+use crate::coordinator::scheduler::{Budget, Scheduler};
+use crate::metrics::RunMetrics;
+use crate::models::Registry;
+use crate::spec::policy::PolicyKind;
+use crate::workload::{RequestStream, Workload};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// Which backend executes the target model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO through PJRT (the production path).
+    Real,
+    /// Trace-level simulation (fast sweeps; cross-validated against Real).
+    Sim,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "real" => Ok(BackendKind::Real),
+            "sim" => Ok(BackendKind::Sim),
+            other => anyhow::bail!("unknown backend {other:?} (want real|sim)"),
+        }
+    }
+}
+
+/// One experiment cell.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub model: String,
+    pub workload: Workload,
+    pub policy: PolicyKind,
+    pub drafter: DrafterKind,
+    pub max_tokens: usize,
+    pub seed: u64,
+}
+
+impl RunSpec {
+    pub fn new(model: &str, workload: Workload, policy: PolicyKind) -> Self {
+        Self {
+            model: model.into(),
+            workload,
+            policy,
+            drafter: DrafterKind::Ngram,
+            max_tokens: 0, // 0 = use ctx default
+            seed: 0xCA5CADE,
+        }
+    }
+
+    pub fn with_drafter(mut self, d: DrafterKind) -> Self {
+        self.drafter = d;
+        self
+    }
+}
+
+/// Experiment context: registry + global knobs from the CLI.
+pub struct ExpCtx {
+    pub registry: Registry,
+    pub backend: BackendKind,
+    /// Output-token budget per cell (CLI `--tokens`).
+    pub tokens_per_cell: usize,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+    /// Shared PJRT client so each figure pays client start-up once.
+    client: Option<xla::PjRtClient>,
+    /// Memoized no-speculation baselines: (model, workload, drafter, tokens)
+    /// -> baseline TPOT.
+    baseline_cache: HashMap<(String, String, DrafterKind, usize), f64>,
+    /// Shared compiled runtimes: one PJRT compile + weight upload per model
+    /// per process (engines share; request state is per-engine).
+    runtimes: HashMap<String, crate::coordinator::backend::SharedRuntime>,
+}
+
+impl ExpCtx {
+    pub fn new(registry: Registry, backend: BackendKind, tokens_per_cell: usize) -> Self {
+        Self {
+            registry,
+            backend,
+            tokens_per_cell,
+            max_new_tokens: 200,
+            seed: 0xCA5CADE,
+            client: None,
+            baseline_cache: HashMap::new(),
+            runtimes: HashMap::new(),
+        }
+    }
+
+    /// Get (or build) the shared runtime for `model`.
+    fn runtime(&mut self, model: &str) -> Result<crate::coordinator::backend::SharedRuntime> {
+        if let Some(rt) = self.runtimes.get(model) {
+            return Ok(rt.clone());
+        }
+        let client = self.client()?;
+        let rt = crate::runtime::ModelRuntime::with_client(&self.registry, model, client)
+            .with_context(|| format!("loading model {model}"))?;
+        let rt = std::rc::Rc::new(std::cell::RefCell::new(rt));
+        self.runtimes.insert(model.to_string(), rt.clone());
+        Ok(rt)
+    }
+
+    fn client(&mut self) -> Result<xla::PjRtClient> {
+        if self.client.is_none() {
+            self.client = Some(
+                xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT client: {e:?}"))?,
+            );
+        }
+        Ok(self.client.as_ref().unwrap().clone())
+    }
+
+    /// Build an engine for a spec.
+    pub fn engine(&mut self, spec: &RunSpec) -> Result<Engine> {
+        let cfg = EngineConfig {
+            model: spec.model.clone(),
+            drafter: spec.drafter,
+            max_new_tokens: self.max_new_tokens,
+            seed: spec.seed,
+            ..EngineConfig::default()
+        };
+        let policy = spec.policy.build();
+        match self.backend {
+            BackendKind::Sim => Engine::sim(&self.registry, cfg, policy),
+            BackendKind::Real => {
+                let runtime = self.runtime(&cfg.model)?;
+                let (paper, mini_layers) = {
+                    let rt = runtime.borrow();
+                    (rt.model.paper.clone(), rt.model.mini.layers)
+                };
+                let cost = crate::cost::GpuCostModel::new(paper, mini_layers);
+                let backend = Box::new(crate::coordinator::backend::RealBackend::shared(
+                    runtime,
+                    cfg.guide_strength,
+                    cfg.seed,
+                ));
+                let drafter = match cfg.drafter {
+                    DrafterKind::Ngram => crate::coordinator::engine::EngineDrafter::Ngram(
+                        crate::spec::NgramDrafter::new(cfg.ngram_min, cfg.ngram_max),
+                    ),
+                    DrafterKind::EagleLite => {
+                        let draft_rt = self.runtime("draft")?;
+                        crate::coordinator::engine::EngineDrafter::Eagle(
+                            crate::coordinator::eagle::EagleLite::shared(
+                                draft_rt,
+                                cfg.guide_strength,
+                                cfg.seed ^ 0xE1,
+                            ),
+                        )
+                    }
+                };
+                Ok(Engine::new(cfg, backend, drafter, cost, policy))
+            }
+        }
+    }
+
+    /// Run one cell: serve requests until the token budget is spent.
+    pub fn run(&mut self, spec: &RunSpec) -> Result<(RunSummary, RunMetrics)> {
+        let budget = Budget {
+            max_tokens: if spec.max_tokens > 0 { spec.max_tokens } else { self.tokens_per_cell },
+            max_requests: 10_000,
+        };
+        let mut engine = self.engine(spec)?;
+        let stream = RequestStream::new(spec.workload.clone(), spec.seed, self.max_new_tokens);
+        let mut sched = Scheduler::new(stream, budget);
+        let run = sched.run(&mut engine)?;
+        let summary = RunSummary::from_run(
+            &spec.model,
+            &spec.workload.name,
+            &spec.policy.label(),
+            &run,
+        );
+        Ok((summary, run))
+    }
+
+    /// Baseline (K=0) TPOT for a (model, workload, drafter) cell, memoized.
+    pub fn baseline_tpot(&mut self, spec: &RunSpec) -> Result<f64> {
+        let key = (
+            spec.model.clone(),
+            spec.workload.name.clone(),
+            spec.drafter,
+            spec.max_tokens,
+        );
+        if let Some(&t) = self.baseline_cache.get(&key) {
+            return Ok(t);
+        }
+        let base = RunSpec { policy: PolicyKind::Static(0), ..spec.clone() };
+        let (b, _) = self.run(&base)?;
+        self.baseline_cache.insert(key, b.tpot_s);
+        Ok(b.tpot_s)
+    }
+
+    /// TPOT speedup of `spec` relative to the no-speculation baseline of the
+    /// same (model, workload): the y-axis of most paper figures.
+    pub fn speedup(&mut self, spec: &RunSpec) -> Result<f64> {
+        let (s, _) = self.run(spec)?;
+        let base = self.baseline_tpot(spec)?;
+        Ok(base / s.tpot_s)
+    }
+}

@@ -1,0 +1,245 @@
+//! Block-based KV-cache manager with speculative lookahead slots.
+//!
+//! Mirrors vLLM's paged KV management at the granularity this stack needs
+//! (paper Fig. 14: the lookahead scheduler "reserves speculative generated
+//! token KV-states"). The device tensor is the fixed window `[0, max_seq)`
+//! owned by `runtime::RequestState`; this module tracks which positions are
+//! *committed* vs *speculative*, maps them onto fixed-size blocks, and
+//! accounts allocation/rollback so the engine can enforce capacity and
+//! report cache pressure.
+
+use anyhow::{bail, Result};
+
+/// Allocation state of one request's KV window.
+#[derive(Debug, Clone)]
+struct KvAllocation {
+    /// Committed tokens (== `RequestState::cache_len`).
+    committed: usize,
+    /// Speculative positions currently reserved beyond `committed`.
+    lookahead: usize,
+    /// Blocks currently allocated.
+    blocks: usize,
+}
+
+/// Block-based manager for a fixed `max_seq` window.
+#[derive(Debug, Clone)]
+pub struct KvBlockManager {
+    pub block_size: usize,
+    pub max_seq: usize,
+    alloc: KvAllocation,
+    /// Stats for telemetry / tests.
+    pub peak_blocks: usize,
+    pub total_reserved: u64,
+    pub total_rolled_back: u64,
+}
+
+impl KvBlockManager {
+    pub fn new(max_seq: usize, block_size: usize) -> Self {
+        assert!(block_size > 0 && max_seq % block_size == 0);
+        Self {
+            block_size,
+            max_seq,
+            alloc: KvAllocation { committed: 0, lookahead: 0, blocks: 0 },
+            peak_blocks: 0,
+            total_reserved: 0,
+            total_rolled_back: 0,
+        }
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    pub fn committed(&self) -> usize {
+        self.alloc.committed
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.alloc.blocks
+    }
+
+    /// Total capacity in blocks.
+    pub fn total_blocks(&self) -> usize {
+        self.max_seq / self.block_size
+    }
+
+    /// Can a step of `t` tokens (1 original + lookahead) be admitted?
+    pub fn can_reserve(&self, t: usize) -> bool {
+        self.alloc.committed + t <= self.max_seq
+    }
+
+    /// Reserve slots for a step of `t` in-flight tokens (vLLM lookahead).
+    /// Allocates any new blocks the speculative span touches.
+    pub fn reserve(&mut self, t: usize) -> Result<()> {
+        if !self.can_reserve(t) {
+            bail!(
+                "KV overflow: committed {} + in-flight {t} > max_seq {}",
+                self.alloc.committed,
+                self.max_seq
+            );
+        }
+        self.alloc.lookahead = t;
+        let needed = self.blocks_for(self.alloc.committed + t);
+        if needed > self.alloc.blocks {
+            self.alloc.blocks = needed;
+        }
+        self.peak_blocks = self.peak_blocks.max(self.alloc.blocks);
+        self.total_reserved += t as u64;
+        Ok(())
+    }
+
+    /// Commit `advance` of the reserved in-flight tokens; the rest of the
+    /// lookahead is rolled back (rejected speculative tokens). Blocks that
+    /// only held rejected tokens are freed for reuse — their device slots
+    /// get overwritten by the next step at the same positions.
+    pub fn commit(&mut self, advance: usize) -> Result<()> {
+        if advance > self.alloc.lookahead {
+            bail!("commit {advance} exceeds reserved lookahead {}", self.alloc.lookahead);
+        }
+        self.total_rolled_back += (self.alloc.lookahead - advance) as u64;
+        self.alloc.committed += advance;
+        self.alloc.lookahead = 0;
+        self.alloc.blocks = self.blocks_for(self.alloc.committed);
+        Ok(())
+    }
+
+    /// Release everything (request finished).
+    pub fn release(&mut self) {
+        self.alloc = KvAllocation { committed: 0, lookahead: 0, blocks: 0 };
+    }
+
+    /// Fraction of the window committed.
+    pub fn utilization(&self) -> f64 {
+        self.alloc.committed as f64 / self.max_seq as f64
+    }
+
+    /// Invariant check used by tests: the span fits the window, blocks cover
+    /// exactly the committed span after commit, and never exceed capacity.
+    pub fn check_invariants(&self) -> Result<()> {
+        if self.alloc.committed + self.alloc.lookahead > self.max_seq {
+            bail!("span exceeds window");
+        }
+        if self.alloc.blocks > self.total_blocks() {
+            bail!("blocks exceed capacity");
+        }
+        if self.alloc.blocks < self.blocks_for(self.alloc.committed) {
+            bail!("committed tokens not covered by blocks");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn reserve_commit_cycle() {
+        let mut kv = KvBlockManager::new(64, 16);
+        kv.reserve(4).unwrap(); // 1 token + 3 drafts
+        assert_eq!(kv.blocks_in_use(), 1);
+        kv.commit(2).unwrap(); // 1 accepted draft + 1 corrected token
+        assert_eq!(kv.committed(), 2);
+        assert_eq!(kv.total_rolled_back, 2);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn blocks_grow_with_span() {
+        let mut kv = KvBlockManager::new(64, 16);
+        for _ in 0..20 {
+            kv.reserve(1).unwrap();
+            kv.commit(1).unwrap();
+        }
+        assert_eq!(kv.committed(), 20);
+        assert_eq!(kv.blocks_in_use(), 2); // ceil(20/16)
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        let mut kv = KvBlockManager::new(32, 16);
+        for _ in 0..32 {
+            kv.reserve(1).unwrap();
+            kv.commit(1).unwrap();
+        }
+        assert!(kv.reserve(1).is_err());
+        assert!(!kv.can_reserve(1));
+    }
+
+    #[test]
+    fn commit_more_than_reserved_rejected() {
+        let mut kv = KvBlockManager::new(64, 16);
+        kv.reserve(3).unwrap();
+        assert!(kv.commit(4).is_err());
+    }
+
+    #[test]
+    fn rollback_frees_speculative_blocks() {
+        let mut kv = KvBlockManager::new(64, 16);
+        // Commit 15 tokens, then reserve 8 speculative (crosses a block).
+        for _ in 0..15 {
+            kv.reserve(1).unwrap();
+            kv.commit(1).unwrap();
+        }
+        kv.reserve(8).unwrap();
+        assert_eq!(kv.blocks_in_use(), 2);
+        kv.commit(1).unwrap(); // reject all drafts
+        assert_eq!(kv.committed(), 16);
+        assert_eq!(kv.blocks_in_use(), 1); // speculative-only block freed
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_resets() {
+        let mut kv = KvBlockManager::new(64, 16);
+        kv.reserve(4).unwrap();
+        kv.commit(4).unwrap();
+        kv.release();
+        assert_eq!(kv.committed(), 0);
+        assert_eq!(kv.blocks_in_use(), 0);
+    }
+
+    /// Property test (in-tree harness): random reserve/commit traces keep
+    /// invariants and conserve token accounting.
+    #[test]
+    fn prop_random_traces_keep_invariants() {
+        let mut rng = Rng::new(0x6B76);
+        for case in 0..200 {
+            let mut kv = KvBlockManager::new(384, 16);
+            let mut committed = 0usize;
+            for _ in 0..rng.range(1, 120) {
+                let t = rng.range(1, 8);
+                if !kv.can_reserve(t) {
+                    break;
+                }
+                kv.reserve(t).unwrap();
+                let adv = rng.range(1, t);
+                kv.commit(adv).unwrap();
+                committed += adv;
+                kv.check_invariants().unwrap_or_else(|e| panic!("case {case}: {e}"));
+                assert_eq!(kv.committed(), committed);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_reserved_minus_rolled_back_equals_committed() {
+        let mut rng = Rng::new(0x6B77);
+        for _ in 0..100 {
+            let mut kv = KvBlockManager::new(384, 16);
+            loop {
+                let t = rng.range(1, 8);
+                if !kv.can_reserve(t) {
+                    break;
+                }
+                kv.reserve(t).unwrap();
+                kv.commit(rng.range(1, t)).unwrap();
+            }
+            assert_eq!(
+                kv.total_reserved - kv.total_rolled_back,
+                kv.committed() as u64
+            );
+        }
+    }
+}

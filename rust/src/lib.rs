@@ -1,0 +1,40 @@
+//! # Cascade: utility-driven speculative decoding for MoE serving
+//!
+//! A three-layer reproduction of *"Utility-Driven Speculative Decoding for
+//! Mixture-of-Experts"* (CS.DC 2025):
+//!
+//! * **L1/L2** (build time, Python): Pallas kernels + a JAX MoE transformer,
+//!   AOT-lowered to HLO text (`make artifacts`). Python never runs on the
+//!   request path.
+//! * **L3** (this crate): a vLLM-style single-batch serving coordinator —
+//!   scheduler, KV-cache manager, drafters, rejection sampler — with the
+//!   paper's contribution, the **utility-driven speculation manager**
+//!   (test-and-set, adaptive back-off, hill-climbing), as a first-class
+//!   policy in [`spec`].
+//!
+//! The [`runtime`] module loads the AOT artifacts via the PJRT C API and the
+//! [`coordinator`] drives them; [`cost`] converts measured expert
+//! activations into GPU memory traffic at paper scale (see DESIGN.md §2 for
+//! the substitution argument); [`experiments`] regenerates every table and
+//! figure in the paper's evaluation.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod experiments;
+pub mod kv;
+pub mod metrics;
+pub mod models;
+pub mod rng;
+pub mod runtime;
+pub mod sampling;
+pub mod sim;
+pub mod spec;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+pub use config::{CascadeParams, EngineConfig};
+pub use coordinator::engine::Engine;
+pub use spec::policy::{PolicyKind, SpecPolicy};

@@ -1,0 +1,240 @@
+//! `cascade` — the serving coordinator CLI.
+//!
+//! Subcommands:
+//!   list-models                       show the model zoo + artifact status
+//!   serve   --model M --task T ...    serve a request stream, print summary
+//!   figure  <id|all> [--backend B]    regenerate a paper table/figure
+//!   golden-check                      validate artifacts against JAX goldens
+//!
+//! Arg parsing is in-tree (the offline vendor set has no clap); see
+//! `Args` below for the tiny flag grammar.
+
+use anyhow::{bail, Context, Result};
+use cascade::config::EngineConfig;
+use cascade::coordinator::engine::Engine;
+use cascade::coordinator::scheduler::{Budget, Scheduler};
+use cascade::experiments::{self, BackendKind, ExpCtx};
+use cascade::models::{default_artifacts_dir, Registry};
+use cascade::spec::policy::PolicyKind;
+use cascade::util::table::{ms, Table};
+use cascade::workload::{RequestStream, Workload};
+use std::collections::HashMap;
+
+/// Tiny `--flag value` parser: positional args + string flags.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .with_context(|| format!("flag --{name} needs a value"))?;
+                flags.insert(name.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} {v:?} not a number")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "cascade — utility-driven speculative decoding for MoE serving
+
+USAGE:
+  cascade list-models
+  cascade golden-check
+  cascade serve  [--model mixtral] [--task code|math|extract|code+math|math+extract|code+extract|all-3]
+                 [--policy k0..k7|cascade|ablation0..3] [--drafter ngram|eagle]
+                 [--tokens 400] [--backend real|sim] [--seed N]
+  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|all>
+                 [--backend real|sim] [--tokens 300] [--out-dir results]
+"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "list-models" => list_models(),
+        "golden-check" => golden_check(),
+        "serve" => serve(&args),
+        "figure" => figure(&args),
+        _ => usage(),
+    }
+}
+
+fn registry() -> Result<Registry> {
+    Registry::load(default_artifacts_dir())
+}
+
+fn list_models() -> Result<()> {
+    let reg = registry()?;
+    let mut t = Table::new(
+        "model zoo",
+        &["model", "mirrors", "experts", "top-k", "shared", "affinity", "variants", "impl"],
+    );
+    for name in reg.model_names() {
+        let m = reg.model(&name)?;
+        t.row(vec![
+            name.clone(),
+            m.mini.mirrors.clone(),
+            m.mini.n_experts.to_string(),
+            m.mini.top_k.to_string(),
+            m.mini.n_shared.to_string(),
+            format!("{:.2}", m.mini.affinity),
+            m.token_variants().len().to_string(),
+            reg.manifest.models[&name].impl_name.clone(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Execute each model's golden input through the PJRT path and compare
+/// against the eager-JAX outputs recorded in the manifest.
+fn golden_check() -> Result<()> {
+    let reg = registry()?;
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let mut ok = 0;
+    for name in reg.model_names() {
+        let mut rt = cascade::runtime::ModelRuntime::with_client(&reg, &name, client.clone())?;
+        let golden = rt.model.golden.clone();
+        let mut state = rt.fresh_state();
+        let out = rt.step(&mut state, &golden.tokens)?;
+        let head = out.logits_row(0)[..8].to_vec();
+        for (i, (a, b)) in head.iter().zip(&golden.logits_row0_head).enumerate() {
+            if (a - b).abs() > 1e-3 * (1.0 + b.abs()) {
+                bail!("{name}: logits[0][{i}] {a} != golden {b}");
+            }
+        }
+        let argmax: Vec<usize> = (0..golden.t)
+            .map(|i| cascade::sampling::argmax(out.logits_row(i)) as usize)
+            .collect();
+        if argmax != golden.argmax {
+            bail!("{name}: argmax {argmax:?} != golden {:?}", golden.argmax);
+        }
+        println!("  {name}: OK (logits head + argmax match eager JAX)");
+        ok += 1;
+    }
+    println!("golden-check: {ok} models verified");
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let reg = registry()?;
+    let model = args.get("model", "mixtral");
+    let task = args.get("task", "code");
+    let workload =
+        Workload::by_name(&task).with_context(|| format!("unknown task {task:?}"))?;
+    let policy = PolicyKind::parse(&args.get("policy", "cascade"))?;
+    let backend = BackendKind::parse(&args.get("backend", "real"))?;
+    let tokens = args.get_usize("tokens", 400)?;
+    let seed = args.get_usize("seed", 0xCA5CADE)? as u64;
+    let drafter = match args.get("drafter", "ngram").as_str() {
+        "ngram" => cascade::config::DrafterKind::Ngram,
+        "eagle" => cascade::config::DrafterKind::EagleLite,
+        other => bail!("unknown drafter {other:?}"),
+    };
+
+    let cfg = EngineConfig { model: model.clone(), drafter, seed, ..EngineConfig::default() };
+    let mut engine = match backend {
+        BackendKind::Real => Engine::real(&reg, cfg, policy.build())?,
+        BackendKind::Sim => Engine::sim(&reg, cfg, policy.build())?,
+    };
+    let stream = RequestStream::new(workload.clone(), seed, 200);
+    let mut sched = Scheduler::new(stream, Budget { max_tokens: tokens, max_requests: 10_000 });
+
+    let t0 = std::time::Instant::now();
+    let run = sched.run(&mut engine)?;
+    let wall = t0.elapsed();
+
+    let mut t = Table::new(
+        format!(
+            "serve: {model} + {task} + {} ({} backend)",
+            policy.label(),
+            match backend {
+                BackendKind::Real => "real",
+                BackendKind::Sim => "sim",
+            }
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["requests".into(), run.requests.len().to_string()]);
+    t.row(vec!["output tokens".into(), run.total_tokens().to_string()]);
+    t.row(vec!["TPOT (sim GPU)".into(), ms(run.tpot_s())]);
+    t.row(vec!["throughput (sim)".into(), format!("{:.1} tok/s", run.throughput())]);
+    t.row(vec!["mean ETR".into(), format!("{:.2} tok/iter", run.mean_etr())]);
+    t.row(vec![
+        "test-phase fraction".into(),
+        format!("{:.1}%", 100.0 * run.test_phase_fraction()),
+    ]);
+    t.row(vec!["host wall time".into(), format!("{:.2}s", wall.as_secs_f64())]);
+    t.row(vec![
+        "host tok/s".into(),
+        format!("{:.1}", run.total_tokens() as f64 / wall.as_secs_f64()),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn figure(args: &Args) -> Result<()> {
+    let id = args.positional.first().map(String::as_str).unwrap_or("all");
+    let backend = BackendKind::parse(&args.get("backend", "real"))?;
+    let tokens = args.get_usize("tokens", 300)?;
+    let out_dir = args.get("out-dir", "");
+
+    let reg = registry()?;
+    let mut ctx = ExpCtx::new(reg, backend, tokens);
+
+    let experiments: Vec<_> = if id == "all" {
+        experiments::all()
+    } else {
+        vec![experiments::by_id(id).with_context(|| format!("unknown figure {id:?}"))?]
+    };
+
+    for exp in experiments {
+        println!("\n### {} — {}\n", exp.id, exp.caption);
+        let t0 = std::time::Instant::now();
+        let tables = (exp.run)(&mut ctx)?;
+        for (i, t) in tables.iter().enumerate() {
+            println!("{}", t.render());
+            if !out_dir.is_empty() {
+                std::fs::create_dir_all(&out_dir)?;
+                let path = format!("{out_dir}/{}-{i}.csv", exp.id);
+                std::fs::write(&path, t.to_csv())?;
+                println!("  -> {path}");
+            }
+        }
+        println!("[{} done in {:.1}s]", exp.id, t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

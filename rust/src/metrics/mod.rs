@@ -1,0 +1,336 @@
+//! Serving telemetry: per-iteration records, per-request summaries, and the
+//! windowed statistics the paper's figures are built from (ETR, cost,
+//! utility over 16-iteration windows; TPOT; throughput).
+
+use crate::cost::IterCost;
+
+/// What phase of the speculation policy an iteration belonged to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IterPhase {
+    /// Forced K=0 while measuring the no-speculation baseline.
+    Baseline,
+    /// Test-phase trial iteration.
+    Test,
+    /// Set-phase iteration.
+    Set,
+}
+
+/// One decode iteration of one request.
+#[derive(Debug, Clone, Copy)]
+pub struct IterRecord {
+    /// Speculation length the policy chose.
+    pub k_chosen: usize,
+    /// Draft tokens actually proposed (n-gram may find fewer than K).
+    pub drafted: usize,
+    /// Draft tokens accepted by the rejection sampler.
+    pub accepted: usize,
+    /// Output tokens emitted (= accepted + 1 = ETR of this iteration).
+    pub emitted: usize,
+    /// Simulated GPU cost breakdown.
+    pub cost: IterCost,
+    /// Wall-clock of the full iteration on this host (ns).
+    pub wall_ns: u64,
+    /// Mean unique experts per layer activated by the verify step.
+    pub unique_experts: f64,
+    pub phase: IterPhase,
+}
+
+impl IterRecord {
+    /// Effective token rate of this iteration.
+    pub fn etr(&self) -> f64 {
+        self.emitted as f64
+    }
+}
+
+/// Full decode trace of one request.
+#[derive(Debug, Clone, Default)]
+pub struct RequestMetrics {
+    pub id: u64,
+    pub task: String,
+    pub iters: Vec<IterRecord>,
+    pub prompt_tokens: usize,
+    /// Simulated prefill time (not counted in TPOT, per the paper's
+    /// decode-latency focus).
+    pub prefill_s: f64,
+    pub wall_total_ns: u64,
+}
+
+impl RequestMetrics {
+    pub fn tokens_emitted(&self) -> usize {
+        self.iters.iter().map(|r| r.emitted).sum()
+    }
+
+    /// Simulated decode time.
+    pub fn decode_s(&self) -> f64 {
+        self.iters.iter().map(|r| r.cost.total()).sum()
+    }
+
+    /// Time per output token (simulated GPU clock) — the paper's key metric.
+    pub fn tpot_s(&self) -> f64 {
+        let toks = self.tokens_emitted();
+        if toks == 0 {
+            return f64::NAN;
+        }
+        self.decode_s() / toks as f64
+    }
+
+    /// Mean effective token rate (tokens per iteration).
+    pub fn etr(&self) -> f64 {
+        if self.iters.is_empty() {
+            return f64::NAN;
+        }
+        self.tokens_emitted() as f64 / self.iters.len() as f64
+    }
+
+    /// Mean iteration cost (simulated seconds).
+    pub fn mean_iter_s(&self) -> f64 {
+        if self.iters.is_empty() {
+            return f64::NAN;
+        }
+        self.decode_s() / self.iters.len() as f64
+    }
+
+    /// Windowed (ETR, relative cost, utility) series — the quantity plotted
+    /// in the paper's Figs. 6/7/15/16. `baseline_iter_s` normalizes cost.
+    pub fn utility_windows(&self, window: usize, baseline_iter_s: f64) -> Vec<WindowStat> {
+        assert!(window > 0);
+        self.iters
+            .chunks(window)
+            .enumerate()
+            .map(|(i, chunk)| {
+                let etr = chunk.iter().map(|r| r.etr()).sum::<f64>() / chunk.len() as f64;
+                let iter_s =
+                    chunk.iter().map(|r| r.cost.total()).sum::<f64>() / chunk.len() as f64;
+                let cost = iter_s / baseline_iter_s;
+                WindowStat { window: i, etr, cost, utility: etr / cost }
+            })
+            .collect()
+    }
+}
+
+/// One window of the utility trace.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowStat {
+    pub window: usize,
+    pub etr: f64,
+    /// Iteration time relative to the no-speculation baseline.
+    pub cost: f64,
+    pub utility: f64,
+}
+
+/// Aggregate over a full serving run (many requests).
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub requests: Vec<RequestMetrics>,
+}
+
+impl RunMetrics {
+    pub fn push(&mut self, m: RequestMetrics) {
+        self.requests.push(m);
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.tokens_emitted()).sum()
+    }
+
+    pub fn total_decode_s(&self) -> f64 {
+        self.requests.iter().map(|r| r.decode_s()).sum()
+    }
+
+    /// Aggregate TPOT (simulated): total decode time / total tokens.
+    pub fn tpot_s(&self) -> f64 {
+        let toks = self.total_tokens();
+        if toks == 0 {
+            return f64::NAN;
+        }
+        self.total_decode_s() / toks as f64
+    }
+
+    /// Output-token throughput (tokens per simulated second) — the paper's
+    /// figure of merit (inverse TPOT for single-batch serving).
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.tpot_s()
+    }
+
+    pub fn mean_etr(&self) -> f64 {
+        let iters: usize = self.requests.iter().map(|r| r.iters.len()).sum();
+        if iters == 0 {
+            return f64::NAN;
+        }
+        self.total_tokens() as f64 / iters as f64
+    }
+
+    /// Harmonic mean of per-request utilities relative to `baseline_iter_s`
+    /// (the paper plots harmonic-mean utility across requests, Fig. 7).
+    pub fn harmonic_mean_utility(&self, baseline_iter_s: f64) -> f64 {
+        let utils: Vec<f64> = self
+            .requests
+            .iter()
+            .filter(|r| !r.iters.is_empty())
+            .map(|r| r.etr() / (r.mean_iter_s() / baseline_iter_s))
+            .collect();
+        if utils.is_empty() {
+            return f64::NAN;
+        }
+        utils.len() as f64 / utils.iter().map(|u| 1.0 / u).sum::<f64>()
+    }
+
+    /// TPOT percentile across requests (SLO view, paper 7.1: deployments
+    /// "require tight latency bounds per request").
+    pub fn tpot_percentile(&self, p: f64) -> f64 {
+        let mut tpots: Vec<f64> = self
+            .requests
+            .iter()
+            .filter(|r| !r.iters.is_empty())
+            .map(|r| r.tpot_s())
+            .collect();
+        if tpots.is_empty() {
+            return f64::NAN;
+        }
+        tpots.sort_by(|a, b| a.total_cmp(b));
+        tpots[((tpots.len() - 1) as f64 * p).round() as usize]
+    }
+
+    /// Worst windowed slowdown across all requests relative to a baseline
+    /// iteration time (paper Fig. 15: Cascade's max in-request loss).
+    pub fn worst_window_slowdown(&self, window: usize, baseline_iter_s: f64) -> f64 {
+        self.requests
+            .iter()
+            .flat_map(|r| r.utility_windows(window, baseline_iter_s))
+            .map(|w| 1.0 / w.utility) // slowdown factor of that window
+            .fold(0.0, f64::max)
+    }
+
+    /// Fraction of iterations spent in test phases (policy overhead).
+    pub fn test_phase_fraction(&self) -> f64 {
+        let total: usize = self.requests.iter().map(|r| r.iters.len()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let test: usize = self
+            .requests
+            .iter()
+            .flat_map(|r| &r.iters)
+            .filter(|r| r.phase == IterPhase::Test)
+            .count();
+        test as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(emitted: usize, total_s: f64, phase: IterPhase) -> IterRecord {
+        IterRecord {
+            k_chosen: emitted.saturating_sub(1),
+            drafted: emitted.saturating_sub(1),
+            accepted: emitted.saturating_sub(1),
+            emitted,
+            cost: IterCost { base_s: total_s, ..Default::default() },
+            wall_ns: 1000,
+            unique_experts: 2.0,
+            phase,
+        }
+    }
+
+    #[test]
+    fn tpot_is_time_over_tokens() {
+        let mut m = RequestMetrics::default();
+        m.iters.push(rec(2, 0.02, IterPhase::Set));
+        m.iters.push(rec(1, 0.01, IterPhase::Set));
+        assert!((m.tpot_s() - 0.01).abs() < 1e-12);
+        assert!((m.etr() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theorem_4_2_identity() {
+        // t_spec = t_base / U  (paper Theorem 4.2): with baseline iteration
+        // time b and speculative iterations of time c emitting e tokens,
+        // utility = e/(c/b) and TPOT = c/e = b/utility.
+        let (b, c, e) = (0.01, 0.025, 2.0);
+        let mut m = RequestMetrics::default();
+        for _ in 0..10 {
+            m.iters.push(rec(e as usize, c, IterPhase::Set));
+        }
+        let u = m.etr() / (m.mean_iter_s() / b);
+        assert!((m.tpot_s() - b / u).abs() < 1e-12);
+    }
+
+    #[test]
+    fn windows_chunk_correctly() {
+        let mut m = RequestMetrics::default();
+        for i in 0..40 {
+            m.iters.push(rec(if i < 16 { 2 } else { 1 }, 0.02, IterPhase::Set));
+        }
+        let w = m.utility_windows(16, 0.02);
+        assert_eq!(w.len(), 3); // 16 + 16 + 8
+        assert!((w[0].etr - 2.0).abs() < 1e-12);
+        assert!((w[0].utility - 2.0).abs() < 1e-12);
+        assert!((w[1].etr - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_aggregates() {
+        let mut run = RunMetrics::default();
+        let mut a = RequestMetrics::default();
+        a.iters.push(rec(2, 0.02, IterPhase::Set));
+        let mut b = RequestMetrics::default();
+        b.iters.push(rec(1, 0.01, IterPhase::Test));
+        run.push(a);
+        run.push(b);
+        assert_eq!(run.total_tokens(), 3);
+        assert!((run.tpot_s() - 0.01).abs() < 1e-12);
+        assert!((run.test_phase_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn harmonic_mean_dominated_by_low_utility() {
+        let mut run = RunMetrics::default();
+        for (e, c) in [(2usize, 0.01), (1usize, 0.04)] {
+            let mut m = RequestMetrics::default();
+            m.iters.push(rec(e, c, IterPhase::Set));
+            run.push(m);
+        }
+        let h = run.harmonic_mean_utility(0.01);
+        // utilities: 2.0 and 0.25 -> harmonic mean 2/(0.5+4) ≈ 0.444
+        assert!((h - 0.4444).abs() < 1e-3, "{h}");
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut run = RunMetrics::default();
+        for (e, c) in [(1usize, 0.01), (1, 0.02), (1, 0.03)] {
+            let mut m = RequestMetrics::default();
+            m.iters.push(rec(e, c, IterPhase::Set));
+            run.push(m);
+        }
+        assert!(run.tpot_percentile(0.0) <= run.tpot_percentile(0.5));
+        assert!(run.tpot_percentile(0.5) <= run.tpot_percentile(1.0));
+        assert!((run.tpot_percentile(1.0) - 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worst_window_tracks_max_loss() {
+        let mut run = RunMetrics::default();
+        let mut m = RequestMetrics::default();
+        for _ in 0..16 {
+            m.iters.push(rec(1, 0.02, IterPhase::Set)); // utility 0.5
+        }
+        for _ in 0..16 {
+            m.iters.push(rec(2, 0.02, IterPhase::Set)); // utility 1.0
+        }
+        run.push(m);
+        let worst = run.worst_window_slowdown(16, 0.01);
+        assert!((worst - 2.0).abs() < 1e-9, "{worst}");
+    }
+
+    #[test]
+    fn empty_metrics_are_nan_not_panic() {
+        let m = RequestMetrics::default();
+        assert!(m.tpot_s().is_nan());
+        assert!(m.etr().is_nan());
+        let r = RunMetrics::default();
+        assert!(r.tpot_s().is_nan());
+    }
+}

@@ -1,0 +1,225 @@
+//! Mirror of `artifacts/manifest.json` (written by python/compile/aot.py),
+//! parsed with the in-tree JSON substrate.
+
+use crate::util::json::Value;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// Must match `MANIFEST_VERSION` in aot.py; bumped on I/O contract changes.
+pub const MANIFEST_VERSION: u64 = 3;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    /// Kernel implementation lowered into the HLO ("pallas" or "ref").
+    pub impl_name: String,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub config: MiniConfig,
+    pub impl_name: String,
+    pub weights: WeightsEntry,
+    pub variants: BTreeMap<String, VariantEntry>,
+    pub golden: GoldenOutputs,
+}
+
+/// Where the model's parameters live (fed to the step HLO as leading
+/// arguments; see python/compile/weights.py for why they are not constants).
+#[derive(Debug, Clone)]
+pub struct WeightsEntry {
+    pub path: String,
+    pub count: usize,
+    pub names: Vec<String>,
+    pub params: u64,
+}
+
+/// The mini model's architecture — what the HLO actually computes.
+#[derive(Debug, Clone)]
+pub struct MiniConfig {
+    pub name: String,
+    pub mirrors: String,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub ffn: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_shared: usize,
+    pub affinity: f64,
+    pub max_seq: usize,
+    pub prefill_chunk: usize,
+    pub is_moe: bool,
+}
+
+impl MiniConfig {
+    pub fn kv_dim(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Elements in the functional KV-cache tensor [L, 2, S, KVD].
+    pub fn kv_elems(&self) -> usize {
+        self.layers * 2 * self.max_seq * self.kv_dim()
+    }
+
+    /// Elements in the router-state tensor [L, H].
+    pub fn rstate_elems(&self) -> usize {
+        self.layers * self.hidden
+    }
+
+    /// Router top-k arity in the step output (dense models emit 1 sentinel).
+    pub fn topk_arity(&self) -> usize {
+        self.top_k.max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct VariantEntry {
+    pub path: String,
+    pub tokens: usize,
+    pub sha256: String,
+    pub hlo_bytes: u64,
+}
+
+/// Eager-JAX outputs for a fixed input, proving the Rust PJRT path
+/// reproduces L2 numerics (rust/tests/runtime_golden.rs).
+#[derive(Debug, Clone)]
+pub struct GoldenOutputs {
+    pub tokens: Vec<u32>,
+    pub t: usize,
+    pub logits_row0_head: Vec<f32>,
+    pub logits_sum: f64,
+    pub logits_abs_sum: f64,
+    pub argmax: Vec<usize>,
+    /// [L][T][Kr] router picks.
+    pub topk_idx: Vec<Vec<Vec<i32>>>,
+    pub kv_abs_sum: f64,
+    pub rstate_abs_sum: f64,
+}
+
+impl Manifest {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut models = BTreeMap::new();
+        for (name, entry) in v.req("models")?.as_obj()? {
+            models.insert(
+                name.clone(),
+                ModelEntry::from_json(entry).with_context(|| format!("model {name}"))?,
+            );
+        }
+        Ok(Self {
+            version: v.req("version")?.as_usize()? as u64,
+            impl_name: v.req("impl")?.as_str()?.to_string(),
+            models,
+        })
+    }
+}
+
+impl ModelEntry {
+    fn from_json(v: &Value) -> Result<Self> {
+        let mut variants = BTreeMap::new();
+        for (t, var) in v.req("variants")?.as_obj()? {
+            variants.insert(t.clone(), VariantEntry::from_json(var)?);
+        }
+        Ok(Self {
+            config: MiniConfig::from_json(v.req("config")?)?,
+            impl_name: v.req("impl")?.as_str()?.to_string(),
+            weights: WeightsEntry::from_json(v.req("weights")?)?,
+            variants,
+            golden: GoldenOutputs::from_json(v.req("golden")?)?,
+        })
+    }
+}
+
+impl WeightsEntry {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            path: v.req("path")?.as_str()?.to_string(),
+            count: v.req("count")?.as_usize()?,
+            names: v
+                .req("names")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_str().map(str::to_string))
+                .collect::<Result<_>>()?,
+            params: v.req("params")?.as_usize()? as u64,
+        })
+    }
+}
+
+impl MiniConfig {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            mirrors: v.req("mirrors")?.as_str()?.to_string(),
+            hidden: v.req("hidden")?.as_usize()?,
+            layers: v.req("layers")?.as_usize()?,
+            heads: v.req("heads")?.as_usize()?,
+            head_dim: v.req("head_dim")?.as_usize()?,
+            vocab: v.req("vocab")?.as_usize()?,
+            ffn: v.req("ffn")?.as_usize()?,
+            n_experts: v.req("n_experts")?.as_usize()?,
+            top_k: v.req("top_k")?.as_usize()?,
+            n_shared: v.req("n_shared")?.as_usize()?,
+            affinity: v.req("affinity")?.as_f64()?,
+            max_seq: v.req("max_seq")?.as_usize()?,
+            prefill_chunk: v.req("prefill_chunk")?.as_usize()?,
+            is_moe: v.req("is_moe")?.as_bool()?,
+        })
+    }
+}
+
+impl VariantEntry {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            path: v.req("path")?.as_str()?.to_string(),
+            tokens: v.req("tokens")?.as_usize()?,
+            sha256: v.req("sha256")?.as_str()?.to_string(),
+            hlo_bytes: v.req("hlo_bytes")?.as_usize()? as u64,
+        })
+    }
+}
+
+impl GoldenOutputs {
+    fn from_json(v: &Value) -> Result<Self> {
+        let usize_arr = |k: &str| -> Result<Vec<usize>> {
+            v.req(k)?.as_arr()?.iter().map(|x| x.as_usize()).collect()
+        };
+        let f32_arr = |k: &str| -> Result<Vec<f32>> {
+            v.req(k)?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64().map(|f| f as f32))
+                .collect()
+        };
+        let topk_idx = v
+            .req("topk_idx")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                l.as_arr()?
+                    .iter()
+                    .map(|t| {
+                        t.as_arr()?
+                            .iter()
+                            .map(|e| e.as_f64().map(|f| f as i32))
+                            .collect::<Result<Vec<i32>>>()
+                    })
+                    .collect::<Result<Vec<Vec<i32>>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            tokens: usize_arr("tokens")?.into_iter().map(|t| t as u32).collect(),
+            t: v.req("t")?.as_usize()?,
+            logits_row0_head: f32_arr("logits_row0_head")?,
+            logits_sum: v.req("logits_sum")?.as_f64()?,
+            logits_abs_sum: v.req("logits_abs_sum")?.as_f64()?,
+            argmax: usize_arr("argmax")?,
+            topk_idx,
+            kv_abs_sum: v.req("kv_abs_sum")?.as_f64()?,
+            rstate_abs_sum: v.req("rstate_abs_sum")?.as_f64()?,
+        })
+    }
+}

@@ -1,0 +1,174 @@
+//! Model registry: binds AOT artifacts (`artifacts/manifest.json`) to
+//! paper-scale specifications used by the cost model.
+
+mod manifest;
+mod spec;
+
+pub use manifest::{GoldenOutputs, Manifest, ModelEntry, MiniConfig, VariantEntry, WeightsEntry};
+pub use spec::{paper_spec, PaperScaleSpec, ALL_MOE_MODELS, ALL_MODELS};
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A resolved model: mini config (what the HLO executes) + paper-scale spec
+/// (what the cost model charges for).
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub mini: MiniConfig,
+    pub paper: PaperScaleSpec,
+    pub golden: GoldenOutputs,
+    pub weights: WeightsEntry,
+    /// Absolute path of weights.npz.
+    pub weights_path: PathBuf,
+    /// token-count -> absolute HLO path
+    variants: Vec<(usize, PathBuf)>,
+}
+
+impl Model {
+    /// Absolute path of the step variant for `t` in-flight tokens.
+    pub fn variant_path(&self, t: usize) -> Result<&Path> {
+        self.variants
+            .iter()
+            .find(|(vt, _)| *vt == t)
+            .map(|(_, p)| p.as_path())
+            .with_context(|| format!("model {} has no T={t} variant", self.name))
+    }
+
+    /// All available token-count variants, ascending.
+    pub fn token_variants(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.variants.iter().map(|(t, _)| *t).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn prefill_chunk(&self) -> usize {
+        self.mini.prefill_chunk
+    }
+
+    /// Largest decode/verify variant = max speculation length + 1.
+    pub fn max_verify_tokens(&self) -> usize {
+        self.token_variants()
+            .into_iter()
+            .filter(|&t| t <= 8)
+            .max()
+            .unwrap_or(1)
+    }
+}
+
+/// Registry over the artifacts directory.
+pub struct Registry {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Registry {
+    /// Load `artifacts/manifest.json`. `dir` defaults to `$CASCADE_ARTIFACTS`
+    /// or `./artifacts` (see [`default_artifacts_dir`]).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let raw = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let value = crate::util::json::parse(&raw).with_context(|| format!("parsing {path:?}"))?;
+        let manifest = Manifest::from_json(&value).with_context(|| format!("decoding {path:?}"))?;
+        if manifest.version != manifest::MANIFEST_VERSION {
+            bail!(
+                "manifest version {} != expected {}; re-run `make artifacts`",
+                manifest.version,
+                manifest::MANIFEST_VERSION
+            );
+        }
+        Ok(Self { dir, manifest })
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Resolve a model by zoo key.
+    pub fn model(&self, name: &str) -> Result<Model> {
+        let entry = self
+            .manifest
+            .models
+            .get(name)
+            .with_context(|| format!("unknown model {name:?}; have {:?}", self.model_names()))?;
+        let mut variants: Vec<(usize, PathBuf)> = entry
+            .variants
+            .values()
+            .map(|v| (v.tokens, self.dir.join(&v.path)))
+            .collect();
+        variants.sort_by_key(|(t, _)| *t);
+        Ok(Model {
+            name: name.to_string(),
+            mini: entry.config.clone(),
+            paper: paper_spec(name)?,
+            golden: entry.golden.clone(),
+            weights: entry.weights.clone(),
+            weights_path: self.dir.join(&entry.weights.path),
+            variants,
+        })
+    }
+}
+
+/// `$CASCADE_ARTIFACTS` or `<crate root>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("CASCADE_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> Registry {
+        Registry::load(default_artifacts_dir()).expect("run `make artifacts`")
+    }
+
+    #[test]
+    fn loads_all_zoo_models() {
+        let r = registry();
+        for name in ALL_MODELS {
+            let m = r.model(name).unwrap();
+            assert_eq!(m.name, *name);
+        }
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        assert!(registry().model("gpt-17").is_err());
+    }
+
+    #[test]
+    fn variant_paths_exist() {
+        let m = registry().model("mixtral").unwrap();
+        for t in m.token_variants() {
+            assert!(m.variant_path(t).unwrap().exists());
+        }
+    }
+
+    #[test]
+    fn decode_variants_cover_k_sweep() {
+        let m = registry().model("mixtral").unwrap();
+        let ts = m.token_variants();
+        for t in 1..=8 {
+            assert!(ts.contains(&t), "missing T={t}");
+        }
+        assert_eq!(m.max_verify_tokens(), 8);
+    }
+
+    #[test]
+    fn topology_matches_table1() {
+        let r = registry();
+        let mix = r.model("mixtral").unwrap();
+        assert_eq!((mix.mini.n_experts, mix.mini.top_k, mix.mini.n_shared), (8, 2, 0));
+        let ds = r.model("deepseek").unwrap();
+        assert_eq!((ds.mini.n_experts, ds.mini.top_k, ds.mini.n_shared), (64, 6, 2));
+        let olmoe = r.model("olmoe").unwrap();
+        assert_eq!((olmoe.mini.n_experts, olmoe.mini.top_k), (64, 8));
+    }
+}

@@ -1,0 +1,236 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes decode/verify
+//! steps. This is the only module that touches the `xla` crate; everything
+//! above it works with plain Rust types.
+//!
+//! Design notes:
+//! * One `PjRtClient` (CPU) per [`ModelRuntime`]; clients are `Rc`-cloned and
+//!   can be shared across runtimes via [`ModelRuntime::with_client`] so a
+//!   multi-model experiment pays client start-up once.
+//! * Executables are compiled lazily per token-count variant and cached —
+//!   after warm-up the request path performs zero compilation.
+//! * Request state (KV cache, router state) stays as `xla::Literal`s between
+//!   steps; only logits and router top-k indices are copied to host vectors.
+
+mod state;
+mod step;
+
+pub use state::RequestState;
+pub use step::StepOutput;
+
+use crate::models::{Model, Registry};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Compiled runtime for one model: PJRT executables per token-count variant
+/// plus the model's parameters resident on the device.
+pub struct ModelRuntime {
+    pub model: Model,
+    client: xla::PjRtClient,
+    exes: HashMap<usize, xla::PjRtLoadedExecutable>,
+    /// Model parameters, uploaded once (leading step arguments).
+    weights: Vec<xla::PjRtBuffer>,
+    /// Host copies backing `weights`: PJRT's CopyFromLiteral is
+    /// asynchronous, so the source literals must outlive the buffers.
+    _weight_literals: Vec<xla::Literal>,
+    /// Cumulative wall time spent inside PJRT execute (profiling).
+    pub exec_wall_ns: u128,
+    pub exec_calls: u64,
+}
+
+impl ModelRuntime {
+    /// Load a model and create a fresh CPU PJRT client.
+    pub fn load(registry: &Registry, name: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Self::with_client(registry, name, client)
+    }
+
+    /// Load a model onto an existing client (shared across runtimes).
+    pub fn with_client(
+        registry: &Registry,
+        name: &str,
+        client: xla::PjRtClient,
+    ) -> Result<Self> {
+        let model = registry.model(name)?;
+        let (weights, lits) = load_weights(&client, &model)?;
+        Ok(Self {
+            model,
+            client,
+            exes: HashMap::new(),
+            weights,
+            _weight_literals: lits,
+            exec_wall_ns: 0,
+            exec_calls: 0,
+        })
+    }
+
+    pub fn client(&self) -> xla::PjRtClient {
+        self.client.clone()
+    }
+
+    /// Compile (and cache) the executable for a T-token step.
+    pub fn ensure_variant(&mut self, t: usize) -> Result<()> {
+        if self.exes.contains_key(&t) {
+            return Ok(());
+        }
+        let path = self.model.variant_path(t)?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling T={t} variant: {e:?}"))?;
+        self.exes.insert(t, exe);
+        Ok(())
+    }
+
+    /// Pre-compile all token-count variants so the serving loop never
+    /// compiles.
+    pub fn warmup(&mut self) -> Result<()> {
+        for t in self.model.token_variants() {
+            self.ensure_variant(t)?;
+        }
+        Ok(())
+    }
+
+    /// Fresh per-request state (zero KV cache and router state).
+    pub fn fresh_state(&self) -> RequestState {
+        RequestState::fresh(&self.model.mini)
+    }
+
+    /// Execute one step over `tokens` (length must match an AOT variant).
+    /// Writes KV at positions `[state.cache_len, state.cache_len + T)` and
+    /// replaces the state's KV/router literals. The caller decides how far
+    /// `cache_len` advances (speculative tokens may be rejected).
+    pub fn step(&mut self, state: &mut RequestState, tokens: &[u32]) -> Result<StepOutput> {
+        let t = tokens.len();
+        self.ensure_variant(t)?;
+        let exe = self.exes.get(&t).expect("ensured above");
+
+        let tok_i32: Vec<i32> = tokens.iter().map(|&x| x as i32).collect();
+        let tok_lit = xla::Literal::vec1(&tok_i32);
+        let len_lit = xla::Literal::scalar(state.cache_len as i32);
+
+        let start = Instant::now();
+        // Per-step uploads (tokens/cache_len are tiny; KV/router state are
+        // the only real copies). Weights stay device-resident.
+        let up = |lit: &xla::Literal| -> Result<xla::PjRtBuffer> {
+            self.client
+                .buffer_from_host_literal(None, lit)
+                .map_err(|e| anyhow::anyhow!("uploading step arg: {e:?}"))
+        };
+        let tok_buf = up(&tok_lit)?;
+        let len_buf = up(&len_lit)?;
+        let kv_buf = up(&state.kv)?;
+        let rs_buf = up(&state.rstate)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.weights.len() + 4);
+        args.extend(self.weights.iter());
+        args.extend([&tok_buf, &len_buf, &kv_buf, &rs_buf]);
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow::anyhow!("executing T={t} step: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching step output: {e:?}"))?;
+        self.exec_wall_ns += start.elapsed().as_nanos();
+        self.exec_calls += 1;
+
+        let mut parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decomposing step tuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len());
+        let rstate = parts.pop().unwrap();
+        let kv = parts.pop().unwrap();
+        let topk_lit = parts.pop().unwrap();
+        let logits_lit = parts.pop().unwrap();
+
+        let logits = logits_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("logits to_vec: {e:?}"))?;
+        let topk = topk_lit
+            .to_vec::<i32>()
+            .map_err(|e| anyhow::anyhow!("topk to_vec: {e:?}"))?;
+        let rstate_seq = rstate
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("rstate to_vec: {e:?}"))?;
+
+        // KV is committed immediately (stale speculative rows get
+        // overwritten by construction); the router state is per-token, so
+        // the caller commits it at the accepted position via
+        // `commit_rstate`.
+        state.kv = kv;
+
+        Ok(StepOutput::new(
+            logits,
+            topk,
+            rstate_seq,
+            t,
+            self.model.mini.vocab,
+            self.model.mini.layers,
+            self.model.mini.topk_arity(),
+            self.model.mini.hidden,
+        ))
+    }
+
+    /// Commit the router-affinity state after accepting `advance` in-flight
+    /// tokens of `out` (i.e. roll back any rejected speculative updates).
+    pub fn commit_rstate(
+        &self,
+        state: &mut RequestState,
+        out: &StepOutput,
+        advance: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(advance >= 1 && advance <= out.t, "bad advance {advance}");
+        let row = out.rstate_at(advance - 1);
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(row.as_ptr() as *const u8, row.len() * 4)
+        };
+        state.rstate = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[self.model.mini.layers, self.model.mini.hidden],
+            bytes,
+        )
+        .map_err(|e| anyhow::anyhow!("building rstate literal: {e:?}"))?;
+        Ok(())
+    }
+
+    /// Average wall time per PJRT execute call (ns).
+    pub fn mean_exec_ns(&self) -> f64 {
+        if self.exec_calls == 0 {
+            0.0
+        } else {
+            self.exec_wall_ns as f64 / self.exec_calls as f64
+        }
+    }
+}
+
+/// Read `weights.npz` and upload every array to the device, in parameter
+/// order (the npz keys are index-prefixed by aot.py, so lexicographic
+/// order is parameter order).
+fn load_weights(
+    client: &xla::PjRtClient,
+    model: &Model,
+) -> Result<(Vec<xla::PjRtBuffer>, Vec<xla::Literal>)> {
+    use xla::FromRawBytes;
+    let mut entries = xla::Literal::read_npz(&model.weights_path, &())
+        .map_err(|e| anyhow::anyhow!("reading {:?}: {e:?}", model.weights_path))?;
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    anyhow::ensure!(
+        entries.len() == model.weights.count,
+        "weights.npz has {} arrays, manifest says {}",
+        entries.len(),
+        model.weights.count
+    );
+    let buffers = entries
+        .iter()
+        .map(|(name, lit)| {
+            client
+                .buffer_from_host_literal(None, lit)
+                .map_err(|e| anyhow::anyhow!("uploading weight {name}: {e:?}"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    // The literals are returned (and stored) because the host->device copy
+    // is asynchronous; dropping them early is a use-after-free.
+    Ok((buffers, entries.into_iter().map(|(_, l)| l).collect()))
+}

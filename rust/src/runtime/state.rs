@@ -1,0 +1,42 @@
+//! Per-request device state: functional KV cache + router-affinity state.
+
+use crate::models::MiniConfig;
+
+/// Device-side state threaded through decode steps. The KV cache and router
+/// state stay as XLA literals between steps (no host round-trip of the
+/// cache contents on the request path).
+pub struct RequestState {
+    /// f32[L, 2, S, KVD] — keys/values for positions `< cache_len` are
+    /// committed; higher positions are speculative scratch.
+    pub kv: xla::Literal,
+    /// f32[L, H] — per-layer EMA of hidden states (expert-affinity state).
+    pub rstate: xla::Literal,
+    /// Number of committed cache positions. The next step writes at
+    /// `[cache_len, cache_len + T)`.
+    pub cache_len: usize,
+    /// Capacity (max_seq of the AOT variant).
+    pub max_seq: usize,
+}
+
+impl RequestState {
+    /// Zero-initialized state for a fresh request.
+    pub fn fresh(cfg: &MiniConfig) -> Self {
+        let kv = xla::Literal::create_from_shape(
+            xla::PrimitiveType::F32,
+            &[cfg.layers, 2, cfg.max_seq, cfg.kv_dim()],
+        );
+        let rstate =
+            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[cfg.layers, cfg.hidden]);
+        Self { kv, rstate, cache_len: 0, max_seq: cfg.max_seq }
+    }
+
+    /// Remaining cache capacity in tokens.
+    pub fn remaining(&self) -> usize {
+        self.max_seq.saturating_sub(self.cache_len)
+    }
+
+    /// Whether a T-token step fits in the cache window.
+    pub fn fits(&self, t: usize) -> bool {
+        self.cache_len + t <= self.max_seq
+    }
+}

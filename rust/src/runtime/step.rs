@@ -1,0 +1,136 @@
+//! Typed view over one step's outputs (logits + router top-k indices).
+
+/// Host-side outputs of a T-token step.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    /// Row-major f32[T, V].
+    logits: Vec<f32>,
+    /// Row-major i32[L, T, Kr]; dense models emit -1 sentinels.
+    topk: Vec<i32>,
+    /// Row-major f32[L, T, H]: per-token router-state (affinity EMA)
+    /// trajectory. The engine commits the row of the last *accepted*
+    /// position so rejected drafts cannot pollute future routing.
+    pub rstate_seq: Vec<f32>,
+    pub t: usize,
+    pub vocab: usize,
+    pub layers: usize,
+    pub topk_arity: usize,
+    pub hidden: usize,
+}
+
+impl StepOutput {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        logits: Vec<f32>,
+        topk: Vec<i32>,
+        rstate_seq: Vec<f32>,
+        t: usize,
+        vocab: usize,
+        layers: usize,
+        topk_arity: usize,
+        hidden: usize,
+    ) -> Self {
+        debug_assert_eq!(logits.len(), t * vocab);
+        debug_assert_eq!(topk.len(), layers * t * topk_arity);
+        debug_assert_eq!(rstate_seq.len(), layers * t * hidden);
+        Self { logits, topk, rstate_seq, t, vocab, layers, topk_arity, hidden }
+    }
+
+    /// Router-state row [L, H] after consuming in-flight token `pos`.
+    pub fn rstate_at(&self, pos: usize) -> Vec<f32> {
+        debug_assert!(pos < self.t);
+        let mut out = Vec::with_capacity(self.layers * self.hidden);
+        for l in 0..self.layers {
+            let base = (l * self.t + pos) * self.hidden;
+            out.extend_from_slice(&self.rstate_seq[base..base + self.hidden]);
+        }
+        out
+    }
+
+    /// Logits row for in-flight token `i` (predicts the token after it).
+    pub fn logits_row(&self, i: usize) -> &[f32] {
+        &self.logits[i * self.vocab..(i + 1) * self.vocab]
+    }
+
+    /// Router top-k expert ids for (layer, token).
+    pub fn topk_at(&self, layer: usize, token: usize) -> &[i32] {
+        let base = (layer * self.t + token) * self.topk_arity;
+        &self.topk[base..base + self.topk_arity]
+    }
+
+    /// Unique experts activated per layer across the first `valid` tokens —
+    /// the quantity the paper's verification-cost analysis is built on
+    /// (§2.4). Dense models (sentinel -1) report 0.
+    pub fn unique_experts_per_layer(&self, valid: usize) -> Vec<usize> {
+        let valid = valid.min(self.t);
+        (0..self.layers)
+            .map(|l| {
+                let mut seen = [false; 128]; // n_experts <= 64 in the zoo
+                let mut count = 0usize;
+                for tok in 0..valid {
+                    for &e in self.topk_at(l, tok) {
+                        if e >= 0 {
+                            let idx = e as usize & 127;
+                            if !seen[idx] {
+                                seen[idx] = true;
+                                count += 1;
+                            }
+                        }
+                    }
+                }
+                count
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StepOutput {
+        // T=2, V=4, L=2, Kr=2, H=2
+        let logits = vec![
+            0.1, 0.9, 0.0, 0.0, // token 0
+            0.0, 0.0, 0.7, 0.3, // token 1
+        ];
+        let topk = vec![
+            0, 1, /* l0 t0 */ 1, 2, /* l0 t1 */
+            3, 3, /* l1 t0 */ 3, 4, /* l1 t1 */
+        ];
+        let rstate = vec![
+            1.0, 2.0, /* l0 t0 */ 3.0, 4.0, /* l0 t1 */
+            5.0, 6.0, /* l1 t0 */ 7.0, 8.0, /* l1 t1 */
+        ];
+        StepOutput::new(logits, topk, rstate, 2, 4, 2, 2, 2)
+    }
+
+    #[test]
+    fn logits_rows() {
+        let s = sample();
+        assert_eq!(s.logits_row(0)[1], 0.9);
+        assert_eq!(s.logits_row(1)[2], 0.7);
+    }
+
+    #[test]
+    fn unique_expert_counts() {
+        let s = sample();
+        // layer 0: {0,1} ∪ {1,2} = 3; layer 1: {3} ∪ {3,4} = 2
+        assert_eq!(s.unique_experts_per_layer(2), vec![3, 2]);
+        // only first token valid: layer 0 {0,1}=2, layer 1 {3}=1
+        assert_eq!(s.unique_experts_per_layer(1), vec![2, 1]);
+    }
+
+    #[test]
+    fn dense_sentinels_count_zero() {
+        let s = StepOutput::new(vec![0.0; 4], vec![-1, -1], vec![0.0; 4], 1, 4, 2, 1, 2);
+        assert_eq!(s.unique_experts_per_layer(1), vec![0, 0]);
+    }
+
+    #[test]
+    fn rstate_rows_select_position() {
+        let s = sample();
+        assert_eq!(s.rstate_at(0), vec![1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(s.rstate_at(1), vec![3.0, 4.0, 7.0, 8.0]);
+    }
+}

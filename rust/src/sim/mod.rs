@@ -1,0 +1,256 @@
+//! Trace-level simulation backend.
+//!
+//! Implements the same `Backend` interface as the real PJRT path but
+//! without executing HLO: target tokens come from the same guided process
+//! (reference stream + per-task deviation), and expert activations come
+//! from an affinity-parameterized routing process — per layer, each of the
+//! previous token's top-k expert slots is kept with probability `affinity`
+//! and resampled uniformly otherwise, matching the EMA-router behaviour of
+//! the L2 model in expectation.
+//!
+//! Used for: large parameter sweeps (Fig. 8's 120-point scatter), property
+//! tests over the full engine, and as a cross-check against the real
+//! backend (rust/tests/engine_integration.rs).
+
+use crate::coordinator::backend::{Backend, BackendStep};
+use crate::models::MiniConfig;
+use crate::rng::Rng;
+use crate::workload::Request;
+use anyhow::Result;
+
+/// Routing state: previous token's expert set per layer.
+pub struct SimBackend {
+    mini: MiniConfig,
+    rng: Rng,
+    seed: u64,
+    cache_len: usize,
+    prev_experts: Vec<Vec<usize>>,
+    /// Per-token routing-state trajectory of the last step, so `advance`
+    /// can roll the affinity state back to the accepted position (matching
+    /// the real backend's rstate rollback).
+    traj: Vec<Vec<Vec<usize>>>,
+}
+
+impl SimBackend {
+    pub fn new(mini: MiniConfig, seed: u64) -> Self {
+        let layers = mini.layers;
+        Self {
+            mini,
+            rng: Rng::new(seed),
+            seed,
+            cache_len: 0,
+            prev_experts: vec![Vec::new(); layers],
+            traj: Vec::new(),
+        }
+    }
+
+    /// Advance the routing process by one token on one layer.
+    fn route_layer(&mut self, layer: usize) -> Vec<usize> {
+        let e = self.mini.n_experts;
+        let k = self.mini.top_k;
+        let a = self.mini.affinity;
+        let prev = std::mem::take(&mut self.prev_experts[layer]);
+        let mut set: Vec<usize> = Vec::with_capacity(k);
+        for slot in 0..k {
+            let reuse = slot < prev.len() && self.rng.chance(a);
+            let pick = if reuse {
+                prev[slot]
+            } else {
+                self.rng.below(e)
+            };
+            set.push(pick);
+        }
+        // Top-k picks are distinct in the real router: resample duplicates.
+        for i in 0..set.len() {
+            while set[..i].contains(&set[i]) {
+                set[i] = self.rng.below(e);
+            }
+        }
+        self.prev_experts[layer] = set.clone();
+        set
+    }
+
+    /// Route one token across all layers; returns per-layer sets.
+    fn route_token(&mut self) -> Vec<Vec<usize>> {
+        (0..self.mini.layers).map(|l| self.route_layer(l)).collect()
+    }
+}
+
+impl Backend for SimBackend {
+    fn mini(&self) -> &MiniConfig {
+        &self.mini
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn begin(&mut self, req: &Request) -> Result<()> {
+        self.rng = Rng::new(self.seed ^ req.id.wrapping_mul(0xA24B_AED4_963E_E407));
+        self.cache_len = 0;
+        for p in &mut self.prev_experts {
+            p.clear();
+        }
+        Ok(())
+    }
+
+    fn prefill(&mut self, prompt: &[u32], guide0: Option<u32>, eps: f64) -> Result<u32> {
+        // Advance the routing process over the prompt so affinity state is
+        // warm, like the real model's EMA after prefill.
+        for _ in 0..prompt.len().min(8) {
+            self.route_token();
+        }
+        self.cache_len += prompt.len();
+        Ok(match guide0 {
+            Some(g) if !self.rng.chance(eps) => g,
+            _ => self.rng.below(self.mini.vocab) as u32,
+        })
+    }
+
+    fn step(&mut self, tokens: &[u32], guides: &[Option<u32>], eps: f64) -> Result<BackendStep> {
+        let t = tokens.len();
+        let layers = self.mini.layers;
+        let mut unique: Vec<std::collections::BTreeSet<usize>> = vec![Default::default(); layers];
+        self.traj.clear();
+        if self.mini.is_moe {
+            for _ in 0..t {
+                let sets = self.route_token();
+                for (l, set) in sets.iter().enumerate() {
+                    unique[l].extend(set.iter().copied());
+                }
+                self.traj.push(sets);
+            }
+        }
+        let sampled = guides
+            .iter()
+            .map(|g| match g {
+                Some(g) if !self.rng.chance(eps) => *g,
+                // Deviation: an arbitrary-but-deterministic "model" token.
+                _ => self.rng.below(self.mini.vocab) as u32,
+            })
+            .collect();
+        Ok(BackendStep {
+            sampled,
+            unique_experts: if self.mini.is_moe {
+                unique.into_iter().map(|s| s.len()).collect()
+            } else {
+                Vec::new()
+            },
+        })
+    }
+
+    fn advance(&mut self, n: usize) {
+        self.cache_len += n;
+        // Roll the affinity state back to the last accepted token.
+        if self.mini.is_moe && n >= 1 && n <= self.traj.len() {
+            self.prev_experts = self.traj[n - 1].clone();
+        }
+    }
+
+    fn cache_len(&self) -> usize {
+        self.cache_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini(affinity: f64, e: usize, k: usize) -> MiniConfig {
+        MiniConfig {
+            name: "sim-test".into(),
+            mirrors: "test".into(),
+            hidden: 64,
+            layers: 2,
+            heads: 4,
+            head_dim: 16,
+            vocab: 320,
+            ffn: 64,
+            n_experts: e,
+            top_k: k,
+            n_shared: 0,
+            affinity,
+            max_seq: 384,
+            prefill_chunk: 64,
+            is_moe: e > 0,
+        }
+    }
+
+    fn req() -> Request {
+        Request {
+            id: 1,
+            task: crate::workload::Task::Code,
+            prompt: vec![1, 2, 3],
+            reference: vec![4, 5, 6],
+            eps: 0.0,
+            max_new_tokens: 10,
+        }
+    }
+
+    #[test]
+    fn guided_tokens_follow_reference() {
+        let mut b = SimBackend::new(mini(0.0, 8, 2), 1);
+        b.begin(&req()).unwrap();
+        let out = b.step(&[1, 2], &[Some(7), Some(9)], 0.0).unwrap();
+        assert_eq!(out.sampled, vec![7, 9]);
+    }
+
+    #[test]
+    fn unique_experts_bounded() {
+        let mut b = SimBackend::new(mini(0.0, 8, 2), 2);
+        b.begin(&req()).unwrap();
+        let out = b.step(&[0; 8], &[None; 8], 1.0).unwrap();
+        for &u in &out.unique_experts {
+            assert!(u >= 2 && u <= 8, "{u}");
+        }
+    }
+
+    #[test]
+    fn affinity_reduces_unique_experts() {
+        let run = |a: f64| {
+            let mut b = SimBackend::new(mini(a, 64, 8), 3);
+            b.begin(&req()).unwrap();
+            let mut total = 0usize;
+            for _ in 0..50 {
+                let out = b.step(&[0; 8], &[None; 8], 1.0).unwrap();
+                total += out.unique_experts.iter().sum::<usize>();
+            }
+            total
+        };
+        let low = run(0.0);
+        let high = run(0.9);
+        assert!(
+            (high as f64) < low as f64 * 0.6,
+            "affinity should cut unique experts: low={low} high={high}"
+        );
+    }
+
+    #[test]
+    fn dense_reports_no_experts() {
+        let mut b = SimBackend::new(mini(0.0, 0, 0), 4);
+        b.begin(&req()).unwrap();
+        let out = b.step(&[0; 4], &[None; 4], 1.0).unwrap();
+        assert!(out.unique_experts.is_empty());
+    }
+
+    #[test]
+    fn deterministic_per_request() {
+        let mut a = SimBackend::new(mini(0.3, 16, 2), 9);
+        let mut b = SimBackend::new(mini(0.3, 16, 2), 9);
+        a.begin(&req()).unwrap();
+        b.begin(&req()).unwrap();
+        let x = a.step(&[0; 4], &[None; 4], 0.5).unwrap();
+        let y = b.step(&[0; 4], &[None; 4], 0.5).unwrap();
+        assert_eq!(x.sampled, y.sampled);
+        assert_eq!(x.unique_experts, y.unique_experts);
+    }
+
+    #[test]
+    fn topk_sets_distinct() {
+        let mut b = SimBackend::new(mini(0.5, 8, 8), 11);
+        b.begin(&req()).unwrap();
+        // top_k == n_experts: every token must activate all 8 distinct.
+        let out = b.step(&[0], &[None], 1.0).unwrap();
+        assert_eq!(out.unique_experts, vec![8, 8]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Drafters: prompt-lookup n-gram matching (the paper's primary technique,
+//! [38] in the paper) — model-free, no probability distribution, which is
+//! exactly why prior dynamic-K schemes (§2.6) cannot drive it and Cascade
+//! can. The draft-model drafter (EAGLE-lite) lives in
+//! `coordinator::eagle` because it owns a `ModelRuntime`.
+
+/// Prompt-lookup n-gram drafter: find the longest recent n-gram suffix of
+/// the context that occurred earlier, and propose the tokens that followed
+/// that earlier occurrence.
+#[derive(Debug, Clone)]
+pub struct NgramDrafter {
+    /// Longest suffix n-gram length to try.
+    pub max_n: usize,
+    /// Shortest acceptable match.
+    pub min_n: usize,
+}
+
+impl NgramDrafter {
+    pub fn new(min_n: usize, max_n: usize) -> Self {
+        assert!(min_n >= 1 && max_n >= min_n);
+        Self { max_n, min_n }
+    }
+
+    /// Propose up to `k` draft tokens given the full context
+    /// (prompt + generated so far). Returns fewer (possibly zero) tokens if
+    /// no n-gram match exists — the caller then runs a plain decode step.
+    pub fn propose(&self, context: &[u32], k: usize) -> Vec<u32> {
+        if k == 0 || context.len() < self.min_n + 1 {
+            return Vec::new();
+        }
+        for n in (self.min_n..=self.max_n.min(context.len() - 1)).rev() {
+            let suffix = &context[context.len() - n..];
+            // Most recent earlier occurrence with a *full* k-token
+            // continuation wins (recency bias, as in prompt-lookup
+            // decoding); occurrences too close to the end only provide a
+            // truncated draft, kept as a fallback.
+            let mut best: Option<(usize, usize)> = None; // (start, len)
+            let mut i = context.len() - n;
+            while i > 0 {
+                i -= 1;
+                if &context[i..i + n] == suffix {
+                    let start = i + n;
+                    let len = k.min(context.len() - start);
+                    if len == k {
+                        best = Some((start, len));
+                        break;
+                    }
+                    if len > best.map_or(0, |(_, l)| l) {
+                        best = Some((start, len));
+                    }
+                }
+            }
+            if let Some((start, len)) = best {
+                return context[start..start + len].to_vec();
+            }
+        }
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn finds_repeat_continuation() {
+        // context: a b c d X ... a b c d -> propose X...
+        let ctx = [1, 2, 3, 4, 9, 8, 7, 1, 2, 3, 4];
+        let d = NgramDrafter::new(2, 4);
+        assert_eq!(d.propose(&ctx, 3), vec![9, 8, 7]);
+    }
+
+    #[test]
+    fn prefers_longest_match() {
+        // suffix [5,1,2] occurred earlier (-> 7); shorter [1,2] also
+        // occurred with a different continuation (-> 9). Longest wins.
+        let ctx = [5, 1, 2, 7, 0, 1, 2, 9, 3, 5, 1, 2];
+        let d = NgramDrafter::new(2, 3);
+        assert_eq!(d.propose(&ctx, 1), vec![7]);
+    }
+
+    #[test]
+    fn prefers_recent_occurrence() {
+        let ctx = [1, 2, 7, 0, 1, 2, 9, 3, 1, 2];
+        let d = NgramDrafter::new(2, 2);
+        // suffix [1,2]: occurrences at 0 (->7) and 4 (->9); recency picks 9.
+        assert_eq!(d.propose(&ctx, 1), vec![9]);
+    }
+
+    #[test]
+    fn no_match_returns_empty() {
+        let ctx = [1, 2, 3, 4, 5, 6];
+        let d = NgramDrafter::new(2, 4);
+        assert!(d.propose(&ctx, 3).is_empty());
+    }
+
+    #[test]
+    fn truncated_continuation() {
+        // Match exists but fewer than k tokens follow it before the suffix.
+        let ctx = [1, 2, 9, 1, 2];
+        let d = NgramDrafter::new(2, 2);
+        assert_eq!(d.propose(&ctx, 5), vec![9, 1, 2]);
+    }
+
+    #[test]
+    fn k_zero_and_short_context() {
+        let d = NgramDrafter::new(2, 4);
+        assert!(d.propose(&[1, 2, 3], 0).is_empty());
+        assert!(d.propose(&[1], 3).is_empty());
+    }
+
+    #[test]
+    fn repetitive_code_like_text_drafts_well() {
+        // Byte-encode two similar "functions"; after seeing one, the drafter
+        // should predict large chunks of the second.
+        let text = "def f(x):\n    return x\n\ndef g(x):\n    return x\n";
+        let ctx = crate::tokenizer::encode(text);
+        let d = NgramDrafter::new(2, 4);
+        // At the end of the text the suffix "x\n" repeats; expect a proposal.
+        assert!(!d.propose(&ctx, 4).is_empty());
+    }
+
+    /// Property: proposals are always a verbatim copy of a context span that
+    /// followed an occurrence of the current suffix.
+    #[test]
+    fn prop_proposals_come_from_context() {
+        let mut rng = Rng::new(0xD2AF7);
+        let d = NgramDrafter::new(2, 4);
+        for _ in 0..500 {
+            let len = rng.range(4, 60);
+            let ctx: Vec<u32> = (0..len).map(|_| rng.below(6) as u32).collect();
+            let k = rng.range(1, 7);
+            let prop = d.propose(&ctx, k);
+            assert!(prop.len() <= k);
+            if prop.is_empty() {
+                continue;
+            }
+            // must appear somewhere in the context as a contiguous span
+            let found = ctx.windows(prop.len()).any(|w| w == &prop[..]);
+            assert!(found, "proposal {prop:?} not a context span of {ctx:?}");
+        }
+    }
+}

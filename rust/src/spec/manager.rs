@@ -1,0 +1,482 @@
+//! The Cascade speculation manager (paper §5, Fig. 9 left half).
+//!
+//! A per-request state machine driving the speculation length K:
+//!
+//! * **Baseline** — the first `baseline_iters` decode iterations run with
+//!   K=0 to measure the no-speculation iteration time (§5.3); re-measured
+//!   every `baseline_refresh` iterations.
+//! * **Test** — up to `max_trials` trials of `trial_iters` iterations each,
+//!   exploring K values with hill-climbing (§5.6). Early exits: utility < 1
+//!   at K=1 (§5.4), two consecutive utility decreases, convergence within
+//!   `converge_tol`, or trial budget exhausted.
+//! * **Set** — the utility-maximizing K (or K=0 when best utility < 1,
+//!   §5.4) runs for `set_iters` iterations. Adaptive back-off (§5.5):
+//!   every transition *into* K=0 doubles the effective set length
+//!   (capped), so hopeless requests are probed exponentially less often;
+//!   any transition back to K>0 resets it.
+//!
+//! The ablation switches in `CascadeParams` (Fig. 18) degrade this machine
+//! gracefully: with everything off it is exactly "static K = K_start".
+
+use crate::config::{CascadeParams, MAX_K};
+use crate::metrics::IterPhase;
+use crate::spec::utility::UtilityAnalyzer;
+
+/// A finished test-phase trial.
+#[derive(Debug, Clone, Copy)]
+pub struct Trial {
+    pub k: usize,
+    pub utility: f64,
+}
+
+#[derive(Debug, Clone)]
+enum Phase {
+    Baseline { done: usize, refresh: bool },
+    Test(TestState),
+    Set { k: usize, remaining: usize },
+}
+
+#[derive(Debug, Clone)]
+struct TestState {
+    trials: Vec<Trial>,
+    cur_k: usize,
+    cur_iters: usize,
+    etr_sum: f64,
+    cost_sum: f64,
+    /// Consecutive utility decreases (early-exit rule 1 of §5.6).
+    decreases: usize,
+}
+
+/// Event log entry for the utility-trace figures (15/16).
+#[derive(Debug, Clone, Copy)]
+pub struct ManagerEvent {
+    pub iter: usize,
+    pub phase: IterPhase,
+    pub k: usize,
+    /// Utility of the just-finished trial (test phases only).
+    pub trial_utility: Option<f64>,
+}
+
+/// Per-request Cascade state machine.
+#[derive(Debug, Clone)]
+pub struct CascadeManager {
+    pub params: CascadeParams,
+    pub analyzer: UtilityAnalyzer,
+    phase: Phase,
+    /// Effective set length (grows under back-off).
+    set_len: usize,
+    iters: usize,
+    iters_since_refresh: usize,
+    /// Best (k, utility) seen in recent test phases (K_start source, §5.3).
+    best_seen: Option<Trial>,
+    last_set_k: usize,
+    pub events: Vec<ManagerEvent>,
+}
+
+impl CascadeManager {
+    pub fn new(params: CascadeParams) -> Self {
+        let set_len = params.set_iters;
+        Self {
+            params,
+            analyzer: UtilityAnalyzer::default(),
+            phase: Phase::Baseline { done: 0, refresh: false },
+            set_len,
+            iters: 0,
+            iters_since_refresh: 0,
+            best_seen: None,
+            last_set_k: usize::MAX, // sentinel: no set phase yet
+            events: Vec::new(),
+        }
+    }
+
+    /// Is this manager just a static-K policy? (Fig. 18 "no optimizations".)
+    fn is_static(&self) -> bool {
+        !self.params.enable_disable && !self.params.enable_hillclimb
+    }
+
+    /// The speculation length to use for the next iteration.
+    pub fn next_k(&self) -> usize {
+        match &self.phase {
+            Phase::Baseline { .. } => 0,
+            Phase::Test(t) => t.cur_k,
+            Phase::Set { k, .. } => *k,
+        }
+    }
+
+    /// Phase label for telemetry.
+    pub fn phase_label(&self) -> IterPhase {
+        match &self.phase {
+            Phase::Baseline { .. } => IterPhase::Baseline,
+            Phase::Test(_) => IterPhase::Test,
+            Phase::Set { .. } => IterPhase::Set,
+        }
+    }
+
+    /// Starting K for a test phase (§5.3 / §5.4).
+    fn k_test_start(&self) -> usize {
+        if self.last_set_k == 0 {
+            // After a disabled set phase, probe from the most conservative
+            // speculative state (§5.4).
+            1
+        } else {
+            match self.best_seen {
+                Some(t) if t.k > 0 => t.k,
+                _ => self.params.k_start.clamp(1, MAX_K),
+            }
+        }
+    }
+
+    fn enter_test(&mut self) {
+        let k = self.k_test_start();
+        self.phase = Phase::Test(TestState {
+            trials: Vec::new(),
+            cur_k: k,
+            cur_iters: 0,
+            etr_sum: 0.0,
+            cost_sum: 0.0,
+            decreases: 0,
+        });
+    }
+
+    fn enter_set(&mut self, k: usize) {
+        if k == 0 {
+            // Adaptive back-off (§5.5): every transition to K=0 lengthens
+            // the quiet period exponentially.
+            if self.params.enable_backoff {
+                self.set_len =
+                    (self.set_len * self.params.backoff_factor).min(self.params.max_set_iters);
+            }
+        } else {
+            self.set_len = self.params.set_iters;
+        }
+        self.last_set_k = k;
+        self.phase = Phase::Set { k, remaining: self.set_len };
+    }
+
+    /// Record one finished decode iteration. `etr` = tokens emitted,
+    /// `iter_s` = simulated iteration time.
+    pub fn observe(&mut self, etr: f64, iter_s: f64) {
+        self.iters += 1;
+        self.iters_since_refresh += 1;
+        self.analyzer.observe(etr, iter_s);
+
+        let mut trial_utility = None;
+        let phase_label = self.phase_label();
+        let k_used = self.next_k();
+
+        match &mut self.phase {
+            Phase::Baseline { done, refresh } => {
+                self.analyzer.observe_baseline(iter_s);
+                *done += 1;
+                if *done >= self.params.baseline_iters {
+                    let was_refresh = *refresh;
+                    self.iters_since_refresh = 0;
+                    if self.is_static() {
+                        // Fig. 18 level 0: static K_start forever.
+                        let k = self.params.k_start;
+                        self.phase = Phase::Set { k, remaining: usize::MAX };
+                    } else if was_refresh && self.last_set_k == 0 {
+                        // Resume the backed-off quiet period after a refresh.
+                        self.enter_test();
+                    } else {
+                        self.enter_test();
+                    }
+                }
+            }
+            Phase::Test(t) => {
+                t.cur_iters += 1;
+                t.etr_sum += etr;
+                t.cost_sum += iter_s;
+                if t.cur_iters >= self.params.trial_iters {
+                    let mean_etr = t.etr_sum / t.cur_iters as f64;
+                    let mean_cost = t.cost_sum / t.cur_iters as f64;
+                    let u = self
+                        .analyzer
+                        .utility_of(mean_etr, mean_cost)
+                        .unwrap_or(1.0);
+                    trial_utility = Some(u);
+                    let finished = Trial { k: t.cur_k, utility: u };
+                    let prev = t.trials.last().copied();
+                    t.trials.push(finished);
+                    if let Some(p) = prev {
+                        if u < p.utility {
+                            t.decreases += 1;
+                        } else {
+                            t.decreases = 0;
+                        }
+                    }
+                    self.after_trial();
+                }
+            }
+            Phase::Set { remaining, .. } => {
+                if *remaining != usize::MAX {
+                    *remaining -= 1;
+                    if *remaining == 0 {
+                        if self.iters_since_refresh >= self.params.baseline_refresh {
+                            // Infrequent baseline re-measurement (§5.3).
+                            self.phase = Phase::Baseline { done: 0, refresh: true };
+                        } else {
+                            self.enter_test();
+                        }
+                    }
+                }
+            }
+        }
+
+        self.events.push(ManagerEvent {
+            iter: self.iters,
+            phase: phase_label,
+            k: k_used,
+            trial_utility,
+        });
+    }
+
+    /// Decide what follows a finished trial: another trial (hill-climbing)
+    /// or a set phase.
+    fn after_trial(&mut self) {
+        let t = match &self.phase {
+            Phase::Test(t) => t.clone(),
+            _ => unreachable!("after_trial outside test phase"),
+        };
+        let last = *t.trials.last().expect("at least one finished trial");
+        let best = t
+            .trials
+            .iter()
+            .copied()
+            .max_by(|a, b| a.utility.total_cmp(&b.utility))
+            .unwrap();
+
+        // Track history for future K_start selection (§5.3).
+        if best.utility >= self.best_seen.map(|b| b.utility).unwrap_or(f64::NEG_INFINITY) {
+            self.best_seen = Some(best);
+        }
+
+        let decide = |mgr: &mut Self, best: Trial| {
+            let k = if mgr.params.enable_disable && best.utility < 1.0 { 0 } else { best.k };
+            mgr.enter_set(k);
+        };
+
+        // §5.4: utility below 1 at the most conservative K=1 — stop testing
+        // immediately and disable.
+        if self.params.enable_disable && last.k == 1 && last.utility < 1.0 {
+            return decide(self, Trial { k: 1, utility: last.utility });
+        }
+
+        // Without hill-climbing, a single trial decides (Fig. 18 level 1/2).
+        if !self.params.enable_hillclimb {
+            return decide(self, last);
+        }
+
+        // Early exits (§5.6).
+        if t.trials.len() >= self.params.max_trials {
+            return decide(self, best);
+        }
+        if t.decreases >= 2 {
+            return decide(self, best);
+        }
+        if t.trials.len() >= 2 {
+            let prev = t.trials[t.trials.len() - 2];
+            let denom = prev.utility.abs().max(1e-9);
+            if (last.utility - prev.utility).abs() / denom < self.params.converge_tol {
+                return decide(self, best);
+            }
+        }
+
+        // Hill-climbing step (§5.6): follow the utility gradient in K.
+        let next_k = if t.trials.len() == 1 {
+            if last.utility >= 1.0 {
+                (last.k + 1).min(MAX_K)
+            } else {
+                last.k.saturating_sub(1)
+            }
+        } else {
+            let prev = t.trials[t.trials.len() - 2];
+            let dir_up = if last.utility > prev.utility {
+                last.k > prev.k // keep going the way that helped
+            } else {
+                last.k < prev.k // reverse
+            };
+            if dir_up {
+                (last.k + 1).min(MAX_K)
+            } else {
+                last.k.saturating_sub(1)
+            }
+        };
+
+        // K reached 0 (early-exit rule 2) or the climb is stuck at a bound.
+        if next_k == 0 {
+            return decide(self, best);
+        }
+        if t.trials.iter().any(|tr| tr.k == next_k) {
+            return decide(self, best);
+        }
+
+        self.phase = Phase::Test(TestState {
+            trials: t.trials,
+            cur_k: next_k,
+            cur_iters: 0,
+            etr_sum: 0.0,
+            cost_sum: 0.0,
+            decreases: t.decreases,
+        });
+    }
+
+    /// Current effective set length (tests back-off behaviour).
+    pub fn current_set_len(&self) -> usize {
+        self.set_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive the manager with a synthetic utility landscape: iteration time
+    /// and ETR as functions of K.
+    fn drive(mgr: &mut CascadeManager, iters: usize, etr_of: impl Fn(usize) -> f64, cost_of: impl Fn(usize) -> f64) {
+        for _ in 0..iters {
+            let k = mgr.next_k();
+            mgr.observe(etr_of(k), cost_of(k));
+        }
+    }
+
+    /// Landscape where speculation always hurts (math-like): ETR ≈ 1,
+    /// cost grows with K.
+    fn hostile(k: usize) -> (f64, f64) {
+        (1.0 + 0.05 * k as f64, 0.01 * (1.0 + 0.8 * k as f64))
+    }
+
+    /// Landscape where utility peaks at K=3 (code-like).
+    fn friendly(k: usize) -> (f64, f64) {
+        let etr = 1.0 + 0.9 * (k.min(4) as f64);
+        let cost = 0.01 * (1.0 + 0.25 * k as f64);
+        (etr, cost)
+    }
+
+    #[test]
+    fn baseline_first() {
+        let mgr = CascadeManager::new(CascadeParams::default());
+        assert_eq!(mgr.next_k(), 0);
+        assert_eq!(mgr.phase_label(), IterPhase::Baseline);
+    }
+
+    #[test]
+    fn hostile_landscape_disables() {
+        let mut mgr = CascadeManager::new(CascadeParams::default());
+        drive(&mut mgr, 60, |k| hostile(k).0, |k| hostile(k).1);
+        // After testing, the manager must be parked at K=0.
+        assert_eq!(mgr.next_k(), 0, "events: {:?}", mgr.events.len());
+    }
+
+    #[test]
+    fn hostile_landscape_backs_off() {
+        let mut mgr = CascadeManager::new(CascadeParams::default());
+        let s0 = mgr.current_set_len();
+        drive(&mut mgr, 400, |k| hostile(k).0, |k| hostile(k).1);
+        assert!(mgr.current_set_len() > s0 * 2, "set_len {}", mgr.current_set_len());
+        // Test iterations must be a small fraction under back-off (§5.5).
+        let test_iters = mgr
+            .events
+            .iter()
+            .filter(|e| e.phase == IterPhase::Test)
+            .count();
+        assert!(test_iters * 5 < mgr.events.len(), "test {} of {}", test_iters, mgr.events.len());
+    }
+
+    #[test]
+    fn friendly_landscape_climbs_to_high_k() {
+        let mut mgr = CascadeManager::new(CascadeParams::default());
+        drive(&mut mgr, 120, |k| friendly(k).0, |k| friendly(k).1);
+        // Utility peaks at K=4; hill climbing should settle at K >= 3.
+        let set_ks: Vec<usize> = mgr
+            .events
+            .iter()
+            .filter(|e| e.phase == IterPhase::Set)
+            .map(|e| e.k)
+            .collect();
+        let late = &set_ks[set_ks.len().saturating_sub(10)..];
+        assert!(late.iter().all(|&k| k >= 3), "late set Ks: {late:?}");
+    }
+
+    #[test]
+    fn no_backoff_ablation_keeps_set_len() {
+        let mut mgr = CascadeManager::new(CascadeParams::ablation(1));
+        drive(&mut mgr, 300, |k| hostile(k).0, |k| hostile(k).1);
+        assert_eq!(mgr.current_set_len(), mgr.params.set_iters);
+    }
+
+    #[test]
+    fn static_ablation_never_tests() {
+        let mut mgr = CascadeManager::new(CascadeParams::ablation(0));
+        drive(&mut mgr, 100, |k| hostile(k).0, |k| hostile(k).1);
+        assert!(mgr.events.iter().all(|e| e.phase != IterPhase::Test));
+        assert_eq!(mgr.next_k(), mgr.params.k_start);
+    }
+
+    #[test]
+    fn k0_set_phase_restarts_with_k1() {
+        let mut mgr = CascadeManager::new(CascadeParams::default());
+        drive(&mut mgr, 200, |k| hostile(k).0, |k| hostile(k).1);
+        // Find a test iteration that follows a K=0 set phase; it must probe
+        // K=1 (§5.4).
+        let mut seen_zero_set = false;
+        for e in &mgr.events {
+            match e.phase {
+                IterPhase::Set if e.k == 0 => seen_zero_set = true,
+                IterPhase::Test if seen_zero_set => {
+                    assert_eq!(e.k, 1);
+                    return;
+                }
+                _ => {}
+            }
+        }
+        panic!("never observed test-after-disable");
+    }
+
+    #[test]
+    fn k_stays_in_bounds() {
+        for seed in 0..5u64 {
+            let mut mgr = CascadeManager::new(CascadeParams::default());
+            let mut rng = crate::rng::Rng::new(seed);
+            for _ in 0..300 {
+                let k = mgr.next_k();
+                assert!(k <= MAX_K);
+                // random landscape
+                mgr.observe(1.0 + rng.f64() * k as f64, 0.01 * (1.0 + rng.f64()));
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_refresh_happens() {
+        let mut mgr = CascadeManager::new(CascadeParams::default());
+        drive(&mut mgr, 400, |k| friendly(k).0, |k| friendly(k).1);
+        let baseline_iters = mgr
+            .events
+            .iter()
+            .filter(|e| e.phase == IterPhase::Baseline)
+            .count();
+        // initial 4 + at least one refresh of 4
+        assert!(baseline_iters >= 8, "{baseline_iters}");
+    }
+
+    #[test]
+    fn theorem_guided_decision_quality() {
+        // On the friendly landscape, Cascade's average utility in set phases
+        // must beat static K=1.
+        let mut mgr = CascadeManager::new(CascadeParams::default());
+        drive(&mut mgr, 200, |k| friendly(k).0, |k| friendly(k).1);
+        let u = |k: usize| {
+            let (e, c) = friendly(k);
+            e / (c / friendly(0).1)
+        };
+        let set_util: Vec<f64> = mgr
+            .events
+            .iter()
+            .filter(|e| e.phase == IterPhase::Set)
+            .map(|e| u(e.k))
+            .collect();
+        let mean = set_util.iter().sum::<f64>() / set_util.len() as f64;
+        assert!(mean > u(1) * 1.2, "mean set utility {mean} vs k1 {}", u(1));
+    }
+}

@@ -1,0 +1,16 @@
+//! Speculative decoding: drafters, rejection sampling, and the paper's
+//! contribution — the utility analyzer (§4) and the Cascade speculation
+//! manager (§5: test-and-set, adaptive back-off, hill-climbing).
+
+pub mod drafter;
+pub mod manager;
+pub mod policy;
+pub mod rejection;
+pub mod stochastic;
+pub mod utility;
+
+pub use drafter::NgramDrafter;
+pub use manager::CascadeManager;
+pub use policy::{IterObs, PolicyKind, SpecPolicy, StaticK};
+pub use rejection::greedy_verify;
+pub use utility::UtilityAnalyzer;

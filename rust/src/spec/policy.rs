@@ -1,0 +1,226 @@
+//! Speculation policies: the interface between the serving engine and the
+//! K-selection logic, with static-K baselines (the paper's comparison
+//! points) and Cascade as implementations.
+
+use crate::config::{CascadeParams, MAX_K};
+use crate::metrics::IterPhase;
+use crate::spec::manager::CascadeManager;
+
+/// What the engine reports back to the policy after each decode iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct IterObs {
+    pub k_chosen: usize,
+    pub drafted: usize,
+    pub accepted: usize,
+    /// Tokens emitted (= ETR of this iteration).
+    pub emitted: usize,
+    /// Simulated iteration time (GPU clock).
+    pub iter_s: f64,
+}
+
+/// A speculation policy decides K before each iteration.
+pub trait SpecPolicy {
+    /// Speculation length for the next iteration (0 = no speculation).
+    fn next_k(&mut self) -> usize;
+    /// Feed back the outcome of the iteration.
+    fn observe(&mut self, obs: &IterObs);
+    /// Telemetry label for the current phase.
+    fn phase(&self) -> IterPhase;
+    fn name(&self) -> String;
+    /// Reset per-request state (Cascade is per-request, §5).
+    fn reset(&mut self);
+    /// Access the Cascade manager, if this policy has one (trace figures).
+    fn manager(&self) -> Option<&CascadeManager> {
+        None
+    }
+}
+
+/// Always-K baseline (the paper's static-K comparison; K=0 disables
+/// speculation entirely).
+#[derive(Debug, Clone)]
+pub struct StaticK {
+    pub k: usize,
+}
+
+impl StaticK {
+    pub fn new(k: usize) -> Self {
+        assert!(k <= MAX_K);
+        Self { k }
+    }
+}
+
+impl SpecPolicy for StaticK {
+    fn next_k(&mut self) -> usize {
+        self.k
+    }
+
+    fn observe(&mut self, _obs: &IterObs) {}
+
+    fn phase(&self) -> IterPhase {
+        IterPhase::Set
+    }
+
+    fn name(&self) -> String {
+        format!("static-k{}", self.k)
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Cascade: utility-driven dynamic speculation (paper §5).
+pub struct CascadePolicy {
+    params: CascadeParams,
+    mgr: CascadeManager,
+}
+
+impl CascadePolicy {
+    pub fn new(params: CascadeParams) -> Self {
+        Self { mgr: CascadeManager::new(params.clone()), params }
+    }
+}
+
+impl SpecPolicy for CascadePolicy {
+    fn next_k(&mut self) -> usize {
+        self.mgr.next_k()
+    }
+
+    fn observe(&mut self, obs: &IterObs) {
+        self.mgr.observe(obs.emitted as f64, obs.iter_s);
+    }
+
+    fn phase(&self) -> IterPhase {
+        self.mgr.phase_label()
+    }
+
+    fn name(&self) -> String {
+        "cascade".into()
+    }
+
+    fn reset(&mut self) {
+        self.mgr = CascadeManager::new(self.params.clone());
+    }
+
+    fn manager(&self) -> Option<&CascadeManager> {
+        Some(&self.mgr)
+    }
+}
+
+/// Policy constructor, usable from CLI strings and experiment specs.
+#[derive(Debug, Clone)]
+pub enum PolicyKind {
+    Static(usize),
+    Cascade(CascadeParams),
+}
+
+impl PolicyKind {
+    pub fn build(&self) -> Box<dyn SpecPolicy> {
+        match self {
+            PolicyKind::Static(k) => Box::new(StaticK::new(*k)),
+            PolicyKind::Cascade(p) => Box::new(CascadePolicy::new(p.clone())),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PolicyKind::Static(k) => format!("static-k{k}"),
+            PolicyKind::Cascade(p) => {
+                if p.enable_disable && p.enable_backoff && p.enable_hillclimb {
+                    "cascade".into()
+                } else {
+                    format!(
+                        "cascade[d={},b={},h={}]",
+                        p.enable_disable as u8, p.enable_backoff as u8, p.enable_hillclimb as u8
+                    )
+                }
+            }
+        }
+    }
+
+    /// Parse CLI forms: "k0".."k7", "cascade", "cascade:t=2,s=8",
+    /// "ablation0".."ablation3".
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        if let Some(k) = s.strip_prefix('k') {
+            let k: usize = k.parse()?;
+            anyhow::ensure!(k <= MAX_K, "k must be <= {MAX_K}");
+            return Ok(PolicyKind::Static(k));
+        }
+        if let Some(level) = s.strip_prefix("ablation") {
+            return Ok(PolicyKind::Cascade(CascadeParams::ablation(level.parse()?)));
+        }
+        if s == "cascade" {
+            return Ok(PolicyKind::Cascade(CascadeParams::default()));
+        }
+        if let Some(rest) = s.strip_prefix("cascade:") {
+            let mut p = CascadeParams::default();
+            for kv in rest.split(',') {
+                let (key, val) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("bad cascade param {kv:?}"))?;
+                match key {
+                    "t" => p.trial_iters = val.parse()?,
+                    "s" => p.set_iters = val.parse()?,
+                    "kstart" => p.k_start = val.parse()?,
+                    other => anyhow::bail!("unknown cascade param {other:?}"),
+                }
+            }
+            return Ok(PolicyKind::Cascade(p));
+        }
+        anyhow::bail!("unknown policy {s:?} (want k0..k7, cascade, ablation0..3)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_k_is_constant() {
+        let mut p = StaticK::new(3);
+        for _ in 0..10 {
+            assert_eq!(p.next_k(), 3);
+            p.observe(&IterObs { k_chosen: 3, drafted: 3, accepted: 1, emitted: 2, iter_s: 0.01 });
+        }
+    }
+
+    #[test]
+    fn cascade_resets_per_request() {
+        let mut p = CascadePolicy::new(CascadeParams::default());
+        for _ in 0..40 {
+            let k = p.next_k();
+            p.observe(&IterObs { k_chosen: k, drafted: k, accepted: 0, emitted: 1, iter_s: 0.02 });
+        }
+        p.reset();
+        assert_eq!(p.phase(), IterPhase::Baseline);
+        assert_eq!(p.next_k(), 0);
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert!(matches!(PolicyKind::parse("k0").unwrap(), PolicyKind::Static(0)));
+        assert!(matches!(PolicyKind::parse("k7").unwrap(), PolicyKind::Static(7)));
+        assert!(PolicyKind::parse("k9").is_err());
+        assert!(matches!(PolicyKind::parse("cascade").unwrap(), PolicyKind::Cascade(_)));
+        match PolicyKind::parse("cascade:t=2,s=8").unwrap() {
+            PolicyKind::Cascade(p) => {
+                assert_eq!(p.trial_iters, 2);
+                assert_eq!(p.set_iters, 8);
+            }
+            _ => panic!(),
+        }
+        match PolicyKind::parse("ablation1").unwrap() {
+            PolicyKind::Cascade(p) => assert!(p.enable_disable && !p.enable_backoff),
+            _ => panic!(),
+        }
+        assert!(PolicyKind::parse("wat").is_err());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(PolicyKind::Static(2).label(), "static-k2");
+        assert_eq!(PolicyKind::Cascade(CascadeParams::default()).label(), "cascade");
+        assert_eq!(
+            PolicyKind::Cascade(CascadeParams::ablation(1)).label(),
+            "cascade[d=1,b=0,h=0]"
+        );
+    }
+}

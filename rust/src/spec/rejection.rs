@@ -1,0 +1,111 @@
+//! Rejection sampling for speculative decoding.
+//!
+//! Greedy-match acceptance (the deterministic form used with greedy target
+//! sampling, as in vLLM's n-gram path): draft token `i` is accepted iff it
+//! equals the target model's token at that position **and** all earlier
+//! drafts were accepted — acceptance is causal (paper §5.4). The step
+//! always emits at least one token (the target's own continuation), so an
+//! iteration yields between 1 and K+1 tokens.
+
+/// Outcome of verifying K draft tokens against K+1 target samples.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifyResult {
+    /// Number of draft tokens accepted (prefix length).
+    pub accepted: usize,
+    /// Tokens emitted this iteration: the accepted drafts are confirmed as
+    /// `targets[0..accepted]`, plus the bonus/correction `targets[accepted]`.
+    pub emitted: Vec<u32>,
+}
+
+/// Verify `drafts` against `targets` (`targets.len() == drafts.len() + 1`;
+/// `targets[i]` is the target model's token sampled after consuming the
+/// prefix ending at draft `i`).
+pub fn greedy_verify(drafts: &[u32], targets: &[u32]) -> VerifyResult {
+    debug_assert_eq!(targets.len(), drafts.len() + 1);
+    let mut accepted = 0;
+    for (d, t) in drafts.iter().zip(targets.iter()) {
+        if d == t {
+            accepted += 1;
+        } else {
+            break;
+        }
+    }
+    VerifyResult { accepted, emitted: targets[..=accepted].to_vec() }
+}
+
+/// Truncate an emission at the first EOS (inclusive). Returns the cut list
+/// and whether EOS was hit.
+pub fn truncate_at_eos(emitted: &[u32], eos: u32) -> (Vec<u32>, bool) {
+    if let Some(pos) = emitted.iter().position(|&t| t == eos) {
+        (emitted[..=pos].to_vec(), true)
+    } else {
+        (emitted.to_vec(), false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn all_accepted_emits_k_plus_1() {
+        let r = greedy_verify(&[5, 6, 7], &[5, 6, 7, 8]);
+        assert_eq!(r.accepted, 3);
+        assert_eq!(r.emitted, vec![5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn first_mismatch_stops() {
+        let r = greedy_verify(&[5, 9, 7], &[5, 6, 7, 8]);
+        assert_eq!(r.accepted, 1);
+        assert_eq!(r.emitted, vec![5, 6]); // accepted draft + correction
+    }
+
+    #[test]
+    fn no_drafts_emit_one() {
+        let r = greedy_verify(&[], &[3]);
+        assert_eq!(r.accepted, 0);
+        assert_eq!(r.emitted, vec![3]);
+    }
+
+    #[test]
+    fn later_match_after_mismatch_ignored() {
+        // Causality: draft 2 "matches" positionally but draft 1 failed.
+        let r = greedy_verify(&[1, 2, 3], &[9, 2, 3, 4]);
+        assert_eq!(r.accepted, 0);
+        assert_eq!(r.emitted, vec![9]);
+    }
+
+    #[test]
+    fn eos_truncation() {
+        let (cut, hit) = truncate_at_eos(&[1, 2, 258, 4], 258);
+        assert_eq!(cut, vec![1, 2, 258]);
+        assert!(hit);
+        let (cut, hit) = truncate_at_eos(&[1, 2], 258);
+        assert_eq!(cut, vec![1, 2]);
+        assert!(!hit);
+    }
+
+    /// Property: acceptance is causal — the accepted prefix matches targets
+    /// exactly, and emitted = accepted + 1 tokens (before EOS handling).
+    #[test]
+    fn prop_causal_acceptance() {
+        let mut rng = Rng::new(0x7E57);
+        for _ in 0..2000 {
+            let k = rng.below(8);
+            let drafts: Vec<u32> = (0..k).map(|_| rng.below(16) as u32).collect();
+            let targets: Vec<u32> = (0..k + 1).map(|_| rng.below(16) as u32).collect();
+            let r = greedy_verify(&drafts, &targets);
+            assert!(r.accepted <= k);
+            assert_eq!(r.emitted.len(), r.accepted + 1);
+            for i in 0..r.accepted {
+                assert_eq!(drafts[i], targets[i]);
+            }
+            if r.accepted < k {
+                assert_ne!(drafts[r.accepted], targets[r.accepted]);
+            }
+            assert_eq!(r.emitted, &targets[..=r.accepted]);
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Stochastic speculative sampling (Leviathan et al., the paper's [27]).
+//!
+//! The greedy-match rule in `rejection.rs` is what vLLM uses for n-gram
+//! drafting under greedy decoding. With temperature sampling and a drafter
+//! that exposes a distribution (the draft-model path), the correct rule is
+//! the accept/resample scheme that provably preserves the target
+//! distribution:
+//!
+//! * accept draft token `d` with probability `min(1, p_t(d) / p_d(d))`;
+//! * on rejection, resample from the residual `norm(max(p_t − p_d, 0))`.
+//!
+//! `prop_preserves_target_distribution` below checks the theorem
+//! empirically — the output distribution of (draft ~ p_d → accept/resample)
+//! must equal p_t regardless of how bad the drafter is.
+
+use crate::rng::Rng;
+
+/// Temperature softmax over logits.
+pub fn softmax_t(logits: &[f32], temperature: f32) -> Vec<f32> {
+    assert!(temperature > 0.0);
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f32> = logits
+        .iter()
+        .map(|&l| ((l - max) / temperature).exp())
+        .collect();
+    let sum: f32 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= sum;
+    }
+    probs
+}
+
+/// Sample an index from a probability vector.
+pub fn sample_categorical(probs: &[f32], rng: &mut Rng) -> u32 {
+    let mut u = rng.f64() as f32;
+    for (i, &p) in probs.iter().enumerate() {
+        if u < p {
+            return i as u32;
+        }
+        u -= p;
+    }
+    (probs.len() - 1) as u32 // numerical tail
+}
+
+/// Outcome of one accept/resample decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Draft accepted verbatim.
+    Accepted,
+    /// Draft rejected; the carried token is the residual resample.
+    Resampled(u32),
+}
+
+/// The speculative-sampling accept/resample rule for one position.
+/// `p_target` and `p_draft` are the two distributions over the vocabulary;
+/// `draft` was sampled from `p_draft`.
+pub fn speculative_accept(
+    p_target: &[f32],
+    p_draft: &[f32],
+    draft: u32,
+    rng: &mut Rng,
+) -> Verdict {
+    debug_assert_eq!(p_target.len(), p_draft.len());
+    let d = draft as usize;
+    let pt = p_target[d];
+    let pd = p_draft[d].max(1e-30);
+    if (rng.f64() as f32) < (pt / pd).min(1.0) {
+        return Verdict::Accepted;
+    }
+    // Residual distribution: norm(max(p_t - p_d, 0)).
+    let mut residual: Vec<f32> = p_target
+        .iter()
+        .zip(p_draft)
+        .map(|(&t, &q)| (t - q).max(0.0))
+        .collect();
+    let sum: f32 = residual.iter().sum();
+    if sum <= 0.0 {
+        // p_t <= p_d everywhere can only happen via rounding; fall back.
+        return Verdict::Resampled(sample_categorical(p_target, rng));
+    }
+    for r in &mut residual {
+        *r /= sum;
+    }
+    Verdict::Resampled(sample_categorical(&residual, rng))
+}
+
+/// Verify a draft chain: apply the rule causally; the first rejection ends
+/// acceptance and contributes the resampled correction; full acceptance
+/// appends a bonus token from `p_bonus` (the target's K+1-th distribution).
+pub fn stochastic_verify(
+    p_targets: &[Vec<f32>],
+    p_drafts: &[Vec<f32>],
+    drafts: &[u32],
+    p_bonus: &[f32],
+    rng: &mut Rng,
+) -> crate::spec::rejection::VerifyResult {
+    debug_assert_eq!(p_targets.len(), drafts.len());
+    debug_assert_eq!(p_drafts.len(), drafts.len());
+    let mut emitted = Vec::with_capacity(drafts.len() + 1);
+    for i in 0..drafts.len() {
+        match speculative_accept(&p_targets[i], &p_drafts[i], drafts[i], rng) {
+            Verdict::Accepted => emitted.push(drafts[i]),
+            Verdict::Resampled(tok) => {
+                emitted.push(tok);
+                return crate::spec::rejection::VerifyResult { accepted: i, emitted };
+            }
+        }
+    }
+    emitted.push(sample_categorical(p_bonus, rng));
+    crate::spec::rejection::VerifyResult { accepted: drafts.len(), emitted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let p = softmax_t(&[1.0, 3.0, 2.0], 1.0);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[1] > p[2] && p[2] > p[0]);
+    }
+
+    #[test]
+    fn low_temperature_sharpens() {
+        let hot = softmax_t(&[1.0, 2.0], 2.0);
+        let cold = softmax_t(&[1.0, 2.0], 0.25);
+        assert!(cold[1] > hot[1]);
+    }
+
+    #[test]
+    fn identical_distributions_always_accept() {
+        let p = vec![0.25f32; 4];
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let d = sample_categorical(&p, &mut rng);
+            assert_eq!(speculative_accept(&p, &p, d, &mut rng), Verdict::Accepted);
+        }
+    }
+
+    #[test]
+    fn impossible_draft_always_rejected() {
+        // Target puts zero mass on token 0; drafter always proposes it.
+        let pt = vec![0.0f32, 1.0];
+        let pd = vec![1.0f32, 0.0];
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            match speculative_accept(&pt, &pd, 0, &mut rng) {
+                Verdict::Resampled(tok) => assert_eq!(tok, 1),
+                Verdict::Accepted => panic!("accepted zero-probability draft"),
+            }
+        }
+    }
+
+    /// The speculative-sampling theorem: output ~ p_target exactly, for an
+    /// arbitrary (mismatched) drafter.
+    #[test]
+    fn prop_preserves_target_distribution() {
+        let mut rng = Rng::new(0x5A3B);
+        for case in 0..20 {
+            let v = rng.range(2, 6);
+            let mk = |rng: &mut Rng| {
+                let mut p: Vec<f32> = (0..v).map(|_| rng.f64() as f32 + 0.01).collect();
+                let s: f32 = p.iter().sum();
+                p.iter_mut().for_each(|x| *x /= s);
+                p
+            };
+            let pt = mk(&mut rng);
+            let pd = mk(&mut rng);
+            let n = 60_000;
+            let mut counts = vec![0usize; v];
+            for _ in 0..n {
+                let d = sample_categorical(&pd, &mut rng);
+                let tok = match speculative_accept(&pt, &pd, d, &mut rng) {
+                    Verdict::Accepted => d,
+                    Verdict::Resampled(t) => t,
+                };
+                counts[tok as usize] += 1;
+            }
+            for i in 0..v {
+                let emp = counts[i] as f64 / n as f64;
+                let want = pt[i] as f64;
+                assert!(
+                    (emp - want).abs() < 0.012,
+                    "case {case}: token {i} empirical {emp:.4} vs target {want:.4}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chain_verification_is_causal() {
+        // Draft 1 impossible => acceptance stops at 0 even if draft 2 is
+        // perfect.
+        let pt = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        let pd = vec![vec![1.0, 0.0], vec![1.0, 0.0]];
+        let mut rng = Rng::new(3);
+        let r = stochastic_verify(&pt, &pd, &[0, 0], &[0.5, 0.5], &mut rng);
+        assert_eq!(r.accepted, 0);
+        assert_eq!(r.emitted.len(), 1);
+        assert_eq!(r.emitted[0], 1); // residual forced to token 1
+    }
+
+    #[test]
+    fn full_acceptance_adds_bonus() {
+        let p = vec![vec![0.5, 0.5]; 3];
+        let mut rng = Rng::new(4);
+        let r = stochastic_verify(&p, &p, &[0, 1, 0], &[1.0, 0.0], &mut rng);
+        assert_eq!(r.accepted, 3);
+        assert_eq!(r.emitted.len(), 4);
+        assert_eq!(*r.emitted.last().unwrap(), 0); // bonus from p_bonus
+    }
+
+    #[test]
+    fn categorical_matches_probs() {
+        let p = vec![0.7f32, 0.2, 0.1];
+        let mut rng = Rng::new(5);
+        let n = 50_000;
+        let mut c = [0usize; 3];
+        for _ in 0..n {
+            c[sample_categorical(&p, &mut rng) as usize] += 1;
+        }
+        assert!((c[0] as f64 / n as f64 - 0.7).abs() < 0.01);
+        assert!((c[2] as f64 / n as f64 - 0.1).abs() < 0.01);
+    }
+}

@@ -1,0 +1,152 @@
+//! The utility analyzer (paper §4, Fig. 9 right half).
+//!
+//! Tracks the no-speculation baseline iteration time (measured over the
+//! request's first few decode iterations and refreshed infrequently, §5.3)
+//! and recent (ETR, cost) observations, and computes *speculation utility*:
+//!
+//! > utility = benefit / cost = ETR / (t_iter_spec / t_iter_base)   (Def. 4.1)
+//!
+//! Theorem 4.2: TPOT_spec = TPOT_base / utility — so maximizing utility
+//! minimizes TPOT. `theorem_4_2_holds` below checks the identity on random
+//! traces.
+
+use std::collections::VecDeque;
+
+/// Rolling utility analyzer for one request.
+#[derive(Debug, Clone)]
+pub struct UtilityAnalyzer {
+    /// EMA of the measured K=0 iteration time.
+    baseline_s: Option<f64>,
+    /// EMA weight for baseline refreshes (first measurement seeds it).
+    ema_alpha: f64,
+    /// Recent speculative iterations: (etr, iteration seconds).
+    window: VecDeque<(f64, f64)>,
+    cap: usize,
+}
+
+impl Default for UtilityAnalyzer {
+    fn default() -> Self {
+        Self::new(64)
+    }
+}
+
+impl UtilityAnalyzer {
+    pub fn new(cap: usize) -> Self {
+        Self { baseline_s: None, ema_alpha: 0.5, window: VecDeque::new(), cap }
+    }
+
+    /// Record a measured K=0 iteration (baseline phase or refresh).
+    pub fn observe_baseline(&mut self, iter_s: f64) {
+        self.baseline_s = Some(match self.baseline_s {
+            None => iter_s,
+            Some(prev) => prev * (1.0 - self.ema_alpha) + iter_s * self.ema_alpha,
+        });
+    }
+
+    /// Record a (speculative or not) decode iteration.
+    pub fn observe(&mut self, etr: f64, iter_s: f64) {
+        if self.window.len() == self.cap {
+            self.window.pop_front();
+        }
+        self.window.push_back((etr, iter_s));
+    }
+
+    pub fn baseline_s(&self) -> Option<f64> {
+        self.baseline_s
+    }
+
+    pub fn has_baseline(&self) -> bool {
+        self.baseline_s.is_some()
+    }
+
+    /// Utility of an explicit (mean-ETR, mean-iteration-time) pair.
+    pub fn utility_of(&self, mean_etr: f64, mean_iter_s: f64) -> Option<f64> {
+        let base = self.baseline_s?;
+        if mean_iter_s <= 0.0 || base <= 0.0 {
+            return None;
+        }
+        Some(mean_etr / (mean_iter_s / base))
+    }
+
+    /// Utility over the recent observation window (telemetry).
+    pub fn window_utility(&self) -> Option<f64> {
+        if self.window.is_empty() {
+            return None;
+        }
+        let n = self.window.len() as f64;
+        let etr = self.window.iter().map(|(e, _)| e).sum::<f64>() / n;
+        let t = self.window.iter().map(|(_, s)| s).sum::<f64>() / n;
+        self.utility_of(etr, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn baseline_seeds_then_ema() {
+        let mut a = UtilityAnalyzer::default();
+        assert!(!a.has_baseline());
+        a.observe_baseline(0.02);
+        assert_eq!(a.baseline_s(), Some(0.02));
+        a.observe_baseline(0.04);
+        assert!((a.baseline_s().unwrap() - 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utility_definition() {
+        let mut a = UtilityAnalyzer::default();
+        a.observe_baseline(0.01);
+        // ETR 1.5x at 2x cost => utility 0.75 (the paper's own example).
+        let u = a.utility_of(1.5, 0.02).unwrap();
+        assert!((u - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_baseline_no_utility() {
+        let a = UtilityAnalyzer::default();
+        assert!(a.utility_of(2.0, 0.02).is_none());
+        assert!(a.window_utility().is_none());
+    }
+
+    #[test]
+    fn window_rolls() {
+        let mut a = UtilityAnalyzer::new(4);
+        a.observe_baseline(0.01);
+        for _ in 0..4 {
+            a.observe(1.0, 0.01);
+        }
+        assert!((a.window_utility().unwrap() - 1.0).abs() < 1e-12);
+        for _ in 0..4 {
+            a.observe(3.0, 0.015); // displaces all old entries
+        }
+        assert!((a.window_utility().unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    /// Theorem 4.2 on random traces: TPOT_spec == TPOT_base / utility when
+    /// utility is computed from the same trace means.
+    #[test]
+    fn theorem_4_2_holds() {
+        let mut rng = Rng::new(0x7407);
+        for _ in 0..200 {
+            let base = 0.005 + rng.f64() * 0.05;
+            let n = rng.range(5, 60);
+            let mut tok = 0.0;
+            let mut time = 0.0;
+            let mut a = UtilityAnalyzer::default();
+            a.observe_baseline(base);
+            for _ in 0..n {
+                let etr = 1.0 + rng.f64() * 4.0;
+                let t = base * (0.8 + rng.f64() * 2.5);
+                tok += etr;
+                time += t;
+            }
+            let n = n as f64;
+            let u = a.utility_of(tok / n, time / n).unwrap();
+            let tpot_spec = time / tok;
+            assert!((tpot_spec - base / u).abs() < 1e-12);
+        }
+    }
+}

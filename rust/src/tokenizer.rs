@@ -1,0 +1,60 @@
+//! Byte-level tokenizer.
+//!
+//! The model zoo's vocabulary is 320: raw bytes 0–255 plus special tokens.
+//! Byte-level tokenization keeps the build free of trained BPE tables while
+//! preserving the text statistics (n-gram repetition, span copying) that
+//! drive drafter accuracy — the property the paper's task mix depends on.
+
+/// Vocabulary size baked into the AOT models (configs.py).
+pub const VOCAB: usize = 320;
+pub const PAD: u32 = 256;
+pub const BOS: u32 = 257;
+pub const EOS: u32 = 258;
+
+/// Encode text to token ids (one id per byte).
+pub fn encode(text: &str) -> Vec<u32> {
+    text.bytes().map(|b| b as u32).collect()
+}
+
+/// Decode token ids back to text; specials render as markers.
+pub fn decode(tokens: &[u32]) -> String {
+    let mut out = String::with_capacity(tokens.len());
+    for &t in tokens {
+        match t {
+            0..=255 => out.push(t as u8 as char),
+            PAD => out.push_str("<pad>"),
+            BOS => out.push_str("<bos>"),
+            EOS => out.push_str("<eos>"),
+            _ => out.push_str("<unk>"),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "def f(x):\n    return x + 1\n";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn all_ids_below_vocab() {
+        let toks = encode("hello \u{00ff} world");
+        assert!(toks.iter().all(|&t| (t as usize) < VOCAB));
+    }
+
+    #[test]
+    fn specials_render() {
+        assert_eq!(decode(&[BOS, b'a' as u32, EOS]), "<bos>a<eos>");
+    }
+
+    #[test]
+    fn empty() {
+        assert!(encode("").is_empty());
+        assert_eq!(decode(&[]), "");
+    }
+}

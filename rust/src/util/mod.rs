@@ -1,0 +1,5 @@
+//! Small in-tree substrates (the build is fully offline; see DESIGN.md):
+//! a JSON parser/writer and text-table formatting.
+
+pub mod json;
+pub mod table;

@@ -1,0 +1,209 @@
+//! Synthetic task corpora with the drafter-relevant text statistics of the
+//! paper's datasets (§3: HumanEval, GSM8K, MT-Bench extraction).
+//!
+//! What matters for speculation is not semantic quality but *predictability
+//! structure*:
+//! * **code** — heavy boilerplate repetition (signatures, indentation,
+//!   `return` patterns) ⇒ long n-gram matches, high acceptance (the paper's
+//!   best case: ETR up to ≈3x at K=7).
+//! * **math** — natural-language scaffolding is repetitive but every
+//!   arithmetic step introduces fresh digits ⇒ frequent n-gram misses (the
+//!   paper's worst case).
+//! * **extract** — answers copy spans from the prompt passage ⇒ *phases* of
+//!   very high acceptance during span copies separated by misses (the
+//!   phased ETR of paper Fig. 6).
+
+use crate::rng::Rng;
+
+/// Generate a `(prompt, reference_continuation)` pair for `task`.
+pub fn generate(task: super::Task, rng: &mut Rng) -> (String, String) {
+    match task {
+        super::Task::Code => code(rng),
+        super::Task::Math => math(rng),
+        super::Task::Extract => extract(rng),
+    }
+}
+
+const VERBS: &[&str] = &["scale", "shift", "clamp", "fold", "merge", "rank"];
+const NAMES: &[&str] = &["alice", "tom", "maria", "chen", "ravi", "lena"];
+const ITEMS: &[&str] = &["apples", "marbles", "tickets", "coins", "books", "stamps"];
+
+/// HumanEval-like: a request to implement several similar helpers. The
+/// reference is boilerplate-heavy Python.
+fn code(rng: &mut Rng) -> (String, String) {
+    let verb = VERBS[rng.below(VERBS.len())];
+    let n_funcs = rng.range(3, 5);
+    let prompt = format!(
+        "# Task: implement {n_funcs} helpers that {verb} integer lists.\n\
+         # Follow the house style used below.\n\
+         def {verb}_base(xs):\n    out = []\n    for x in xs:\n        out.append(x)\n    return out\n\n"
+    );
+    let mut body = String::new();
+    for i in 0..n_funcs {
+        let c = rng.range(2, 9);
+        body.push_str(&format!(
+            "def {verb}_{i}(xs):\n    out = []\n    for x in xs:\n        y = x + {c}\n        out.append(y)\n    return out\n\n"
+        ));
+    }
+    (prompt, body)
+}
+
+/// GSM8K-like chain-of-thought: repetitive sentence scaffolding around
+/// unpredictable numbers.
+fn math(rng: &mut Rng) -> (String, String) {
+    let name = NAMES[rng.below(NAMES.len())];
+    let item = ITEMS[rng.below(ITEMS.len())];
+    let start = rng.range(12, 97);
+    // Like GSM8K, the question lists the quantities the chain-of-thought
+    // will reuse; the *results* of each arithmetic step are fresh digits,
+    // which is what breaks n-gram drafting on math (paper §2.5).
+    let n_trades = rng.range(6, 9);
+    let deltas: Vec<i64> = (0..n_trades).map(|_| rng.range(3, 48) as i64).collect();
+    let gives: Vec<bool> = (0..n_trades).map(|_| rng.chance(0.5)).collect();
+    let trades: Vec<String> = deltas
+        .iter()
+        .zip(&gives)
+        .map(|(d, g)| format!("{} {d}", if *g { "gives away" } else { "buys" }))
+        .collect();
+    let prompt = format!(
+        "Q: {name} has {start} {item}. Trades: {}. \
+         Work out how many {item} {name} ends with, step by step.\nA: ",
+        trades.join(", ")
+    );
+    let mut total = start as i64;
+    let mut body = format!("{name} starts with {total} {item}. ");
+    for (delta, give) in deltas.iter().zip(&gives) {
+        if *give && total > *delta {
+            body.push_str(&format!(
+                "Then {name} gives away {delta} {item}. {total} - {delta} = {}. ",
+                total - delta
+            ));
+            total -= delta;
+        } else {
+            body.push_str(&format!(
+                "Then {name} buys {delta} more {item}. {total} + {delta} = {}. ",
+                total + delta
+            ));
+            total += delta;
+        }
+    }
+    body.push_str(&format!("The answer is {total}.\n"));
+    (prompt, body)
+}
+
+/// MT-Bench-extraction-like: a passage of facts; the answer copies spans
+/// back out as a bullet list.
+fn extract(rng: &mut Rng) -> (String, String) {
+    let quarter = rng.range(1, 4);
+    let revenue = rng.range(10, 99);
+    let growth = rng.range(2, 19);
+    let name = NAMES[rng.below(NAMES.len())];
+    let year = rng.range(2019, 2025);
+    let facts = [
+        format!("revenue for quarter {quarter} reached {revenue}.{growth} million dollars"),
+        format!("the lead engineer, {name}, joined the team in {year}"),
+        format!("customer count grew by {growth} percent over the quarter"),
+        format!("the platform migration finished {quarter} weeks ahead of schedule"),
+        format!("operating costs fell to {revenue} thousand dollars per month"),
+    ];
+    let mut prompt = String::from("Passage: ");
+    for f in &facts {
+        prompt.push_str(f);
+        prompt.push_str(". ");
+    }
+    prompt.push_str("\nQ: Extract every fact from the passage as a bullet list.\nA:\n");
+    let mut body = String::new();
+    for f in &facts {
+        body.push_str("- ");
+        body.push_str(f);
+        body.push('\n');
+    }
+    (prompt, body)
+}
+
+/// Repetition score used by tests: fraction of 4-grams that repeat.
+#[cfg(test)]
+fn repeat_fraction(text: &str, n: usize) -> f64 {
+    use std::collections::HashMap;
+    let b = text.as_bytes();
+    if b.len() <= n {
+        return 0.0;
+    }
+    let mut counts: HashMap<&[u8], usize> = HashMap::new();
+    for w in b.windows(n) {
+        *counts.entry(w).or_default() += 1;
+    }
+    let repeated: usize = counts.values().filter(|&&c| c > 1).map(|&c| c).sum();
+    repeated as f64 / (b.len() - n + 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Task;
+
+    #[test]
+    fn code_is_most_repetitive() {
+        let mut rng = Rng::new(1);
+        let (_, code_ref) = code(&mut rng);
+        let (_, math_ref) = math(&mut rng);
+        let code_rep = repeat_fraction(&code_ref, 8);
+        let math_rep = repeat_fraction(&math_ref, 8);
+        assert!(code_rep > math_rep, "code {code_rep} vs math {math_rep}");
+        assert!(code_rep > 0.6, "code should be heavily boilerplate: {code_rep}");
+    }
+
+    #[test]
+    fn extract_answer_copies_prompt_spans() {
+        let mut rng = Rng::new(2);
+        let (prompt, body) = extract(&mut rng);
+        // Every bullet (minus "- " and newline) must be a prompt substring —
+        // this is what makes prompt-lookup n-gram drafting effective.
+        for line in body.lines() {
+            let span = line.trim_start_matches("- ").trim_end();
+            assert!(prompt.contains(span), "span not in prompt: {span}");
+        }
+    }
+
+    #[test]
+    fn math_numbers_are_consistent() {
+        let mut rng = Rng::new(3);
+        let (_, body) = math(&mut rng);
+        // The final answer must equal the last arithmetic result.
+        let answer: i64 = body
+            .rsplit("The answer is ")
+            .next()
+            .unwrap()
+            .trim_end_matches(['.', '\n'])
+            .parse()
+            .unwrap();
+        let last_eq: i64 = body
+            .rsplit("= ")
+            .next()
+            .map(|_| {
+                body.match_indices("= ")
+                    .last()
+                    .map(|(i, _)| {
+                        body[i + 2..]
+                            .split('.')
+                            .next()
+                            .unwrap()
+                            .trim()
+                            .parse()
+                            .unwrap()
+                    })
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(answer, last_eq);
+    }
+
+    #[test]
+    fn generate_dispatches() {
+        let mut rng = Rng::new(4);
+        for t in [Task::Code, Task::Math, Task::Extract] {
+            let (p, r) = generate(t, &mut rng);
+            assert!(!p.is_empty() && !r.is_empty());
+        }
+    }
+}

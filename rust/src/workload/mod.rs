@@ -1,0 +1,184 @@
+//! Workloads: tasks, mixed request streams, and request construction.
+//!
+//! Mirrors the paper's §3 evaluation setup: three decode-heavy tasks —
+//! `code` (HumanEval-like), `math` (GSM8K-like chain-of-thought), `extract`
+//! (MT-Bench extraction) — plus four mixes with equal request shares
+//! (code+math, math+extract, code+extract, all-3). Corpus text is
+//! synthesized (`corpus.rs`) with the drafter-relevant statistics of each
+//! task; see DESIGN.md §Substitutions.
+
+pub mod corpus;
+
+use crate::rng::Rng;
+use crate::tokenizer;
+
+/// A single-task workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    Code,
+    Math,
+    Extract,
+}
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Code => "code",
+            Task::Math => "math",
+            Task::Extract => "extract",
+        }
+    }
+
+    /// Per-task guided-decoding deviation rate (see `sampling`): how often
+    /// the model "disagrees" with the reference — the knob that makes
+    /// drafter accuracy task-dependent (code predictable, math digits not).
+    pub fn deviation_eps(&self) -> f64 {
+        match self {
+            Task::Code => 0.015,
+            Task::Math => 0.15,
+            Task::Extract => 0.04,
+        }
+    }
+}
+
+/// A task mix (the paper's seven workloads).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Workload {
+    pub name: String,
+    pub tasks: Vec<Task>,
+}
+
+impl Workload {
+    pub fn single(task: Task) -> Self {
+        Self { name: task.name().to_string(), tasks: vec![task] }
+    }
+
+    pub fn mix(name: &str, tasks: Vec<Task>) -> Self {
+        Self { name: name.to_string(), tasks }
+    }
+
+    /// The paper's seven evaluated workloads (§3, Fig. 5/13).
+    pub fn all_seven() -> Vec<Workload> {
+        use Task::*;
+        vec![
+            Workload::single(Code),
+            Workload::single(Math),
+            Workload::single(Extract),
+            Workload::mix("code+math", vec![Code, Math]),
+            Workload::mix("math+extract", vec![Math, Extract]),
+            Workload::mix("code+extract", vec![Code, Extract]),
+            Workload::mix("all-3", vec![Code, Math, Extract]),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<Workload> {
+        Self::all_seven().into_iter().find(|w| w.name == name)
+    }
+}
+
+/// One serving request: prompt tokens + the reference continuation that
+/// guided decoding follows (DESIGN.md §Substitutions).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub task: Task,
+    pub prompt: Vec<u32>,
+    pub reference: Vec<u32>,
+    /// Guided-decoding deviation rate for this request.
+    pub eps: f64,
+    pub max_new_tokens: usize,
+}
+
+/// Deterministic request stream over a workload (round-robin across the
+/// mix's tasks, per the paper's equal-share mixes).
+pub struct RequestStream {
+    workload: Workload,
+    rng: Rng,
+    next_id: u64,
+    max_new_tokens: usize,
+}
+
+impl RequestStream {
+    pub fn new(workload: Workload, seed: u64, max_new_tokens: usize) -> Self {
+        Self { workload, rng: Rng::new(seed), next_id: 0, max_new_tokens }
+    }
+
+    /// Generate the next request.
+    pub fn next_request(&mut self) -> Request {
+        let task = self.workload.tasks[(self.next_id as usize) % self.workload.tasks.len()];
+        let mut rng = self.rng.fork(self.next_id);
+        let (prompt_text, reference_text) = corpus::generate(task, &mut rng);
+        let req = Request {
+            id: self.next_id,
+            task,
+            prompt: tokenizer::encode(&prompt_text),
+            reference: tokenizer::encode(&reference_text),
+            eps: task.deviation_eps(),
+            max_new_tokens: self.max_new_tokens,
+        };
+        self.next_id += 1;
+        req
+    }
+
+    /// Generate `n` requests.
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_workloads_match_paper() {
+        let all = Workload::all_seven();
+        assert_eq!(all.len(), 7);
+        let names: Vec<&str> = all.iter().map(|w| w.name.as_str()).collect();
+        assert!(names.contains(&"code"));
+        assert!(names.contains(&"math+extract"));
+        assert!(names.contains(&"all-3"));
+    }
+
+    #[test]
+    fn mixes_round_robin() {
+        let w = Workload::by_name("code+math").unwrap();
+        let mut s = RequestStream::new(w, 1, 100);
+        let reqs = s.take(4);
+        assert_eq!(reqs[0].task, Task::Code);
+        assert_eq!(reqs[1].task, Task::Math);
+        assert_eq!(reqs[2].task, Task::Code);
+        assert_eq!(reqs[3].task, Task::Math);
+    }
+
+    #[test]
+    fn streams_deterministic() {
+        let w = Workload::single(Task::Code);
+        let a = RequestStream::new(w.clone(), 9, 100).take(3);
+        let b = RequestStream::new(w, 9, 100).take(3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.reference, y.reference);
+        }
+    }
+
+    #[test]
+    fn requests_nonempty_and_in_vocab() {
+        for task in [Task::Code, Task::Math, Task::Extract] {
+            let mut s = RequestStream::new(Workload::single(task), 3, 100);
+            let r = s.next_request();
+            assert!(r.prompt.len() > 20, "{task:?} prompt too short");
+            assert!(r.reference.len() > 80, "{task:?} reference too short");
+            assert!(r.prompt.iter().all(|&t| (t as usize) < tokenizer::VOCAB));
+            assert!(r.reference.iter().all(|&t| (t as usize) < tokenizer::VOCAB));
+        }
+    }
+
+    #[test]
+    fn requests_vary_between_ids() {
+        let mut s = RequestStream::new(Workload::single(Task::Math), 5, 100);
+        let a = s.next_request();
+        let b = s.next_request();
+        assert_ne!(a.reference, b.reference);
+    }
+}

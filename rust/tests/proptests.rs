@@ -1,0 +1,182 @@
+//! Property tests over coordinator invariants (in-tree random-case harness;
+//! the offline vendor set has no proptest). Each property runs hundreds of
+//! randomized cases through the *sim* engine — no HLO needed — plus pure
+//! component properties.
+
+use cascade::config::{CascadeParams, EngineConfig, MAX_K};
+use cascade::coordinator::engine::Engine;
+use cascade::metrics::IterPhase;
+use cascade::models::{default_artifacts_dir, Registry};
+use cascade::rng::Rng;
+use cascade::spec::manager::CascadeManager;
+use cascade::spec::policy::PolicyKind;
+use cascade::spec::NgramDrafter;
+use cascade::workload::{RequestStream, Task, Workload};
+
+fn registry() -> Registry {
+    Registry::load(default_artifacts_dir()).expect("run `make artifacts` first")
+}
+
+/// Random (model, task, policy, seed) sim runs; checks engine-wide
+/// conservation laws on every iteration record.
+#[test]
+fn prop_engine_conservation_laws() {
+    let reg = registry();
+    let mut rng = Rng::new(0xE27);
+    let models = ["mixtral", "phi", "olmoe", "deepseek", "qwen", "llama"];
+    let tasks = [Task::Code, Task::Math, Task::Extract];
+    for case in 0..40 {
+        let model = models[rng.below(models.len())];
+        let task = tasks[rng.below(tasks.len())];
+        let policy = match rng.below(3) {
+            0 => PolicyKind::Static(rng.below(MAX_K + 1)),
+            1 => PolicyKind::Cascade(CascadeParams::default()),
+            _ => PolicyKind::Cascade(CascadeParams::ablation(rng.below(4))),
+        };
+        let cfg = EngineConfig { model: model.into(), seed: rng.next_u64(), ..Default::default() };
+        let mut engine = Engine::sim(&reg, cfg, policy.build()).unwrap();
+        let mut stream = RequestStream::new(Workload::single(task), rng.next_u64(), 120);
+        let req = stream.next_request();
+        let m = engine.serve_request(&req).unwrap();
+
+        let mini = reg.model(model).unwrap().mini;
+        for (i, it) in m.iters.iter().enumerate() {
+            // Emission law: 1 <= emitted <= accepted + 1 <= drafted + 1 <= K+1.
+            assert!(it.emitted >= 1, "case {case} iter {i}");
+            assert!(it.accepted <= it.drafted, "case {case} iter {i}");
+            assert!(it.emitted <= it.accepted + 1, "case {case} iter {i}");
+            assert!(it.drafted <= it.k_chosen, "case {case} iter {i}");
+            assert!(it.k_chosen <= MAX_K);
+            // Cost components are nonnegative and total adds up.
+            let c = it.cost;
+            for part in [c.base_s, c.expert_s, c.draft_s, c.reject_s, c.overhead_s] {
+                assert!(part >= 0.0);
+            }
+            assert!((c.total() - (c.base_s + c.expert_s + c.draft_s + c.reject_s + c.overhead_s)).abs() < 1e-15);
+            // Expert counts bounded by architecture.
+            if mini.is_moe {
+                assert!(it.unique_experts <= mini.n_experts as f64);
+            } else {
+                assert_eq!(it.unique_experts, 0.0);
+            }
+        }
+        // Token conservation: sum(emitted) == tokens_emitted <= max_new + K.
+        assert_eq!(
+            m.iters.iter().map(|r| r.emitted).sum::<usize>(),
+            m.tokens_emitted()
+        );
+        assert!(m.tokens_emitted() <= 120 + MAX_K + 1);
+    }
+}
+
+/// Cascade's phase machine obeys its contract under random utility
+/// landscapes: K bounded, baseline first, K=0 only when disable is on.
+#[test]
+fn prop_manager_state_machine() {
+    let mut rng = Rng::new(0x517A7E);
+    for case in 0..300 {
+        let level = rng.below(4);
+        let params = CascadeParams::ablation(level);
+        let mut mgr = CascadeManager::new(params.clone());
+        // Random piecewise-stationary landscape.
+        let mut etr_k = [0.0f64; MAX_K + 1];
+        for (k, e) in etr_k.iter_mut().enumerate() {
+            *e = 1.0 + rng.f64() * k as f64;
+        }
+        let base = 0.005 + rng.f64() * 0.03;
+        for i in 0..rng.range(40, 400) {
+            let k = mgr.next_k();
+            assert!(k <= MAX_K, "case {case}");
+            if i < params.baseline_iters {
+                assert_eq!(mgr.phase_label(), IterPhase::Baseline, "case {case} iter {i}");
+                assert_eq!(k, 0);
+            }
+            if k == 0 && mgr.phase_label() == IterPhase::Set {
+                assert!(
+                    params.enable_disable,
+                    "case {case}: K=0 set phase without disable enabled"
+                );
+            }
+            let cost = base * (1.0 + 0.4 * k as f64 * rng.f64());
+            mgr.observe(etr_k[k], cost);
+        }
+        // Back-off never exceeds the cap and never shrinks below S0.
+        assert!(mgr.current_set_len() >= params.set_iters);
+        assert!(mgr.current_set_len() <= params.max_set_iters.max(params.set_iters));
+    }
+}
+
+/// The n-gram drafter never proposes more than k tokens and every proposal
+/// is a contiguous span of the context that continues a suffix match.
+#[test]
+fn prop_ngram_contract() {
+    let mut rng = Rng::new(0x9624);
+    for _ in 0..800 {
+        let min_n = rng.range(1, 3);
+        let max_n = min_n + rng.below(4);
+        let d = NgramDrafter::new(min_n, max_n);
+        let len = rng.range(2, 120);
+        let alphabet = rng.range(2, 12);
+        let ctx: Vec<u32> = (0..len).map(|_| rng.below(alphabet) as u32).collect();
+        let k = rng.below(MAX_K + 1);
+        let prop = d.propose(&ctx, k);
+        assert!(prop.len() <= k);
+        if !prop.is_empty() {
+            assert!(ctx.windows(prop.len()).any(|w| w == &prop[..]));
+        }
+    }
+}
+
+/// Utility algebra (Theorem 4.2) holds for arbitrary runs of the sim
+/// engine: TPOT == baseline_TPOT / utility when both are measured from the
+/// same trace.
+#[test]
+fn prop_theorem_4_2_on_engine_traces() {
+    let reg = registry();
+    let mut rng = Rng::new(0x742);
+    for _ in 0..20 {
+        let k = 1 + rng.below(MAX_K);
+        let cfg = EngineConfig { model: "mixtral".into(), seed: rng.next_u64(), ..Default::default() };
+        let mut engine = Engine::sim(&reg, cfg, PolicyKind::Static(k).build()).unwrap();
+        let mut stream = RequestStream::new(Workload::single(Task::Code), rng.next_u64(), 150);
+        let m = engine.serve_request(&stream.next_request()).unwrap();
+
+        // Baseline run on the same request with K=0.
+        let cfg0 = EngineConfig { model: "mixtral".into(), seed: 1, ..Default::default() };
+        let mut engine0 = Engine::sim(&reg, cfg0, PolicyKind::Static(0).build()).unwrap();
+        let mut stream0 = RequestStream::new(Workload::single(Task::Code), 99, 150);
+        let m0 = engine0.serve_request(&stream0.next_request()).unwrap();
+
+        let base_iter = m0.mean_iter_s();
+        let utility = m.etr() / (m.mean_iter_s() / base_iter);
+        let tpot_pred = m0.tpot_s() * (m0.etr() / 1.0) / utility; // m0.etr()==1
+        assert!(
+            (m.tpot_s() - tpot_pred).abs() / m.tpot_s() < 1e-9,
+            "theorem 4.2 identity violated: {} vs {}",
+            m.tpot_s(),
+            tpot_pred
+        );
+    }
+}
+
+/// Scheduler conservation: the sum of per-request tokens equals the run
+/// total and respects the budget within one request's overshoot.
+#[test]
+fn prop_scheduler_budget() {
+    use cascade::coordinator::scheduler::{Budget, Scheduler};
+    let reg = registry();
+    let mut rng = Rng::new(0xBAD6E);
+    for _ in 0..10 {
+        let budget = Budget { max_tokens: rng.range(100, 600), max_requests: 50 };
+        let cfg = EngineConfig { model: "phi".into(), seed: rng.next_u64(), ..Default::default() };
+        let mut engine = Engine::sim(&reg, cfg, PolicyKind::Static(2).build()).unwrap();
+        let stream = RequestStream::new(Workload::by_name("all-3").unwrap(), rng.next_u64(), 150);
+        let mut sched = Scheduler::new(stream, budget);
+        let m = sched.run(&mut engine).unwrap();
+        let total: usize = m.requests.iter().map(|r| r.tokens_emitted()).sum();
+        assert_eq!(total, m.total_tokens());
+        assert!(total >= budget.max_tokens.min(1));
+        // Overshoot bounded by one request's worth.
+        assert!(total < budget.max_tokens + 150 + MAX_K + 1);
+    }
+}

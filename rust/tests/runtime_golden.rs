@@ -1,0 +1,177 @@
+//! Cross-layer golden test: the AOT HLO artifacts, executed through the
+//! Rust PJRT runtime, must reproduce the eager-JAX outputs recorded in the
+//! manifest by python/compile/aot.py. This is the end-to-end proof that
+//! L1 (Pallas kernels) + L2 (JAX model) + AOT text interchange + L3 runtime
+//! compose correctly.
+//!
+//! Requires `make artifacts`.
+
+use cascade::models::{default_artifacts_dir, Registry, ALL_MODELS};
+use cascade::runtime::ModelRuntime;
+use cascade::sampling::argmax;
+
+fn registry() -> Registry {
+    Registry::load(default_artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn client() -> xla::PjRtClient {
+    xla::PjRtClient::cpu().expect("PJRT CPU client")
+}
+
+#[test]
+fn golden_outputs_match_eager_jax() {
+    let reg = registry();
+    let client = client();
+    for name in ALL_MODELS {
+        let mut rt = ModelRuntime::with_client(&reg, name, client.clone()).unwrap();
+        let golden = rt.model.golden.clone();
+        let mut state = rt.fresh_state();
+        let out = rt.step(&mut state, &golden.tokens).unwrap();
+
+        // Logits head (relative tolerance: f32 accumulation order).
+        for (i, (a, b)) in out.logits_row(0)[..8]
+            .iter()
+            .zip(&golden.logits_row0_head)
+            .enumerate()
+        {
+            assert!(
+                (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                "{name}: logits[0][{i}] {a} vs golden {b}"
+            );
+        }
+        // Greedy argmax must match exactly (what serving consumes).
+        let am: Vec<usize> = (0..golden.t)
+            .map(|i| argmax(out.logits_row(i)) as usize)
+            .collect();
+        assert_eq!(am, golden.argmax, "{name}: argmax mismatch");
+
+        // Router decisions must match exactly (what the cost model consumes).
+        for (l, layer) in golden.topk_idx.iter().enumerate() {
+            for (t, toks) in layer.iter().enumerate() {
+                assert_eq!(out.topk_at(l, t), &toks[..], "{name}: topk[{l}][{t}]");
+            }
+        }
+    }
+}
+
+#[test]
+fn all_token_variants_compile_and_run() {
+    let reg = registry();
+    let client = client();
+    // One MoE + the dense baseline covers both code paths;
+    // golden_outputs_match_eager_jax covers every model at T=3.
+    for name in ["mixtral", "llama"] {
+        let mut rt = ModelRuntime::with_client(&reg, name, client.clone()).unwrap();
+        rt.warmup().unwrap();
+        for t in rt.model.token_variants() {
+            let mut state = rt.fresh_state();
+            let tokens: Vec<u32> = (0..t as u32).map(|i| i % 256).collect();
+            let out = rt.step(&mut state, &tokens).unwrap();
+            assert_eq!(out.t, t, "{name} T={t}");
+            assert!(
+                out.logits_row(t - 1).iter().all(|x| x.is_finite()),
+                "{name} T={t}: non-finite logits"
+            );
+        }
+    }
+}
+
+#[test]
+fn kv_cache_incremental_equals_batch() {
+    // Feeding tokens one-at-a-time through the KV cache must reproduce the
+    // one-shot logits — the invariant speculative verification relies on.
+    let reg = registry();
+    let mut rt = ModelRuntime::with_client(&reg, "mixtral", client()).unwrap();
+    let tokens = [5u32, 17, 99, 200];
+
+    let mut batch_state = rt.fresh_state();
+    let batch = rt.step(&mut batch_state, &tokens).unwrap();
+
+    let mut state = rt.fresh_state();
+    let mut last = None;
+    for (i, &tk) in tokens.iter().enumerate() {
+        let out = rt.step(&mut state, &[tk]).unwrap();
+        state.cache_len = i + 1;
+        last = Some(out);
+    }
+    let last = last.unwrap();
+    let a = last.logits_row(0);
+    let b = batch.logits_row(tokens.len() - 1);
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "logit {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn rejected_speculative_kv_is_harmless() {
+    // Write 3 speculative tokens, accept none, decode again: logits must
+    // match the never-speculated run (stale KV slots get overwritten).
+    let reg = registry();
+    let mut rt = ModelRuntime::with_client(&reg, "qwen", client()).unwrap();
+
+    let mut s1 = rt.fresh_state();
+    rt.step(&mut s1, &[1]).unwrap();
+    s1.cache_len = 1;
+    // speculative step: tokens at positions 1..4, drafts rejected
+    rt.step(&mut s1, &[50, 60, 70]).unwrap();
+    s1.cache_len = 2; // commit only the first (the "x0" input)
+    let spec_out = rt.step(&mut s1, &[42]).unwrap();
+
+    let mut s2 = rt.fresh_state();
+    rt.step(&mut s2, &[1]).unwrap();
+    s2.cache_len = 1;
+    rt.step(&mut s2, &[50]).unwrap();
+    s2.cache_len = 2;
+    let clean_out = rt.step(&mut s2, &[42]).unwrap();
+
+    for (x, y) in spec_out.logits_row(0).iter().zip(clean_out.logits_row(0)) {
+        assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{x} vs {y}");
+    }
+}
+
+#[test]
+fn unique_expert_counts_plausible() {
+    // T=1 must activate exactly top_k experts per layer; T=8 must activate
+    // more (up to the architecture cap) on a low-affinity model.
+    let reg = registry();
+    let mut rt = ModelRuntime::with_client(&reg, "mixtral", client()).unwrap();
+    let topk = rt.model.mini.top_k;
+
+    let mut state = rt.fresh_state();
+    let out1 = rt.step(&mut state, &[7]).unwrap();
+    assert!(out1.unique_experts_per_layer(1).iter().all(|&u| u == topk));
+
+    let mut state = rt.fresh_state();
+    let tokens: Vec<u32> = vec![3, 50, 97, 140, 180, 220, 250, 31];
+    let out8 = rt.step(&mut state, &tokens).unwrap();
+    let uniq = out8.unique_experts_per_layer(8);
+    assert!(
+        uniq.iter().all(|&u| u >= topk && u <= rt.model.mini.n_experts),
+        "{uniq:?}"
+    );
+    let mean: f64 = uniq.iter().sum::<usize>() as f64 / uniq.len() as f64;
+    assert!(mean > topk as f64 * 1.3, "verification should spread experts: {uniq:?}");
+}
+
+#[test]
+fn affinity_models_reuse_experts_more() {
+    // OLMoE (affinity 0.75) must reuse experts across consecutive tokens
+    // more than its uniform-routing bound; this is the paper's §2.4
+    // expert-affinity effect and the reason OLMoE loves speculation (§7).
+    let reg = registry();
+    let client = client();
+    let mut rt = ModelRuntime::with_client(&reg, "olmoe", client).unwrap();
+    let mini = rt.model.mini.clone();
+    let mut state = rt.fresh_state();
+    let tokens: Vec<u32> = vec![10, 65, 120, 175, 230, 29, 84, 139];
+    let out = rt.step(&mut state, &tokens).unwrap();
+    let uniq = out.unique_experts_per_layer(8);
+    let mean: f64 = uniq.iter().sum::<usize>() as f64 / uniq.len() as f64;
+    // Uniform top-8-of-64 over 8 tokens would give ~41 unique experts.
+    let uniform = mini.n_experts as f64
+        * (1.0 - (1.0 - mini.top_k as f64 / mini.n_experts as f64).powi(8));
+    assert!(
+        mean < uniform * 0.8,
+        "affinity should cut unique experts: mean {mean:.1} vs uniform {uniform:.1}"
+    );
+}
