@@ -105,6 +105,16 @@ pub struct EngineConfig {
     pub max_new_tokens: usize,
     /// Deterministic seed for samplers and workloads.
     pub seed: u64,
+    /// Requests kept in flight by the continuous-batching engine (1 =
+    /// single-batch serving, the paper's setting). Clamped to what the
+    /// backend supports (`Backend::max_slots`).
+    pub max_batch: usize,
+    /// Shared KV pool size in blocks for the batched engine. 0 = the
+    /// aggregate worst case (`max_batch * max_seq / block_size`): no
+    /// cross-request contention. Smaller values oversubscribe the pool so
+    /// admission and speculative lookahead genuinely compete for blocks
+    /// (eviction/preemption is future work — see ROADMAP).
+    pub kv_pool_blocks: usize,
     pub cascade: CascadeParams,
 }
 
@@ -118,6 +128,8 @@ impl Default for EngineConfig {
             guide_strength: 48.0,
             max_new_tokens: 200,
             seed: 0xCA5CADE,
+            max_batch: 1,
+            kv_pool_blocks: 0,
             cascade: CascadeParams::default(),
         }
     }

@@ -30,7 +30,45 @@ pub struct BackendStep {
     pub unique_experts: Vec<usize>,
 }
 
+/// One request's span in a fused batched verify step: slot id + the
+/// in-flight tokens `[last emitted, drafts…]` with their sampling guides.
+#[derive(Debug, Clone)]
+pub struct VerifySpan {
+    pub slot: usize,
+    pub tokens: Vec<u32>,
+    pub guides: Vec<Option<u32>>,
+    pub eps: f64,
+}
+
+/// One slot's share of a batched step's outputs.
+#[derive(Debug, Clone)]
+pub struct SlotStep {
+    pub slot: usize,
+    pub step: BackendStep,
+}
+
+/// Outputs of one fused verify step over several requests.
+#[derive(Debug, Clone)]
+pub struct BatchStep {
+    pub slots: Vec<SlotStep>,
+    /// Unique experts per mini layer across **all** slots' tokens,
+    /// de-duplicated when the backend can attribute expert identities
+    /// (SimBackend); otherwise the per-slot sums (sequential fallback).
+    pub batch_unique_experts: Vec<usize>,
+    /// Per-layer sum of per-slot unique counts — the no-dedup upper bound;
+    /// the gap to `batch_unique_experts` is cross-request expert overlap.
+    pub summed_unique_experts: Vec<usize>,
+}
+
 /// A target model the engine can serve with.
+///
+/// The single-request methods (`begin`/`prefill`/`step`/`advance`) are the
+/// original serving surface. The `_slot` family extends it to continuous
+/// batching: multi-request backends (SimBackend) hold one routing/cache
+/// state per slot; single-request backends (RealBackend) keep their default
+/// impls, which accept only slot 0 — `BatchEngine` clamps its batch size to
+/// [`Backend::max_slots`], so the real path degrades to sequential batch=1
+/// serving instead of breaking.
 pub trait Backend {
     fn mini(&self) -> &MiniConfig;
     fn name(&self) -> &'static str;
@@ -52,6 +90,79 @@ pub trait Backend {
 
     /// Committed cache length.
     fn cache_len(&self) -> usize;
+
+    // ---- Continuous-batching surface ------------------------------------
+
+    /// How many requests this backend can hold in flight.
+    fn max_slots(&self) -> usize {
+        1
+    }
+
+    /// Bind a new request to `slot`.
+    fn begin_slot(&mut self, slot: usize, req: &Request) -> Result<()> {
+        anyhow::ensure!(slot == 0, "backend {} is single-request (slot {slot})", self.name());
+        self.begin(req)
+    }
+
+    /// Prefill `slot`'s prompt and sample its first output token.
+    fn prefill_slot(
+        &mut self,
+        slot: usize,
+        prompt: &[u32],
+        guide0: Option<u32>,
+        eps: f64,
+    ) -> Result<u32> {
+        anyhow::ensure!(slot == 0, "backend {} is single-request (slot {slot})", self.name());
+        self.prefill(prompt, guide0, eps)
+    }
+
+    /// Commit `n` in-flight positions of `slot`.
+    fn advance_slot(&mut self, slot: usize, n: usize) {
+        debug_assert_eq!(slot, 0, "single-request backend");
+        self.advance(n)
+    }
+
+    /// Committed cache length of `slot`.
+    fn cache_len_slot(&self, slot: usize) -> usize {
+        debug_assert_eq!(slot, 0, "single-request backend");
+        self.cache_len()
+    }
+
+    /// Drop a finished request's slot state.
+    fn release_slot(&mut self, _slot: usize) {}
+
+    /// One fused verify step over the concatenated spans of all active
+    /// requests. The default is a **sequential fallback** for single-slot
+    /// backends: each span runs through `step` one at a time (so RealBackend
+    /// keeps working at batch=1), and expert counts are summed without
+    /// cross-request de-duplication because `step` reports counts, not ids.
+    /// Natively-batched backends override this to route every span in one
+    /// pass and de-duplicate expert fetches across the batch.
+    fn step_batch(&mut self, spans: &[VerifySpan]) -> Result<BatchStep> {
+        let mut slots = Vec::with_capacity(spans.len());
+        let mut summed: Vec<usize> = Vec::new();
+        for span in spans {
+            anyhow::ensure!(
+                span.slot == 0,
+                "sequential fallback: backend {} holds one request (got slot {})",
+                self.name(),
+                span.slot
+            );
+            let step = self.step(&span.tokens, &span.guides, span.eps)?;
+            if summed.len() < step.unique_experts.len() {
+                summed.resize(step.unique_experts.len(), 0);
+            }
+            for (l, u) in step.unique_experts.iter().enumerate() {
+                summed[l] += u;
+            }
+            slots.push(SlotStep { slot: span.slot, step });
+        }
+        Ok(BatchStep {
+            slots,
+            batch_unique_experts: summed.clone(),
+            summed_unique_experts: summed,
+        })
+    }
 }
 
 /// Production backend: executes the AOT-compiled step HLO through PJRT.

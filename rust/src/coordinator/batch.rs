@@ -1,0 +1,519 @@
+//! Continuous-batching serving engine.
+//!
+//! Extends the paper's single-batch worker (`engine::Engine`) to keep up to
+//! `max_batch` requests in flight. Each decode iteration runs **one fused
+//! verify step** over the concatenated `[last token, drafts…]` spans of all
+//! active requests (`Backend::step_batch`), then rejection-samples, commits
+//! and rolls back per request. Three things make this more than a loop:
+//!
+//! * **Shared KV pool** — all requests draw blocks from one
+//!   [`KvBlockPool`]; admission and speculative lookahead compete for the
+//!   same budget, so one request's speculation is real cache pressure for
+//!   the others.
+//! * **Batch-aware cost** — the fused step is charged with
+//!   [`GpuCostModel::batch_verify_cost`]: base weights once per iteration,
+//!   routed experts de-duplicated across the *whole batch*. Per-request
+//!   utility decisions therefore interact through expert overlap — the
+//!   paper's §2.4 mechanism at serving scale.
+//! * **Per-request policies** — every request carries its own Cascade
+//!   state machine (baseline → test → set), observing the fused iteration
+//!   latency it actually experienced.
+//!
+//! Per-request `RequestMetrics` keep the *latency* view (each iteration's
+//! full fused cost — that is what the request waited for); the
+//! [`BatchRunMetrics`] iteration records keep the *throughput* view
+//! (fused cost charged once per iteration).
+
+use crate::config::{DrafterKind, EngineConfig, MAX_K};
+use crate::coordinator::backend::{Backend, VerifySpan};
+use crate::coordinator::engine::EngineDrafter;
+use crate::cost::GpuCostModel;
+use crate::kv::KvBlockPool;
+use crate::metrics::{BatchIterRecord, BatchRunMetrics, IterRecord, RequestMetrics, RunMetrics};
+use crate::models::Registry;
+use crate::rng::Rng;
+use crate::spec::policy::{IterObs, PolicyKind, SpecPolicy};
+use crate::spec::rejection::{greedy_verify, truncate_at_eos};
+use crate::spec::NgramDrafter;
+use crate::tokenizer::EOS;
+use crate::workload::Request;
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// One in-flight request's state.
+struct SlotState {
+    req: Request,
+    policy: Box<dyn SpecPolicy>,
+    drafter: EngineDrafter,
+    output: Vec<u32>,
+    context: Vec<u32>,
+    d_eps: f64,
+    finished: bool,
+    metrics: RequestMetrics,
+    wall_start: Instant,
+}
+
+/// Drafting decisions taken for one slot before the fused step.
+struct PlannedSpan {
+    slot: usize,
+    k_chosen: usize,
+    drafted: usize,
+    draft_wall_ns: u64,
+}
+
+/// Continuous-batching engine: one backend (multi-slot where supported),
+/// one shared KV pool, per-request policies and drafters.
+pub struct BatchEngine {
+    pub cfg: EngineConfig,
+    pub backend: Box<dyn Backend>,
+    pub cost: GpuCostModel,
+    policy_kind: PolicyKind,
+    /// KV block size (vLLM-style pages).
+    pub kv_block: usize,
+    pub pool: KvBlockPool,
+    max_batch: usize,
+    slots: Vec<Option<SlotState>>,
+    done: Vec<RequestMetrics>,
+    batch_iters: Vec<BatchIterRecord>,
+}
+
+impl BatchEngine {
+    /// Build over an explicit backend. `cfg.max_batch` is clamped to what
+    /// the backend supports, so single-request backends serve batch=1
+    /// through the sequential `step_batch` fallback.
+    pub fn new(
+        cfg: EngineConfig,
+        backend: Box<dyn Backend>,
+        cost: GpuCostModel,
+        policy_kind: PolicyKind,
+    ) -> Self {
+        let kv_block = 16;
+        let max_batch = cfg.max_batch.max(1).min(backend.max_slots());
+        let blocks_per_request = backend.mini().max_seq / kv_block;
+        // Pool sizing: the aggregate worst case by default (no
+        // cross-request contention); `cfg.kv_pool_blocks` oversubscribes
+        // it so admission and speculation genuinely compete. Never below
+        // one full window, so a lone request can always reach max_seq.
+        let auto = max_batch * blocks_per_request;
+        let total_blocks = if cfg.kv_pool_blocks > 0 {
+            cfg.kv_pool_blocks.clamp(blocks_per_request, auto)
+        } else {
+            auto
+        };
+        let pool = KvBlockPool::new(total_blocks, kv_block);
+        let mut slots = Vec::with_capacity(max_batch);
+        slots.resize_with(max_batch, || None);
+        Self {
+            cfg,
+            backend,
+            cost,
+            policy_kind,
+            kv_block,
+            pool,
+            max_batch,
+            slots,
+            done: Vec::new(),
+            batch_iters: Vec::new(),
+        }
+    }
+
+    /// Sim-backend batched engine (native fused routing, full batching).
+    pub fn sim(registry: &Registry, cfg: EngineConfig, policy_kind: PolicyKind) -> Result<Self> {
+        let model = registry.model(&cfg.model)?;
+        let cost = GpuCostModel::new(model.paper.clone(), model.mini.layers);
+        let backend = Box::new(crate::sim::SimBackend::new(model.mini.clone(), cfg.seed));
+        Ok(Self::new(cfg, backend, cost, policy_kind))
+    }
+
+    /// Real-backend batched engine. The PJRT backend holds one request, so
+    /// the batch clamps to 1 (sequential fallback); draft-model speculation
+    /// is not supported on this path — use the single-request engine.
+    pub fn real(registry: &Registry, cfg: EngineConfig, policy_kind: PolicyKind) -> Result<Self> {
+        anyhow::ensure!(
+            cfg.drafter == DrafterKind::Ngram,
+            "the batched engine supports draft-model speculation only on the sim backend"
+        );
+        let runtime = crate::runtime::ModelRuntime::load(registry, &cfg.model)
+            .with_context(|| format!("loading model {}", cfg.model))?;
+        let mini_layers = runtime.model.mini.layers;
+        let cost = GpuCostModel::new(runtime.model.paper.clone(), mini_layers);
+        let backend = Box::new(crate::coordinator::backend::RealBackend::new(
+            runtime,
+            cfg.guide_strength,
+            cfg.seed,
+        ));
+        Ok(Self::new(cfg, backend, cost, policy_kind))
+    }
+
+    /// Effective batch size after clamping to the backend.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Worst-case total output tokens this engine's admitted requests can
+    /// reach: tokens already emitted by finished requests plus every active
+    /// request's remaining-capable maximum (`max_new_tokens - 1` counted
+    /// emissions). Admission control charges against this bound; it
+    /// self-corrects when a request finishes early (EOS), unlike a
+    /// pre-charged grant that would never be refunded.
+    pub fn output_bound(&self) -> usize {
+        let done: usize = self.done.iter().map(|m| m.tokens_emitted()).sum();
+        let active: usize = self
+            .slots
+            .iter()
+            .flatten()
+            .map(|s| s.req.max_new_tokens.saturating_sub(1))
+            .sum();
+        done + active
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().flatten().filter(|s| !s.finished).count()
+    }
+
+    pub fn has_free_slot(&self) -> bool {
+        self.slots.iter().any(|s| s.is_none())
+    }
+
+    /// Would `admit` succeed for this request right now?
+    pub fn can_admit(&self, req: &Request) -> bool {
+        self.has_free_slot()
+            && req.prompt.len() + 2 <= self.backend.mini().max_seq
+            && self.pool.can_admit(req.prompt.len())
+    }
+
+    /// Fresh per-request drafter mirroring `Engine`'s wiring.
+    fn build_drafter(&self) -> Result<EngineDrafter> {
+        Ok(match self.cfg.drafter {
+            DrafterKind::Ngram => {
+                EngineDrafter::Ngram(NgramDrafter::new(self.cfg.ngram_min, self.cfg.ngram_max))
+            }
+            DrafterKind::EagleLite => {
+                anyhow::ensure!(
+                    self.backend.name() == "sim",
+                    "batched draft-model speculation requires the sim backend"
+                );
+                EngineDrafter::SimEagle {
+                    rng: Rng::new(self.cfg.seed ^ 0xE1),
+                    seed: self.cfg.seed ^ 0xE1,
+                }
+            }
+        })
+    }
+
+    /// Admit one request: bind a slot, prefill, charge the pool.
+    pub fn admit(&mut self, req: Request) -> Result<()> {
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .ok_or_else(|| anyhow::anyhow!("no free slot (batch {})", self.max_batch))?;
+        let max_seq = self.backend.mini().max_seq;
+        anyhow::ensure!(
+            req.prompt.len() + 2 <= max_seq,
+            "prompt ({}) does not fit the {} window",
+            req.prompt.len(),
+            max_seq
+        );
+        // Build per-request machinery before taking any backend/pool side
+        // effects, so a config error (e.g. an unsupported drafter) cannot
+        // leak a bound slot or pool blocks.
+        let mut drafter = self.build_drafter()?;
+        let mut policy = self.policy_kind.build();
+        policy.reset();
+
+        self.backend.begin_slot(slot, &req)?;
+        self.pool.admit(req.id, req.prompt.len())?;
+
+        let mut metrics = RequestMetrics {
+            id: req.id,
+            task: req.task.name().into(),
+            prompt_tokens: req.prompt.len(),
+            ..Default::default()
+        };
+        let wall_start = Instant::now();
+        let guide0 = req.reference.first().copied();
+        let prefilled = self
+            .backend
+            .prefill_slot(slot, &req.prompt, guide0, req.eps)
+            .and_then(|first| drafter.begin_request(&req, first).map(|()| first));
+        let first = match prefilled {
+            Ok(t) => t,
+            Err(e) => {
+                self.pool.release(req.id);
+                self.backend.release_slot(slot);
+                return Err(e);
+            }
+        };
+        // Prefill charge: chunked full-parallel steps (excluded from TPOT).
+        let chunks = req.prompt.len().div_ceil(self.backend.mini().prefill_chunk);
+        metrics.prefill_s = chunks as f64 * self.cost.baseline_cost().total();
+
+        let mut context = req.prompt.clone();
+        context.push(first);
+        let finished = first == EOS || req.max_new_tokens <= 1;
+        let d_eps = crate::coordinator::eagle::draft_eps(req.task);
+        let state = SlotState {
+            d_eps,
+            policy,
+            drafter,
+            output: vec![first],
+            context,
+            finished,
+            metrics,
+            wall_start,
+            req,
+        };
+        if state.finished {
+            // EOS at prefill (or a 1-token budget): finalize immediately.
+            self.finalize(slot, state);
+        } else {
+            self.slots[slot] = Some(state);
+        }
+        Ok(())
+    }
+
+    fn finalize(&mut self, slot: usize, mut state: SlotState) {
+        self.pool.release(state.req.id);
+        self.backend.release_slot(slot);
+        state.metrics.wall_total_ns = state.wall_start.elapsed().as_nanos() as u64;
+        state.metrics.output = std::mem::take(&mut state.output);
+        self.done.push(state.metrics);
+    }
+
+    /// Run one fused decode iteration over all active slots. Returns false
+    /// when nothing is in flight (the caller should admit or stop).
+    pub fn step_iteration(&mut self) -> Result<bool> {
+        let max_seq = self.backend.mini().max_seq;
+        let drafter_kind = self.cfg.drafter;
+
+        // ---- Plan + draft per slot --------------------------------------
+        let mut spans: Vec<VerifySpan> = Vec::new();
+        let mut planned: Vec<PlannedSpan> = Vec::new();
+        let mut deferred = 0usize;
+        for slot in 0..self.slots.len() {
+            let Some(state) = self.slots[slot].as_mut() else { continue };
+            if state.finished {
+                continue;
+            }
+            let out_idx = state.output.len();
+            // Policy decision, capped by the KV window, the shared pool,
+            // and the remaining output budget — same laws as the
+            // single-request engine, plus pool pressure.
+            let mut k = state.policy.next_k().min(MAX_K);
+            let room = max_seq.saturating_sub(self.backend.cache_len_slot(slot) + 1);
+            k = k.min(room);
+            k = k.min(state.req.max_new_tokens.saturating_sub(out_idx).saturating_sub(1));
+            if room == 0 {
+                // Window exhausted: the request cannot decode further.
+                state.finished = true;
+                continue;
+            }
+            // Shared-pool pressure: shrink speculation until the span
+            // fits; if even the next token cannot be reserved, defer this
+            // request for one iteration — the other spans' commits and
+            // releases free blocks (preemption/eviction is future work).
+            while k > 0 && !self.pool.can_reserve(state.req.id, 1 + k) {
+                k -= 1;
+            }
+            if !self.pool.can_reserve(state.req.id, 1) {
+                deferred += 1;
+                continue;
+            }
+
+            let draft_wall = Instant::now();
+            let drafts = state.drafter.propose(
+                &state.context,
+                &state.req.reference,
+                out_idx,
+                k,
+                state.d_eps,
+            )?;
+            let draft_wall_ns = draft_wall.elapsed().as_nanos() as u64;
+            let drafted = drafts.len();
+
+            let t = 1 + drafted;
+            self.pool.reserve(state.req.id, t)?;
+            let mut tokens = Vec::with_capacity(t);
+            tokens.push(*state.output.last().unwrap());
+            tokens.extend_from_slice(&drafts);
+            let guides: Vec<Option<u32>> = (0..t)
+                .map(|i| state.req.reference.get(out_idx + i).copied())
+                .collect();
+            spans.push(VerifySpan { slot, tokens, guides, eps: state.req.eps });
+            planned.push(PlannedSpan { slot, k_chosen: k, drafted, draft_wall_ns });
+        }
+
+        if spans.is_empty() {
+            // Nothing to verify; finalize any slots that just ran out of
+            // window room. Their released blocks may unblock a deferred
+            // request, so that still counts as progress.
+            let swept = self.sweep_finished();
+            if deferred > 0 && swept > 0 {
+                return Ok(true);
+            }
+            // Deferred slots with no progressing neighbour can never be
+            // unblocked (nothing will free pool blocks): a genuine
+            // deadlock of an oversubscribed pool, surfaced rather than
+            // spun on.
+            anyhow::ensure!(
+                deferred == 0,
+                "KV pool deadlock: {deferred} request(s) cannot reserve their next token and \
+                 nothing else is decoding; increase kv_pool_blocks (eviction is not implemented)"
+            );
+            return Ok(false);
+        }
+
+        // ---- Fused verify step ------------------------------------------
+        let iter_wall = Instant::now();
+        let batch = self.backend.step_batch(&spans)?;
+
+        // ---- Batch-aware cost -------------------------------------------
+        let total_tokens: usize = spans.iter().map(|s| s.tokens.len()).sum();
+        let total_drafted: usize = planned.iter().map(|p| p.drafted).sum();
+        let drafting_requests = planned.iter().filter(|p| p.drafted > 0).count();
+        let cost = self.cost.batch_verify_cost(
+            &batch.batch_unique_experts,
+            total_tokens,
+            total_drafted,
+            drafting_requests,
+            drafter_kind,
+        );
+        let layer_mean = |v: &[usize]| -> f64 {
+            if v.is_empty() {
+                0.0
+            } else {
+                v.iter().sum::<usize>() as f64 / v.len() as f64
+            }
+        };
+
+        // ---- Per-request rejection sampling + commit --------------------
+        // `planned`, `spans`, and `batch.slots` are index-aligned.
+        let mut emitted_total = 0usize;
+        for (i, plan) in planned.iter().enumerate() {
+            let slot_step = &batch.slots[i];
+            let span = &spans[i];
+            debug_assert_eq!(plan.slot, slot_step.slot);
+            let state = self.slots[plan.slot].as_mut().expect("planned slot is live");
+            let drafts = &span.tokens[1..];
+            let vr = greedy_verify(drafts, &slot_step.step.sampled);
+            let (emitted, eos_hit) = truncate_at_eos(&vr.emitted, EOS);
+            let advance = 1 + vr.accepted;
+            self.pool.commit(state.req.id, advance)?;
+            self.backend.advance_slot(plan.slot, advance);
+            state.drafter.ingest(&emitted)?;
+
+            state.output.extend_from_slice(&emitted);
+            state.context.extend_from_slice(&emitted);
+            emitted_total += emitted.len();
+
+            let mean_unique = layer_mean(&slot_step.step.unique_experts);
+            let phase = state.policy.phase();
+            let obs = IterObs {
+                k_chosen: plan.k_chosen,
+                drafted: plan.drafted,
+                accepted: vr.accepted,
+                emitted: emitted.len(),
+                iter_s: cost.total(),
+            };
+            state.policy.observe(&obs);
+            state.metrics.iters.push(IterRecord {
+                k_chosen: plan.k_chosen,
+                drafted: plan.drafted,
+                accepted: vr.accepted,
+                emitted: emitted.len(),
+                cost,
+                wall_ns: iter_wall.elapsed().as_nanos() as u64 + plan.draft_wall_ns,
+                unique_experts: mean_unique,
+                phase,
+            });
+            if eos_hit || state.output.len() >= state.req.max_new_tokens {
+                state.finished = true;
+            }
+        }
+
+        self.batch_iters.push(BatchIterRecord {
+            n_active: spans.len(),
+            total_tokens,
+            total_drafted,
+            emitted: emitted_total,
+            cost,
+            batch_unique_experts: layer_mean(&batch.batch_unique_experts),
+            summed_unique_experts: layer_mean(&batch.summed_unique_experts),
+        });
+
+        self.sweep_finished();
+        Ok(true)
+    }
+
+    /// Move finished slots into the done list, freeing pool + backend
+    /// state. Returns how many slots were finalized.
+    fn sweep_finished(&mut self) -> usize {
+        let mut swept = 0;
+        for slot in 0..self.slots.len() {
+            if self.slots[slot].as_ref().is_some_and(|s| s.finished) {
+                let state = self.slots[slot].take().unwrap();
+                self.finalize(slot, state);
+                swept += 1;
+            }
+        }
+        swept
+    }
+
+    /// Collect the run's metrics (requests ordered by id).
+    pub fn finish(&mut self) -> BatchRunMetrics {
+        let mut reqs = std::mem::take(&mut self.done);
+        reqs.sort_by_key(|m| m.id);
+        let mut run = RunMetrics::default();
+        for m in reqs {
+            run.push(m);
+        }
+        BatchRunMetrics {
+            run,
+            iters: std::mem::take(&mut self.batch_iters),
+            max_batch: self.max_batch,
+        }
+    }
+
+    /// Serve an explicit request list to completion with continuous
+    /// admission (tests and deterministic comparisons). Deliberately a
+    /// separate drive loop from [`Scheduler::run_batched`], which owns
+    /// token-budget clamping and grant accounting over an unbounded
+    /// stream; changes to admission semantics must touch both.
+    ///
+    /// [`Scheduler::run_batched`]: crate::coordinator::scheduler::Scheduler::run_batched
+    pub fn serve_all(&mut self, reqs: &[Request]) -> Result<BatchRunMetrics> {
+        let mut queue: VecDeque<Request> = reqs.iter().cloned().collect();
+        loop {
+            while self.has_free_slot() {
+                match queue.front() {
+                    Some(req) if self.can_admit(req) => {
+                        let req = queue.pop_front().unwrap();
+                        self.admit(req)?;
+                    }
+                    _ => break,
+                }
+            }
+            if !self.step_iteration()? {
+                if queue.is_empty() {
+                    break;
+                }
+                // Engine drained but the head request still does not fit:
+                // with an empty engine the whole pool is free, so this can
+                // only mean the request can never fit.
+                anyhow::ensure!(
+                    self.active() == 0 && self.can_admit(queue.front().unwrap()),
+                    "request {} cannot fit the KV pool",
+                    queue.front().unwrap().id
+                );
+            }
+        }
+        Ok(self.finish())
+    }
+
+    /// Name for experiment tables.
+    pub fn label(&self) -> String {
+        format!("{}/{}@b{}", self.cfg.model, self.policy_kind.label(), self.max_batch)
+    }
+}

@@ -43,6 +43,70 @@ impl EngineDrafter {
             _ => DrafterKind::EagleLite,
         }
     }
+
+    /// Reset per-request state and feed the first emitted token.
+    pub fn begin_request(&mut self, req: &Request, first: u32) -> Result<()> {
+        match self {
+            EngineDrafter::Eagle(e) => {
+                e.begin(req)?;
+                e.ingest(&[first])?;
+            }
+            EngineDrafter::SimEagle { rng, seed } => {
+                *rng = Rng::new(*seed ^ req.id.wrapping_mul(0xD6E8_FEB8_6659_FD93));
+            }
+            EngineDrafter::Ngram(_) => {}
+        }
+        Ok(())
+    }
+
+    /// Propose up to `k` draft tokens continuing output index `out_idx`.
+    /// Positions past the end of `reference` are unguided — the drafter
+    /// emits noise there, matching `sample_guided`'s fallback (it must NOT
+    /// steer toward EOS, which would truncate long generations).
+    pub fn propose(
+        &mut self,
+        context: &[u32],
+        reference: &[u32],
+        out_idx: usize,
+        k: usize,
+        d_eps: f64,
+    ) -> Result<Vec<u32>> {
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        Ok(match self {
+            EngineDrafter::Ngram(d) => d.propose(context, k),
+            EngineDrafter::Eagle(e) => {
+                let guides: Vec<Option<u32>> =
+                    (0..k).map(|i| reference.get(out_idx + i).copied()).collect();
+                e.propose(k, &guides, d_eps)?
+            }
+            EngineDrafter::SimEagle { rng, .. } => {
+                let mut out = Vec::with_capacity(k);
+                let mut broken = false;
+                for i in 0..k {
+                    match reference.get(out_idx + i) {
+                        Some(&g) if !broken && !rng.chance(d_eps) => out.push(g),
+                        _ => {
+                            broken = true;
+                            out.push(rng.below(320) as u32);
+                        }
+                    }
+                }
+                out
+            }
+        })
+    }
+
+    /// Keep model-based drafters' KV in sync with the emitted tokens (runs
+    /// even when speculation is off — the dynamic-disable requirement the
+    /// paper implements in vLLM, §6).
+    pub fn ingest(&mut self, emitted: &[u32]) -> Result<()> {
+        if let EngineDrafter::Eagle(e) = self {
+            e.ingest(emitted)?;
+        }
+        Ok(())
+    }
 }
 
 /// Serving engine for one model + policy + drafter.
@@ -143,16 +207,7 @@ impl Engine {
         metrics.prefill_s = chunks as f64 * self.cost.baseline_cost().total();
 
         // Drafter request setup.
-        match &mut self.drafter {
-            EngineDrafter::Eagle(e) => {
-                e.begin(req)?;
-                e.ingest(&[first])?;
-            }
-            EngineDrafter::SimEagle { rng, seed } => {
-                *rng = Rng::new(*seed ^ req.id.wrapping_mul(0xD6E8_FEB8_6659_FD93));
-            }
-            EngineDrafter::Ngram(_) => {}
-        }
+        self.drafter.begin_request(req, first)?;
 
         let mut output: Vec<u32> = vec![first];
         let mut context: Vec<u32> = req.prompt.clone();
@@ -174,38 +229,14 @@ impl Engine {
             }
 
             // Reference guides for draft positions (draft i continues output
-            // index out_idx + i).
-            let ref_at = |j: usize| -> Option<u32> {
-                Some(req.reference.get(j).copied().unwrap_or(EOS))
-            };
+            // index out_idx + i). Past the reference end the guide is None —
+            // unguided sampling — NOT a forced EOS, which would silently
+            // truncate generations longer than the reference.
+            let ref_at = |j: usize| -> Option<u32> { req.reference.get(j).copied() };
 
             // ---- Draft ---------------------------------------------------
             let draft_wall = Instant::now();
-            let drafts: Vec<u32> = if k == 0 {
-                Vec::new()
-            } else {
-                match &mut self.drafter {
-                    EngineDrafter::Ngram(d) => d.propose(&context, k),
-                    EngineDrafter::Eagle(e) => {
-                        let guides: Vec<Option<u32>> = (0..k).map(|i| ref_at(out_idx + i)).collect();
-                        e.propose(k, &guides, d_eps)?
-                    }
-                    EngineDrafter::SimEagle { rng, .. } => {
-                        let mut out = Vec::with_capacity(k);
-                        let mut broken = false;
-                        for i in 0..k {
-                            let g = ref_at(out_idx + i).unwrap();
-                            if broken || rng.chance(d_eps) {
-                                broken = true;
-                                out.push(rng.below(320) as u32);
-                            } else {
-                                out.push(g);
-                            }
-                        }
-                        out
-                    }
-                }
-            };
+            let drafts = self.drafter.propose(&context, &req.reference, out_idx, k, d_eps)?;
             let draft_wall_ns = draft_wall.elapsed().as_nanos() as u64;
             let drafted = drafts.len();
 
@@ -227,12 +258,8 @@ impl Engine {
             kv.commit(advance)?;
             self.backend.advance(advance);
 
-            // Drafter stays in sync (even when speculation was off — the
-            // dynamic-disable requirement the paper implements in vLLM, §6).
-            match &mut self.drafter {
-                EngineDrafter::Eagle(e) => e.ingest(&emitted)?,
-                _ => {}
-            }
+            // Drafter stays in sync (even when speculation was off).
+            self.drafter.ingest(&emitted)?;
 
             output.extend_from_slice(&emitted);
             context.extend_from_slice(&emitted);
@@ -270,6 +297,7 @@ impl Engine {
         }
 
         metrics.wall_total_ns = wall_start.elapsed().as_nanos() as u64;
+        metrics.output = output;
         Ok(metrics)
     }
 

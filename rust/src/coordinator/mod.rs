@@ -1,13 +1,17 @@
 //! The L3 serving coordinator (paper Fig. 14): request scheduling, the
 //! spec-decode worker loop, drafter orchestration, KV management, and the
-//! Cascade policy integration. Single-batch serving, per the paper's
-//! low-latency focus.
+//! Cascade policy integration. Two serving paths share the stack: the
+//! paper's single-batch low-latency engine (`engine`) and the
+//! continuous-batching engine (`batch`) that fuses the verify spans of all
+//! in-flight requests into one step with batch-deduplicated expert cost.
 
 pub mod backend;
+pub mod batch;
 pub mod eagle;
 pub mod engine;
 pub mod scheduler;
 
-pub use backend::{Backend, BackendStep, RealBackend};
+pub use backend::{Backend, BackendStep, BatchStep, RealBackend, SlotStep, VerifySpan};
+pub use batch::BatchEngine;
 pub use engine::{Engine, RunSummary};
 pub use scheduler::Scheduler;

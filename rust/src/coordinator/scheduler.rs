@@ -1,13 +1,22 @@
-//! FIFO request scheduler for single-batch serving.
+//! Request scheduler: admission control over a request stream.
 //!
 //! The paper's setting is single-batch, low-latency serving: one request
 //! decodes at a time; mixed workloads interleave tasks *across* requests
 //! (§3: "mixed workloads … comprise request streams from 2 or 3 tasks with
 //! equal sharing"). The scheduler owns admission (token budget / request
-//! count) and drains the stream through an engine.
+//! count) and drains the stream through an engine — either the FIFO
+//! single-request [`Engine`] or the continuous-batching [`BatchEngine`],
+//! where it keeps every free slot fed.
+//!
+//! Budget law: the **tail request is clamped** to the remaining token
+//! budget, so a run can never overshoot `max_tokens` by a full
+//! `max_new_tokens` — overshoot would skew task sharing in mixed
+//! workloads (the last-admitted task would get up to an extra request's
+//! worth of tokens).
 
+use crate::coordinator::batch::BatchEngine;
 use crate::coordinator::engine::Engine;
-use crate::metrics::RunMetrics;
+use crate::metrics::{BatchRunMetrics, RunMetrics};
 use crate::workload::{Request, RequestStream};
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -56,7 +65,13 @@ impl Scheduler {
         let mut tokens = 0usize;
         let mut served = 0usize;
         while tokens < self.budget.max_tokens && served < self.budget.max_requests {
-            let req = self.next_request();
+            let mut req = self.next_request();
+            // Clamp the tail request to the remaining budget so the run
+            // cannot overshoot max_tokens. A request with max_new_tokens=n
+            // contributes at most n-1 counted tokens (the prefill token is
+            // not an iteration emission), hence the +1.
+            let remaining = self.budget.max_tokens - tokens;
+            req.max_new_tokens = req.max_new_tokens.min(remaining + 1);
             let m = engine.serve_request(&req)?;
             tokens += m.tokens_emitted();
             served += 1;
@@ -64,11 +79,67 @@ impl Scheduler {
         }
         Ok(metrics)
     }
+
+    /// Drain the stream through a continuous-batching engine: keep every
+    /// free slot fed until the token budget is fully allocated, then let
+    /// the in-flight requests finish. Admission is charged against
+    /// [`BatchEngine::output_bound`] — the worst-case total the admitted
+    /// requests can still emit — so the bound both prevents overshoot and
+    /// self-corrects when a request finishes early (its unused headroom
+    /// returns to the budget and admission resumes).
+    pub fn run_batched(&mut self, engine: &mut BatchEngine) -> Result<BatchRunMetrics> {
+        let mut served = 0usize;
+        loop {
+            loop {
+                let bound = engine.output_bound();
+                if !engine.has_free_slot()
+                    || bound >= self.budget.max_tokens
+                    || served >= self.budget.max_requests
+                {
+                    break;
+                }
+                let mut req = self.next_request();
+                // Clamp the tail request (a request emits at most
+                // max_new_tokens - 1 counted tokens, hence the +1).
+                let remaining = self.budget.max_tokens - bound;
+                req.max_new_tokens = req.max_new_tokens.min(remaining + 1);
+                if !engine.can_admit(&req) {
+                    // Pool pressure: requeue and decode to free blocks.
+                    self.queue.push_front(req);
+                    break;
+                }
+                served += 1;
+                engine.admit(req)?;
+            }
+            if !engine.step_iteration()? {
+                // An idle step means every slot was swept.
+                debug_assert_eq!(engine.active(), 0, "idle step left active slots");
+                if engine.output_bound() >= self.budget.max_tokens
+                    || served >= self.budget.max_requests
+                {
+                    break;
+                }
+                // Engine idle with budget left: the head request must be
+                // admittable next pass, otherwise it can never fit.
+                if let Some(req) = self.queue.front() {
+                    anyhow::ensure!(
+                        engine.can_admit(req),
+                        "request {} cannot fit the KV pool",
+                        req.id
+                    );
+                }
+            }
+        }
+        Ok(engine.finish())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::EngineConfig;
+    use crate::models::{default_artifacts_dir, Registry};
+    use crate::spec::policy::PolicyKind;
     use crate::workload::{Task, Workload};
 
     #[test]
@@ -87,5 +158,43 @@ mod tests {
         assert_eq!(s.next_request().id, 999);
         // subsequent requests come from the stream
         assert_ne!(s.next_request().id, 999);
+    }
+
+    #[test]
+    fn token_budget_never_overshoots() {
+        // Regression: the tail request used to run with its full
+        // max_new_tokens, overshooting the budget by up to a request.
+        let reg = Registry::load_or_builtin(default_artifacts_dir());
+        for budget_tokens in [130usize, 250, 777] {
+            let cfg = EngineConfig { model: "mixtral".into(), ..Default::default() };
+            let mut engine = Engine::sim(&reg, cfg, PolicyKind::Static(2).build()).unwrap();
+            let stream = RequestStream::new(Workload::single(Task::Code), 5, 100);
+            let mut sched = Scheduler::new(
+                stream,
+                Budget { max_tokens: budget_tokens, max_requests: 1_000 },
+            );
+            let m = sched.run(&mut engine).unwrap();
+            assert!(
+                m.total_tokens() <= budget_tokens,
+                "budget {budget_tokens} overshot: {}",
+                m.total_tokens()
+            );
+            assert!(m.total_tokens() >= budget_tokens.saturating_sub(1));
+        }
+    }
+
+    #[test]
+    fn batched_run_respects_budget() {
+        let reg = Registry::load_or_builtin(default_artifacts_dir());
+        let cfg = EngineConfig { model: "mixtral".into(), max_batch: 4, ..Default::default() };
+        let mut engine =
+            BatchEngine::sim(&reg, cfg, PolicyKind::Static(2)).unwrap();
+        let stream = RequestStream::new(Workload::single(Task::Code), 5, 100);
+        let mut sched =
+            Scheduler::new(stream, Budget { max_tokens: 300, max_requests: 1_000 });
+        let m = sched.run_batched(&mut engine).unwrap();
+        assert!(m.run.total_tokens() <= 300, "batched overshoot: {}", m.run.total_tokens());
+        assert!(m.run.total_tokens() > 0);
+        assert!(m.run.requests.len() >= 3);
     }
 }

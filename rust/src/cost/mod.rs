@@ -96,6 +96,60 @@ impl GpuCostModel {
         }
     }
 
+    /// Cost of one *fused* verification step over a batch of requests
+    /// (continuous batching). Base weights — attention, embeddings, router,
+    /// shared experts — are fetched once per iteration regardless of batch
+    /// size, and routed experts are charged for the unique set activated
+    /// across *all* in-flight tokens of *all* requests: the cross-request
+    /// de-duplication that makes batched MoE verification sub-linear in
+    /// batch size (the paper's §2.4 mechanism at serving scale).
+    ///
+    /// `batch_unique_per_mini_layer` is the per-layer unique-expert count
+    /// de-duplicated across the whole batch; `total_tokens` / `total_drafted`
+    /// sum over requests; `drafting_requests` counts requests that actually
+    /// drafted this iteration (the n-gram scan is a per-request CPU cost).
+    /// With one request this reduces exactly to [`Self::verify_cost`].
+    pub fn batch_verify_cost(
+        &self,
+        batch_unique_per_mini_layer: &[usize],
+        total_tokens: usize,
+        total_drafted: usize,
+        drafting_requests: usize,
+        drafter: DrafterKind,
+    ) -> IterCost {
+        let expert_s = if self.spec.is_moe() {
+            let mean_unique = if batch_unique_per_mini_layer.is_empty() {
+                self.spec.top_k as f64
+            } else {
+                batch_unique_per_mini_layer.iter().sum::<usize>() as f64
+                    / batch_unique_per_mini_layer.len() as f64
+            };
+            let cap = (self.spec.n_experts as f64)
+                .min(total_tokens as f64 * self.spec.top_k as f64);
+            let unique = mean_unique.min(cap).max(0.0);
+            self.spec.layers as f64 * unique * self.spec.expert_bytes() / self.hw.eff_bw()
+        } else {
+            0.0
+        };
+        let draft_s = match drafter {
+            DrafterKind::Ngram => drafting_requests as f64 * self.hw.ngram_draft_s,
+            DrafterKind::EagleLite => {
+                total_drafted as f64 * self.hw.eagle_draft_bytes / self.hw.eff_bw()
+            }
+        };
+        IterCost {
+            base_s: self.spec.base_bytes() / self.hw.eff_bw(),
+            expert_s,
+            draft_s,
+            reject_s: if total_drafted > 0 {
+                self.hw.reject_fixed_s + self.hw.reject_per_token_s * total_drafted as f64
+            } else {
+                0.0
+            },
+            overhead_s: self.hw.iter_overhead_s,
+        }
+    }
+
     /// Drafting cost for `k` proposed tokens.
     pub fn draft_cost(&self, k: usize, drafter: DrafterKind) -> f64 {
         if k == 0 {
@@ -203,6 +257,49 @@ mod tests {
         let c = m.verify_cost(&[4, 5], 4, 3, DrafterKind::Ngram);
         let sum = c.base_s + c.expert_s + c.draft_s + c.reject_s + c.overhead_s;
         assert!((sum - c.total()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn batch_of_one_equals_single_request_cost() {
+        // With a single in-flight request, the fused-batch charge must be
+        // identical to the per-request charge, for both drafters.
+        let m = model("mixtral");
+        for (unique, t, drafted) in [(vec![4, 5], 4usize, 3usize), (vec![2, 2], 1, 0)] {
+            for drafter in [DrafterKind::Ngram, DrafterKind::EagleLite] {
+                let single = m.verify_cost(&unique, t, drafted, drafter);
+                let reqs = usize::from(drafted > 0);
+                let batch = m.batch_verify_cost(&unique, t, drafted, reqs, drafter);
+                assert!((single.total() - batch.total()).abs() < 1e-15, "{drafter:?}");
+                assert!((single.expert_s - batch.expert_s).abs() < 1e-15);
+                assert!((single.draft_s - batch.draft_s).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_dedup_makes_experts_sublinear() {
+        // Four requests whose tokens activate heavily-overlapping experts:
+        // the fused charge must be far below four independent verify steps.
+        let m = model("deepseek"); // 64 experts, top-6
+        let per_request = m.verify_cost(&[12, 12], 4, 3, DrafterKind::Ngram);
+        // Union across 4 requests deduplicates to 18 unique (vs 48 summed).
+        let fused = m.batch_verify_cost(&[18, 18], 16, 12, 4, DrafterKind::Ngram);
+        assert!(
+            fused.expert_s < 4.0 * per_request.expert_s * 0.5,
+            "fused {} vs 4x {}",
+            fused.expert_s,
+            4.0 * per_request.expert_s
+        );
+        // Base weights are charged once per fused iteration, not per request.
+        assert!((fused.base_s - per_request.base_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn batch_unique_capped_by_architecture() {
+        let m = model("mixtral"); // 8 experts
+        let a = m.batch_verify_cost(&[100, 100], 32, 24, 4, DrafterKind::Ngram);
+        let b = m.batch_verify_cost(&[8, 8], 32, 24, 4, DrafterKind::Ngram);
+        assert!((a.expert_s - b.expert_s).abs() < 1e-15);
     }
 
     #[test]

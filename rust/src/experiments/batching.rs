@@ -1,0 +1,78 @@
+//! Batched-serving experiment (extension beyond the paper's single-batch
+//! setting): batch=1 vs batch=4 TPOT for static-K vs Cascade, with
+//! batch-occupancy and cross-request expert-overlap telemetry.
+//!
+//! The quantity to watch is the per-iteration routed-expert cost: with the
+//! batch-aware cost model it is charged on the expert set de-duplicated
+//! across all in-flight requests, so at batch=4 it must grow **sub-linearly**
+//! vs batch=1 (cross-request overlap; cf. SP-MoE and the offloading
+//! latency-hiding line in PAPERS.md). Runs on the sim backend, whose fused
+//! `step_batch` attributes expert ids.
+
+use crate::config::EngineConfig;
+use crate::coordinator::batch::BatchEngine;
+use crate::coordinator::scheduler::{Budget, Scheduler};
+use crate::experiments::runner::ExpCtx;
+use crate::spec::policy::PolicyKind;
+use crate::util::table::{ms, Table};
+use crate::workload::{RequestStream, Workload};
+use anyhow::Result;
+
+const BATCHES: [usize; 2] = [1, 4];
+
+pub fn batch_compare(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Batched serving (sim backend, code+math mix): fused verify with batch-deduplicated expert cost",
+        &[
+            "model",
+            "policy",
+            "batch",
+            "tokens",
+            "TPOT",
+            "occupancy",
+            "experts/iter dedup",
+            "experts/iter summed",
+            "overlap saved",
+            "expert-cost x (vs b=1)",
+        ],
+    );
+    let workload = Workload::by_name("code+math").expect("known mix");
+    for model in ["mixtral", "deepseek"] {
+        for policy in [PolicyKind::Static(3), PolicyKind::Cascade(Default::default())] {
+            let mut expert_s_b1 = f64::NAN;
+            for batch in BATCHES {
+                let cfg = EngineConfig {
+                    model: model.into(),
+                    max_batch: batch,
+                    max_new_tokens: ctx.max_new_tokens,
+                    seed: ctx.seed,
+                    ..EngineConfig::default()
+                };
+                let mut engine = BatchEngine::sim(&ctx.registry, cfg, policy.clone())?;
+                let stream = RequestStream::new(workload.clone(), ctx.seed, ctx.max_new_tokens);
+                let mut sched = Scheduler::new(
+                    stream,
+                    Budget { max_tokens: ctx.tokens_per_cell, max_requests: 10_000 },
+                );
+                let m = sched.run_batched(&mut engine)?;
+                if batch == 1 {
+                    expert_s_b1 = m.mean_expert_s();
+                }
+                let expert_ratio = m.mean_expert_s() / expert_s_b1;
+                t.row(vec![
+                    model.into(),
+                    policy.label(),
+                    batch.to_string(),
+                    m.run.total_tokens().to_string(),
+                    ms(m.tpot_s()),
+                    format!("{:.2}", m.mean_occupancy()),
+                    format!("{:.1}", m.mean_batch_unique()),
+                    format!("{:.1}", m.mean_summed_unique()),
+                    format!("{:.1}%", 100.0 * m.overlap_savings()),
+                    format!("{expert_ratio:.2}x"),
+                ]);
+            }
+        }
+    }
+    Ok(vec![t])
+}

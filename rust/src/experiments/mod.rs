@@ -2,6 +2,7 @@
 //! (see DESIGN.md §4 for the index). Each harness returns `Table`s that are
 //! printed and optionally written to `results/` as CSV.
 
+pub mod batching;
 pub mod figures;
 pub mod related;
 pub mod runner;
@@ -86,6 +87,11 @@ pub fn all() -> Vec<Experiment> {
             id: "related",
             caption: "Lookahead/Medusa cost analysis (paper 8.1)",
             run: related::related,
+        },
+        Experiment {
+            id: "batch",
+            caption: "EXTENSION: continuous batching, batch-deduplicated expert cost (sim)",
+            run: batching::batch_compare,
         },
     ]
 }

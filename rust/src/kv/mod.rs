@@ -108,9 +108,17 @@ impl KvBlockManager {
         self.alloc = KvAllocation { committed: 0, lookahead: 0, blocks: 0 };
     }
 
-    /// Fraction of the window committed.
+    /// Fraction of the window in use: committed tokens *plus* the reserved
+    /// speculative lookahead. Mid-speculation the lookahead rows are real
+    /// cache pressure (they occupy device slots until rolled back), which
+    /// is exactly when admission control needs an honest number.
     pub fn utilization(&self) -> f64 {
-        self.alloc.committed as f64 / self.max_seq as f64
+        (self.alloc.committed + self.alloc.lookahead) as f64 / self.max_seq as f64
+    }
+
+    /// Speculative positions currently reserved beyond the committed span.
+    pub fn lookahead(&self) -> usize {
+        self.alloc.lookahead
     }
 
     /// Invariant check used by tests: the span fits the window, blocks cover
@@ -124,6 +132,175 @@ impl KvBlockManager {
         }
         if self.alloc.blocks < self.blocks_for(self.alloc.committed) {
             bail!("committed tokens not covered by blocks");
+        }
+        Ok(())
+    }
+}
+
+/// Per-request accounting inside the shared pool.
+#[derive(Debug, Clone)]
+struct PoolAlloc {
+    committed: usize,
+    lookahead: usize,
+    blocks: usize,
+}
+
+/// Multi-request block pool for continuous batching.
+///
+/// All in-flight requests draw KV blocks from one fixed budget of
+/// `total_blocks` — the admission-control surface of `BatchEngine`.
+/// Per-request accounting mirrors [`KvBlockManager`] (committed span +
+/// speculative lookahead; rollback frees speculative-only blocks), but
+/// block allocation is charged against the shared budget, so one request's
+/// speculation can crowd out another's admission — the batching-era cache
+/// pressure the paper's single-batch setting never sees.
+#[derive(Debug, Clone)]
+pub struct KvBlockPool {
+    pub block_size: usize,
+    total_blocks: usize,
+    allocs: std::collections::BTreeMap<u64, PoolAlloc>,
+    /// Stats for telemetry / tests.
+    pub peak_blocks: usize,
+    pub total_reserved: u64,
+    pub total_rolled_back: u64,
+}
+
+impl KvBlockPool {
+    pub fn new(total_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0 && total_blocks > 0);
+        Self {
+            block_size,
+            total_blocks,
+            allocs: std::collections::BTreeMap::new(),
+            peak_blocks: 0,
+            total_reserved: 0,
+            total_rolled_back: 0,
+        }
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.allocs.values().map(|a| a.blocks).sum()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.total_blocks - self.blocks_in_use()
+    }
+
+    pub fn active_requests(&self) -> usize {
+        self.allocs.len()
+    }
+
+    /// Committed tokens of one request (0 if unknown).
+    pub fn committed(&self, id: u64) -> usize {
+        self.allocs.get(&id).map_or(0, |a| a.committed)
+    }
+
+    /// Can a request with `prompt_tokens` committed tokens be admitted now?
+    pub fn can_admit(&self, prompt_tokens: usize) -> bool {
+        self.blocks_for(prompt_tokens.max(1)) <= self.free_blocks()
+    }
+
+    /// Admit a request, allocating blocks for its (already prefilled)
+    /// prompt span.
+    pub fn admit(&mut self, id: u64, prompt_tokens: usize) -> Result<()> {
+        if self.allocs.contains_key(&id) {
+            bail!("request {id} already admitted");
+        }
+        let blocks = self.blocks_for(prompt_tokens.max(1));
+        if blocks > self.free_blocks() {
+            bail!(
+                "pool exhausted: request {id} needs {blocks} blocks, {} free of {}",
+                self.free_blocks(),
+                self.total_blocks
+            );
+        }
+        self.allocs.insert(id, PoolAlloc { committed: prompt_tokens, lookahead: 0, blocks });
+        self.peak_blocks = self.peak_blocks.max(self.blocks_in_use());
+        Ok(())
+    }
+
+    /// Can request `id` reserve a step of `t` in-flight tokens?
+    pub fn can_reserve(&self, id: u64, t: usize) -> bool {
+        match self.allocs.get(&id) {
+            None => false,
+            Some(a) => {
+                let needed = self.blocks_for(a.committed + t);
+                needed.saturating_sub(a.blocks) <= self.free_blocks()
+            }
+        }
+    }
+
+    /// Reserve lookahead slots for one request's verify step.
+    pub fn reserve(&mut self, id: u64, t: usize) -> Result<()> {
+        if !self.can_reserve(id, t) {
+            bail!(
+                "pool reserve failed: request {id}, t={t}, {} blocks free",
+                self.free_blocks()
+            );
+        }
+        let needed = {
+            let a = self.allocs.get(&id).expect("checked by can_reserve");
+            self.blocks_for(a.committed + t).max(a.blocks)
+        };
+        let a = self.allocs.get_mut(&id).expect("checked by can_reserve");
+        a.lookahead = t;
+        a.blocks = needed;
+        self.total_reserved += t as u64;
+        self.peak_blocks = self.peak_blocks.max(self.blocks_in_use());
+        Ok(())
+    }
+
+    /// Commit `advance` of the reserved tokens; roll the rest back and
+    /// return speculative-only blocks to the shared budget.
+    pub fn commit(&mut self, id: u64, advance: usize) -> Result<()> {
+        let block_size = self.block_size;
+        let a = self
+            .allocs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("commit for unknown request {id}"))?;
+        if advance > a.lookahead {
+            bail!("commit {advance} exceeds reserved lookahead {}", a.lookahead);
+        }
+        self.total_rolled_back += (a.lookahead - advance) as u64;
+        a.committed += advance;
+        a.lookahead = 0;
+        a.blocks = a.committed.max(1).div_ceil(block_size);
+        Ok(())
+    }
+
+    /// Release a finished request's blocks.
+    pub fn release(&mut self, id: u64) {
+        self.allocs.remove(&id);
+    }
+
+    /// Fraction of pool capacity in use (committed + lookahead tokens).
+    pub fn utilization(&self) -> f64 {
+        let used: usize = self.allocs.values().map(|a| a.committed + a.lookahead).sum();
+        used as f64 / (self.total_blocks * self.block_size) as f64
+    }
+
+    /// Invariants the property tests drive: the shared budget is never
+    /// exceeded, and every request's span is covered by its blocks.
+    pub fn check_invariants(&self) -> Result<()> {
+        if self.blocks_in_use() > self.total_blocks {
+            bail!(
+                "pool over budget: {} blocks in use of {}",
+                self.blocks_in_use(),
+                self.total_blocks
+            );
+        }
+        for (id, a) in &self.allocs {
+            if a.blocks < self.blocks_for(a.committed + a.lookahead) {
+                bail!("request {id}: span not covered by blocks");
+            }
         }
         Ok(())
     }
@@ -201,7 +378,8 @@ mod tests {
     }
 
     /// Property test (in-tree harness): random reserve/commit traces keep
-    /// invariants and conserve token accounting.
+    /// invariants and conserve token accounting; utilization reflects the
+    /// full (committed + lookahead) span at every point.
     #[test]
     fn prop_random_traces_keep_invariants() {
         let mut rng = Rng::new(0x6B76);
@@ -214,11 +392,119 @@ mod tests {
                     break;
                 }
                 kv.reserve(t).unwrap();
+                // Mid-speculation: utilization must count the reserved
+                // lookahead, not just the committed span.
+                let expect = (committed + t) as f64 / 384.0;
+                assert!(
+                    (kv.utilization() - expect).abs() < 1e-12,
+                    "case {case}: utilization {} != {expect}",
+                    kv.utilization()
+                );
                 let adv = rng.range(1, t);
                 kv.commit(adv).unwrap();
                 committed += adv;
                 kv.check_invariants().unwrap_or_else(|e| panic!("case {case}: {e}"));
                 assert_eq!(kv.committed(), committed);
+                assert!((kv.utilization() - committed as f64 / 384.0).abs() < 1e-12);
+                assert!(kv.utilization() <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn utilization_counts_lookahead() {
+        let mut kv = KvBlockManager::new(64, 16);
+        kv.reserve(8).unwrap();
+        kv.commit(8).unwrap();
+        assert!((kv.utilization() - 8.0 / 64.0).abs() < 1e-12);
+        kv.reserve(6).unwrap();
+        assert_eq!(kv.lookahead(), 6);
+        assert!((kv.utilization() - 14.0 / 64.0).abs() < 1e-12);
+        kv.commit(1).unwrap();
+        assert!((kv.utilization() - 9.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_admit_reserve_commit_release() {
+        let mut pool = KvBlockPool::new(8, 16); // 128 token-slots shared
+        pool.admit(1, 30).unwrap(); // 2 blocks
+        pool.admit(2, 17).unwrap(); // 2 blocks
+        assert_eq!(pool.blocks_in_use(), 4);
+        assert_eq!(pool.active_requests(), 2);
+        pool.reserve(1, 4).unwrap(); // 30+4 -> 3 blocks
+        assert_eq!(pool.blocks_in_use(), 5);
+        pool.commit(1, 1).unwrap(); // 31 -> back to 2 blocks
+        assert_eq!(pool.blocks_in_use(), 4);
+        assert_eq!(pool.committed(1), 31);
+        pool.release(1);
+        assert_eq!(pool.blocks_in_use(), 2);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pool_admission_bounded_by_budget() {
+        let mut pool = KvBlockPool::new(4, 16);
+        pool.admit(1, 33).unwrap(); // 3 blocks
+        assert!(!pool.can_admit(17)); // would need 2 more
+        assert!(pool.can_admit(16));
+        assert!(pool.admit(2, 40).is_err());
+        pool.admit(2, 10).unwrap();
+        assert_eq!(pool.free_blocks(), 0);
+        // No room left for lookahead growth past the current block.
+        assert!(!pool.can_reserve(1, 16));
+        assert!(pool.reserve(1, 16).is_err());
+    }
+
+    #[test]
+    fn pool_rejects_double_admit_and_unknown_ids() {
+        let mut pool = KvBlockPool::new(8, 16);
+        pool.admit(7, 5).unwrap();
+        assert!(pool.admit(7, 5).is_err());
+        assert!(pool.reserve(9, 1).is_err());
+        assert!(pool.commit(9, 0).is_err());
+    }
+
+    /// Shared-pool property: random admit/reserve/commit/release traces
+    /// never exceed `total_blocks` and keep every request's span covered.
+    #[test]
+    fn prop_pool_never_exceeds_budget() {
+        let mut rng = Rng::new(0x100F);
+        for case in 0..150 {
+            let total_blocks = rng.range(4, 24);
+            let mut pool = KvBlockPool::new(total_blocks, 16);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..rng.range(10, 200) {
+                match rng.below(4) {
+                    0 => {
+                        let prompt = rng.range(1, 64);
+                        if pool.can_admit(prompt) {
+                            pool.admit(next_id, prompt).unwrap();
+                            live.push(next_id);
+                            next_id += 1;
+                        }
+                    }
+                    1 | 2 if !live.is_empty() => {
+                        let id = live[rng.below(live.len())];
+                        let t = rng.range(1, 8);
+                        if pool.can_reserve(id, t) {
+                            pool.reserve(id, t).unwrap();
+                            pool.commit(id, rng.range(0, t)).unwrap();
+                        }
+                    }
+                    3 if !live.is_empty() => {
+                        let idx = rng.below(live.len());
+                        pool.release(live.swap_remove(idx));
+                    }
+                    _ => {}
+                }
+                assert!(
+                    pool.blocks_in_use() <= pool.total_blocks(),
+                    "case {case}: pool over budget"
+                );
+                assert!(pool.utilization() <= 1.0 + 1e-12);
+                pool.check_invariants()
+                    .unwrap_or_else(|e| panic!("case {case}: {e}"));
             }
         }
     }

@@ -36,5 +36,6 @@ pub mod util;
 pub mod workload;
 
 pub use config::{CascadeParams, EngineConfig};
+pub use coordinator::batch::BatchEngine;
 pub use coordinator::engine::Engine;
 pub use spec::policy::{PolicyKind, SpecPolicy};

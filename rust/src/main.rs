@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   list-models                       show the model zoo + artifact status
 //!   serve   --model M --task T ...    serve a request stream, print summary
+//!                                     (--batch N enables continuous batching)
+//!   sweep                             batch=1 vs batch=4 comparison table
 //!   figure  <id|all> [--backend B]    regenerate a paper table/figure
 //!   golden-check                      validate artifacts against JAX goldens
 //!
@@ -11,6 +13,7 @@
 
 use anyhow::{bail, Context, Result};
 use cascade::config::EngineConfig;
+use cascade::coordinator::batch::BatchEngine;
 use cascade::coordinator::engine::Engine;
 use cascade::coordinator::scheduler::{Budget, Scheduler};
 use cascade::experiments::{self, BackendKind, ExpCtx};
@@ -68,9 +71,16 @@ USAGE:
   cascade golden-check
   cascade serve  [--model mixtral] [--task code|math|extract|code+math|math+extract|code+extract|all-3]
                  [--policy k0..k7|cascade|ablation0..3] [--drafter ngram|eagle]
-                 [--tokens 400] [--backend real|sim] [--seed N]
-  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|all>
+                 [--tokens 400] [--backend real|sim] [--seed N] [--batch 1]
+  cascade sweep  [--tokens 300] [--out-dir results]
+                 (continuous-batching comparison: batch=1 vs 4, static-K vs Cascade)
+  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|batch|all>
                  [--backend real|sim] [--tokens 300] [--out-dir results]
+
+  --batch N > 1 serves through the continuous-batching engine: one fused
+  verify step per iteration over all in-flight requests, a shared KV block
+  pool, and expert fetches de-duplicated across the batch (sim backend;
+  the real backend is single-slot and clamps to batch=1).
 "
     );
     std::process::exit(2)
@@ -87,13 +97,17 @@ fn main() -> Result<()> {
         "list-models" => list_models(),
         "golden-check" => golden_check(),
         "serve" => serve(&args),
+        "sweep" => sweep(&args),
         "figure" => figure(&args),
         _ => usage(),
     }
 }
 
+/// The manifest when artifacts are built, else the builtin zoo (enough for
+/// the sim backend; the real backend errors cleanly without artifacts). A
+/// present-but-invalid manifest is a real error, not a fallback.
 fn registry() -> Result<Registry> {
-    Registry::load(default_artifacts_dir())
+    Registry::try_load_or_builtin(default_artifacts_dir())
 }
 
 fn list_models() -> Result<()> {
@@ -159,33 +173,92 @@ fn serve(args: &Args) -> Result<()> {
     let backend = BackendKind::parse(&args.get("backend", "real"))?;
     let tokens = args.get_usize("tokens", 400)?;
     let seed = args.get_usize("seed", 0xCA5CADE)? as u64;
+    let batch = args.get_usize("batch", 1)?;
     let drafter = match args.get("drafter", "ngram").as_str() {
         "ngram" => cascade::config::DrafterKind::Ngram,
         "eagle" => cascade::config::DrafterKind::EagleLite,
         other => bail!("unknown drafter {other:?}"),
     };
+    let backend_name = match backend {
+        BackendKind::Real => "real",
+        BackendKind::Sim => "sim",
+    };
+    let cfg = EngineConfig {
+        model: model.clone(),
+        drafter,
+        seed,
+        max_batch: batch,
+        ..EngineConfig::default()
+    };
+    let budget = Budget { max_tokens: tokens, max_requests: 10_000 };
+    let stream = RequestStream::new(workload.clone(), seed, cfg.max_new_tokens);
+    let mut sched = Scheduler::new(stream, budget);
 
-    let cfg = EngineConfig { model: model.clone(), drafter, seed, ..EngineConfig::default() };
+    if batch > 1 {
+        // Continuous-batching path: fused verify steps, shared KV pool,
+        // batch-deduplicated expert cost.
+        let mut engine = match backend {
+            BackendKind::Sim => BatchEngine::sim(&reg, cfg, policy.clone())?,
+            BackendKind::Real => BatchEngine::real(&reg, cfg, policy.clone())?,
+        };
+        if engine.max_batch() < batch {
+            eprintln!(
+                "note: {backend_name} backend supports {} slot(s); batch clamped from {batch}",
+                engine.max_batch()
+            );
+        }
+        let t0 = std::time::Instant::now();
+        let m = sched.run_batched(&mut engine)?;
+        let wall = t0.elapsed();
+
+        let mut t = Table::new(
+            format!(
+                "serve: {model} + {task} + {} (batch {} on {backend_name} backend)",
+                policy.label(),
+                engine.max_batch()
+            ),
+            &["metric", "value"],
+        );
+        t.row(vec!["requests".into(), m.run.requests.len().to_string()]);
+        t.row(vec!["output tokens".into(), m.run.total_tokens().to_string()]);
+        t.row(vec!["TPOT (batch clock)".into(), ms(m.tpot_s())]);
+        t.row(vec![
+            "throughput (sim)".into(),
+            format!("{:.1} tok/s", 1.0 / m.tpot_s()),
+        ]);
+        t.row(vec!["mean ETR".into(), format!("{:.2} tok/iter", m.run.mean_etr())]);
+        t.row(vec!["batch occupancy".into(), format!("{:.2}", m.mean_occupancy())]);
+        t.row(vec![
+            "unique experts/iter (dedup)".into(),
+            format!("{:.1}", m.mean_batch_unique()),
+        ]);
+        t.row(vec![
+            "unique experts/iter (summed)".into(),
+            format!("{:.1}", m.mean_summed_unique()),
+        ]);
+        t.row(vec![
+            "cross-request overlap saved".into(),
+            format!("{:.1}%", 100.0 * m.overlap_savings()),
+        ]);
+        t.row(vec![
+            "test-phase fraction".into(),
+            format!("{:.1}%", 100.0 * m.run.test_phase_fraction()),
+        ]);
+        t.row(vec!["host wall time".into(), format!("{:.2}s", wall.as_secs_f64())]);
+        println!("{}", t.render());
+        return Ok(());
+    }
+
     let mut engine = match backend {
         BackendKind::Real => Engine::real(&reg, cfg, policy.build())?,
         BackendKind::Sim => Engine::sim(&reg, cfg, policy.build())?,
     };
-    let stream = RequestStream::new(workload.clone(), seed, 200);
-    let mut sched = Scheduler::new(stream, Budget { max_tokens: tokens, max_requests: 10_000 });
-
     let t0 = std::time::Instant::now();
     let run = sched.run(&mut engine)?;
     let wall = t0.elapsed();
 
     let mut t = Table::new(
-        format!(
-            "serve: {model} + {task} + {} ({} backend)",
-            policy.label(),
-            match backend {
-                BackendKind::Real => "real",
-                BackendKind::Sim => "sim",
-            }
-        ),
+        format!("serve: {model} + {task} + {} ({backend_name} backend)", policy.label()),
         &["metric", "value"],
     );
     t.row(vec!["requests".into(), run.requests.len().to_string()]);
@@ -204,6 +277,33 @@ fn serve(args: &Args) -> Result<()> {
     ]);
     println!("{}", t.render());
     Ok(())
+}
+
+/// Print an experiment's tables and optionally write them as CSV.
+fn emit_tables(id: &str, tables: &[Table], out_dir: &str) -> Result<()> {
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.render());
+        if !out_dir.is_empty() {
+            std::fs::create_dir_all(out_dir)?;
+            let path = format!("{out_dir}/{id}-{i}.csv");
+            std::fs::write(&path, t.to_csv())?;
+            println!("  -> {path}");
+        }
+    }
+    Ok(())
+}
+
+/// The continuous-batching comparison sweep (the `batch` experiment on the
+/// sim backend).
+fn sweep(args: &Args) -> Result<()> {
+    let tokens = args.get_usize("tokens", 300)?;
+    let out_dir = args.get("out-dir", "");
+    let reg = registry()?;
+    let mut ctx = ExpCtx::new(reg, BackendKind::Sim, tokens);
+    let exp = experiments::by_id("batch").expect("batch experiment registered");
+    println!("\n### {} — {}\n", exp.id, exp.caption);
+    let tables = (exp.run)(&mut ctx)?;
+    emit_tables(exp.id, &tables, &out_dir)
 }
 
 fn figure(args: &Args) -> Result<()> {
@@ -225,15 +325,7 @@ fn figure(args: &Args) -> Result<()> {
         println!("\n### {} — {}\n", exp.id, exp.caption);
         let t0 = std::time::Instant::now();
         let tables = (exp.run)(&mut ctx)?;
-        for (i, t) in tables.iter().enumerate() {
-            println!("{}", t.render());
-            if !out_dir.is_empty() {
-                std::fs::create_dir_all(&out_dir)?;
-                let path = format!("{out_dir}/{}-{i}.csv", exp.id);
-                std::fs::write(&path, t.to_csv())?;
-                println!("  -> {path}");
-            }
-        }
+        emit_tables(exp.id, &tables, &out_dir)?;
         println!("[{} done in {:.1}s]", exp.id, t0.elapsed().as_secs_f64());
     }
     Ok(())

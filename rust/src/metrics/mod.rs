@@ -53,6 +53,9 @@ pub struct RequestMetrics {
     /// decode-latency focus).
     pub prefill_s: f64,
     pub wall_total_ns: u64,
+    /// The emitted token stream (first token + every decode emission) —
+    /// what losslessness and batch-determinism tests compare.
+    pub output: Vec<u32>,
 }
 
 impl RequestMetrics {
@@ -217,6 +220,97 @@ impl RunMetrics {
     }
 }
 
+/// One fused iteration of the continuous-batching engine: a single verify
+/// step over the concatenated spans of all in-flight requests.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchIterRecord {
+    /// Requests that participated in this fused step.
+    pub n_active: usize,
+    /// Total in-flight verify tokens across the batch (Σ 1 + drafted).
+    pub total_tokens: usize,
+    /// Total draft tokens across the batch.
+    pub total_drafted: usize,
+    /// Output tokens emitted across the batch this iteration.
+    pub emitted: usize,
+    /// Fused iteration cost (base charged once, experts de-duplicated).
+    pub cost: IterCost,
+    /// Mean per-layer unique experts *de-duplicated across the batch* —
+    /// what the fused step actually fetches.
+    pub batch_unique_experts: f64,
+    /// Mean per-layer sum of per-request unique counts (the no-dedup upper
+    /// bound); the gap to `batch_unique_experts` is cross-request overlap.
+    pub summed_unique_experts: f64,
+}
+
+/// Aggregate over a continuous-batching run: per-request traces (latency
+/// view — each request is charged the full fused iteration it waited on)
+/// plus the per-iteration batch records (throughput view).
+#[derive(Debug, Clone, Default)]
+pub struct BatchRunMetrics {
+    pub run: RunMetrics,
+    pub iters: Vec<BatchIterRecord>,
+    pub max_batch: usize,
+}
+
+impl BatchRunMetrics {
+    /// Batch-clock TPOT: total fused iteration time over total tokens —
+    /// the throughput figure of merit for batched serving. (Per-request
+    /// `run.tpot_s()` is the *latency* each request observed.)
+    pub fn tpot_s(&self) -> f64 {
+        let toks: usize = self.iters.iter().map(|r| r.emitted).sum();
+        if toks == 0 {
+            return f64::NAN;
+        }
+        self.iters.iter().map(|r| r.cost.total()).sum::<f64>() / toks as f64
+    }
+
+    /// Mean batch occupancy (active requests / max_batch).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.iters.is_empty() || self.max_batch == 0 {
+            return 0.0;
+        }
+        self.iters.iter().map(|r| r.n_active as f64).sum::<f64>()
+            / (self.iters.len() * self.max_batch) as f64
+    }
+
+    /// Mean per-layer unique experts actually fetched per fused iteration.
+    pub fn mean_batch_unique(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 0.0;
+        }
+        self.iters.iter().map(|r| r.batch_unique_experts).sum::<f64>() / self.iters.len() as f64
+    }
+
+    /// Mean per-layer unique experts the same iterations would fetch with
+    /// per-request (non-de-duplicated) accounting.
+    pub fn mean_summed_unique(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 0.0;
+        }
+        self.iters.iter().map(|r| r.summed_unique_experts).sum::<f64>() / self.iters.len() as f64
+    }
+
+    /// Fraction of expert fetches saved by cross-request de-duplication:
+    /// 1 − Σ dedup / Σ summed. Zero for dense models or batch=1.
+    pub fn overlap_savings(&self) -> f64 {
+        let summed: f64 = self.iters.iter().map(|r| r.summed_unique_experts).sum();
+        if summed == 0.0 {
+            return 0.0;
+        }
+        let dedup: f64 = self.iters.iter().map(|r| r.batch_unique_experts).sum();
+        1.0 - dedup / summed
+    }
+
+    /// Mean routed-expert fetch time per fused iteration (sub-linearity of
+    /// this in batch size is the batching win).
+    pub fn mean_expert_s(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 0.0;
+        }
+        self.iters.iter().map(|r| r.cost.expert_s).sum::<f64>() / self.iters.len() as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,5 +426,39 @@ mod tests {
         assert!(m.etr().is_nan());
         let r = RunMetrics::default();
         assert!(r.tpot_s().is_nan());
+    }
+
+    fn batch_rec(n_active: usize, emitted: usize, dedup: f64, summed: f64) -> BatchIterRecord {
+        BatchIterRecord {
+            n_active,
+            total_tokens: n_active * 4,
+            total_drafted: n_active * 3,
+            emitted,
+            cost: IterCost { base_s: 0.01, expert_s: dedup * 1e-3, ..Default::default() },
+            batch_unique_experts: dedup,
+            summed_unique_experts: summed,
+        }
+    }
+
+    #[test]
+    fn batch_metrics_aggregate() {
+        let mut b = BatchRunMetrics { max_batch: 4, ..Default::default() };
+        b.iters.push(batch_rec(4, 8, 6.0, 12.0));
+        b.iters.push(batch_rec(2, 4, 4.0, 6.0));
+        assert!((b.mean_occupancy() - 0.75).abs() < 1e-12);
+        assert!((b.mean_batch_unique() - 5.0).abs() < 1e-12);
+        assert!((b.mean_summed_unique() - 9.0).abs() < 1e-12);
+        // savings = 1 - 10/18
+        assert!((b.overlap_savings() - (1.0 - 10.0 / 18.0)).abs() < 1e-12);
+        // tpot = (0.016 + 0.014) / 12
+        assert!((b.tpot_s() - 0.030 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_metrics_empty_safe() {
+        let b = BatchRunMetrics::default();
+        assert!(b.tpot_s().is_nan());
+        assert_eq!(b.mean_occupancy(), 0.0);
+        assert_eq!(b.overlap_savings(), 0.0);
     }
 }

@@ -113,6 +113,141 @@ impl Registry {
     }
 }
 
+impl Registry {
+    /// Load the artifacts manifest when present, else fall back to the
+    /// in-code builtin registry. Sim-backend serving, experiments, and
+    /// tests need only the mini topology, which the builtin carries; the
+    /// real backend additionally needs the AOT HLO + weights on disk and
+    /// reports a clear error without them.
+    ///
+    /// The fallback triggers only when `manifest.json` is *absent*: a
+    /// manifest that exists but fails to load is a build problem that must
+    /// surface, not be papered over with builtin topology that may diverge
+    /// from the artifacts actually on disk. This convenience form panics
+    /// on that case (test helpers); error-handling callers (the CLI) use
+    /// [`Registry::try_load_or_builtin`].
+    pub fn load_or_builtin(dir: impl AsRef<Path>) -> Self {
+        Self::try_load_or_builtin(dir)
+            .expect("artifacts manifest present but invalid; re-run `make artifacts`")
+    }
+
+    /// Non-panicking [`Registry::load_or_builtin`]: errors only when a
+    /// manifest is present but fails to load.
+    pub fn try_load_or_builtin(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        if dir.join("manifest.json").exists() {
+            Self::load(&dir)
+        } else {
+            Ok(Self::builtin_at(dir))
+        }
+    }
+
+    /// In-code registry mirroring `python/compile/configs.py` exactly:
+    /// same zoo, same routing topology, same affinity — no artifacts
+    /// directory required.
+    pub fn builtin() -> Self {
+        Self::builtin_at(default_artifacts_dir())
+    }
+
+    fn builtin_at(dir: PathBuf) -> Self {
+        Self { dir, manifest: builtin_manifest() }
+    }
+}
+
+/// Are the AOT artifacts (HLO text + weights + goldens) on disk? Gates the
+/// real-backend test suites; the sim backend never needs them.
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+/// The model zoo of `python/compile/configs.py`, as manifest entries with
+/// no on-disk artifacts (empty variant map, placeholder weight entries).
+fn builtin_manifest() -> Manifest {
+    #[allow(clippy::too_many_arguments)]
+    fn entry(
+        name: &str,
+        mirrors: &str,
+        hidden: usize,
+        layers: usize,
+        heads: usize,
+        ffn: usize,
+        n_experts: usize,
+        top_k: usize,
+        n_shared: usize,
+        affinity: f64,
+    ) -> ModelEntry {
+        ModelEntry {
+            config: MiniConfig {
+                name: name.into(),
+                mirrors: mirrors.into(),
+                hidden,
+                layers,
+                heads,
+                head_dim: 16,
+                vocab: crate::tokenizer::VOCAB,
+                ffn,
+                n_experts,
+                top_k,
+                n_shared,
+                affinity,
+                max_seq: 384,
+                prefill_chunk: 64,
+                is_moe: n_experts > 0,
+            },
+            impl_name: "builtin".into(),
+            weights: WeightsEntry {
+                path: format!("weights/{name}.npz"),
+                count: 0,
+                names: Vec::new(),
+                params: 0,
+            },
+            variants: std::collections::BTreeMap::new(),
+            golden: GoldenOutputs {
+                tokens: Vec::new(),
+                t: 0,
+                logits_row0_head: Vec::new(),
+                logits_sum: 0.0,
+                logits_abs_sum: 0.0,
+                argmax: Vec::new(),
+                topk_idx: Vec::new(),
+                kv_abs_sum: 0.0,
+                rstate_abs_sum: 0.0,
+            },
+        }
+    }
+
+    let mut models = std::collections::BTreeMap::new();
+    models.insert(
+        "mixtral".into(),
+        entry("mixtral", "Mixtral-8x7B FP8", 64, 2, 4, 128, 8, 2, 0, 0.0),
+    );
+    models.insert(
+        "phi".into(),
+        entry("phi", "Phi-3.5-MoE FP8", 64, 2, 4, 128, 16, 2, 0, 0.20),
+    );
+    models.insert(
+        "olmoe".into(),
+        entry("olmoe", "OLMoE FP8", 64, 2, 4, 64, 64, 8, 0, 0.75),
+    );
+    models.insert(
+        "deepseek".into(),
+        entry("deepseek", "DeepSeekMoE-16B FP16", 64, 2, 4, 64, 64, 6, 2, 0.40),
+    );
+    models.insert(
+        "qwen".into(),
+        entry("qwen", "Qwen1.5-MoE FP16", 64, 2, 4, 64, 60, 4, 4, 0.45),
+    );
+    models.insert(
+        "llama".into(),
+        entry("llama", "LLaMA-3-8B dense FP16", 64, 2, 4, 256, 0, 0, 0, 0.0),
+    );
+    models.insert(
+        "draft".into(),
+        entry("draft", "EAGLE drafter (Mixtral)", 32, 1, 2, 64, 0, 0, 0, 0.0),
+    );
+    Manifest { version: manifest::MANIFEST_VERSION, impl_name: "builtin".into(), models }
+}
+
 /// `$CASCADE_ARTIFACTS` or `<crate root>/artifacts`.
 pub fn default_artifacts_dir() -> PathBuf {
     if let Ok(p) = std::env::var("CASCADE_ARTIFACTS") {
@@ -126,7 +261,7 @@ mod tests {
     use super::*;
 
     fn registry() -> Registry {
-        Registry::load(default_artifacts_dir()).expect("run `make artifacts`")
+        Registry::load_or_builtin(default_artifacts_dir())
     }
 
     #[test]
@@ -139,12 +274,28 @@ mod tests {
     }
 
     #[test]
+    fn builtin_registry_matches_configs_py() {
+        let r = Registry::builtin();
+        for name in ALL_MODELS {
+            let m = r.model(name).unwrap();
+            assert_eq!(m.mini.vocab, crate::tokenizer::VOCAB, "{name}");
+            assert_eq!(m.mini.max_seq, 384, "{name}");
+            assert_eq!(m.mini.is_moe, m.mini.n_experts > 0, "{name}");
+        }
+        assert!(r.model("draft").is_ok());
+    }
+
+    #[test]
     fn unknown_model_errors() {
         assert!(registry().model("gpt-17").is_err());
     }
 
     #[test]
     fn variant_paths_exist() {
+        if !artifacts_available() {
+            eprintln!("skipping variant_paths_exist: artifacts not built (run `make artifacts`)");
+            return;
+        }
         let m = registry().model("mixtral").unwrap();
         for t in m.token_variants() {
             assert!(m.variant_path(t).unwrap().exists());
@@ -153,6 +304,12 @@ mod tests {
 
     #[test]
     fn decode_variants_cover_k_sweep() {
+        if !artifacts_available() {
+            eprintln!(
+                "skipping decode_variants_cover_k_sweep: artifacts not built (run `make artifacts`)"
+            );
+            return;
+        }
         let m = registry().model("mixtral").unwrap();
         let ts = m.token_variants();
         for t in 1..=8 {

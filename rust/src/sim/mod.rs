@@ -8,22 +8,34 @@
 //! and resampled uniformly otherwise, matching the EMA-router behaviour of
 //! the L2 model in expectation.
 //!
+//! **Multi-request:** the backend holds one independent routing state
+//! (rng stream, committed length, previous-token expert sets) per *slot*,
+//! so a `BatchEngine` can keep several requests in flight and fuse their
+//! verify spans into one `step_batch`. Because routing is id-attributable
+//! here, the batched step de-duplicates expert fetches across requests —
+//! the cross-request overlap the batch cost model charges for. Slot 0
+//! doubles as the single-request state, so the legacy `begin`/`step`
+//! surface (and every existing caller) behaves exactly as before.
+//!
 //! Used for: large parameter sweeps (Fig. 8's 120-point scatter), property
-//! tests over the full engine, and as a cross-check against the real
-//! backend (rust/tests/engine_integration.rs).
+//! tests over the full engine, batched-serving experiments, and as a
+//! cross-check against the real backend (rust/tests/engine_integration.rs).
 
-use crate::coordinator::backend::{Backend, BackendStep};
+use crate::coordinator::backend::{Backend, BackendStep, BatchStep, SlotStep, VerifySpan};
 use crate::models::MiniConfig;
 use crate::rng::Rng;
 use crate::workload::Request;
 use anyhow::Result;
+use std::collections::BTreeSet;
 
-/// Routing state: previous token's expert set per layer.
-pub struct SimBackend {
-    mini: MiniConfig,
+/// Most in-flight requests the sim backend tracks.
+pub const SIM_MAX_SLOTS: usize = 64;
+
+/// Per-request routing state.
+struct SimSlot {
     rng: Rng,
-    seed: u64,
     cache_len: usize,
+    /// Previous token's expert set per layer.
     prev_experts: Vec<Vec<usize>>,
     /// Per-token routing-state trajectory of the last step, so `advance`
     /// can roll the affinity state back to the accepted position (matching
@@ -31,48 +43,93 @@ pub struct SimBackend {
     traj: Vec<Vec<Vec<usize>>>,
 }
 
-impl SimBackend {
-    pub fn new(mini: MiniConfig, seed: u64) -> Self {
-        let layers = mini.layers;
+impl SimSlot {
+    fn fresh(layers: usize) -> Self {
         Self {
-            mini,
-            rng: Rng::new(seed),
-            seed,
+            rng: Rng::new(0),
             cache_len: 0,
             prev_experts: vec![Vec::new(); layers],
             traj: Vec::new(),
         }
     }
+}
 
-    /// Advance the routing process by one token on one layer.
-    fn route_layer(&mut self, layer: usize) -> Vec<usize> {
-        let e = self.mini.n_experts;
-        let k = self.mini.top_k;
-        let a = self.mini.affinity;
-        let prev = std::mem::take(&mut self.prev_experts[layer]);
+pub struct SimBackend {
+    mini: MiniConfig,
+    seed: u64,
+    /// Slot 0 always exists (the single-request state); higher slots are
+    /// created on demand by `begin_slot`.
+    slots: Vec<SimSlot>,
+}
+
+impl SimBackend {
+    pub fn new(mini: MiniConfig, seed: u64) -> Self {
+        let layers = mini.layers;
+        Self { mini, seed, slots: vec![SimSlot::fresh(layers)] }
+    }
+
+    /// Advance one slot's routing process by one token on one layer.
+    fn route_layer(mini: &MiniConfig, s: &mut SimSlot, layer: usize) -> Vec<usize> {
+        let e = mini.n_experts;
+        let k = mini.top_k;
+        let a = mini.affinity;
+        let prev = std::mem::take(&mut s.prev_experts[layer]);
         let mut set: Vec<usize> = Vec::with_capacity(k);
         for slot in 0..k {
-            let reuse = slot < prev.len() && self.rng.chance(a);
+            let reuse = slot < prev.len() && s.rng.chance(a);
             let pick = if reuse {
                 prev[slot]
             } else {
-                self.rng.below(e)
+                s.rng.below(e)
             };
             set.push(pick);
         }
         // Top-k picks are distinct in the real router: resample duplicates.
         for i in 0..set.len() {
             while set[..i].contains(&set[i]) {
-                set[i] = self.rng.below(e);
+                set[i] = s.rng.below(e);
             }
         }
-        self.prev_experts[layer] = set.clone();
+        s.prev_experts[layer] = set.clone();
         set
     }
 
-    /// Route one token across all layers; returns per-layer sets.
-    fn route_token(&mut self) -> Vec<Vec<usize>> {
-        (0..self.mini.layers).map(|l| self.route_layer(l)).collect()
+    /// Route one token across all layers on one slot.
+    fn route_token(mini: &MiniConfig, s: &mut SimSlot) -> Vec<Vec<usize>> {
+        (0..mini.layers).map(|l| Self::route_layer(mini, s, l)).collect()
+    }
+
+    /// Route + sample one span on one slot. Returns the per-layer unique
+    /// expert-id sets (empty sets for dense) and the sampled tokens.
+    fn step_slot(
+        &mut self,
+        slot: usize,
+        t: usize,
+        guides: &[Option<u32>],
+        eps: f64,
+    ) -> (Vec<BTreeSet<usize>>, Vec<u32>) {
+        let mini = &self.mini;
+        let s = &mut self.slots[slot];
+        let mut unique: Vec<BTreeSet<usize>> = vec![Default::default(); mini.layers];
+        s.traj.clear();
+        if mini.is_moe {
+            for _ in 0..t {
+                let sets = Self::route_token(mini, s);
+                for (l, set) in sets.iter().enumerate() {
+                    unique[l].extend(set.iter().copied());
+                }
+                s.traj.push(sets);
+            }
+        }
+        let sampled = guides
+            .iter()
+            .map(|g| match g {
+                Some(g) if !s.rng.chance(eps) => *g,
+                // Deviation: an arbitrary-but-deterministic "model" token.
+                _ => s.rng.below(mini.vocab) as u32,
+            })
+            .collect();
+        (unique, sampled)
     }
 }
 
@@ -86,49 +143,15 @@ impl Backend for SimBackend {
     }
 
     fn begin(&mut self, req: &Request) -> Result<()> {
-        self.rng = Rng::new(self.seed ^ req.id.wrapping_mul(0xA24B_AED4_963E_E407));
-        self.cache_len = 0;
-        for p in &mut self.prev_experts {
-            p.clear();
-        }
-        Ok(())
+        self.begin_slot(0, req)
     }
 
     fn prefill(&mut self, prompt: &[u32], guide0: Option<u32>, eps: f64) -> Result<u32> {
-        // Advance the routing process over the prompt so affinity state is
-        // warm, like the real model's EMA after prefill.
-        for _ in 0..prompt.len().min(8) {
-            self.route_token();
-        }
-        self.cache_len += prompt.len();
-        Ok(match guide0 {
-            Some(g) if !self.rng.chance(eps) => g,
-            _ => self.rng.below(self.mini.vocab) as u32,
-        })
+        self.prefill_slot(0, prompt, guide0, eps)
     }
 
     fn step(&mut self, tokens: &[u32], guides: &[Option<u32>], eps: f64) -> Result<BackendStep> {
-        let t = tokens.len();
-        let layers = self.mini.layers;
-        let mut unique: Vec<std::collections::BTreeSet<usize>> = vec![Default::default(); layers];
-        self.traj.clear();
-        if self.mini.is_moe {
-            for _ in 0..t {
-                let sets = self.route_token();
-                for (l, set) in sets.iter().enumerate() {
-                    unique[l].extend(set.iter().copied());
-                }
-                self.traj.push(sets);
-            }
-        }
-        let sampled = guides
-            .iter()
-            .map(|g| match g {
-                Some(g) if !self.rng.chance(eps) => *g,
-                // Deviation: an arbitrary-but-deterministic "model" token.
-                _ => self.rng.below(self.mini.vocab) as u32,
-            })
-            .collect();
+        let (unique, sampled) = self.step_slot(0, tokens.len(), guides, eps);
         Ok(BackendStep {
             sampled,
             unique_experts: if self.mini.is_moe {
@@ -140,15 +163,110 @@ impl Backend for SimBackend {
     }
 
     fn advance(&mut self, n: usize) {
-        self.cache_len += n;
-        // Roll the affinity state back to the last accepted token.
-        if self.mini.is_moe && n >= 1 && n <= self.traj.len() {
-            self.prev_experts = self.traj[n - 1].clone();
-        }
+        self.advance_slot(0, n)
     }
 
     fn cache_len(&self) -> usize {
-        self.cache_len
+        self.slots[0].cache_len
+    }
+
+    // ---- Continuous-batching surface ------------------------------------
+
+    fn max_slots(&self) -> usize {
+        SIM_MAX_SLOTS
+    }
+
+    fn begin_slot(&mut self, slot: usize, req: &Request) -> Result<()> {
+        anyhow::ensure!(slot < SIM_MAX_SLOTS, "sim backend: slot {slot} out of range");
+        let layers = self.mini.layers;
+        while self.slots.len() <= slot {
+            self.slots.push(SimSlot::fresh(layers));
+        }
+        let s = &mut self.slots[slot];
+        s.rng = Rng::new(self.seed ^ req.id.wrapping_mul(0xA24B_AED4_963E_E407));
+        s.cache_len = 0;
+        for p in &mut s.prev_experts {
+            p.clear();
+        }
+        s.traj.clear();
+        Ok(())
+    }
+
+    fn prefill_slot(
+        &mut self,
+        slot: usize,
+        prompt: &[u32],
+        guide0: Option<u32>,
+        eps: f64,
+    ) -> Result<u32> {
+        // Advance the routing process over the prompt so affinity state is
+        // warm, like the real model's EMA after prefill.
+        let mini = &self.mini;
+        let s = &mut self.slots[slot];
+        for _ in 0..prompt.len().min(8) {
+            Self::route_token(mini, s);
+        }
+        s.cache_len += prompt.len();
+        Ok(match guide0 {
+            Some(g) if !s.rng.chance(eps) => g,
+            _ => s.rng.below(mini.vocab) as u32,
+        })
+    }
+
+    fn advance_slot(&mut self, slot: usize, n: usize) {
+        let s = &mut self.slots[slot];
+        s.cache_len += n;
+        // Roll the affinity state back to the last accepted token.
+        if self.mini.is_moe && n >= 1 && n <= s.traj.len() {
+            s.prev_experts = s.traj[n - 1].clone();
+        }
+    }
+
+    fn cache_len_slot(&self, slot: usize) -> usize {
+        self.slots[slot].cache_len
+    }
+
+    fn release_slot(&mut self, slot: usize) {
+        if slot < self.slots.len() {
+            self.slots[slot] = SimSlot::fresh(self.mini.layers);
+        }
+    }
+
+    /// Native fused step: every span routes on its own slot state in one
+    /// pass, and expert ids are unioned per layer across the whole batch —
+    /// the de-duplicated fetch set a fused MoE verify kernel would move.
+    fn step_batch(&mut self, spans: &[VerifySpan]) -> Result<BatchStep> {
+        let layers = self.mini.layers;
+        let is_moe = self.mini.is_moe;
+        let mut union: Vec<BTreeSet<usize>> = vec![Default::default(); layers];
+        let mut summed = vec![0usize; layers];
+        let mut slots = Vec::with_capacity(spans.len());
+        for span in spans {
+            anyhow::ensure!(
+                span.slot < self.slots.len(),
+                "sim backend: step on unbound slot {}",
+                span.slot
+            );
+            let (sets, sampled) = self.step_slot(span.slot, span.tokens.len(), &span.guides, span.eps);
+            let unique_experts: Vec<usize> = if is_moe {
+                sets.iter().map(|s| s.len()).collect()
+            } else {
+                Vec::new()
+            };
+            if is_moe {
+                for (l, set) in sets.iter().enumerate() {
+                    summed[l] += set.len();
+                    union[l].extend(set.iter().copied());
+                }
+            }
+            slots.push(SlotStep { slot: span.slot, step: BackendStep { sampled, unique_experts } });
+        }
+        let (batch_unique_experts, summed_unique_experts) = if is_moe {
+            (union.into_iter().map(|s| s.len()).collect(), summed)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        Ok(BatchStep { slots, batch_unique_experts, summed_unique_experts })
     }
 }
 
@@ -252,5 +370,81 @@ mod tests {
         // top_k == n_experts: every token must activate all 8 distinct.
         let out = b.step(&[0], &[None], 1.0).unwrap();
         assert_eq!(out.unique_experts, vec![8, 8]);
+    }
+
+    fn req_id(id: u64) -> Request {
+        Request { id, ..req() }
+    }
+
+    #[test]
+    fn slots_are_independent_streams() {
+        // A slot's stream must not depend on what other slots do: slot 1
+        // alone vs slot 1 next to a busy slot 0 yields identical routing.
+        let mut solo = SimBackend::new(mini(0.3, 16, 2), 9);
+        solo.begin_slot(1, &req_id(7)).unwrap();
+        let span = |slot: usize| VerifySpan {
+            slot,
+            tokens: vec![0; 4],
+            guides: vec![None; 4],
+            eps: 0.5,
+        };
+        let a = solo.step_batch(&[span(1)]).unwrap();
+
+        let mut busy = SimBackend::new(mini(0.3, 16, 2), 9);
+        busy.begin_slot(0, &req_id(3)).unwrap();
+        busy.begin_slot(1, &req_id(7)).unwrap();
+        let b = busy.step_batch(&[span(0), span(1)]).unwrap();
+
+        assert_eq!(a.slots[0].step.sampled, b.slots[1].step.sampled);
+        assert_eq!(a.slots[0].step.unique_experts, b.slots[1].step.unique_experts);
+    }
+
+    #[test]
+    fn batched_step_matches_single_request_stream() {
+        // Slot 0 driven through step_batch must reproduce the legacy
+        // single-request `step` stream exactly.
+        let mut single = SimBackend::new(mini(0.3, 16, 2), 9);
+        single.begin(&req()).unwrap();
+        let x = single.step(&[0; 4], &[None; 4], 0.5).unwrap();
+
+        let mut batched = SimBackend::new(mini(0.3, 16, 2), 9);
+        batched.begin_slot(0, &req()).unwrap();
+        let out = batched
+            .step_batch(&[VerifySpan { slot: 0, tokens: vec![0; 4], guides: vec![None; 4], eps: 0.5 }])
+            .unwrap();
+        assert_eq!(out.slots[0].step.sampled, x.sampled);
+        assert_eq!(out.slots[0].step.unique_experts, x.unique_experts);
+    }
+
+    #[test]
+    fn batch_dedup_below_sum() {
+        // Mixtral-like topology (8 experts): four 4-token spans cannot
+        // activate more than 8 unique per layer, so the union must fall
+        // well below the per-slot sum.
+        let mut b = SimBackend::new(mini(0.0, 8, 2), 5);
+        let spans: Vec<VerifySpan> = (0..4)
+            .map(|slot| {
+                b.begin_slot(slot, &req_id(slot as u64 + 1)).unwrap();
+                VerifySpan { slot, tokens: vec![0; 4], guides: vec![None; 4], eps: 1.0 }
+            })
+            .collect();
+        let out = b.step_batch(&spans).unwrap();
+        for l in 0..2 {
+            assert!(out.batch_unique_experts[l] <= 8);
+            assert!(out.batch_unique_experts[l] < out.summed_unique_experts[l]);
+        }
+    }
+
+    #[test]
+    fn dense_batch_reports_no_experts() {
+        let mut b = SimBackend::new(mini(0.0, 0, 0), 4);
+        b.begin_slot(0, &req_id(1)).unwrap();
+        b.begin_slot(1, &req_id(2)).unwrap();
+        let spans: Vec<VerifySpan> = (0..2)
+            .map(|slot| VerifySpan { slot, tokens: vec![0; 2], guides: vec![None; 2], eps: 1.0 })
+            .collect();
+        let out = b.step_batch(&spans).unwrap();
+        assert!(out.batch_unique_experts.is_empty());
+        assert!(out.summed_unique_experts.is_empty());
     }
 }

@@ -14,7 +14,8 @@ use cascade::spec::NgramDrafter;
 use cascade::workload::{RequestStream, Task, Workload};
 
 fn registry() -> Registry {
-    Registry::load(default_artifacts_dir()).expect("run `make artifacts` first")
+    // Sim-only properties: the builtin registry suffices (no artifacts).
+    Registry::load_or_builtin(default_artifacts_dir())
 }
 
 /// Random (model, task, policy, seed) sim runs; checks engine-wide
@@ -176,7 +177,7 @@ fn prop_scheduler_budget() {
         let total: usize = m.requests.iter().map(|r| r.tokens_emitted()).sum();
         assert_eq!(total, m.total_tokens());
         assert!(total >= budget.max_tokens.min(1));
-        // Overshoot bounded by one request's worth.
-        assert!(total < budget.max_tokens + 150 + MAX_K + 1);
+        // The scheduler clamps the tail request: no overshoot at all.
+        assert!(total <= budget.max_tokens, "budget {} overshot: {total}", budget.max_tokens);
     }
 }

@@ -10,12 +10,17 @@
 
 use cascade::config::{DrafterKind, EngineConfig};
 use cascade::coordinator::engine::Engine;
-use cascade::models::{default_artifacts_dir, Registry};
+use cascade::models::{artifacts_available, default_artifacts_dir, Registry};
 use cascade::spec::policy::PolicyKind;
 use cascade::workload::{Request, RequestStream, Task, Workload};
 
-fn registry() -> Registry {
-    Registry::load(default_artifacts_dir()).expect("run `make artifacts` first")
+fn registry() -> Option<Registry> {
+    // These tests execute the real (PJRT) backend; skip without artifacts.
+    if !artifacts_available() {
+        eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Registry::load(default_artifacts_dir()).expect("valid artifacts"))
 }
 
 fn deterministic_request(task: Task, max_new: usize) -> Request {
@@ -41,7 +46,7 @@ fn serve_tokens(engine: &mut Engine, req: &Request) -> Vec<u32> {
 
 #[test]
 fn greedy_spec_output_equals_nonspec_output() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let req = deterministic_request(Task::Code, 120);
 
     let mut outputs = Vec::new();
@@ -67,7 +72,7 @@ fn greedy_spec_output_equals_nonspec_output() {
 
 #[test]
 fn zero_eps_output_follows_reference() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let req = deterministic_request(Task::Math, 100);
     let cfg = EngineConfig { model: "qwen".into(), ..Default::default() };
     let mut engine = Engine::real(&reg, cfg, PolicyKind::Static(3).build()).unwrap();
@@ -77,7 +82,7 @@ fn zero_eps_output_follows_reference() {
 
 #[test]
 fn eagle_drafter_is_also_lossless() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let req = deterministic_request(Task::Code, 100);
     let count = |drafter: DrafterKind, k: PolicyKind| {
         let cfg = EngineConfig { model: "mixtral".into(), drafter, ..Default::default() };
@@ -92,7 +97,7 @@ fn eagle_drafter_is_also_lossless() {
 #[test]
 fn spec_accelerates_iterations_not_tokens() {
     // Same output length, fewer iterations: that is the whole point.
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let req = deterministic_request(Task::Code, 120);
     let iters = |k: usize| {
         let cfg = EngineConfig { model: "mixtral".into(), ..Default::default() };

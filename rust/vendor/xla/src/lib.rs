@@ -1,0 +1,266 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate wraps the PJRT C API (client, compiled executables,
+//! device buffers). This offline build carries no native XLA runtime, so:
+//!
+//! * Host-side containers ([`Literal`]) are fully functional — shapes,
+//!   zero-init, typed reads — because request-state bookkeeping uses them.
+//! * Everything that would touch the PJRT C API ([`PjRtClient::cpu`],
+//!   compilation, npz reading) returns [`XlaError::Unavailable`]. The
+//!   serving stack's *real* backend surfaces that error cleanly at startup;
+//!   the *sim* backend never reaches this crate.
+//!
+//! The API mirrors the subset of the bindings the workspace uses, so a
+//! PJRT-enabled build can swap the real crate back in without source edits.
+
+use std::fmt;
+use std::path::Path;
+
+/// Errors surfaced by the (stubbed) XLA layer.
+#[derive(Debug, Clone)]
+pub enum XlaError {
+    /// The native PJRT runtime is not part of this build.
+    Unavailable(String),
+    /// The operation is not meaningful on a host-only literal.
+    Unsupported(String),
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            XlaError::Unavailable(m) => write!(f, "xla unavailable: {m}"),
+            XlaError::Unsupported(m) => write!(f, "xla unsupported: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(XlaError::Unavailable(format!(
+        "{what}: this build has no native PJRT runtime (offline stub); \
+         the sim backend (`--backend sim`) runs without it"
+    )))
+}
+
+/// Element dtypes the workspace stores in literals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+}
+
+/// The bindings expose the same enum under both names.
+pub type ElementType = PrimitiveType;
+
+impl PrimitiveType {
+    fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Typed element access for [`Literal::to_vec`].
+pub trait NativeType: Sized + Copy {
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    fn read_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeType for i32 {
+    fn read_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+/// Host-side tensor: dtype + dims + raw little-endian bytes.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    pub ty: PrimitiveType,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Literal {
+    /// Rank-1 i32 literal.
+    pub fn vec1(v: &[i32]) -> Self {
+        let mut data = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            data.extend_from_slice(&x.to_le_bytes());
+        }
+        Self { ty: PrimitiveType::S32, dims: vec![v.len()], data }
+    }
+
+    /// Rank-0 i32 literal.
+    pub fn scalar(v: i32) -> Self {
+        Self { ty: PrimitiveType::S32, dims: Vec::new(), data: v.to_le_bytes().to_vec() }
+    }
+
+    /// Zero-initialized literal of the given shape.
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Self {
+        let elems: usize = dims.iter().product();
+        Self { ty, dims: dims.to_vec(), data: vec![0u8; elems * ty.byte_size()] }
+    }
+
+    /// Literal over caller-provided raw bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Self> {
+        let elems: usize = dims.iter().product();
+        if data.len() != elems * ty.byte_size() {
+            return Err(XlaError::Unsupported(format!(
+                "shape {dims:?} needs {} bytes, got {}",
+                elems * ty.byte_size(),
+                data.len()
+            )));
+        }
+        Ok(Self { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.chunks_exact(4).map(T::read_le).collect())
+    }
+
+    /// Decompose a tuple literal — only produced by executions, which this
+    /// stub cannot perform.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(XlaError::Unsupported("host literals are not tuples".into()))
+    }
+}
+
+/// Deserialization hooks (the real crate reads npz archives through this).
+pub trait FromRawBytes: Sized {
+    type Context: ?Sized;
+    fn read_npz(path: impl AsRef<Path>, ctx: &Self::Context) -> Result<Vec<(String, Self)>>;
+}
+
+impl FromRawBytes for Literal {
+    type Context = ();
+
+    fn read_npz(path: impl AsRef<Path>, _ctx: &Self::Context) -> Result<Vec<(String, Self)>> {
+        unavailable(&format!("reading npz {:?}", path.as_ref()))
+    }
+}
+
+/// Parsed HLO module (opaque here).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        unavailable(&format!("parsing HLO text {:?}", path.as_ref()))
+    }
+}
+
+/// A computation handed to the compiler (opaque here).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// Device-resident buffer (never constructible in the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("fetching device buffer")
+    }
+}
+
+/// Compiled executable (never constructible in the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing compiled HLO")
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug, Clone)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// In the real bindings this starts the CPU PJRT plugin; the stub
+    /// reports the runtime as absent.
+    pub fn cpu() -> Result<Self> {
+        unavailable("creating PJRT CPU client")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling HLO")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unavailable("uploading literal")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let l = Literal::vec1(&[1, -2, 3]);
+        assert_eq!(l.dims, vec![3]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, -2, 3]);
+    }
+
+    #[test]
+    fn zero_literal_shape() {
+        let l = Literal::create_from_shape(PrimitiveType::F32, &[2, 3]);
+        assert_eq!(l.data.len(), 24);
+        assert!(l.to_vec::<f32>().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn untyped_data_size_checked() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2],
+            &[0u8; 8]
+        )
+        .is_ok());
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2],
+            &[0u8; 7]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn pjrt_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT"));
+    }
+}
