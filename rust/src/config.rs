@@ -115,6 +115,15 @@ pub struct EngineConfig {
     /// admission and speculative lookahead genuinely compete for blocks
     /// (eviction/preemption is future work — see ROADMAP).
     pub kv_pool_blocks: usize,
+    /// Two-stage pipelined drafting (paper Fig. 14): draft iteration i+1's
+    /// proposals while the backend verifies iteration i, reconciling (and
+    /// recomputing) drafts whose acceptance assumption broke. Drafting
+    /// cost is charged only where it exceeds the concurrent verify window
+    /// (`IterCost::draft_hidden_s`). For a fixed K schedule token output
+    /// is bit-identical to serial; Cascade observes the cheaper pipelined
+    /// cost as its utility signal, so it may legitimately pick different K
+    /// (that is the point — K decisions see pipeline-true utility).
+    pub pipeline: bool,
     pub cascade: CascadeParams,
 }
 
@@ -130,6 +139,7 @@ impl Default for EngineConfig {
             seed: 0xCA5CADE,
             max_batch: 1,
             kv_pool_blocks: 0,
+            pipeline: false,
             cascade: CascadeParams::default(),
         }
     }

@@ -45,6 +45,12 @@ pub struct VerifySpan {
 pub struct SlotStep {
     pub slot: usize,
     pub step: BackendStep,
+    /// Experts per mini layer that **only** this slot's tokens activated —
+    /// the slot's marginal contribution to the fused fetch set (the
+    /// batched-utility signal). When the backend cannot attribute expert
+    /// identities (sequential fallback) this equals the slot's own unique
+    /// counts: with no de-duplication every fetch is marginal.
+    pub marginal_unique_experts: Vec<usize>,
 }
 
 /// Outputs of one fused verify step over several requests.
@@ -155,7 +161,8 @@ pub trait Backend {
             for (l, u) in step.unique_experts.iter().enumerate() {
                 summed[l] += u;
             }
-            slots.push(SlotStep { slot: span.slot, step });
+            let marginal_unique_experts = step.unique_experts.clone();
+            slots.push(SlotStep { slot: span.slot, step, marginal_unique_experts });
         }
         Ok(BatchStep {
             slots,
@@ -163,6 +170,35 @@ pub trait Backend {
             summed_unique_experts: summed,
         })
     }
+
+    // ---- Pipelined-verify surface ---------------------------------------
+
+    /// Issue a fused verify step without consuming its results, so the
+    /// engine can overlap iteration i+1's drafting with iteration i's
+    /// verification (the paper's Fig. 14 worker pipeline). The default —
+    /// correct for every synchronous backend — executes eagerly and parks
+    /// the outputs in the returned handle; a genuinely asynchronous
+    /// backend would enqueue device work here and block in
+    /// [`Backend::wait_batch`]. Either way the engine's stage order
+    /// (submit → draft ahead → wait) is what the overlap-aware cost model
+    /// prices, so the simulated clock models concurrency even where the
+    /// host execution is sequential.
+    fn submit_batch(&mut self, spans: &[VerifySpan]) -> Result<PendingBatch> {
+        Ok(PendingBatch { step: self.step_batch(spans)? })
+    }
+
+    /// Block on a verify step issued by [`Backend::submit_batch`].
+    fn wait_batch(&mut self, pending: PendingBatch) -> Result<BatchStep> {
+        Ok(pending.step)
+    }
+}
+
+/// Handle to an in-flight fused verify step (see [`Backend::submit_batch`]).
+/// Opaque so backends can later carry device futures instead of computed
+/// results without touching the engine.
+#[derive(Debug)]
+pub struct PendingBatch {
+    step: BatchStep,
 }
 
 /// Production backend: executes the AOT-compiled step HLO through PJRT.

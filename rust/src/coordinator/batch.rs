@@ -16,18 +16,28 @@
 //!   utility decisions therefore interact through expert overlap — the
 //!   paper's §2.4 mechanism at serving scale.
 //! * **Per-request policies** — every request carries its own Cascade
-//!   state machine (baseline → test → set), observing the fused iteration
-//!   latency it actually experienced.
+//!   state machine (baseline → test → set), observing its **marginal**
+//!   share of the fused iteration (base amortized, experts at the
+//!   request's exclusive contribution) — the batch-aware utility signal.
+//! * **Pipelined drafting** (`EngineConfig::pipeline`) — the iteration is
+//!   a plan → draft → verify → commit pipeline with a one-iteration
+//!   lookahead: while the backend verifies iteration i, iteration i+1's
+//!   proposals are drafted on scoped threads under the full-acceptance
+//!   prediction and reconciled at the next draft stage
+//!   (`coordinator::pipeline`). Token output is bit-identical to serial;
+//!   only the cost accounting changes (`IterCost::draft_hidden_s`).
 //!
 //! Per-request `RequestMetrics` keep the *latency* view (each iteration's
 //! full fused cost — that is what the request waited for); the
 //! [`BatchRunMetrics`] iteration records keep the *throughput* view
-//! (fused cost charged once per iteration).
+//! (fused cost charged once per iteration), including pipeline hit/bubble
+//! telemetry.
 
 use crate::config::{DrafterKind, EngineConfig, MAX_K};
-use crate::coordinator::backend::{Backend, VerifySpan};
+use crate::coordinator::backend::{Backend, BatchStep, VerifySpan};
 use crate::coordinator::engine::EngineDrafter;
-use crate::cost::GpuCostModel;
+use crate::coordinator::pipeline::{plan_spec_task, reconcile_entry, run_spec_tasks, SpecDraft};
+use crate::cost::{GpuCostModel, IterCost};
 use crate::kv::KvBlockPool;
 use crate::metrics::{BatchIterRecord, BatchRunMetrics, IterRecord, RequestMetrics, RunMetrics};
 use crate::models::Registry;
@@ -52,6 +62,18 @@ struct SlotState {
     finished: bool,
     metrics: RequestMetrics,
     wall_start: Instant,
+    /// Last marginal iteration cost this request observed — seeds the
+    /// policy-K forecast of the pipelined draft stage.
+    last_iter_s: f64,
+}
+
+/// Plan-stage decision for one slot: the K the policy chose after the
+/// window and budget caps (the shared-pool cap is applied in the draft
+/// stage, interleaved with earlier slots' reservations).
+struct SlotPlan {
+    slot: usize,
+    k: usize,
+    out_idx: usize,
 }
 
 /// Drafting decisions taken for one slot before the fused step.
@@ -60,6 +82,23 @@ struct PlannedSpan {
     k_chosen: usize,
     drafted: usize,
     draft_wall_ns: u64,
+    /// Drafts came from the pipelined lookahead (their scan time ran
+    /// hidden under an earlier iteration's verify window).
+    pipelined: bool,
+    /// The verify window that scan ran under (its hiding budget); 0.0 for
+    /// non-pipelined spans.
+    hidden_window_s: f64,
+}
+
+/// Outcome tally of one draft stage's lookahead reconciliation.
+#[derive(Debug, Clone, Copy, Default)]
+struct ReconcileTally {
+    /// Spans served from the lookahead (drafting off the critical path).
+    hits: usize,
+    /// Spans that needed a fresh scan with the pipeline on (bubbles).
+    misses: usize,
+    /// Lookahead entries discarded because an assumption broke.
+    recomputes: usize,
 }
 
 /// Continuous-batching engine: one backend (multi-slot where supported),
@@ -76,6 +115,13 @@ pub struct BatchEngine {
     slots: Vec<Option<SlotState>>,
     done: Vec<RequestMetrics>,
     batch_iters: Vec<BatchIterRecord>,
+    /// One-iteration lookahead buffer: iteration i+1's speculative drafts,
+    /// produced while iteration i verified (pipelined mode only). At most
+    /// one entry per slot; entries for slots that sat an iteration out
+    /// (pool-deferred) survive until consumed or invalidated. Each entry
+    /// is stamped with the verify window it drafted under — the hiding
+    /// budget of the overlap cost rule.
+    lookahead: Vec<SpecDraft>,
 }
 
 impl BatchEngine {
@@ -115,6 +161,7 @@ impl BatchEngine {
             slots,
             done: Vec::new(),
             batch_iters: Vec::new(),
+            lookahead: Vec::new(),
         }
     }
 
@@ -264,6 +311,7 @@ impl BatchEngine {
             metrics,
             wall_start,
             req,
+            last_iter_s: 0.0,
         };
         if state.finished {
             // EOS at prefill (or a 1-token budget): finalize immediately.
@@ -275,6 +323,11 @@ impl BatchEngine {
     }
 
     fn finalize(&mut self, slot: usize, mut state: SlotState) {
+        // Purge the slot's buffered speculation: the request is gone, and
+        // a new request rebound to this slot must start clean (the
+        // reconcile `req_id` guard would also catch it, but would miscount
+        // the dead entry as a recompute).
+        self.lookahead.retain(|e| e.slot != slot);
         self.pool.release(state.req.id);
         self.backend.release_slot(slot);
         state.metrics.wall_total_ns = state.wall_start.elapsed().as_nanos() as u64;
@@ -282,68 +335,19 @@ impl BatchEngine {
         self.done.push(state.metrics);
     }
 
-    /// Run one fused decode iteration over all active slots. Returns false
-    /// when nothing is in flight (the caller should admit or stop).
+    /// Run one fused decode iteration over all active slots through the
+    /// four-stage pipeline — **plan** (per-slot K under every cap),
+    /// **draft** (reconcile the pipelined lookahead or scan now),
+    /// **verify** (submit the fused step; while it runs, speculatively
+    /// draft the *next* iteration), **commit** (rejection-sample, charge
+    /// overlap-aware costs, feed policies). Returns false when nothing is
+    /// in flight (the caller should admit or stop).
     pub fn step_iteration(&mut self) -> Result<bool> {
-        let max_seq = self.backend.mini().max_seq;
-        let drafter_kind = self.cfg.drafter;
+        // ---- Stage 1: plan ----------------------------------------------
+        let plans = self.plan_stage();
 
-        // ---- Plan + draft per slot --------------------------------------
-        let mut spans: Vec<VerifySpan> = Vec::new();
-        let mut planned: Vec<PlannedSpan> = Vec::new();
-        let mut deferred = 0usize;
-        for slot in 0..self.slots.len() {
-            let Some(state) = self.slots[slot].as_mut() else { continue };
-            if state.finished {
-                continue;
-            }
-            let out_idx = state.output.len();
-            // Policy decision, capped by the KV window, the shared pool,
-            // and the remaining output budget — same laws as the
-            // single-request engine, plus pool pressure.
-            let mut k = state.policy.next_k().min(MAX_K);
-            let room = max_seq.saturating_sub(self.backend.cache_len_slot(slot) + 1);
-            k = k.min(room);
-            k = k.min(state.req.max_new_tokens.saturating_sub(out_idx).saturating_sub(1));
-            if room == 0 {
-                // Window exhausted: the request cannot decode further.
-                state.finished = true;
-                continue;
-            }
-            // Shared-pool pressure: shrink speculation until the span
-            // fits; if even the next token cannot be reserved, defer this
-            // request for one iteration — the other spans' commits and
-            // releases free blocks (preemption/eviction is future work).
-            while k > 0 && !self.pool.can_reserve(state.req.id, 1 + k) {
-                k -= 1;
-            }
-            if !self.pool.can_reserve(state.req.id, 1) {
-                deferred += 1;
-                continue;
-            }
-
-            let draft_wall = Instant::now();
-            let drafts = state.drafter.propose(
-                &state.context,
-                &state.req.reference,
-                out_idx,
-                k,
-                state.d_eps,
-            )?;
-            let draft_wall_ns = draft_wall.elapsed().as_nanos() as u64;
-            let drafted = drafts.len();
-
-            let t = 1 + drafted;
-            self.pool.reserve(state.req.id, t)?;
-            let mut tokens = Vec::with_capacity(t);
-            tokens.push(*state.output.last().unwrap());
-            tokens.extend_from_slice(&drafts);
-            let guides: Vec<Option<u32>> = (0..t)
-                .map(|i| state.req.reference.get(out_idx + i).copied())
-                .collect();
-            spans.push(VerifySpan { slot, tokens, guides, eps: state.req.eps });
-            planned.push(PlannedSpan { slot, k_chosen: k, drafted, draft_wall_ns });
-        }
+        // ---- Stage 2: draft ---------------------------------------------
+        let (spans, planned, reconcile, deferred) = self.draft_stage(&plans)?;
 
         if spans.is_empty() {
             // Nothing to verify; finalize any slots that just ran out of
@@ -365,21 +369,234 @@ impl BatchEngine {
             return Ok(false);
         }
 
-        // ---- Fused verify step ------------------------------------------
+        // ---- Stage 3: verify (+ pipelined draft of iteration i+1) -------
         let iter_wall = Instant::now();
-        let batch = self.backend.step_batch(&spans)?;
+        let pending = self.backend.submit_batch(&spans)?;
+        let mut spec_wall_ns = 0u64;
+        if self.cfg.pipeline {
+            // While the backend verifies, draft next iteration's proposals
+            // for every live slot on scoped threads (per-request CPU work).
+            // Its wall time is measured so the iteration telemetry can
+            // charge it to the overlap window rather than the critical
+            // path (both current backends execute the verify eagerly in
+            // submit_batch, so on this host the scans run after it).
+            let spec_wall = Instant::now();
+            self.spec_draft_next(&planned, &spans);
+            spec_wall_ns = spec_wall.elapsed().as_nanos() as u64;
+        }
+        let batch = self.backend.wait_batch(pending)?;
 
-        // ---- Batch-aware cost -------------------------------------------
+        // ---- Stage 4: commit --------------------------------------------
+        let cost =
+            self.commit_stage(&spans, &planned, &batch, iter_wall, spec_wall_ns, reconcile)?;
+
+        // Stamp the just-created lookahead entries with the verify window
+        // their scans ran under — the hiding budget a future hit can
+        // claim. Entries surviving from earlier iterations (deferred
+        // slots) keep their original stamp.
+        if self.cfg.pipeline {
+            let window = cost.verify_s();
+            for e in &mut self.lookahead {
+                e.window_s.get_or_insert(window);
+            }
+        }
+
+        self.sweep_finished();
+        Ok(true)
+    }
+
+    /// Plan stage: per-slot K decisions under the KV window and the
+    /// remaining output budget — same laws as the single-request engine.
+    /// Pool caps are deliberately **not** applied here: they must be
+    /// interleaved with the reservations of earlier slots (draft stage),
+    /// or two slots could both be planned against the same free blocks.
+    fn plan_stage(&mut self) -> Vec<SlotPlan> {
+        let max_seq = self.backend.mini().max_seq;
+        let mut plans: Vec<SlotPlan> = Vec::new();
+        for slot in 0..self.slots.len() {
+            let Some(state) = self.slots[slot].as_mut() else { continue };
+            if state.finished {
+                continue;
+            }
+            let out_idx = state.output.len();
+            let mut k = state.policy.next_k().min(MAX_K);
+            let room = max_seq.saturating_sub(self.backend.cache_len_slot(slot) + 1);
+            k = k.min(room);
+            k = k.min(state.req.max_new_tokens.saturating_sub(out_idx).saturating_sub(1));
+            if room == 0 {
+                // Window exhausted: the request cannot decode further.
+                state.finished = true;
+                continue;
+            }
+            plans.push(SlotPlan { slot, k, out_idx });
+        }
+        plans
+    }
+
+    /// Draft stage: per planned slot, apply the shared-pool caps against
+    /// the pool state earlier slots' reservations already mutated, then
+    /// use the pipelined lookahead draft if its assumptions held (same
+    /// request, same context tail, same K) — its scan already ran hidden
+    /// under the previous verify — otherwise scan now (a pipeline
+    /// bubble). Returns spans, per-span bookkeeping, the reconcile tally
+    /// (hits, misses, recomputes), and how many slots were deferred by
+    /// pool pressure.
+    #[allow(clippy::type_complexity)]
+    fn draft_stage(
+        &mut self,
+        plans: &[SlotPlan],
+    ) -> Result<(Vec<VerifySpan>, Vec<PlannedSpan>, ReconcileTally, usize)> {
+        let pipeline = self.cfg.pipeline;
+        let mut spans: Vec<VerifySpan> = Vec::with_capacity(plans.len());
+        let mut planned: Vec<PlannedSpan> = Vec::with_capacity(plans.len());
+        let mut tally = ReconcileTally::default();
+        let mut deferred = 0usize;
+        for plan in plans {
+            let state = self.slots[plan.slot].as_mut().expect("planned slot is live");
+            // Shared-pool pressure, checked immediately before this slot's
+            // reservation (earlier slots in this pass have already taken
+            // theirs): shrink speculation until the span fits; if even the
+            // next token cannot be reserved, defer this request for one
+            // iteration — the other spans' commits and releases free
+            // blocks (preemption/eviction is future work). A deferred
+            // slot's lookahead entry stays buffered: its context has not
+            // moved, so it may still hit next iteration.
+            let mut k = plan.k;
+            while k > 0 && !self.pool.can_reserve(state.req.id, 1 + k) {
+                k -= 1;
+            }
+            if !self.pool.can_reserve(state.req.id, 1) {
+                deferred += 1;
+                continue;
+            }
+            // Consume this slot's lookahead entry, valid or not: a stale
+            // speculation is useless once the real iteration diverged.
+            let entry_pos = self.lookahead.iter().position(|e| e.slot == plan.slot);
+            let entry = entry_pos.map(|i| self.lookahead.swap_remove(i));
+            let rec = reconcile_entry(entry, state.req.id, k, &state.context, &mut state.drafter);
+            let pipelined = rec.hit;
+            let hidden_window_s = rec.hidden_window_s;
+            if rec.hit {
+                tally.hits += 1;
+            }
+            if rec.recompute {
+                tally.recomputes += 1;
+            }
+            let (drafts, draft_wall_ns) = match rec.taken {
+                Some(d) => d,
+                None => {
+                    if pipeline && k > 0 {
+                        tally.misses += 1; // bubble: drafting on the critical path
+                    }
+                    let draft_wall = Instant::now();
+                    let d = state.drafter.propose(
+                        &state.context,
+                        &state.req.reference,
+                        plan.out_idx,
+                        k,
+                        state.d_eps,
+                    )?;
+                    (d, draft_wall.elapsed().as_nanos() as u64)
+                }
+            };
+            let drafted = drafts.len();
+
+            let t = 1 + drafted;
+            self.pool.reserve(state.req.id, t)?;
+            let mut tokens = Vec::with_capacity(t);
+            tokens.push(*state.output.last().unwrap());
+            tokens.extend_from_slice(&drafts);
+            let guides: Vec<Option<u32>> = (0..t)
+                .map(|i| state.req.reference.get(plan.out_idx + i).copied())
+                .collect();
+            spans.push(VerifySpan { slot: plan.slot, tokens, guides, eps: state.req.eps });
+            planned.push(PlannedSpan {
+                slot: plan.slot,
+                k_chosen: k,
+                drafted,
+                draft_wall_ns,
+                pipelined,
+                hidden_window_s,
+            });
+        }
+        Ok((spans, planned, tally, deferred))
+    }
+
+    /// Speculatively draft iteration i+1 for every span of iteration i,
+    /// fanning the per-slot scans across scoped threads while the backend
+    /// verifies. Only pre-verify knowledge feeds the tasks (the in-flight
+    /// drafts plus the full-acceptance prediction); broken assumptions
+    /// surface as reconcile misses next iteration, never as wrong tokens.
+    fn spec_draft_next(&mut self, planned: &[PlannedSpan], spans: &[VerifySpan]) {
+        let max_seq = self.backend.mini().max_seq;
+        let mut tasks = Vec::new();
+        for (plan, span) in planned.iter().zip(spans) {
+            let state = self.slots[plan.slot].as_ref().expect("planned slot is live");
+            let drafts = &span.tokens[1..];
+            if let Some(task) = plan_spec_task(
+                plan.slot,
+                &state.req,
+                state.policy.as_ref(),
+                &state.drafter,
+                &state.context,
+                state.output.len(),
+                self.backend.cache_len_slot(plan.slot),
+                max_seq,
+                drafts,
+                plan.k_chosen,
+                state.last_iter_s,
+                state.d_eps,
+            ) {
+                tasks.push(task);
+            }
+        }
+        // Entries for slots that sat this iteration out (pool-deferred)
+        // stay valid and are kept; planned slots consumed theirs in the
+        // draft stage, so this extend cannot duplicate a slot.
+        let fresh = run_spec_tasks(tasks);
+        self.lookahead.extend(fresh);
+    }
+
+    /// Commit stage: batch-aware overlap-adjusted cost, per-request
+    /// rejection sampling, marginal-utility policy feedback, telemetry.
+    /// Returns the fused iteration cost (the caller stamps new lookahead
+    /// entries with its verify window). `spec_wall_ns` is the host time
+    /// the speculative next-iteration scans took inside the verify stage;
+    /// it is charged to the overlap window, not the iteration wall.
+    fn commit_stage(
+        &mut self,
+        spans: &[VerifySpan],
+        planned: &[PlannedSpan],
+        batch: &BatchStep,
+        iter_wall: Instant,
+        spec_wall_ns: u64,
+        reconcile: ReconcileTally,
+    ) -> Result<IterCost> {
+        let drafter_kind = self.cfg.drafter;
         let total_tokens: usize = spans.iter().map(|s| s.tokens.len()).sum();
         let total_drafted: usize = planned.iter().map(|p| p.drafted).sum();
         let drafting_requests = planned.iter().filter(|p| p.drafted > 0).count();
-        let cost = self.cost.batch_verify_cost(
+        let cost_full = self.cost.batch_verify_cost(
             &batch.batch_unique_experts,
             total_tokens,
             total_drafted,
             drafting_requests,
             drafter_kind,
         );
+        // Overlap rule: a lookahead hit's scan ran while an earlier fused
+        // step verified (the per-slot scans run concurrently on threads),
+        // so each hit's own draft cost is charged only where it exceeds
+        // the verify window it drafted under — max(draft, verify)
+        // semantics, per slot, priced with the same model as the fused
+        // charge.
+        let mut draft_hidden_s = 0.0f64;
+        for p in planned.iter().filter(|p| p.pipelined) {
+            let d = self.cost.draft_cost(p.drafted, drafter_kind);
+            draft_hidden_s += d.min(p.hidden_window_s);
+        }
+        let draft_hidden_s = draft_hidden_s.min(cost_full.draft_s);
+        let cost = IterCost { draft_hidden_s, ..cost_full };
+
         let layer_mean = |v: &[usize]| -> f64 {
             if v.is_empty() {
                 0.0
@@ -390,7 +607,14 @@ impl BatchEngine {
 
         // ---- Per-request rejection sampling + commit --------------------
         // `planned`, `spans`, and `batch.slots` are index-aligned.
+        let n_active = spans.len();
         let mut emitted_total = 0usize;
+        // Host wall of the verify+commit window, excluding the speculative
+        // next-iteration scans that ran inside it (they belong to the
+        // overlap budget, and on a genuinely async backend they would not
+        // extend the iteration at all).
+        let iter_wall_ns =
+            (iter_wall.elapsed().as_nanos() as u64).saturating_sub(spec_wall_ns);
         for (i, plan) in planned.iter().enumerate() {
             let slot_step = &batch.slots[i];
             let span = &spans[i];
@@ -410,21 +634,42 @@ impl BatchEngine {
 
             let mean_unique = layer_mean(&slot_step.step.unique_experts);
             let phase = state.policy.phase();
+            // The policy observes the request's **marginal** share of the
+            // fused cost (base amortized, experts at the request's
+            // exclusive contribution) — the batched Cascade utility
+            // signal — with its own draft slice discounted when it ran
+            // hidden in the pipeline.
+            let req_cost_full = self.cost.marginal_request_cost(
+                &slot_step.marginal_unique_experts,
+                n_active,
+                span.tokens.len(),
+                plan.drafted,
+                drafter_kind,
+            );
+            let req_hidden = if plan.pipelined {
+                req_cost_full.draft_s.min(plan.hidden_window_s)
+            } else {
+                0.0
+            };
+            let req_cost = IterCost { draft_hidden_s: req_hidden, ..req_cost_full };
             let obs = IterObs {
                 k_chosen: plan.k_chosen,
                 drafted: plan.drafted,
                 accepted: vr.accepted,
                 emitted: emitted.len(),
-                iter_s: cost.total(),
+                iter_s: req_cost.total(),
             };
+            state.last_iter_s = obs.iter_s;
             state.policy.observe(&obs);
             state.metrics.iters.push(IterRecord {
                 k_chosen: plan.k_chosen,
                 drafted: plan.drafted,
                 accepted: vr.accepted,
                 emitted: emitted.len(),
+                // Latency view: the full fused iteration this request
+                // waited on (overlap-adjusted).
                 cost,
-                wall_ns: iter_wall.elapsed().as_nanos() as u64 + plan.draft_wall_ns,
+                wall_ns: iter_wall_ns + if plan.pipelined { 0 } else { plan.draft_wall_ns },
                 unique_experts: mean_unique,
                 phase,
             });
@@ -441,10 +686,17 @@ impl BatchEngine {
             cost,
             batch_unique_experts: layer_mean(&batch.batch_unique_experts),
             summed_unique_experts: layer_mean(&batch.summed_unique_experts),
+            pipeline_hits: reconcile.hits,
+            pipeline_misses: reconcile.misses,
+            draft_recomputes: reconcile.recomputes,
+            draft_wall_ns: planned.iter().map(|p| p.draft_wall_ns).sum(),
+            draft_wall_hidden_ns: planned
+                .iter()
+                .filter(|p| p.pipelined)
+                .map(|p| p.draft_wall_ns)
+                .sum(),
         });
-
-        self.sweep_finished();
-        Ok(true)
+        Ok(cost)
     }
 
     /// Move finished slots into the done list, freeing pool + backend
@@ -514,6 +766,7 @@ impl BatchEngine {
 
     /// Name for experiment tables.
     pub fn label(&self) -> String {
-        format!("{}/{}@b{}", self.cfg.model, self.policy_kind.label(), self.max_batch)
+        let pipe = if self.cfg.pipeline { "+pipe" } else { "" };
+        format!("{}/{}@b{}{pipe}", self.cfg.model, self.policy_kind.label(), self.max_batch)
     }
 }

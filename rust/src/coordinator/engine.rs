@@ -9,7 +9,10 @@
 use crate::config::{DrafterKind, EngineConfig, MAX_K};
 use crate::coordinator::backend::Backend;
 use crate::coordinator::eagle::{draft_eps, EagleLite};
-use crate::cost::GpuCostModel;
+use crate::coordinator::pipeline::{
+    plan_spec_task, reconcile_entry, run_spec_task, DrafterSnapshot, SpecDraft,
+};
+use crate::cost::{GpuCostModel, IterCost};
 use crate::kv::KvBlockManager;
 use crate::metrics::{IterRecord, RequestMetrics, RunMetrics};
 use crate::models::Registry;
@@ -82,20 +85,22 @@ impl EngineDrafter {
                 e.propose(k, &guides, d_eps)?
             }
             EngineDrafter::SimEagle { rng, .. } => {
-                let mut out = Vec::with_capacity(k);
-                let mut broken = false;
-                for i in 0..k {
-                    match reference.get(out_idx + i) {
-                        Some(&g) if !broken && !rng.chance(d_eps) => out.push(g),
-                        _ => {
-                            broken = true;
-                            out.push(rng.below(320) as u32);
-                        }
-                    }
-                }
-                out
+                crate::coordinator::pipeline::sim_eagle_propose(rng, reference, out_idx, k, d_eps)
             }
         })
+    }
+
+    /// Adopt the post-proposal state of a pipelined speculative draft that
+    /// hit: the speculative scan already consumed exactly the draws serial
+    /// drafting would have, so the authoritative drafter fast-forwards to
+    /// that state instead of re-proposing.
+    pub fn adopt(&mut self, snapshot: DrafterSnapshot) {
+        if let (EngineDrafter::SimEagle { rng, .. }, DrafterSnapshot::SimEagle(r)) =
+            (self, snapshot)
+        {
+            *rng = r;
+        }
+        // Ngram is stateless; Eagle never produces snapshots.
     }
 
     /// Keep model-based drafters' KV in sync with the emitted tokens (runs
@@ -118,6 +123,11 @@ pub struct Engine {
     pub policy: Box<dyn SpecPolicy>,
     /// KV block size (vLLM-style pages).
     pub kv_block: usize,
+    /// Pipelined-drafting telemetry, cumulative across served requests
+    /// (mirrors the batched engine's per-iteration records).
+    pub pipeline_hits: usize,
+    pub pipeline_misses: usize,
+    pub draft_recomputes: usize,
 }
 
 impl Engine {
@@ -128,7 +138,17 @@ impl Engine {
         cost: GpuCostModel,
         policy: Box<dyn SpecPolicy>,
     ) -> Self {
-        Self { cfg, backend, drafter, cost, policy, kv_block: 16 }
+        Self {
+            cfg,
+            backend,
+            drafter,
+            cost,
+            policy,
+            kv_block: 16,
+            pipeline_hits: 0,
+            pipeline_misses: 0,
+            draft_recomputes: 0,
+        }
     }
 
     /// Build a real-backend engine from the artifact registry.
@@ -215,11 +235,20 @@ impl Engine {
         let d_eps = draft_eps(req.task);
         let mut finished = first == EOS;
 
+        // Pipelined drafting state (parity with `BatchEngine`'s stages at
+        // batch=1): the one-iteration lookahead (stamped with the verify
+        // window its scan ran under — the budget a hit can hide inside)
+        // and the last observed iteration cost (seeds the policy's K
+        // forecast).
+        let pipeline = self.cfg.pipeline;
+        let mut lookahead: Option<SpecDraft> = None;
+        let mut last_iter_s = 0.0f64;
+
         // ---- Decode loop -------------------------------------------------
         while !finished && output.len() < req.max_new_tokens {
             let out_idx = output.len(); // next output index to produce
-            // Policy decision, capped by KV capacity, variant set, and the
-            // remaining output budget.
+            // ---- Plan: policy decision, capped by KV capacity, variant
+            // set, and the remaining output budget.
             let mut k = self.policy.next_k().min(MAX_K);
             let room = max_seq.saturating_sub(self.backend.cache_len() + 1);
             k = k.min(room);
@@ -234,10 +263,29 @@ impl Engine {
             // truncate generations longer than the reference.
             let ref_at = |j: usize| -> Option<u32> { req.reference.get(j).copied() };
 
-            // ---- Draft ---------------------------------------------------
-            let draft_wall = Instant::now();
-            let drafts = self.drafter.propose(&context, &req.reference, out_idx, k, d_eps)?;
-            let draft_wall_ns = draft_wall.elapsed().as_nanos() as u64;
+            // ---- Draft: reconcile the lookahead, else scan now -----------
+            // (Shared rule with `BatchEngine::draft_stage` — batch=1
+            // parity depends on both engines reconciling identically.)
+            let rec = reconcile_entry(lookahead.take(), req.id, k, &context, &mut self.drafter);
+            let pipelined_hit = rec.hit;
+            let hit_window_s = rec.hidden_window_s;
+            if rec.hit {
+                self.pipeline_hits += 1;
+            }
+            if rec.recompute {
+                self.draft_recomputes += 1;
+            }
+            let (drafts, draft_wall_ns) = match rec.taken {
+                Some(d) => d,
+                None => {
+                    if pipeline && k > 0 {
+                        self.pipeline_misses += 1; // a bubble: draft on the critical path
+                    }
+                    let draft_wall = Instant::now();
+                    let d = self.drafter.propose(&context, &req.reference, out_idx, k, d_eps)?;
+                    (d, draft_wall.elapsed().as_nanos() as u64)
+                }
+            };
             let drafted = drafts.len();
 
             // ---- Verify --------------------------------------------------
@@ -250,6 +298,32 @@ impl Engine {
 
             let iter_wall = Instant::now();
             let step = self.backend.step(&tokens, &guides, req.eps)?;
+
+            // Speculatively draft the *next* iteration — conceptually under
+            // this verify step (the task only uses pre-verify knowledge:
+            // the in-flight drafts and the full-acceptance prediction).
+            // Its wall time is charged to the overlap window, not the
+            // iteration (see `spec_wall_ns` below).
+            let mut spec_wall_ns = 0u64;
+            if pipeline {
+                let spec_wall = Instant::now();
+                lookahead = plan_spec_task(
+                    0,
+                    req,
+                    self.policy.as_ref(),
+                    &self.drafter,
+                    &context,
+                    out_idx,
+                    self.backend.cache_len(),
+                    max_seq,
+                    &drafts,
+                    k,
+                    last_iter_s,
+                    d_eps,
+                )
+                .map(run_spec_task);
+                spec_wall_ns = spec_wall.elapsed().as_nanos() as u64;
+            }
 
             // ---- Rejection sampling ---------------------------------------
             let vr = greedy_verify(&drafts, &step.sampled);
@@ -266,9 +340,23 @@ impl Engine {
             finished = eos_hit;
 
             // ---- Cost + policy feedback ----------------------------------
-            let cost = self
+            // Overlap rule: a hit's drafting ran while an earlier
+            // iteration verified, so it is charged only where it exceeds
+            // the window it drafted under (max(draft, verify) semantics).
+            let cost_full = self
                 .cost
                 .verify_cost(&step.unique_experts, t, drafted, self.drafter.kind());
+            let draft_hidden_s = if pipelined_hit {
+                cost_full.draft_s.min(hit_window_s)
+            } else {
+                0.0
+            };
+            let cost = IterCost { draft_hidden_s, ..cost_full };
+            // Stamp the fresh lookahead entry with the verify window its
+            // scan ran under (mirrors the batched engine's stamping).
+            if let Some(e) = lookahead.as_mut() {
+                e.window_s.get_or_insert(cost.verify_s());
+            }
             let mean_unique = if step.unique_experts.is_empty() {
                 0.0
             } else {
@@ -283,6 +371,7 @@ impl Engine {
                 emitted: emitted.len(),
                 iter_s: cost.total(),
             };
+            last_iter_s = obs.iter_s;
             self.policy.observe(&obs);
             metrics.iters.push(IterRecord {
                 k_chosen: k,
@@ -290,7 +379,8 @@ impl Engine {
                 accepted: vr.accepted,
                 emitted: emitted.len(),
                 cost,
-                wall_ns: iter_wall.elapsed().as_nanos() as u64 + draft_wall_ns,
+                wall_ns: (iter_wall.elapsed().as_nanos() as u64).saturating_sub(spec_wall_ns)
+                    + if pipelined_hit { 0 } else { draft_wall_ns },
                 unique_experts: mean_unique,
                 phase,
             });

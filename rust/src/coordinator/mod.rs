@@ -4,14 +4,17 @@
 //! paper's single-batch low-latency engine (`engine`) and the
 //! continuous-batching engine (`batch`) that fuses the verify spans of all
 //! in-flight requests into one step with batch-deduplicated expert cost.
+//! Both paths optionally run the two-stage drafting pipeline (`pipeline`):
+//! draft iteration i+1 under iteration i's verify, reconcile on commit.
 
 pub mod backend;
 pub mod batch;
 pub mod eagle;
 pub mod engine;
+pub mod pipeline;
 pub mod scheduler;
 
-pub use backend::{Backend, BackendStep, BatchStep, RealBackend, SlotStep, VerifySpan};
+pub use backend::{Backend, BackendStep, BatchStep, PendingBatch, RealBackend, SlotStep, VerifySpan};
 pub use batch::BatchEngine;
 pub use engine::{Engine, RunSummary};
 pub use scheduler::Scheduler;

@@ -1,0 +1,406 @@
+//! Two-stage pipelined drafting (paper Fig. 14's worker pipeline).
+//!
+//! While the backend verifies iteration *i*'s fused spans, the engine
+//! speculatively drafts iteration *i+1*'s proposals for every live slot.
+//! The speculation assumes the **full-acceptance continuation**: every
+//! in-flight draft token lands, and the bonus/correction token is the
+//! reference continuation (the guided sampler's 1−ε outcome). When the
+//! verify step confirms exactly that tail, the pre-computed draft is used
+//! as-is — its CPU time ran hidden under the verify window — and the
+//! drafter's post-proposal state is adopted so the token stream is
+//! bit-identical to serial drafting. Any broken assumption (rejection, a
+//! sampler deviation, a policy K change, pool pressure) discards the
+//! speculative draft and recomputes it serially: a pipeline bubble.
+//!
+//! Losslessness is the invariant: a hit replays precisely the draft the
+//! serial engine would have produced (same context, same K, same drafter
+//! state), so pipelining changes *when* drafting work happens, never what
+//! tokens come out.
+//!
+//! The per-slot speculative scans are independent CPU work (the n-gram
+//! drafter is a context scan), so they fan out across `std::thread::scope`
+//! threads — which is why the drafter state travels as the `Send`-able
+//! [`DrafterSnapshot`] rather than as `EngineDrafter` (whose draft-model
+//! variant holds an `Rc`'d runtime and cannot cross threads; it reports
+//! `None` and simply never pipelines).
+
+use crate::config::MAX_K;
+use crate::coordinator::engine::EngineDrafter;
+use crate::rng::Rng;
+use crate::spec::policy::{IterObs, SpecPolicy};
+use crate::spec::NgramDrafter;
+use crate::tokenizer::EOS;
+use crate::workload::Request;
+use std::time::Instant;
+
+/// Trace-level draft-model proposal (shared by the live drafter and its
+/// pipelined snapshot — both must consume the rng stream identically, or a
+/// pipeline hit would diverge from serial drafting).
+pub(crate) fn sim_eagle_propose(
+    rng: &mut Rng,
+    reference: &[u32],
+    out_idx: usize,
+    k: usize,
+    d_eps: f64,
+) -> Vec<u32> {
+    let mut out = Vec::with_capacity(k);
+    let mut broken = false;
+    for i in 0..k {
+        match reference.get(out_idx + i) {
+            Some(&g) if !broken && !rng.chance(d_eps) => out.push(g),
+            _ => {
+                broken = true;
+                out.push(rng.below(320) as u32);
+            }
+        }
+    }
+    out
+}
+
+/// `Send`-able snapshot of a drafter's mutable state, so speculative
+/// proposals can run on worker threads and, on a hit, hand the advanced
+/// state back to the authoritative drafter.
+#[derive(Debug, Clone)]
+pub enum DrafterSnapshot {
+    /// The n-gram scan is stateless: the snapshot is just the config.
+    Ngram(NgramDrafter),
+    /// The trace-level draft model's entire state is its rng stream.
+    SimEagle(Rng),
+}
+
+impl DrafterSnapshot {
+    /// Snapshot a drafter, or `None` when its state cannot cross threads
+    /// (the real draft-model drafter) — that drafter never pipelines.
+    pub fn of(drafter: &EngineDrafter) -> Option<Self> {
+        match drafter {
+            EngineDrafter::Ngram(d) => Some(DrafterSnapshot::Ngram(d.clone())),
+            EngineDrafter::SimEagle { rng, .. } => Some(DrafterSnapshot::SimEagle(rng.clone())),
+            EngineDrafter::Eagle(_) => None,
+        }
+    }
+
+    /// Mirror of [`EngineDrafter::propose`] over the snapshot state.
+    pub fn propose(
+        &mut self,
+        context: &[u32],
+        reference: &[u32],
+        out_idx: usize,
+        k: usize,
+        d_eps: f64,
+    ) -> Vec<u32> {
+        if k == 0 {
+            return Vec::new();
+        }
+        match self {
+            DrafterSnapshot::Ngram(d) => d.propose(context, k),
+            DrafterSnapshot::SimEagle(rng) => sim_eagle_propose(rng, reference, out_idx, k, d_eps),
+        }
+    }
+}
+
+/// One slot's speculative next-iteration draft, produced under the current
+/// iteration's verify window and held in the engine's one-iteration
+/// lookahead buffer.
+#[derive(Debug, Clone)]
+pub struct SpecDraft {
+    pub slot: usize,
+    /// Guards against slot reuse: a finished request's slot can be rebound
+    /// to a new request between iterations.
+    pub req_id: u64,
+    /// Context length (prompt + output) the draft assumed.
+    pub expected_ctx_len: usize,
+    /// The tokens the in-flight iteration was assumed to emit: its drafts
+    /// (all accepted) plus the reference bonus token.
+    pub expected_tail: Vec<u32>,
+    /// The K the policy was forecast to choose for the next iteration.
+    pub k_assumed: usize,
+    /// The speculative proposal itself (may be shorter than `k_assumed` —
+    /// the n-gram scan proposes what it finds).
+    pub drafts: Vec<u32>,
+    /// Host wall time the speculative scan took (hidden on a hit).
+    pub draft_wall_ns: u64,
+    /// Drafter state after proposing; adopted on a hit so the drafter
+    /// stream is exactly what serial drafting would have produced.
+    pub snapshot_after: DrafterSnapshot,
+    /// The verify window (simulated seconds) this scan ran under — the
+    /// overlap budget a hit can hide inside. Stamped by the engine once
+    /// the iteration's fused cost is known; `None` until then.
+    pub window_s: Option<f64>,
+}
+
+/// Owned inputs of one slot's speculative draft (everything a worker
+/// thread needs — no borrows into engine state).
+#[derive(Debug)]
+pub struct SpecTask {
+    slot: usize,
+    req_id: u64,
+    /// Predicted post-iteration context: current context + expected tail.
+    ctx: Vec<u32>,
+    expected_tail: Vec<u32>,
+    reference: Vec<u32>,
+    /// Next output index under the prediction.
+    out_idx: usize,
+    k: usize,
+    d_eps: f64,
+    snapshot: DrafterSnapshot,
+}
+
+/// Build the speculative draft task for one slot, or `None` when the next
+/// iteration is unpredictable or not worth speculating on: the request is
+/// predicted to finish (EOS in the tail, budget or window exhaustion), the
+/// bonus token is past the reference (unguided), the policy cannot
+/// forecast its K, or the forecast K is 0 (an empty draft is free to
+/// recompute).
+///
+/// `out_len` / `cache_len` are the slot's output length and committed
+/// cache *before* the in-flight iteration commits; `drafts` / `k_chosen`
+/// are the in-flight iteration's proposal; `last_iter_s` seeds the
+/// forecast observation's cost (the policy's utility signal — a stale
+/// value can only mispredict K, costing a bubble).
+#[allow(clippy::too_many_arguments)]
+pub fn plan_spec_task(
+    slot: usize,
+    req: &Request,
+    policy: &dyn SpecPolicy,
+    drafter: &EngineDrafter,
+    context: &[u32],
+    out_len: usize,
+    cache_len: usize,
+    max_seq: usize,
+    drafts: &[u32],
+    k_chosen: usize,
+    last_iter_s: f64,
+    d_eps: f64,
+) -> Option<SpecTask> {
+    let snapshot = DrafterSnapshot::of(drafter)?;
+    let drafted = drafts.len();
+    // Full-acceptance prediction: every draft lands and the bonus token is
+    // the reference continuation. Past the reference end sampling is
+    // unguided — unpredictable, skip.
+    let bonus = *req.reference.get(out_len + drafted)?;
+    if bonus == EOS || drafts.contains(&EOS) {
+        return None; // predicted to finish: nothing to draft for
+    }
+    let out_next = out_len + drafted + 1;
+    if out_next >= req.max_new_tokens {
+        return None; // output budget will be exhausted this iteration
+    }
+    // Committed cache after a full-acceptance advance (1 + drafted).
+    let cache_next = cache_len + 1 + drafted;
+    let room = max_seq.saturating_sub(cache_next + 1);
+    if room == 0 {
+        return None; // KV window will be exhausted
+    }
+    let predicted = IterObs {
+        k_chosen,
+        drafted,
+        accepted: drafted,
+        emitted: drafted + 1,
+        iter_s: last_iter_s,
+    };
+    // Same K caps the plan stage will apply next iteration (the shared
+    // pool cannot be forecast — pool-shrunk K surfaces as a mismatch).
+    let mut k = policy.predict_next_k(&predicted)?.min(MAX_K);
+    k = k.min(room);
+    k = k.min(req.max_new_tokens.saturating_sub(out_next).saturating_sub(1));
+    if k == 0 {
+        return None;
+    }
+    let mut expected_tail = Vec::with_capacity(drafted + 1);
+    expected_tail.extend_from_slice(drafts);
+    expected_tail.push(bonus);
+    let mut ctx = Vec::with_capacity(context.len() + expected_tail.len());
+    ctx.extend_from_slice(context);
+    ctx.extend_from_slice(&expected_tail);
+    // Only the trace-level draft model reads the reference while
+    // proposing; the n-gram scan is context-only, so skip the copy.
+    let reference = match &snapshot {
+        DrafterSnapshot::SimEagle(_) => req.reference.clone(),
+        DrafterSnapshot::Ngram(_) => Vec::new(),
+    };
+    Some(SpecTask {
+        slot,
+        req_id: req.id,
+        ctx,
+        expected_tail,
+        reference,
+        out_idx: out_next,
+        k,
+        d_eps,
+        snapshot,
+    })
+}
+
+/// Outcome of reconciling one slot's lookahead entry against the K the
+/// plan stage actually chose.
+pub struct Reconciled {
+    /// The speculative drafts + their scan wall time, when the entry hit.
+    pub taken: Option<(Vec<u32>, u64)>,
+    pub hit: bool,
+    /// An entry existed but an assumption broke while drafting is still
+    /// needed (K > 0): the speculation must be recomputed.
+    pub recompute: bool,
+    /// On a hit, the verify window the scan ran under (its hiding budget
+    /// for the overlap cost rule); 0.0 otherwise.
+    pub hidden_window_s: f64,
+}
+
+/// The reconcile rule, shared verbatim by both engines (their batch=1
+/// parity depends on it): a lookahead entry is usable iff the slot still
+/// holds the same request, the committed context is exactly the predicted
+/// one (length + tail — contexts are append-only, so that implies full
+/// equality), and the planned K equals the forecast K. On a hit the
+/// drafter adopts the post-proposal snapshot, making the token stream
+/// bit-identical to serial drafting.
+pub fn reconcile_entry(
+    entry: Option<SpecDraft>,
+    req_id: u64,
+    k: usize,
+    context: &[u32],
+    drafter: &mut EngineDrafter,
+) -> Reconciled {
+    let mut out = Reconciled { taken: None, hit: false, recompute: false, hidden_window_s: 0.0 };
+    if let Some(e) = entry {
+        let valid = k > 0
+            && e.req_id == req_id
+            && e.k_assumed == k
+            && context.len() == e.expected_ctx_len
+            && context.ends_with(&e.expected_tail);
+        if valid {
+            drafter.adopt(e.snapshot_after);
+            out.hidden_window_s = e.window_s.unwrap_or(0.0);
+            out.taken = Some((e.drafts, e.draft_wall_ns));
+            out.hit = true;
+        } else if k > 0 {
+            out.recompute = true;
+        }
+    }
+    out
+}
+
+/// Execute one speculative draft (on whatever thread it lands on).
+pub fn run_spec_task(task: SpecTask) -> SpecDraft {
+    let mut snapshot = task.snapshot;
+    let t0 = Instant::now();
+    let drafts = snapshot.propose(&task.ctx, &task.reference, task.out_idx, task.k, task.d_eps);
+    SpecDraft {
+        slot: task.slot,
+        req_id: task.req_id,
+        expected_ctx_len: task.ctx.len(),
+        expected_tail: task.expected_tail,
+        k_assumed: task.k,
+        drafts,
+        draft_wall_ns: t0.elapsed().as_nanos() as u64,
+        snapshot_after: snapshot,
+        window_s: None,
+    }
+}
+
+/// Fan speculative drafts out across scoped threads — per-slot n-gram
+/// scans are independent CPU work. A single task runs inline (thread
+/// spawn overhead would dwarf the scan).
+pub fn run_spec_tasks(tasks: Vec<SpecTask>) -> Vec<SpecDraft> {
+    if tasks.len() <= 1 {
+        return tasks.into_iter().map(run_spec_task).collect();
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = tasks
+            .into_iter()
+            .map(|t| scope.spawn(move || run_spec_task(t)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("speculative draft thread panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::policy::StaticK;
+    use crate::workload::Task;
+
+    fn req(reference: Vec<u32>, max_new: usize) -> Request {
+        Request {
+            id: 7,
+            task: Task::Code,
+            prompt: vec![1, 2, 3],
+            reference,
+            eps: 0.0,
+            max_new_tokens: max_new,
+        }
+    }
+
+    fn ngram_drafter() -> EngineDrafter {
+        EngineDrafter::Ngram(NgramDrafter::new(1, 4))
+    }
+
+    #[test]
+    fn spec_task_predicts_full_acceptance_tail() {
+        let r = req(vec![10, 11, 12, 13, 14, 15, 16, 17], 50);
+        let policy = StaticK::new(3);
+        let drafter = ngram_drafter();
+        // In-flight iteration: out_len 2, drafting [12, 13] → bonus is
+        // reference[4] = 14.
+        let ctx = vec![1, 2, 3, 10, 11];
+        let task =
+            plan_spec_task(0, &r, &policy, &drafter, &ctx, 2, 5, 384, &[12, 13], 2, 0.01, 0.0)
+                .expect("predictable");
+        assert_eq!(task.expected_tail, vec![12, 13, 14]);
+        assert_eq!(task.out_idx, 5);
+        assert_eq!(task.k, 3);
+        assert_eq!(task.ctx.len(), ctx.len() + 3);
+        let draft = run_spec_task(task);
+        assert_eq!(draft.k_assumed, 3);
+        assert_eq!(draft.expected_ctx_len, 8);
+    }
+
+    #[test]
+    fn spec_task_skips_unpredictable_futures() {
+        let policy = StaticK::new(3);
+        let drafter = ngram_drafter();
+        let ctx = vec![1, 2, 3, 10, 11];
+        // Bonus past the reference end: unguided, unpredictable.
+        let r = req(vec![10, 11], 50);
+        assert!(
+            plan_spec_task(0, &r, &policy, &drafter, &ctx, 2, 5, 384, &[12, 13], 2, 0.0, 0.0)
+                .is_none()
+        );
+        // Predicted EOS bonus: request finishes.
+        let r = req(vec![10, 11, 12, 13, crate::tokenizer::EOS], 50);
+        assert!(
+            plan_spec_task(0, &r, &policy, &drafter, &ctx, 2, 5, 384, &[12, 13], 2, 0.0, 0.0)
+                .is_none()
+        );
+        // Output budget exhausted by the in-flight iteration.
+        let r = req(vec![10, 11, 12, 13, 14, 15], 5);
+        assert!(
+            plan_spec_task(0, &r, &policy, &drafter, &ctx, 2, 5, 384, &[12, 13], 2, 0.0, 0.0)
+                .is_none()
+        );
+    }
+
+    #[test]
+    fn fanned_out_tasks_match_inline_execution() {
+        // Thread fan-out must not change any proposal: run the same tasks
+        // inline and scoped, compare bit-for-bit.
+        let r = req((0..40).map(|i| 20 + (i % 7)).collect(), 100);
+        let policy = StaticK::new(4);
+        let drafter = ngram_drafter();
+        let mk = |slot: usize| {
+            let ctx: Vec<u32> = (0..30).map(|i| 20 + ((i + slot) % 7) as u32).collect();
+            plan_spec_task(slot, &r, &policy, &drafter, &ctx, 10, 30, 384, &[21, 22], 2, 0.01, 0.0)
+                .expect("predictable")
+        };
+        let inline: Vec<SpecDraft> = (0..6).map(|s| run_spec_task(mk(s))).collect();
+        let fanned = run_spec_tasks((0..6).map(mk).collect());
+        assert_eq!(inline.len(), fanned.len());
+        for (a, b) in inline.iter().zip(&fanned) {
+            assert_eq!(a.slot, b.slot);
+            assert_eq!(a.drafts, b.drafts);
+            assert_eq!(a.expected_tail, b.expected_tail);
+            assert_eq!(a.k_assumed, b.k_assumed);
+        }
+    }
+}

@@ -30,11 +30,27 @@ pub struct IterCost {
     pub reject_s: f64,
     /// Fixed kernel-launch / framework overhead.
     pub overhead_s: f64,
+    /// Portion of `draft_s` hidden by pipelined execution: with the
+    /// two-stage pipeline, draft(i+1) runs on the CPU while the target
+    /// model verifies iteration i, so drafting only costs wall time where
+    /// it exceeds the concurrent verify window (`max(draft, verify)`
+    /// semantics). Always 0 in serial mode; never exceeds `draft_s`.
+    pub draft_hidden_s: f64,
 }
 
 impl IterCost {
+    /// Effective iteration time on the simulated clock. Drafting is charged
+    /// only for its *exposed* part — the overlap-aware accounting of the
+    /// pipelined serving path (serial runs have `draft_hidden_s == 0`, so
+    /// this stays the plain component sum).
     pub fn total(&self) -> f64 {
-        self.base_s + self.expert_s + self.draft_s + self.reject_s + self.overhead_s
+        self.base_s + self.expert_s + self.exposed_draft_s() + self.reject_s + self.overhead_s
+    }
+
+    /// Drafting time that actually extends the iteration (not hidden under
+    /// the previous iteration's verify window).
+    pub fn exposed_draft_s(&self) -> f64 {
+        (self.draft_s - self.draft_hidden_s).max(0.0)
     }
 
     /// Verification-only time (what the target model spends).
@@ -93,6 +109,7 @@ impl GpuCostModel {
                 0.0
             },
             overhead_s: self.hw.iter_overhead_s,
+            draft_hidden_s: 0.0,
         }
     }
 
@@ -131,12 +148,7 @@ impl GpuCostModel {
         } else {
             0.0
         };
-        let draft_s = match drafter {
-            DrafterKind::Ngram => drafting_requests as f64 * self.hw.ngram_draft_s,
-            DrafterKind::EagleLite => {
-                total_drafted as f64 * self.hw.eagle_draft_bytes / self.hw.eff_bw()
-            }
-        };
+        let draft_s = self.draft_cost_batch(total_drafted, drafting_requests, drafter);
         IterCost {
             base_s: self.spec.base_bytes() / self.hw.eff_bw(),
             expert_s,
@@ -147,6 +159,85 @@ impl GpuCostModel {
                 0.0
             },
             overhead_s: self.hw.iter_overhead_s,
+            draft_hidden_s: 0.0,
+        }
+    }
+
+    /// Aggregate drafting cost of a (sub)set of a batch's requests:
+    /// `drafting_requests` of them ran the per-request n-gram CPU scan, or
+    /// together they proposed `drafted_tokens` draft-model tokens. Used for
+    /// the fused charge and, by the pipelined engine, to price the slice of
+    /// drafting that ran hidden under the previous verify window.
+    pub fn draft_cost_batch(
+        &self,
+        drafted_tokens: usize,
+        drafting_requests: usize,
+        drafter: DrafterKind,
+    ) -> f64 {
+        match drafter {
+            DrafterKind::Ngram => drafting_requests as f64 * self.hw.ngram_draft_s,
+            DrafterKind::EagleLite => {
+                drafted_tokens as f64 * self.hw.eagle_draft_bytes / self.hw.eff_bw()
+            }
+        }
+    }
+
+    /// One request's **marginal** share of a fused batched iteration — the
+    /// utility signal the batched Cascade policy observes (ROADMAP "batched
+    /// Cascade policy study"). Charging every request the whole fused cost
+    /// biases utility below 1 as the batch grows (the request is billed for
+    /// its neighbours' experts), making Cascade disable speculation exactly
+    /// where batching made it cheap. Instead:
+    ///
+    /// * base weights + fixed overhead are **amortized** over the
+    ///   `n_active` requests that shared the fused step;
+    /// * routed experts are charged at the request's **marginal**
+    ///   contribution — the experts *only* its tokens activated
+    ///   (`marginal_unique_per_mini_layer`, from the backend's fused
+    ///   routing attribution); experts shared with a neighbour would have
+    ///   been fetched anyway;
+    /// * drafting and rejection are the request's own.
+    ///
+    /// With `n_active == 1` the marginal set is the request's full unique
+    /// set and this reduces exactly to [`Self::verify_cost`]. Marginal
+    /// shares deliberately do **not** sum to the fused total: shared
+    /// experts and the amortization remainder are interaction terms no
+    /// single request should be billed for.
+    pub fn marginal_request_cost(
+        &self,
+        marginal_unique_per_mini_layer: &[usize],
+        n_active: usize,
+        tokens: usize,
+        drafted: usize,
+        drafter: DrafterKind,
+    ) -> IterCost {
+        let n = n_active.max(1) as f64;
+        let expert_s = if self.spec.is_moe() {
+            let mean_marginal = if marginal_unique_per_mini_layer.is_empty() {
+                // Analytic fallback (no routing attribution): a lone token
+                // activates top_k; at batch > 1 assume full overlap decay.
+                self.spec.top_k as f64 / n
+            } else {
+                marginal_unique_per_mini_layer.iter().sum::<usize>() as f64
+                    / marginal_unique_per_mini_layer.len() as f64
+            };
+            let cap = (self.spec.n_experts as f64).min(tokens as f64 * self.spec.top_k as f64);
+            let unique = mean_marginal.min(cap).max(0.0);
+            self.spec.layers as f64 * unique * self.spec.expert_bytes() / self.hw.eff_bw()
+        } else {
+            0.0
+        };
+        IterCost {
+            base_s: self.spec.base_bytes() / self.hw.eff_bw() / n,
+            expert_s,
+            draft_s: self.draft_cost(drafted, drafter),
+            reject_s: if drafted > 0 {
+                self.hw.reject_fixed_s + self.hw.reject_per_token_s * drafted as f64
+            } else {
+                0.0
+            },
+            overhead_s: self.hw.iter_overhead_s / n,
+            draft_hidden_s: 0.0,
         }
     }
 
@@ -309,5 +400,52 @@ mod tests {
         let m = model("qwen");
         let measured = m.verify_cost(&[4, 4], 1, 0, DrafterKind::Ngram);
         assert!((measured.total() - m.baseline_cost().total()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hidden_draft_reduces_total_but_never_below_verify() {
+        // Overlap rule: total() charges only the exposed draft slice.
+        let m = model("mixtral");
+        let serial = m.verify_cost(&[6, 6], 4, 3, DrafterKind::Ngram);
+        let pipelined = IterCost { draft_hidden_s: serial.draft_s, ..serial };
+        assert!(pipelined.total() < serial.total());
+        assert!((pipelined.total() - (serial.total() - serial.draft_s)).abs() < 1e-15);
+        assert_eq!(pipelined.exposed_draft_s(), 0.0);
+        // Hidden beyond draft_s must clamp, not go negative.
+        let over = IterCost { draft_hidden_s: serial.draft_s * 2.0, ..serial };
+        assert!(over.exposed_draft_s() == 0.0 && over.total() >= over.verify_s());
+    }
+
+    #[test]
+    fn marginal_of_one_equals_single_request_cost() {
+        // Alone in the batch, a request's marginal set is its full unique
+        // set and the marginal charge is exactly the single-request charge.
+        let m = model("mixtral");
+        for (unique, t, drafted) in [(vec![4, 5], 4usize, 3usize), (vec![2, 2], 1, 0)] {
+            for drafter in [DrafterKind::Ngram, DrafterKind::EagleLite] {
+                let single = m.verify_cost(&unique, t, drafted, drafter);
+                let marginal = m.marginal_request_cost(&unique, 1, t, drafted, drafter);
+                assert!((single.total() - marginal.total()).abs() < 1e-15, "{drafter:?}");
+                assert!((single.expert_s - marginal.expert_s).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn marginal_share_shrinks_with_batch_and_overlap() {
+        // In a 4-deep batch with heavy expert overlap, the request's
+        // marginal charge must fall well below the full fused charge.
+        let m = model("deepseek");
+        let fused = m.batch_verify_cost(&[18, 18], 16, 12, 4, DrafterKind::Ngram);
+        // This request exclusively activates only 3 experts per layer.
+        let marginal = m.marginal_request_cost(&[3, 3], 4, 4, 3, DrafterKind::Ngram);
+        assert!(marginal.total() < fused.total() * 0.5, "{} vs {}", marginal.total(), fused.total());
+        // Base + overhead amortize across the batch.
+        assert!((marginal.base_s - fused.base_s / 4.0).abs() < 1e-15);
+        assert!((marginal.overhead_s - fused.overhead_s / 4.0).abs() < 1e-15);
+        // A request with zero exclusive experts still pays its amortized
+        // base share, never a negative or zero cost.
+        let free_rider = m.marginal_request_cost(&[0, 0], 4, 4, 3, DrafterKind::Ngram);
+        assert!(free_rider.expert_s == 0.0 && free_rider.total() > 0.0);
     }
 }

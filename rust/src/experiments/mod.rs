@@ -4,6 +4,7 @@
 
 pub mod batching;
 pub mod figures;
+pub mod pipeline;
 pub mod related;
 pub mod runner;
 
@@ -92,6 +93,11 @@ pub fn all() -> Vec<Experiment> {
             id: "batch",
             caption: "EXTENSION: continuous batching, batch-deduplicated expert cost (sim)",
             run: batching::batch_compare,
+        },
+        Experiment {
+            id: "pipeline",
+            caption: "EXTENSION: pipelined drafting, draft(i+1) under verify(i) (sim)",
+            run: pipeline::pipeline_compare,
         },
     ]
 }

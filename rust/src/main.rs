@@ -3,8 +3,11 @@
 //! Subcommands:
 //!   list-models                       show the model zoo + artifact status
 //!   serve   --model M --task T ...    serve a request stream, print summary
-//!                                     (--batch N enables continuous batching)
+//!                                     (--batch N enables continuous batching,
+//!                                      --pipeline on overlaps draft with verify)
 //!   sweep                             batch=1 vs batch=4 comparison table
+//!   bench                             serial vs pipelined TPOT benchmark
+//!                                     (emits BENCH_pipeline.json)
 //!   figure  <id|all> [--backend B]    regenerate a paper table/figure
 //!   golden-check                      validate artifacts against JAX goldens
 //!
@@ -72,15 +75,26 @@ USAGE:
   cascade serve  [--model mixtral] [--task code|math|extract|code+math|math+extract|code+extract|all-3]
                  [--policy k0..k7|cascade|ablation0..3] [--drafter ngram|eagle]
                  [--tokens 400] [--backend real|sim] [--seed N] [--batch 1]
+                 [--pipeline on|off]
   cascade sweep  [--tokens 300] [--out-dir results]
                  (continuous-batching comparison: batch=1 vs 4, static-K vs Cascade)
-  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|batch|all>
+  cascade bench  [--tokens 2000] [--quick 1] [--out BENCH_pipeline.json]
+                 (serial vs pipelined TPOT/bubble-fraction table at batch 1/4,
+                  written as JSON for CI perf tracking)
+  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|batch|pipeline|all>
                  [--backend real|sim] [--tokens 300] [--out-dir results]
 
   --batch N > 1 serves through the continuous-batching engine: one fused
   verify step per iteration over all in-flight requests, a shared KV block
   pool, and expert fetches de-duplicated across the batch (sim backend;
   the real backend is single-slot and clamps to batch=1).
+
+  --pipeline on drafts iteration i+1 while iteration i verifies (paper
+  Fig. 14's worker pipeline): drafting cost is hidden under the verify
+  window wherever the acceptance prediction holds (bubbles are recomputed
+  and reported). Token output is bit-identical to serial for a fixed K
+  schedule (static-K policies); Cascade observes the cheaper pipelined
+  cost and may legitimately choose different K.
 "
     );
     std::process::exit(2)
@@ -98,6 +112,7 @@ fn main() -> Result<()> {
         "golden-check" => golden_check(),
         "serve" => serve(&args),
         "sweep" => sweep(&args),
+        "bench" => bench(&args),
         "figure" => figure(&args),
         _ => usage(),
     }
@@ -179,6 +194,11 @@ fn serve(args: &Args) -> Result<()> {
         "eagle" => cascade::config::DrafterKind::EagleLite,
         other => bail!("unknown drafter {other:?}"),
     };
+    let pipeline = match args.get("pipeline", "off").as_str() {
+        "on" => true,
+        "off" => false,
+        other => bail!("unknown --pipeline {other:?} (want on|off)"),
+    };
     let backend_name = match backend {
         BackendKind::Real => "real",
         BackendKind::Sim => "sim",
@@ -188,6 +208,7 @@ fn serve(args: &Args) -> Result<()> {
         drafter,
         seed,
         max_batch: batch,
+        pipeline,
         ..EngineConfig::default()
     };
     let budget = Budget { max_tokens: tokens, max_requests: 10_000 };
@@ -244,6 +265,21 @@ fn serve(args: &Args) -> Result<()> {
             "test-phase fraction".into(),
             format!("{:.1}%", 100.0 * m.run.test_phase_fraction()),
         ]);
+        if pipeline {
+            t.row(vec![
+                "pipeline hits / bubbles".into(),
+                format!("{} / {}", m.pipeline_hits(), m.pipeline_misses()),
+            ]);
+            t.row(vec![
+                "bubble fraction".into(),
+                format!("{:.1}%", 100.0 * m.bubble_fraction()),
+            ]);
+            t.row(vec![
+                "draft hidden (sim)".into(),
+                format!("{:.2}ms", 1e3 * m.draft_hidden_s()),
+            ]);
+            t.row(vec!["draft recomputes".into(), m.draft_recomputes().to_string()]);
+        }
         t.row(vec!["host wall time".into(), format!("{:.2}s", wall.as_secs_f64())]);
         println!("{}", t.render());
         return Ok(());
@@ -270,6 +306,20 @@ fn serve(args: &Args) -> Result<()> {
         "test-phase fraction".into(),
         format!("{:.1}%", 100.0 * run.test_phase_fraction()),
     ]);
+    if pipeline {
+        t.row(vec![
+            "pipeline hits / bubbles".into(),
+            format!("{} / {}", engine.pipeline_hits, engine.pipeline_misses),
+        ]);
+        t.row(vec!["draft recomputes".into(), engine.draft_recomputes.to_string()]);
+        let hidden_s: f64 = run
+            .requests
+            .iter()
+            .flat_map(|r| &r.iters)
+            .map(|i| i.cost.draft_hidden_s)
+            .sum();
+        t.row(vec!["draft hidden (sim)".into(), format!("{:.2}ms", 1e3 * hidden_s)]);
+    }
     t.row(vec!["host wall time".into(), format!("{:.2}s", wall.as_secs_f64())]);
     t.row(vec![
         "host tok/s".into(),
@@ -290,6 +340,122 @@ fn emit_tables(id: &str, tables: &[Table], out_dir: &str) -> Result<()> {
             println!("  -> {path}");
         }
     }
+    Ok(())
+}
+
+/// Serial vs pipelined TPOT benchmark (the repo's perf-trajectory seed):
+/// static-K n-gram serving on the sim backend at batch 1 and 4, with and
+/// without the drafting pipeline. Prints the table and writes
+/// `BENCH_pipeline.json` for CI artifact tracking. `--quick 1` shrinks the
+/// token budget for CI smoke runs.
+fn bench(args: &Args) -> Result<()> {
+    use cascade::util::json;
+
+    let quick = args.get("quick", "0") != "0";
+    let tokens = args.get_usize("tokens", if quick { 400 } else { 2_000 })?;
+    let out_path = args.get("out", "BENCH_pipeline.json");
+    let seed = args.get_usize("seed", 0xCA5CADE)? as u64;
+    let reg = registry()?;
+    let task = "code+math";
+    let workload = Workload::by_name(task).expect("known mix");
+    let policy = PolicyKind::Static(3);
+
+    let mut t = Table::new(
+        format!("pipeline bench: mixtral/{task}/static-k3 (sim, {tokens} tokens)"),
+        &[
+            "batch",
+            "mode",
+            "tokens",
+            "TPOT",
+            "tok/s",
+            "speedup",
+            "bubble",
+            "hidden draft ms",
+            "recomputes",
+        ],
+    );
+    let mut rows: Vec<json::Value> = Vec::new();
+    let mut speedups: Vec<(&str, json::Value)> = Vec::new();
+    for batch in [1usize, 4] {
+        let mut tpot_serial = f64::NAN;
+        for pipeline in [false, true] {
+            let cfg = EngineConfig {
+                model: "mixtral".into(),
+                max_batch: batch,
+                pipeline,
+                seed,
+                ..EngineConfig::default()
+            };
+            let max_new = cfg.max_new_tokens;
+            let mut engine = BatchEngine::sim(&reg, cfg, policy.clone())?;
+            let stream = RequestStream::new(workload.clone(), seed, max_new);
+            let mut sched =
+                Scheduler::new(stream, Budget { max_tokens: tokens, max_requests: 10_000 });
+            let t0 = std::time::Instant::now();
+            let m = sched.run_batched(&mut engine)?;
+            let host_s = t0.elapsed().as_secs_f64();
+
+            let mode = if pipeline { "pipelined" } else { "serial" };
+            let tpot = m.tpot_s();
+            if !pipeline {
+                tpot_serial = tpot;
+            }
+            let speedup = tpot_serial / tpot;
+            t.row(vec![
+                batch.to_string(),
+                mode.into(),
+                m.run.total_tokens().to_string(),
+                ms(tpot),
+                format!("{:.1}", 1.0 / tpot),
+                format!("{speedup:.3}x"),
+                format!("{:.1}%", 100.0 * m.bubble_fraction()),
+                format!("{:.2}", 1e3 * m.draft_hidden_s()),
+                m.draft_recomputes().to_string(),
+            ]);
+            rows.push(json::obj(vec![
+                ("batch", json::num(batch as f64)),
+                ("mode", json::str(mode)),
+                ("tokens", json::num(m.run.total_tokens() as f64)),
+                ("tpot_ms", json::num(1e3 * tpot)),
+                ("tokens_per_s", json::num(1.0 / tpot)),
+                ("bubble_fraction", json::num(m.bubble_fraction())),
+                ("draft_hidden_ms", json::num(1e3 * m.draft_hidden_s())),
+                ("draft_wall_ms", json::num(m.draft_wall_ns() as f64 / 1e6)),
+                ("draft_wall_hidden_ms", json::num(m.draft_wall_hidden_ns() as f64 / 1e6)),
+                ("pipeline_hits", json::num(m.pipeline_hits() as f64)),
+                ("pipeline_misses", json::num(m.pipeline_misses() as f64)),
+                ("draft_recomputes", json::num(m.draft_recomputes() as f64)),
+                ("host_wall_s", json::num(host_s)),
+            ]));
+            if pipeline {
+                speedups.push((
+                    if batch == 1 { "b1" } else { "b4" },
+                    json::num(speedup),
+                ));
+            }
+        }
+    }
+    println!("{}", t.render());
+
+    let doc = json::obj(vec![
+        ("bench", json::str("pipeline")),
+        ("model", json::str("mixtral")),
+        ("task", json::str(task)),
+        ("policy", json::str("static-k3")),
+        ("drafter", json::str("ngram")),
+        ("backend", json::str("sim")),
+        ("token_budget", json::num(tokens as f64)),
+        ("quick", json::Value::Bool(quick)),
+        ("rows", json::arr(rows)),
+        ("speedup_pipelined_over_serial", json::obj(speedups)),
+    ]);
+    if let Some(parent) = std::path::Path::new(&out_path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&out_path, json::write(&doc))?;
+    println!("  -> {out_path}");
     Ok(())
 }
 

@@ -240,6 +240,22 @@ pub struct BatchIterRecord {
     /// Mean per-layer sum of per-request unique counts (the no-dedup upper
     /// bound); the gap to `batch_unique_experts` is cross-request overlap.
     pub summed_unique_experts: f64,
+    /// Spans whose drafts came from the pipelined lookahead (drafting ran
+    /// hidden under the previous verify window). 0 in serial mode.
+    pub pipeline_hits: usize,
+    /// Spans that needed a fresh scan with the pipeline on — bubbles,
+    /// where drafting sat on the critical path. 0 in serial mode.
+    pub pipeline_misses: usize,
+    /// Lookahead entries discarded because an assumption broke (rejection,
+    /// sampler deviation, K change). 0 in serial mode.
+    pub draft_recomputes: usize,
+    /// Host wall time spent drafting this iteration's spans (all of it on
+    /// the critical path in serial mode — the baseline the pipeline's
+    /// hidden split is judged against).
+    pub draft_wall_ns: u64,
+    /// The slice of `draft_wall_ns` that ran hidden under the previous
+    /// verify window (pipeline hits).
+    pub draft_wall_hidden_ns: u64,
 }
 
 /// Aggregate over a continuous-batching run: per-request traces (latency
@@ -308,6 +324,51 @@ impl BatchRunMetrics {
             return 0.0;
         }
         self.iters.iter().map(|r| r.cost.expert_s).sum::<f64>() / self.iters.len() as f64
+    }
+
+    // ---- Pipelined-drafting telemetry -----------------------------------
+
+    /// Spans drafted off the critical path (pipelined lookahead hits).
+    pub fn pipeline_hits(&self) -> usize {
+        self.iters.iter().map(|r| r.pipeline_hits).sum()
+    }
+
+    /// Spans drafted on the critical path with the pipeline on (bubbles).
+    pub fn pipeline_misses(&self) -> usize {
+        self.iters.iter().map(|r| r.pipeline_misses).sum()
+    }
+
+    /// Speculative drafts discarded because an assumption broke.
+    pub fn draft_recomputes(&self) -> usize {
+        self.iters.iter().map(|r| r.draft_recomputes).sum()
+    }
+
+    /// Fraction of drafting spans the pipeline failed to hide:
+    /// misses / (hits + misses). 0.0 when nothing drafted (or serial mode,
+    /// where no span is ever counted as a hit or miss).
+    pub fn bubble_fraction(&self) -> f64 {
+        let hits = self.pipeline_hits();
+        let misses = self.pipeline_misses();
+        if hits + misses == 0 {
+            return 0.0;
+        }
+        misses as f64 / (hits + misses) as f64
+    }
+
+    /// Simulated drafting seconds hidden under verify windows (Σ per-iter
+    /// `IterCost::draft_hidden_s`) — the pipeline's simulated-clock win.
+    pub fn draft_hidden_s(&self) -> f64 {
+        self.iters.iter().map(|r| r.cost.draft_hidden_s).sum()
+    }
+
+    /// Total host wall time spent drafting across the run.
+    pub fn draft_wall_ns(&self) -> u64 {
+        self.iters.iter().map(|r| r.draft_wall_ns).sum()
+    }
+
+    /// Host drafting wall time that ran overlapped with verification.
+    pub fn draft_wall_hidden_ns(&self) -> u64 {
+        self.iters.iter().map(|r| r.draft_wall_hidden_ns).sum()
     }
 }
 
@@ -437,6 +498,11 @@ mod tests {
             cost: IterCost { base_s: 0.01, expert_s: dedup * 1e-3, ..Default::default() },
             batch_unique_experts: dedup,
             summed_unique_experts: summed,
+            pipeline_hits: 0,
+            pipeline_misses: 0,
+            draft_recomputes: 0,
+            draft_wall_ns: 0,
+            draft_wall_hidden_ns: 0,
         }
     }
 
@@ -460,5 +526,40 @@ mod tests {
         assert!(b.tpot_s().is_nan());
         assert_eq!(b.mean_occupancy(), 0.0);
         assert_eq!(b.overlap_savings(), 0.0);
+        assert_eq!(b.bubble_fraction(), 0.0);
+        assert_eq!(b.draft_hidden_s(), 0.0);
+    }
+
+    #[test]
+    fn pipeline_telemetry_aggregates() {
+        let mut b = BatchRunMetrics { max_batch: 4, ..Default::default() };
+        let mut r1 = batch_rec(4, 8, 6.0, 12.0);
+        r1.pipeline_hits = 3;
+        r1.pipeline_misses = 1;
+        r1.draft_recomputes = 1;
+        r1.draft_wall_ns = 1000;
+        r1.draft_wall_hidden_ns = 750;
+        r1.cost.draft_s = 1.0e-3;
+        r1.cost.draft_hidden_s = 0.75e-3;
+        let mut r2 = batch_rec(2, 4, 4.0, 6.0);
+        r2.pipeline_hits = 2;
+        r2.draft_wall_ns = 400;
+        r2.draft_wall_hidden_ns = 400;
+        r2.cost.draft_s = 0.5e-3;
+        r2.cost.draft_hidden_s = 0.5e-3;
+        b.iters.push(r1);
+        b.iters.push(r2);
+        assert_eq!(b.pipeline_hits(), 5);
+        assert_eq!(b.pipeline_misses(), 1);
+        assert_eq!(b.draft_recomputes(), 1);
+        assert!((b.bubble_fraction() - 1.0 / 6.0).abs() < 1e-12);
+        assert!((b.draft_hidden_s() - 1.25e-3).abs() < 1e-15);
+        assert_eq!(b.draft_wall_ns(), 1400);
+        assert_eq!(b.draft_wall_hidden_ns(), 1150);
+        // The overlap rule feeds TPOT: hidden drafting lowers Σ cost.
+        let hidden_total: f64 = b.iters.iter().map(|r| r.cost.total()).sum();
+        let serial_total: f64 =
+            b.iters.iter().map(|r| r.cost.total() + r.cost.draft_hidden_s).sum();
+        assert!(hidden_total < serial_total);
     }
 }

@@ -235,12 +235,17 @@ impl Backend for SimBackend {
     /// Native fused step: every span routes on its own slot state in one
     /// pass, and expert ids are unioned per layer across the whole batch —
     /// the de-duplicated fetch set a fused MoE verify kernel would move.
+    /// Because routing is id-attributable here, each slot also gets its
+    /// **marginal** expert counts — experts no other span touched — which
+    /// feed the per-request utility signal of the batched Cascade policy.
     fn step_batch(&mut self, spans: &[VerifySpan]) -> Result<BatchStep> {
         let layers = self.mini.layers;
         let is_moe = self.mini.is_moe;
         let mut union: Vec<BTreeSet<usize>> = vec![Default::default(); layers];
         let mut summed = vec![0usize; layers];
-        let mut slots = Vec::with_capacity(spans.len());
+        // Route every span first, keeping the per-slot id sets so marginal
+        // contributions can be computed against the whole batch.
+        let mut routed: Vec<(Vec<BTreeSet<usize>>, Vec<u32>)> = Vec::with_capacity(spans.len());
         for span in spans {
             anyhow::ensure!(
                 span.slot < self.slots.len(),
@@ -248,18 +253,45 @@ impl Backend for SimBackend {
                 span.slot
             );
             let (sets, sampled) = self.step_slot(span.slot, span.tokens.len(), &span.guides, span.eps);
-            let unique_experts: Vec<usize> = if is_moe {
-                sets.iter().map(|s| s.len()).collect()
-            } else {
-                Vec::new()
-            };
             if is_moe {
                 for (l, set) in sets.iter().enumerate() {
                     summed[l] += set.len();
                     union[l].extend(set.iter().copied());
                 }
             }
-            slots.push(SlotStep { slot: span.slot, step: BackendStep { sampled, unique_experts } });
+            routed.push((sets, sampled));
+        }
+        // Per layer, how many spans activated each expert; an expert with
+        // multiplicity 1 is marginal to its sole activator.
+        let mut multiplicity: Vec<std::collections::BTreeMap<usize, usize>> =
+            vec![Default::default(); layers];
+        if is_moe {
+            for (sets, _) in &routed {
+                for (l, set) in sets.iter().enumerate() {
+                    for &e in set {
+                        *multiplicity[l].entry(e).or_insert(0) += 1;
+                    }
+                }
+            }
+        }
+        let mut slots = Vec::with_capacity(spans.len());
+        for (span, (sets, sampled)) in spans.iter().zip(routed) {
+            let (unique_experts, marginal_unique_experts) = if is_moe {
+                let unique: Vec<usize> = sets.iter().map(|s| s.len()).collect();
+                let marginal: Vec<usize> = sets
+                    .iter()
+                    .enumerate()
+                    .map(|(l, set)| set.iter().filter(|&&e| multiplicity[l][&e] == 1).count())
+                    .collect();
+                (unique, marginal)
+            } else {
+                (Vec::new(), Vec::new())
+            };
+            slots.push(SlotStep {
+                slot: span.slot,
+                step: BackendStep { sampled, unique_experts },
+                marginal_unique_experts,
+            });
         }
         let (batch_unique_experts, summed_unique_experts) = if is_moe {
             (union.into_iter().map(|s| s.len()).collect(), summed)
@@ -433,6 +465,36 @@ mod tests {
             assert!(out.batch_unique_experts[l] <= 8);
             assert!(out.batch_unique_experts[l] < out.summed_unique_experts[l]);
         }
+    }
+
+    #[test]
+    fn marginal_attribution_consistent() {
+        // Marginal counts: experts only one span activated. Per layer the
+        // marginal sum can never exceed the batch union, and no slot's
+        // marginal can exceed its own unique count.
+        let mut b = SimBackend::new(mini(0.0, 8, 2), 5);
+        let spans: Vec<VerifySpan> = (0..4)
+            .map(|slot| {
+                b.begin_slot(slot, &req_id(slot as u64 + 1)).unwrap();
+                VerifySpan { slot, tokens: vec![0; 4], guides: vec![None; 4], eps: 1.0 }
+            })
+            .collect();
+        let out = b.step_batch(&spans).unwrap();
+        for l in 0..2 {
+            let marginal_sum: usize =
+                out.slots.iter().map(|s| s.marginal_unique_experts[l]).sum();
+            assert!(marginal_sum <= out.batch_unique_experts[l]);
+            for s in &out.slots {
+                assert!(s.marginal_unique_experts[l] <= s.step.unique_experts[l]);
+            }
+        }
+        // A lone span's marginal set is its full unique set.
+        let mut solo = SimBackend::new(mini(0.0, 8, 2), 5);
+        solo.begin_slot(0, &req_id(1)).unwrap();
+        let out = solo
+            .step_batch(&[VerifySpan { slot: 0, tokens: vec![0; 4], guides: vec![None; 4], eps: 1.0 }])
+            .unwrap();
+        assert_eq!(out.slots[0].marginal_unique_experts, out.slots[0].step.unique_experts);
     }
 
     #[test]

@@ -29,6 +29,16 @@ pub trait SpecPolicy {
     fn name(&self) -> String;
     /// Reset per-request state (Cascade is per-request, §5).
     fn reset(&mut self);
+    /// Best-effort forecast of what `next_k` will return once `predicted`
+    /// — the in-flight iteration's outcome, guessed *before* verification
+    /// completes — has been observed. The pipelined engine drafts
+    /// iteration i+1 under iteration i's verify window with this K; a
+    /// wrong forecast costs a draft recompute (a pipeline bubble), never
+    /// correctness. `None` means the policy cannot forecast and the
+    /// engine skips speculative drafting for the slot.
+    fn predict_next_k(&self, _predicted: &IterObs) -> Option<usize> {
+        None
+    }
     /// Access the Cascade manager, if this policy has one (trace figures).
     fn manager(&self) -> Option<&CascadeManager> {
         None
@@ -65,6 +75,12 @@ impl SpecPolicy for StaticK {
     }
 
     fn reset(&mut self) {}
+
+    fn predict_next_k(&self, _predicted: &IterObs) -> Option<usize> {
+        // Static K is exactly predictable: pipelined drafting never bubbles
+        // on a K change.
+        Some(self.k)
+    }
 }
 
 /// Cascade: utility-driven dynamic speculation (paper §5).
@@ -98,6 +114,18 @@ impl SpecPolicy for CascadePolicy {
 
     fn reset(&mut self) {
         self.mgr = CascadeManager::new(self.params.clone());
+    }
+
+    fn predict_next_k(&self, predicted: &IterObs) -> Option<usize> {
+        // Run the observation the engine *expects* this iteration to
+        // produce through a scratch copy of the state machine. Exact
+        // whenever the guess (full acceptance, last iteration's cost)
+        // holds and the machine does not cross a trial/phase boundary on
+        // a cost surprise — mid set-phase, where Cascade spends most
+        // iterations, K is constant and the forecast is trivially right.
+        let mut mgr = self.mgr.clone();
+        mgr.observe(predicted.emitted as f64, predicted.iter_s);
+        Some(mgr.next_k())
     }
 
     fn manager(&self) -> Option<&CascadeManager> {

@@ -6,6 +6,10 @@
 //! * batch=4 runs report occupancy and cross-request expert overlap, and
 //!   per-iteration expert cost grows sub-linearly in batch size;
 //! * the shared KV pool stays within budget under engine load;
+//! * pipelined drafting (draft i+1 under verify i) is lossless: identical
+//!   outputs and iteration structure across drafters and batch sizes, a
+//!   simulated clock never slower than serial, and a strict TPOT win
+//!   wherever the lookahead hits;
 //! * regression: guided sampling past the reference end is unguided, not
 //!   steered to EOS (long generations must not silently truncate).
 
@@ -26,6 +30,12 @@ fn requests(task: &str, n: usize, max_new: usize) -> Vec<Request> {
     RequestStream::new(w, 0xCA5CADE, max_new).take(n)
 }
 
+fn batch_serve_cfg(cfg: EngineConfig, policy: PolicyKind, reqs: &[Request]) -> BatchRunMetrics {
+    let reg = registry();
+    let mut engine = BatchEngine::sim(&reg, cfg, policy).unwrap();
+    engine.serve_all(reqs).unwrap()
+}
+
 fn batch_serve(
     model: &str,
     policy: PolicyKind,
@@ -33,15 +43,18 @@ fn batch_serve(
     batch: usize,
     reqs: &[Request],
 ) -> BatchRunMetrics {
-    let reg = registry();
     let cfg = EngineConfig {
         model: model.into(),
         drafter,
         max_batch: batch,
         ..Default::default()
     };
-    let mut engine = BatchEngine::sim(&reg, cfg, policy).unwrap();
-    engine.serve_all(reqs).unwrap()
+    batch_serve_cfg(cfg, policy, reqs)
+}
+
+/// Simulated decode clock of a batched run: Σ fused iteration cost.
+fn batch_clock_s(m: &BatchRunMetrics) -> f64 {
+    m.iters.iter().map(|r| r.cost.total()).sum()
 }
 
 #[test]
@@ -269,4 +282,250 @@ fn batched_run_also_continues_past_reference_end() {
     let m = batch_serve("mixtral", PolicyKind::Static(2), DrafterKind::Ngram, 4, &reqs);
     let longest = m.run.requests.iter().map(|r| r.output.len()).max().unwrap();
     assert!(longest > 20, "batched generations truncated at the reference end: {longest}");
+}
+
+// ---------------------------------------------------------------------------
+// Pipelined drafting (draft i+1 under verify i)
+// ---------------------------------------------------------------------------
+
+fn cfg_pipe(model: &str, drafter: DrafterKind, batch: usize, pipeline: bool) -> EngineConfig {
+    EngineConfig {
+        model: model.into(),
+        drafter,
+        max_batch: batch,
+        pipeline,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn pipelined_outputs_identical_to_serial_across_drafters_and_batches() {
+    // Losslessness: with a fixed (static) K schedule, pipelining may only
+    // change *when* drafting work happens, never what tokens come out —
+    // token-for-token, iteration-for-iteration.
+    for (model, drafter) in [
+        ("mixtral", DrafterKind::Ngram),
+        ("mixtral", DrafterKind::EagleLite),
+        ("qwen", DrafterKind::Ngram),
+        ("llama", DrafterKind::Ngram),
+    ] {
+        for batch in [1usize, 2, 4] {
+            let reqs = requests("code+math", 6, 100);
+            let policy = PolicyKind::Static(3);
+            let serial =
+                batch_serve_cfg(cfg_pipe(model, drafter, batch, false), policy.clone(), &reqs);
+            let piped =
+                batch_serve_cfg(cfg_pipe(model, drafter, batch, true), policy.clone(), &reqs);
+            assert_eq!(serial.run.requests.len(), piped.run.requests.len());
+            for (s, p) in serial.run.requests.iter().zip(&piped.run.requests) {
+                assert_eq!(s.id, p.id);
+                assert_eq!(
+                    s.output, p.output,
+                    "{model}/{drafter:?}@b{batch}: pipelined output diverged from serial"
+                );
+                assert_eq!(
+                    s.iters.len(),
+                    p.iters.len(),
+                    "{model}/{drafter:?}@b{batch}: iteration structure changed"
+                );
+                for (si, pi) in s.iters.iter().zip(&p.iters) {
+                    assert_eq!(si.k_chosen, pi.k_chosen);
+                    assert_eq!(si.drafted, pi.drafted);
+                    assert_eq!(si.accepted, pi.accepted);
+                    assert_eq!(si.emitted, pi.emitted);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_clock_never_exceeds_serial() {
+    // Property: with identical token streams (static K), the pipelined
+    // simulated clock is the serial clock minus hidden drafting — it can
+    // never be slower, on any seed, model, K, or batch size.
+    for seed in [1u64, 7, 42, 0xCA5CADE] {
+        for (model, k, batch) in [
+            ("mixtral", 2usize, 1usize),
+            ("mixtral", 3, 4),
+            ("deepseek", 3, 2),
+            ("qwen", 1, 4),
+        ] {
+            let w = Workload::by_name("code+math").unwrap();
+            let reqs: Vec<Request> = RequestStream::new(w, seed, 80).take(5);
+            let policy = PolicyKind::Static(k);
+            let serial = batch_serve_cfg(
+                cfg_pipe(model, DrafterKind::Ngram, batch, false),
+                policy.clone(),
+                &reqs,
+            );
+            let piped = batch_serve_cfg(
+                cfg_pipe(model, DrafterKind::Ngram, batch, true),
+                policy.clone(),
+                &reqs,
+            );
+            assert_eq!(
+                serial.run.total_tokens(),
+                piped.run.total_tokens(),
+                "{model}/k{k}@b{batch}/seed{seed}: outputs changed"
+            );
+            let (cs, cp) = (batch_clock_s(&serial), batch_clock_s(&piped));
+            assert!(
+                cp <= cs + 1e-12,
+                "{model}/k{k}@b{batch}/seed{seed}: pipelined clock {cp} > serial {cs}"
+            );
+            // The clocks differ by exactly the hidden drafting time.
+            assert!(
+                (cs - cp - piped.draft_hidden_s()).abs() < 1e-12,
+                "{model}/k{k}@b{batch}/seed{seed}: clock gap != hidden drafting"
+            );
+        }
+    }
+}
+
+#[test]
+fn pipelined_strictly_improves_tpot_when_lookahead_hits() {
+    // Acceptance criterion: at batch >= 2 with the n-gram drafter, the
+    // pipeline must land hits on the repetitive code workload and strictly
+    // improve the batch-clock TPOT — with zero output divergence.
+    let reqs = requests("code", 8, 120);
+    let policy = PolicyKind::Static(3);
+    for batch in [2usize, 4] {
+        let serial = batch_serve_cfg(
+            cfg_pipe("mixtral", DrafterKind::Ngram, batch, false),
+            policy.clone(),
+            &reqs,
+        );
+        let piped = batch_serve_cfg(
+            cfg_pipe("mixtral", DrafterKind::Ngram, batch, true),
+            policy.clone(),
+            &reqs,
+        );
+        for (s, p) in serial.run.requests.iter().zip(&piped.run.requests) {
+            assert_eq!(s.output, p.output, "b{batch}: output divergence");
+        }
+        assert!(piped.pipeline_hits() > 0, "b{batch}: lookahead never hit");
+        assert!(piped.draft_hidden_s() > 0.0, "b{batch}: nothing hidden");
+        assert!(
+            piped.tpot_s() < serial.tpot_s(),
+            "b{batch}: pipelined TPOT {} not strictly below serial {}",
+            piped.tpot_s(),
+            serial.tpot_s()
+        );
+    }
+}
+
+#[test]
+fn pipelined_batch1_matches_single_request_engine() {
+    // Engine parity: the single-request engine runs the same two-stage
+    // pipeline, so batch=1 pipelined must reproduce it exactly — outputs,
+    // iteration structure, and overlap-adjusted costs.
+    let reg = registry();
+    for (policy, drafter) in [
+        (PolicyKind::Static(3), DrafterKind::Ngram),
+        (PolicyKind::Cascade(Default::default()), DrafterKind::Ngram),
+        (PolicyKind::Static(2), DrafterKind::EagleLite),
+    ] {
+        let reqs = requests("code+math", 3, 120);
+        let cfg = cfg_pipe("mixtral", drafter, 1, true);
+        let mut single = Engine::sim(&reg, cfg.clone(), policy.build()).unwrap();
+        let single_run = single.serve_all(&reqs).unwrap();
+        let batched = batch_serve_cfg(cfg, policy.clone(), &reqs);
+
+        assert_eq!(single_run.requests.len(), batched.run.requests.len());
+        for (s, b) in single_run.requests.iter().zip(&batched.run.requests) {
+            assert_eq!(s.id, b.id);
+            assert_eq!(
+                s.output, b.output,
+                "{}: pipelined batch=1 output diverged from the single engine",
+                policy.label()
+            );
+            assert_eq!(s.iters.len(), b.iters.len());
+            for (si, bi) in s.iters.iter().zip(&b.iters) {
+                assert_eq!(si.k_chosen, bi.k_chosen);
+                assert_eq!(si.drafted, bi.drafted);
+                assert_eq!(si.emitted, bi.emitted);
+                assert!(
+                    (si.cost.total() - bi.cost.total()).abs() < 1e-15,
+                    "{}: overlap-adjusted cost diverged",
+                    policy.label()
+                );
+                assert!((si.cost.draft_hidden_s - bi.cost.draft_hidden_s).abs() < 1e-15);
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_survives_pool_pressure_losslessly() {
+    // Pool-shrunk K breaks the lookahead's K assumption — those drafts
+    // must be recomputed, not misused. Same undersized pool as the serial
+    // pressure test; outputs must match serial exactly.
+    let block = 16usize;
+    let max_new = 40usize;
+    let reqs = requests("code", 6, max_new);
+    let prompt_blocks = |r: &Request| r.prompt.len().div_ceil(block);
+    let min_prompt = reqs.iter().map(prompt_blocks).min().unwrap();
+    let span_blocks = reqs
+        .iter()
+        .map(|r| (r.prompt.len() + 1 + max_new).div_ceil(block) + 1)
+        .max()
+        .unwrap();
+    let pool_blocks = (4 * min_prompt - 1).max(3 * span_blocks);
+    let mk = |pipeline: bool| EngineConfig {
+        model: "mixtral".into(),
+        max_batch: 4,
+        kv_pool_blocks: pool_blocks,
+        pipeline,
+        ..Default::default()
+    };
+    let serial = batch_serve_cfg(mk(false), PolicyKind::Static(2), &reqs);
+    let piped = batch_serve_cfg(mk(true), PolicyKind::Static(2), &reqs);
+    assert_eq!(serial.run.requests.len(), piped.run.requests.len());
+    for (s, p) in serial.run.requests.iter().zip(&piped.run.requests) {
+        assert_eq!(s.output, p.output, "pool pressure broke pipelined losslessness");
+    }
+    assert!(batch_clock_s(&piped) <= batch_clock_s(&serial) + 1e-12);
+}
+
+#[test]
+fn pipelined_cascade_telemetry_is_consistent() {
+    // Cascade + pipeline: K decisions see pipeline-true (marginal,
+    // overlap-adjusted) utility, so trajectories may legitimately differ
+    // from serial — but the run must complete and the telemetry must be
+    // internally consistent.
+    let reqs = requests("code+math", 8, 100);
+    let m = batch_serve_cfg(
+        cfg_pipe("mixtral", DrafterKind::Ngram, 4, true),
+        PolicyKind::Cascade(Default::default()),
+        &reqs,
+    );
+    assert_eq!(m.run.requests.len(), 8);
+    assert!(m.run.total_tokens() > 0);
+    let (hits, misses) = (m.pipeline_hits(), m.pipeline_misses());
+    assert!(hits + misses > 0, "no drafting spans observed");
+    assert!((0.0..=1.0).contains(&m.bubble_fraction()));
+    assert!(m.draft_wall_hidden_ns() <= m.draft_wall_ns());
+    assert!(m.draft_hidden_s() >= 0.0);
+    // Hidden drafting can never exceed what was drafted at all.
+    for r in &m.iters {
+        assert!(r.cost.draft_hidden_s <= r.cost.draft_s + 1e-15);
+        assert!(r.pipeline_hits + r.pipeline_misses <= r.n_active);
+    }
+}
+
+#[test]
+fn serial_mode_reports_draft_wall_baseline_without_pipeline_counters() {
+    // The satellite wiring: serial runs surface total drafting wall time
+    // (the baseline the pipeline is judged against) with zero hits,
+    // bubbles, or hidden time.
+    let reqs = requests("code", 4, 80);
+    let m = batch_serve("mixtral", PolicyKind::Static(3), DrafterKind::Ngram, 4, &reqs);
+    assert!(m.draft_wall_ns() > 0, "no draft wall time measured");
+    assert_eq!(m.draft_wall_hidden_ns(), 0);
+    assert_eq!(m.pipeline_hits(), 0);
+    assert_eq!(m.pipeline_misses(), 0);
+    assert_eq!(m.draft_recomputes(), 0);
+    assert_eq!(m.bubble_fraction(), 0.0);
+    assert_eq!(m.draft_hidden_s(), 0.0);
 }
