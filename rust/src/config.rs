@@ -88,6 +88,37 @@ pub enum DrafterKind {
     EagleLite,
 }
 
+/// Expert→shard placement strategy under expert-parallel sharding
+/// (`EngineConfig::shards` > 1). See rust/docs/sharding.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlacementKind {
+    /// Round-robin: expert `e` lives on shard `e % shards`. Weight-balanced
+    /// by construction, blind to which experts activate together.
+    Balanced,
+    /// Greedy co-activation-aware packer: experts that frequently activate
+    /// in the same layer-step are spread across shards (their loads stack
+    /// on the critical path), rebuilt online from the expert co-occurrence
+    /// histogram the id-attributing backend feeds.
+    CoActivation,
+}
+
+impl PlacementKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "balanced" => Ok(PlacementKind::Balanced),
+            "coactivation" => Ok(PlacementKind::CoActivation),
+            other => anyhow::bail!("unknown placement {other:?} (want balanced|coactivation)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlacementKind::Balanced => "balanced",
+            PlacementKind::CoActivation => "coactivation",
+        }
+    }
+}
+
 /// Engine-level configuration for one serving run.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -124,6 +155,16 @@ pub struct EngineConfig {
     /// cost as its utility signal, so it may legitimately pick different K
     /// (that is the point — K decisions see pipeline-true utility).
     pub pipeline: bool,
+    /// Expert-parallel shard count for the cost model (1 = single-GPU, the
+    /// paper's setting). At `shards > 1` the routed-expert term of the
+    /// fused verify cost becomes the **max over per-shard deduped expert
+    /// loads** plus a per-step all-to-all latency term, so speculative
+    /// expert mass partially hides behind parallel fetch — which raises
+    /// utility and lets Cascade pick larger K. Clamped to the model's
+    /// expert count; a no-op for dense models.
+    pub shards: usize,
+    /// Expert→shard placement strategy at `shards > 1`.
+    pub placement: PlacementKind,
     pub cascade: CascadeParams,
 }
 
@@ -140,6 +181,8 @@ impl Default for EngineConfig {
             max_batch: 1,
             kv_pool_blocks: 0,
             pipeline: false,
+            shards: 1,
+            placement: PlacementKind::Balanced,
             cascade: CascadeParams::default(),
         }
     }

@@ -51,6 +51,11 @@ pub struct SlotStep {
     /// identities (sequential fallback) this equals the slot's own unique
     /// counts: with no de-duplication every fetch is marginal.
     pub marginal_unique_experts: Vec<usize>,
+    /// Per mini layer, the expert *ids* only this slot activated —
+    /// the id-level view of `marginal_unique_experts`, which the engine
+    /// groups by shard for the max-over-shards marginal charge under
+    /// expert parallelism. Empty without id attribution.
+    pub marginal_expert_ids: Vec<Vec<usize>>,
 }
 
 /// Outputs of one fused verify step over several requests.
@@ -64,6 +69,16 @@ pub struct BatchStep {
     /// Per-layer sum of per-slot unique counts — the no-dedup upper bound;
     /// the gap to `batch_unique_experts` is cross-request expert overlap.
     pub summed_unique_experts: Vec<usize>,
+    /// Per mini layer, the **sorted deduped expert ids** across the whole
+    /// batch — the id-level view of `batch_unique_experts`, which the
+    /// engine groups by shard under expert parallelism and feeds to the
+    /// co-activation histogram. Only id-attributing backends (SimBackend)
+    /// populate this; empty otherwise and for dense models.
+    pub expert_ids: Vec<Vec<usize>>,
+    /// Per mini layer, the sorted ids activated by **two or more** slots —
+    /// the shared expert mass the marginal-cost fairness floor amortizes.
+    /// Empty without id attribution.
+    pub shared_expert_ids: Vec<Vec<usize>>,
 }
 
 /// A target model the engine can serve with.
@@ -102,6 +117,14 @@ pub trait Backend {
     /// How many requests this backend can hold in flight.
     fn max_slots(&self) -> usize {
         1
+    }
+
+    /// Whether `step_batch` attributes expert *identities* (per-layer id
+    /// unions, per-slot exclusive ids) rather than just counts. Expert-
+    /// parallel cost sharding needs identities to group loads by shard;
+    /// the engine prices unsharded on backends that return false.
+    fn attributes_expert_ids(&self) -> bool {
+        false
     }
 
     /// Bind a new request to `slot`.
@@ -162,12 +185,19 @@ pub trait Backend {
                 summed[l] += u;
             }
             let marginal_unique_experts = step.unique_experts.clone();
-            slots.push(SlotStep { slot: span.slot, step, marginal_unique_experts });
+            slots.push(SlotStep {
+                slot: span.slot,
+                step,
+                marginal_unique_experts,
+                marginal_expert_ids: Vec::new(),
+            });
         }
         Ok(BatchStep {
             slots,
             batch_unique_experts: summed.clone(),
             summed_unique_experts: summed,
+            expert_ids: Vec::new(),
+            shared_expert_ids: Vec::new(),
         })
     }
 

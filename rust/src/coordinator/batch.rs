@@ -33,11 +33,11 @@
 //! (fused cost charged once per iteration), including pipeline hit/bubble
 //! telemetry.
 
-use crate::config::{DrafterKind, EngineConfig, MAX_K};
+use crate::config::{DrafterKind, EngineConfig, PlacementKind, MAX_K};
 use crate::coordinator::backend::{Backend, BatchStep, VerifySpan};
 use crate::coordinator::engine::EngineDrafter;
 use crate::coordinator::pipeline::{plan_spec_task, reconcile_entry, run_spec_tasks, SpecDraft};
-use crate::cost::{GpuCostModel, IterCost};
+use crate::cost::{CoActivationStats, ExpertPlacement, GpuCostModel, IterCost};
 use crate::kv::KvBlockPool;
 use crate::metrics::{BatchIterRecord, BatchRunMetrics, IterRecord, RequestMetrics, RunMetrics};
 use crate::models::Registry;
@@ -122,7 +122,23 @@ pub struct BatchEngine {
     /// is stamped with the verify window it drafted under — the hiding
     /// budget of the overlap cost rule.
     lookahead: Vec<SpecDraft>,
+    /// Effective expert-parallel shard count (cfg.shards clamped to the
+    /// model's expert count; 1 for dense models).
+    n_shards: usize,
+    /// Current expert → shard map. Starts balanced; under the
+    /// co-activation strategy it is rebuilt every
+    /// [`PLACEMENT_REFRESH`] fused iterations from `coact`.
+    placement: ExpertPlacement,
+    /// Online expert co-occurrence histogram (fed from the backend's
+    /// per-layer id unions when it attributes ids).
+    coact: CoActivationStats,
+    iters_since_placement: usize,
 }
+
+/// Fused iterations between co-activation placement rebuilds. Small enough
+/// to adapt within a serving run, large enough that the histogram has
+/// signal before the first rebuild.
+const PLACEMENT_REFRESH: usize = 32;
 
 impl BatchEngine {
     /// Build over an explicit backend. `cfg.max_batch` is clamped to what
@@ -150,6 +166,18 @@ impl BatchEngine {
         let pool = KvBlockPool::new(total_blocks, kv_block);
         let mut slots = Vec::with_capacity(max_batch);
         slots.resize_with(max_batch, || None);
+        // Expert-parallel setup: shards beyond the expert count cannot hold
+        // a full expert each; dense models have nothing to shard, and a
+        // backend that cannot attribute expert ids (sequential fallback)
+        // is priced unsharded — clamp so telemetry never claims otherwise.
+        let n_experts = backend.mini().n_experts;
+        let n_shards = if backend.mini().is_moe && backend.attributes_expert_ids() {
+            cfg.shards.max(1).min(n_experts.max(1))
+        } else {
+            1
+        };
+        let placement = ExpertPlacement::balanced(n_experts, n_shards);
+        let coact = CoActivationStats::new(n_experts);
         Self {
             cfg,
             backend,
@@ -162,7 +190,21 @@ impl BatchEngine {
             done: Vec::new(),
             batch_iters: Vec::new(),
             lookahead: Vec::new(),
+            n_shards,
+            placement,
+            coact,
+            iters_since_placement: 0,
         }
+    }
+
+    /// Effective expert-parallel shard count (1 = unsharded).
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Current expert → shard map (telemetry / tests).
+    pub fn placement(&self) -> &ExpertPlacement {
+        &self.placement
     }
 
     /// Sim-backend batched engine (native fused routing, full batching).
@@ -576,13 +618,40 @@ impl BatchEngine {
         let total_tokens: usize = spans.iter().map(|s| s.tokens.len()).sum();
         let total_drafted: usize = planned.iter().map(|p| p.drafted).sum();
         let drafting_requests = planned.iter().filter(|p| p.drafted > 0).count();
-        let cost_full = self.cost.batch_verify_cost(
-            &batch.batch_unique_experts,
-            total_tokens,
-            total_drafted,
-            drafting_requests,
-            drafter_kind,
-        );
+        // Expert-parallel path: group the batch's deduped id sets by shard
+        // and price the per-layer **max-over-shards** load plus the
+        // all-to-all. Falls back to the unsharded charge at shards=1 or
+        // without id attribution — bit-exact with the single-GPU model.
+        let sharded = self.n_shards > 1 && !batch.expert_ids.is_empty();
+        // Per-layer per-shard loads plus their per-layer maxes, computed
+        // once — the same maxes price the fused step AND feed the
+        // telemetry, so the charged and reported critical path cannot
+        // diverge.
+        let shard_loads: Option<(Vec<Vec<usize>>, Vec<usize>)> = if sharded {
+            let loads = self.placement.shard_loads(&batch.expert_ids);
+            let maxes: Vec<usize> =
+                loads.iter().map(|l| l.iter().copied().max().unwrap_or(0)).collect();
+            Some((loads, maxes))
+        } else {
+            None
+        };
+        let cost_full = match &shard_loads {
+            Some((_, maxes)) => self.cost.sharded_batch_verify_cost(
+                maxes,
+                self.n_shards,
+                total_tokens,
+                total_drafted,
+                drafting_requests,
+                drafter_kind,
+            ),
+            None => self.cost.batch_verify_cost(
+                &batch.batch_unique_experts,
+                total_tokens,
+                total_drafted,
+                drafting_requests,
+                drafter_kind,
+            ),
+        };
         // Overlap rule: a lookahead hit's scan ran while an earlier fused
         // step verified (the per-slot scans run concurrently on threads),
         // so each hit's own draft cost is charged only where it exceeds
@@ -608,6 +677,29 @@ impl BatchEngine {
         // ---- Per-request rejection sampling + commit --------------------
         // `planned`, `spans`, and `batch.slots` are index-aligned.
         let n_active = spans.len();
+        // Shared expert mass per layer for the marginal fairness floor
+        // (each request is charged at least a 1/n_active slice of it).
+        // Sharded, both the marginal and shared slices carry per-layer
+        // max-over-shards counts; unsharded, shared is derived as
+        // union − Σ marginals (zero under the no-dedup fallback, where
+        // every fetch is marginal — so the floor is inert there).
+        let shared_counts: Vec<usize> = if sharded {
+            self.placement.max_loads(&batch.shared_expert_ids)
+        } else {
+            batch
+                .batch_unique_experts
+                .iter()
+                .enumerate()
+                .map(|(l, &u)| {
+                    let excl: usize = batch
+                        .slots
+                        .iter()
+                        .map(|s| s.marginal_unique_experts.get(l).copied().unwrap_or(0))
+                        .sum();
+                    u.saturating_sub(excl)
+                })
+                .collect()
+        };
         let mut emitted_total = 0usize;
         // Host wall of the verify+commit window, excluding the speculative
         // next-iteration scans that ran inside it (they belong to the
@@ -639,8 +731,16 @@ impl BatchEngine {
             // exclusive contribution) — the batched Cascade utility
             // signal — with its own draft slice discounted when it ran
             // hidden in the pipeline.
+            let marginal_counts: Vec<usize> = if sharded {
+                // Max-over-shards view of the request's exclusive experts:
+                // its contribution to the expert-parallel critical path.
+                self.placement.max_loads(&slot_step.marginal_expert_ids)
+            } else {
+                slot_step.marginal_unique_experts.clone()
+            };
             let req_cost_full = self.cost.marginal_request_cost(
-                &slot_step.marginal_unique_experts,
+                &marginal_counts,
+                &shared_counts,
                 n_active,
                 span.tokens.len(),
                 plan.drafted,
@@ -651,7 +751,12 @@ impl BatchEngine {
             } else {
                 0.0
             };
-            let req_cost = IterCost { draft_hidden_s: req_hidden, ..req_cost_full };
+            let req_cost = IterCost {
+                draft_hidden_s: req_hidden,
+                // The fused step's all-to-all is a batch-shared term.
+                alltoall_s: cost.alltoall_s / n_active.max(1) as f64,
+                ..req_cost_full
+            };
             let obs = IterObs {
                 k_chosen: plan.k_chosen,
                 drafted: plan.drafted,
@@ -678,6 +783,55 @@ impl BatchEngine {
             }
         }
 
+        // Per-shard telemetry: mean per-layer load per shard, the critical
+        // path (max shard), and imbalance = max / (union / shards) — 1.0 is
+        // perfectly balanced. Unsharded iterations report the single-shard
+        // view so shard analysis composes with the PR 2 overlap telemetry.
+        let (shard_unique, max_shard_unique, shard_imbalance) = match &shard_loads {
+            Some((loads, maxes)) if !loads.is_empty() => {
+                let layers = loads.len() as f64;
+                let mut per_shard = vec![0.0f64; self.n_shards];
+                for l in loads {
+                    for (s, &c) in l.iter().enumerate() {
+                        per_shard[s] += c as f64;
+                    }
+                }
+                for v in &mut per_shard {
+                    *v /= layers;
+                }
+                let max_mean = maxes.iter().map(|&m| m as f64).sum::<f64>() / layers;
+                let union_mean = layer_mean(&batch.batch_unique_experts);
+                let imbalance = if union_mean > 0.0 {
+                    max_mean / (union_mean / self.n_shards as f64)
+                } else {
+                    1.0
+                };
+                (per_shard, max_mean, imbalance)
+            }
+            _ => (Vec::new(), layer_mean(&batch.batch_unique_experts), 1.0),
+        };
+
+        // Feed the co-activation histogram and periodically rebuild the
+        // placement — only under the co-activation strategy (balanced
+        // never reads the histogram, so it skips the pair counting on the
+        // hot path). A rebuild only affects *future* iterations' costs —
+        // this iteration was priced under the placement it actually ran
+        // with.
+        if self.n_shards > 1
+            && self.cfg.placement == PlacementKind::CoActivation
+            && !batch.expert_ids.is_empty()
+        {
+            self.coact.observe(&batch.expert_ids);
+            self.iters_since_placement += 1;
+            if self.iters_since_placement >= PLACEMENT_REFRESH {
+                self.placement = self.coact.greedy_placement(self.n_shards);
+                // Decay after each rebuild so the next one weighs recent
+                // routing over history (adapts to workload phase shifts).
+                self.coact.decay();
+                self.iters_since_placement = 0;
+            }
+        }
+
         self.batch_iters.push(BatchIterRecord {
             n_active: spans.len(),
             total_tokens,
@@ -686,6 +840,9 @@ impl BatchEngine {
             cost,
             batch_unique_experts: layer_mean(&batch.batch_unique_experts),
             summed_unique_experts: layer_mean(&batch.summed_unique_experts),
+            shard_unique,
+            max_shard_unique,
+            shard_imbalance,
             pipeline_hits: reconcile.hits,
             pipeline_misses: reconcile.misses,
             draft_recomputes: reconcile.recomputes,
@@ -725,6 +882,7 @@ impl BatchEngine {
             run,
             iters: std::mem::take(&mut self.batch_iters),
             max_batch: self.max_batch,
+            n_shards: self.n_shards,
         }
     }
 
@@ -767,6 +925,11 @@ impl BatchEngine {
     /// Name for experiment tables.
     pub fn label(&self) -> String {
         let pipe = if self.cfg.pipeline { "+pipe" } else { "" };
-        format!("{}/{}@b{}{pipe}", self.cfg.model, self.policy_kind.label(), self.max_batch)
+        let shard = if self.n_shards > 1 {
+            format!("+ep{}/{}", self.n_shards, self.cfg.placement.label())
+        } else {
+            String::new()
+        };
+        format!("{}/{}@b{}{pipe}{shard}", self.cfg.model, self.policy_kind.label(), self.max_batch)
     }
 }

@@ -24,6 +24,13 @@ pub struct HwParams {
     pub reject_fixed_s: f64,
     /// Rejection-sampling cost per draft token.
     pub reject_per_token_s: f64,
+    /// Expert-parallel all-to-all (dispatch + combine) fixed latency per
+    /// MoE layer when experts are sharded across devices (NVLink-class
+    /// interconnect, small-message regime). Charged only at shards > 1.
+    pub alltoall_layer_s: f64,
+    /// Additional all-to-all cost per in-flight token per MoE layer
+    /// (activation bytes crossing the interconnect).
+    pub alltoall_token_s: f64,
 }
 
 impl Default for HwParams {
@@ -36,6 +43,8 @@ impl Default for HwParams {
             eagle_draft_bytes: 0.66e9, // 0.33B params * FP16
             reject_fixed_s: 0.10e-3,
             reject_per_token_s: 0.06e-3,
+            alltoall_layer_s: 8e-6,
+            alltoall_token_s: 0.2e-6,
         }
     }
 }
@@ -56,5 +65,9 @@ mod tests {
         let hw = HwParams::default();
         assert!(hw.eff_bw() > 400e9 && hw.eff_bw() < 960e9);
         assert!(hw.iter_overhead_s < 0.01);
+        // Per-layer all-to-all must stay far below a per-layer expert fetch
+        // or sharding could never win.
+        assert!(hw.alltoall_layer_s > 0.0 && hw.alltoall_layer_s < 1e-4);
+        assert!(hw.alltoall_token_s > 0.0 && hw.alltoall_token_s < hw.alltoall_layer_s);
     }
 }

@@ -10,8 +10,10 @@
 //! (Mixtral). See DESIGN.md §Substitutions.
 
 mod hw;
+mod placement;
 
 pub use hw::HwParams;
+pub use placement::{CoActivationStats, ExpertPlacement};
 
 use crate::config::DrafterKind;
 use crate::models::PaperScaleSpec;
@@ -36,6 +38,10 @@ pub struct IterCost {
     /// it exceeds the concurrent verify window (`max(draft, verify)`
     /// semantics). Always 0 in serial mode; never exceeds `draft_s`.
     pub draft_hidden_s: f64,
+    /// Expert-parallel all-to-all latency (token dispatch + combine across
+    /// shards). Always 0 at shards = 1 — single-GPU runs are bit-identical
+    /// to the unsharded cost model.
+    pub alltoall_s: f64,
 }
 
 impl IterCost {
@@ -44,7 +50,12 @@ impl IterCost {
     /// pipelined serving path (serial runs have `draft_hidden_s == 0`, so
     /// this stays the plain component sum).
     pub fn total(&self) -> f64 {
-        self.base_s + self.expert_s + self.exposed_draft_s() + self.reject_s + self.overhead_s
+        self.base_s
+            + self.expert_s
+            + self.exposed_draft_s()
+            + self.reject_s
+            + self.overhead_s
+            + self.alltoall_s
     }
 
     /// Drafting time that actually extends the iteration (not hidden under
@@ -53,9 +64,10 @@ impl IterCost {
         (self.draft_s - self.draft_hidden_s).max(0.0)
     }
 
-    /// Verification-only time (what the target model spends).
+    /// Verification-only time (what the target model spends, including the
+    /// expert-parallel all-to-all when sharded).
     pub fn verify_s(&self) -> f64 {
-        self.base_s + self.expert_s + self.overhead_s
+        self.base_s + self.expert_s + self.overhead_s + self.alltoall_s
     }
 }
 
@@ -110,6 +122,7 @@ impl GpuCostModel {
             },
             overhead_s: self.hw.iter_overhead_s,
             draft_hidden_s: 0.0,
+            alltoall_s: 0.0,
         }
     }
 
@@ -160,6 +173,80 @@ impl GpuCostModel {
             },
             overhead_s: self.hw.iter_overhead_s,
             draft_hidden_s: 0.0,
+            alltoall_s: 0.0,
+        }
+    }
+
+    /// Per-step all-to-all latency of an expert-parallel fused step:
+    /// dispatch + combine per MoE layer, plus a per-token activation term.
+    /// Zero at `n_shards <= 1` and for dense models.
+    pub fn alltoall_s(&self, n_shards: usize, total_tokens: usize) -> f64 {
+        if n_shards <= 1 || !self.spec.is_moe() {
+            return 0.0;
+        }
+        self.spec.layers as f64
+            * (self.hw.alltoall_layer_s + total_tokens as f64 * self.hw.alltoall_token_s)
+    }
+
+    /// Expert-parallel variant of [`Self::batch_verify_cost`]: the expert
+    /// set is sharded across `n_shards` devices, each shard fetches only
+    /// its resident experts, and per layer the shards run **in parallel**
+    /// — so the expert-movement term is priced at the per-layer **max over
+    /// per-shard deduped loads** (`shard_max_per_mini_layer`, from
+    /// [`ExpertPlacement::max_loads`] over the backend's id attribution),
+    /// plus the per-step all-to-all that routes tokens between shards.
+    ///
+    /// With `n_shards == 1` this delegates to `batch_verify_cost` and is
+    /// bit-exact with the single-GPU model (property-tested). Base weights
+    /// (attention/embeddings/router/shared experts) are replicated across
+    /// shards, so `base_s` is unchanged.
+    pub fn sharded_batch_verify_cost(
+        &self,
+        shard_max_per_mini_layer: &[usize],
+        n_shards: usize,
+        total_tokens: usize,
+        total_drafted: usize,
+        drafting_requests: usize,
+        drafter: DrafterKind,
+    ) -> IterCost {
+        if n_shards <= 1 {
+            return self.batch_verify_cost(
+                shard_max_per_mini_layer,
+                total_tokens,
+                total_drafted,
+                drafting_requests,
+                drafter,
+            );
+        }
+        let expert_s = if self.spec.is_moe() {
+            let mean_max = if shard_max_per_mini_layer.is_empty() {
+                // Analytic fallback: top_k experts spread over the shards.
+                (self.spec.top_k as f64 / n_shards as f64).ceil()
+            } else {
+                shard_max_per_mini_layer.iter().sum::<usize>() as f64
+                    / shard_max_per_mini_layer.len() as f64
+            };
+            // A shard cannot fetch more experts than it holds, nor more
+            // than the batch's tokens can activate.
+            let cap = (self.spec.n_experts.div_ceil(n_shards) as f64)
+                .min(total_tokens as f64 * self.spec.top_k as f64);
+            let unique = mean_max.min(cap).max(0.0);
+            self.spec.layers as f64 * unique * self.spec.expert_bytes() / self.hw.eff_bw()
+        } else {
+            0.0
+        };
+        IterCost {
+            base_s: self.spec.base_bytes() / self.hw.eff_bw(),
+            expert_s,
+            draft_s: self.draft_cost_batch(total_drafted, drafting_requests, drafter),
+            reject_s: if total_drafted > 0 {
+                self.hw.reject_fixed_s + self.hw.reject_per_token_s * total_drafted as f64
+            } else {
+                0.0
+            },
+            overhead_s: self.hw.iter_overhead_s,
+            draft_hidden_s: 0.0,
+            alltoall_s: self.alltoall_s(n_shards, total_tokens),
         }
     }
 
@@ -194,18 +281,31 @@ impl GpuCostModel {
     /// * routed experts are charged at the request's **marginal**
     ///   contribution — the experts *only* its tokens activated
     ///   (`marginal_unique_per_mini_layer`, from the backend's fused
-    ///   routing attribution); experts shared with a neighbour would have
-    ///   been fetched anyway;
+    ///   routing attribution) — **plus a fairness floor**: a `1/n_active`
+    ///   amortized share of the batch's *shared* expert mass
+    ///   (`shared_unique_per_mini_layer`, experts ≥ 2 requests activated).
+    ///   Without the floor a free-riding request whose experts are all
+    ///   shared observed near-zero cost (the ROADMAP fairness follow-on);
+    ///   with it, unsharded per-request expert charges sum to the fused
+    ///   expert total (every exclusive expert billed once, every shared
+    ///   expert split `1/n` ways — under sharding the max-over-shards
+    ///   slices make the sum an overshooting critical-path view instead).
+    ///   Pass an empty `shared` slice to disable the floor (no attribution
+    ///   available);
+    /// * under expert-parallel sharding both slices carry per-layer
+    ///   **max-over-shards** counts (the request's critical-path
+    ///   contribution), so utility sees the same max-over-shards law as
+    ///   the fused charge;
     /// * drafting and rejection are the request's own.
     ///
     /// With `n_active == 1` the marginal set is the request's full unique
-    /// set and this reduces exactly to [`Self::verify_cost`]. Marginal
-    /// shares deliberately do **not** sum to the fused total: shared
-    /// experts and the amortization remainder are interaction terms no
-    /// single request should be billed for.
+    /// set, the shared mass is empty, and this reduces exactly to
+    /// [`Self::verify_cost`]. (The expert-parallel all-to-all is a batch
+    /// term; the engine amortizes it onto requests separately.)
     pub fn marginal_request_cost(
         &self,
         marginal_unique_per_mini_layer: &[usize],
+        shared_unique_per_mini_layer: &[usize],
         n_active: usize,
         tokens: usize,
         drafted: usize,
@@ -221,8 +321,19 @@ impl GpuCostModel {
                 marginal_unique_per_mini_layer.iter().sum::<usize>() as f64
                     / marginal_unique_per_mini_layer.len() as f64
             };
+            let mean_shared = if shared_unique_per_mini_layer.is_empty() {
+                0.0
+            } else {
+                shared_unique_per_mini_layer.iter().sum::<usize>() as f64
+                    / shared_unique_per_mini_layer.len() as f64
+            };
+            // The activation cap bounds what the request's OWN tokens can
+            // touch; the amortized shared slice is a share of neighbours'
+            // real fetches and must not be clipped by it (clipping would
+            // undercharge exactly the short-span free-riders the floor
+            // targets, and break the sum-to-fused partition).
             let cap = (self.spec.n_experts as f64).min(tokens as f64 * self.spec.top_k as f64);
-            let unique = mean_marginal.min(cap).max(0.0);
+            let unique = (mean_marginal.min(cap) + mean_shared / n).max(0.0);
             self.spec.layers as f64 * unique * self.spec.expert_bytes() / self.hw.eff_bw()
         } else {
             0.0
@@ -238,6 +349,7 @@ impl GpuCostModel {
             },
             overhead_s: self.hw.iter_overhead_s / n,
             draft_hidden_s: 0.0,
+            alltoall_s: 0.0,
         }
     }
 
@@ -346,8 +458,12 @@ mod tests {
     fn breakdown_sums_to_total() {
         let m = model("phi");
         let c = m.verify_cost(&[4, 5], 4, 3, DrafterKind::Ngram);
-        let sum = c.base_s + c.expert_s + c.draft_s + c.reject_s + c.overhead_s;
+        let sum = c.base_s + c.expert_s + c.draft_s + c.reject_s + c.overhead_s + c.alltoall_s;
         assert!((sum - c.total()).abs() < 1e-15);
+        // The all-to-all term is part of both total() and verify_s().
+        let sharded = IterCost { alltoall_s: 1e-3, ..c };
+        assert!((sharded.total() - (c.total() + 1e-3)).abs() < 1e-15);
+        assert!((sharded.verify_s() - (c.verify_s() + 1e-3)).abs() < 1e-15);
     }
 
     #[test]
@@ -424,7 +540,7 @@ mod tests {
         for (unique, t, drafted) in [(vec![4, 5], 4usize, 3usize), (vec![2, 2], 1, 0)] {
             for drafter in [DrafterKind::Ngram, DrafterKind::EagleLite] {
                 let single = m.verify_cost(&unique, t, drafted, drafter);
-                let marginal = m.marginal_request_cost(&unique, 1, t, drafted, drafter);
+                let marginal = m.marginal_request_cost(&unique, &[], 1, t, drafted, drafter);
                 assert!((single.total() - marginal.total()).abs() < 1e-15, "{drafter:?}");
                 assert!((single.expert_s - marginal.expert_s).abs() < 1e-15);
             }
@@ -437,15 +553,103 @@ mod tests {
         // marginal charge must fall well below the full fused charge.
         let m = model("deepseek");
         let fused = m.batch_verify_cost(&[18, 18], 16, 12, 4, DrafterKind::Ngram);
-        // This request exclusively activates only 3 experts per layer.
-        let marginal = m.marginal_request_cost(&[3, 3], 4, 4, 3, DrafterKind::Ngram);
+        // This request exclusively activates 3 experts per layer; 6 more
+        // per layer are shared with neighbours (floored at a 1/4 share).
+        let marginal = m.marginal_request_cost(&[3, 3], &[6, 6], 4, 4, 3, DrafterKind::Ngram);
         assert!(marginal.total() < fused.total() * 0.5, "{} vs {}", marginal.total(), fused.total());
         // Base + overhead amortize across the batch.
         assert!((marginal.base_s - fused.base_s / 4.0).abs() < 1e-15);
         assert!((marginal.overhead_s - fused.overhead_s / 4.0).abs() < 1e-15);
-        // A request with zero exclusive experts still pays its amortized
-        // base share, never a negative or zero cost.
-        let free_rider = m.marginal_request_cost(&[0, 0], 4, 4, 3, DrafterKind::Ngram);
-        assert!(free_rider.expert_s == 0.0 && free_rider.total() > 0.0);
+    }
+
+    #[test]
+    fn fairness_floor_charges_free_riders_a_shared_slice() {
+        // Regression (ROADMAP fairness follow-on): a request whose experts
+        // are ALL shared with neighbours used to observe near-zero expert
+        // cost — speculating for free off the batch's fetch set. The floor
+        // charges it a 1/B amortized share of the shared mass instead.
+        let m = model("deepseek");
+        let free_rider = m.marginal_request_cost(&[0, 0], &[12, 12], 4, 4, 3, DrafterKind::Ngram);
+        let expected = m.spec.layers as f64 * (12.0 / 4.0) * m.spec.expert_bytes() / m.hw.eff_bw();
+        assert!(free_rider.expert_s > 0.0, "free rider still rides free");
+        assert!((free_rider.expert_s - expected).abs() < 1e-15);
+        // Without attribution (empty shared slice) the floor is inert —
+        // the pre-floor behavior, still > 0 total via the base share.
+        let no_attr = m.marginal_request_cost(&[0, 0], &[], 4, 4, 3, DrafterKind::Ngram);
+        assert!(no_attr.expert_s == 0.0 && no_attr.total() > 0.0);
+        // The per-request activation cap (tokens * top_k) bounds only the
+        // request's OWN marginal term, never its amortized share of the
+        // neighbours' shared fetches: a 1-token free-rider (cap = 6) in a
+        // batch whose shared mass is 40/layer still owes 40/4 = 10.
+        let short = m.marginal_request_cost(&[0, 0], &[40, 40], 4, 1, 0, DrafterKind::Ngram);
+        let expected_short =
+            m.spec.layers as f64 * (40.0 / 4.0) * m.spec.expert_bytes() / m.hw.eff_bw();
+        assert!((short.expert_s - expected_short).abs() < 1e-15, "floor clipped by span cap");
+    }
+
+    #[test]
+    fn marginal_plus_shared_shares_sum_to_fused_expert_cost() {
+        // The floor makes per-request expert charges a partition of the
+        // fused expert term: Σ_r (exclusive_r + shared/B) = union.
+        let m = model("deepseek");
+        let (excl, shared) = ([vec![3usize, 2], vec![1, 4], vec![0, 0], vec![2, 1]], [6usize, 5]);
+        let union: Vec<usize> = (0..2)
+            .map(|l| excl.iter().map(|e| e[l]).sum::<usize>() + shared[l])
+            .collect();
+        let fused = m.batch_verify_cost(&union, 16, 12, 4, DrafterKind::Ngram);
+        let sum: f64 = excl
+            .iter()
+            .map(|e| {
+                m.marginal_request_cost(e, &shared, 4, 4, 3, DrafterKind::Ngram).expert_s
+            })
+            .sum();
+        assert!((sum - fused.expert_s).abs() < 1e-12, "sum {sum} vs fused {}", fused.expert_s);
+    }
+
+    #[test]
+    fn sharded_one_shard_is_bitexact_with_batch_cost() {
+        // Property (ISSUE): shards=1 reproduces batch_verify_cost exactly.
+        for name in ["mixtral", "deepseek", "llama"] {
+            let m = model(name);
+            for (unique, t, d, r) in
+                [(vec![4, 5], 4usize, 3usize, 1usize), (vec![18, 18], 16, 12, 4)]
+            {
+                let a = m.batch_verify_cost(&unique, t, d, r, DrafterKind::Ngram);
+                let b = m.sharded_batch_verify_cost(&unique, 1, t, d, r, DrafterKind::Ngram);
+                assert_eq!(a, b, "{name}: shards=1 diverged from the unsharded cost");
+            }
+        }
+    }
+
+    #[test]
+    fn sharding_trades_expert_mass_for_alltoall() {
+        // 4-way sharding of a balanced load: the expert term drops ~4x,
+        // the all-to-all term appears, and the net verify time falls.
+        let m = model("mixtral"); // 8 experts
+        let unsharded = m.sharded_batch_verify_cost(&[8, 8], 1, 16, 12, 4, DrafterKind::Ngram);
+        let sharded = m.sharded_batch_verify_cost(&[2, 2], 4, 16, 12, 4, DrafterKind::Ngram);
+        assert_eq!(unsharded.alltoall_s, 0.0);
+        assert!(sharded.alltoall_s > 0.0);
+        assert!((sharded.expert_s - unsharded.expert_s / 4.0).abs() < 1e-15);
+        assert!(sharded.verify_s() < unsharded.verify_s());
+        // Base weights are replicated, not sharded.
+        assert!((sharded.base_s - unsharded.base_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sharded_load_capped_by_shard_capacity() {
+        let m = model("mixtral"); // 8 experts, 2/shard at 4 shards
+        let a = m.sharded_batch_verify_cost(&[100, 100], 4, 32, 24, 4, DrafterKind::Ngram);
+        let b = m.sharded_batch_verify_cost(&[2, 2], 4, 32, 24, 4, DrafterKind::Ngram);
+        assert!((a.expert_s - b.expert_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn dense_sharding_is_a_noop() {
+        let m = model("llama");
+        let a = m.sharded_batch_verify_cost(&[], 4, 8, 7, 1, DrafterKind::Ngram);
+        let b = m.batch_verify_cost(&[], 8, 7, 1, DrafterKind::Ngram);
+        assert!((a.total() - b.total()).abs() < 1e-15);
+        assert_eq!(a.alltoall_s, 0.0);
     }
 }

@@ -1,0 +1,319 @@
+//! Expert-parallel placement: which expert lives on which shard.
+//!
+//! Under expert parallelism the fused verify step's critical path is the
+//! **most-loaded shard** — per layer, every shard fetches only its own
+//! resident experts, in parallel — so the mapping expert id → shard decides
+//! how much of the speculative expert mass is hidden. Two strategies:
+//!
+//! * **balanced** (round-robin): weight-balanced by construction, blind to
+//!   routing correlations;
+//! * **co-activation-aware**: a greedy packer over an online expert
+//!   co-occurrence histogram. Experts that frequently activate in the same
+//!   layer-step *stack* on whichever shard holds them both, so the packer
+//!   spreads high-co-occurrence pairs across shards (subject to a per-shard
+//!   capacity so expert weights stay memory-balanced). MoE-Spec's expert
+//!   budgeting and SP-MoE's prefetch/placement line (PAPERS.md) motivate
+//!   making placement quality *measured*, not assumed.
+//!
+//! The histogram is fed by an id-attributing backend (the sim backend's
+//! fused `step_batch` reports per-layer expert-id unions); all operations
+//! are deterministic — placement may only move *cost*, never tokens, and
+//! runs must replay bit-for-bit under a fixed seed.
+
+/// Immutable expert → shard map.
+#[derive(Debug, Clone)]
+pub struct ExpertPlacement {
+    n_shards: usize,
+    /// `assign[e]` = shard holding expert `e`.
+    assign: Vec<usize>,
+}
+
+impl ExpertPlacement {
+    /// Round-robin placement: expert `e` lives on shard `e % n_shards`.
+    pub fn balanced(n_experts: usize, n_shards: usize) -> Self {
+        let n_shards = n_shards.max(1);
+        Self { n_shards, assign: (0..n_experts).map(|e| e % n_shards).collect() }
+    }
+
+    /// Placement from an explicit assignment (greedy packer output).
+    pub fn from_assign(assign: Vec<usize>, n_shards: usize) -> Self {
+        let n_shards = n_shards.max(1);
+        debug_assert!(assign.iter().all(|&s| s < n_shards));
+        Self { n_shards, assign }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// Shard holding expert `e` (out-of-range ids wrap, defensively).
+    pub fn shard_of(&self, e: usize) -> usize {
+        if self.assign.is_empty() {
+            return 0;
+        }
+        self.assign[e % self.assign.len()]
+    }
+
+    /// Experts resident per shard (weight balance check).
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.n_shards];
+        for &s in &self.assign {
+            sizes[s] += 1;
+        }
+        sizes
+    }
+
+    /// Group per-layer deduped expert-id sets into per-layer **per-shard
+    /// unique counts**: `loads[l][s]` = experts of shard `s` that layer
+    /// `l`'s fused step must fetch. The cost model's expert term is the
+    /// per-layer max over shards; `Σ_s loads[l][s]` equals the unsharded
+    /// union count (every expert lives on exactly one shard).
+    pub fn shard_loads(&self, per_layer_ids: &[Vec<usize>]) -> Vec<Vec<usize>> {
+        per_layer_ids
+            .iter()
+            .map(|ids| {
+                let mut loads = vec![0usize; self.n_shards];
+                for &e in ids {
+                    loads[self.shard_of(e)] += 1;
+                }
+                loads
+            })
+            .collect()
+    }
+
+    /// Per-layer max-over-shards load — the expert-parallel critical path
+    /// the sharded cost model charges.
+    pub fn max_loads(&self, per_layer_ids: &[Vec<usize>]) -> Vec<usize> {
+        self.shard_loads(per_layer_ids)
+            .iter()
+            .map(|l| l.iter().copied().max().unwrap_or(0))
+            .collect()
+    }
+}
+
+/// Online expert co-occurrence histogram: how often each expert pair was
+/// activated in the same layer-step. Fed per fused iteration from the
+/// backend's per-layer expert-id unions; read by the greedy packer.
+#[derive(Debug, Clone)]
+pub struct CoActivationStats {
+    n_experts: usize,
+    /// Activation count per expert (layer-steps it appeared in).
+    acts: Vec<u64>,
+    /// Symmetric pair counts, row-major `n_experts × n_experts`
+    /// (diagonal unused). Dense is fine: the zoo tops out at 64 experts.
+    pairs: Vec<u64>,
+    /// Layer-steps observed.
+    steps: u64,
+}
+
+impl CoActivationStats {
+    pub fn new(n_experts: usize) -> Self {
+        Self {
+            n_experts,
+            acts: vec![0; n_experts],
+            pairs: vec![0; n_experts * n_experts],
+            steps: 0,
+        }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    fn pair(&self, a: usize, b: usize) -> u64 {
+        self.pairs[a * self.n_experts + b]
+    }
+
+    /// Record one fused step: `per_layer_ids[l]` is the deduped expert-id
+    /// set layer `l` activated (ids must be < `n_experts`; the sim backend
+    /// guarantees this by construction).
+    pub fn observe(&mut self, per_layer_ids: &[Vec<usize>]) {
+        for ids in per_layer_ids {
+            self.steps += 1;
+            for (i, &a) in ids.iter().enumerate() {
+                self.acts[a] += 1;
+                for &b in &ids[i + 1..] {
+                    self.pairs[a * self.n_experts + b] += 1;
+                    self.pairs[b * self.n_experts + a] += 1;
+                }
+            }
+        }
+    }
+
+    /// Halve every count — an exponential decay applied at each placement
+    /// rebuild so the histogram tracks the *recent* routing regime instead
+    /// of accumulating forever. Without decay, counts from an early
+    /// workload phase would permanently dominate and later rebuilds could
+    /// never adapt to a shifted mix. Integer halving is deterministic.
+    pub fn decay(&mut self) {
+        for a in &mut self.acts {
+            *a /= 2;
+        }
+        for p in &mut self.pairs {
+            *p /= 2;
+        }
+        self.steps /= 2;
+    }
+
+    /// Greedy co-activation-aware packer. Experts are placed in order of
+    /// activation frequency (hottest first — they constrain the most); each
+    /// goes to the shard minimizing the summed co-occurrence with experts
+    /// already resident there, under a `ceil(E/S)` per-shard capacity so
+    /// expert *weights* stay memory-balanced across devices. Ties break
+    /// toward the emptier, then lower-indexed shard — fully deterministic.
+    /// With an empty histogram this degenerates to a balanced placement.
+    pub fn greedy_placement(&self, n_shards: usize) -> ExpertPlacement {
+        let n_shards = n_shards.max(1).min(self.n_experts.max(1));
+        let cap = self.n_experts.div_ceil(n_shards);
+        // Hottest-first order; ties by id for determinism.
+        let mut order: Vec<usize> = (0..self.n_experts).collect();
+        order.sort_by_key(|&e| (std::cmp::Reverse(self.acts[e]), e));
+
+        let mut assign = vec![0usize; self.n_experts];
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+        for &e in &order {
+            let mut best: Option<(u64, usize, usize)> = None; // (conflict, size, shard)
+            for (s, m) in members.iter().enumerate() {
+                if m.len() >= cap {
+                    continue;
+                }
+                let conflict: u64 = m.iter().map(|&f| self.pair(e, f)).sum();
+                let key = (conflict, m.len(), s);
+                let better = match best {
+                    None => true,
+                    Some(b) => key < b,
+                };
+                if better {
+                    best = Some(key);
+                }
+            }
+            let (_, _, s) = best.expect("capacity ceil(E/S) * S >= E");
+            assign[e] = s;
+            members[s].push(e);
+        }
+        ExpertPlacement::from_assign(assign, n_shards)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_round_robin_is_weight_balanced() {
+        let p = ExpertPlacement::balanced(8, 4);
+        assert_eq!(p.shard_sizes(), vec![2, 2, 2, 2]);
+        assert_eq!(p.shard_of(5), 1);
+        // Uneven division: sizes differ by at most one.
+        let p = ExpertPlacement::balanced(10, 4);
+        let sizes = p.shard_sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn shard_loads_partition_the_union() {
+        let p = ExpertPlacement::balanced(8, 4);
+        let ids = vec![vec![0, 1, 2, 5], vec![3, 7]];
+        let loads = p.shard_loads(&ids);
+        assert_eq!(loads.len(), 2);
+        for (l, ids_l) in loads.iter().zip(&ids) {
+            assert_eq!(l.iter().sum::<usize>(), ids_l.len());
+        }
+        // layer0: shard1 holds {1,5}; layer1: shard3 holds {3,7}.
+        assert_eq!(p.max_loads(&ids), vec![2, 2]);
+    }
+
+    #[test]
+    fn empty_histogram_placement_is_balanced_and_capped() {
+        let stats = CoActivationStats::new(8);
+        let p = stats.greedy_placement(4);
+        assert_eq!(p.n_shards(), 4);
+        assert_eq!(p.shard_sizes(), vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn observe_counts_pairs_symmetrically() {
+        let mut stats = CoActivationStats::new(4);
+        stats.observe(&[vec![0, 2], vec![0, 2], vec![1, 3]]);
+        assert_eq!(stats.steps(), 3);
+        assert_eq!(stats.pair(0, 2), 2);
+        assert_eq!(stats.pair(2, 0), 2);
+        assert_eq!(stats.pair(1, 3), 1);
+        assert_eq!(stats.pair(0, 1), 0);
+        assert_eq!(stats.acts[0], 2);
+    }
+
+    #[test]
+    fn packer_separates_coactivating_pairs() {
+        // Adversarial pattern for round-robin at 4 shards over 8 experts:
+        // the pairs (0,4), (1,5), (2,6), (3,7) always co-activate, and
+        // e % 4 puts each pair on ONE shard (max load 2). The packer must
+        // split every pair (max load 1) while keeping 2 experts per shard.
+        let mut stats = CoActivationStats::new(8);
+        let steps: Vec<Vec<usize>> = (0..4).cycle().take(64).map(|g| vec![g, g + 4]).collect();
+        stats.observe(&steps);
+
+        let balanced = ExpertPlacement::balanced(8, 4);
+        let packed = stats.greedy_placement(4);
+        assert_eq!(packed.shard_sizes(), vec![2; 4], "weight balance violated");
+        let worst = |p: &ExpertPlacement| p.max_loads(&steps).iter().copied().max().unwrap();
+        assert_eq!(worst(&balanced), 2);
+        assert_eq!(worst(&packed), 1, "packer failed to separate co-activated pairs");
+    }
+
+    #[test]
+    fn decay_lets_the_packer_track_a_phase_shift() {
+        // Phase A: pairs (0,4),(1,5),(2,6),(3,7) co-activate. After a
+        // rebuild + decay, an equally long phase B with the pairs rotated
+        // — (0,5),(1,6),(2,7),(3,4) — must dominate the histogram, so the
+        // next rebuild separates B's pairs.
+        let mut stats = CoActivationStats::new(8);
+        let phase = |rot: usize| -> Vec<Vec<usize>> {
+            (0..4).cycle().take(64).map(|g| vec![g, 4 + (g + rot) % 4]).collect()
+        };
+        let a = phase(0);
+        let b = phase(1);
+        stats.observe(&a);
+        stats.decay(); // what the engine does after a rebuild
+        stats.observe(&b);
+        stats.observe(&b); // recent phase outweighs the decayed old one
+        let packed = stats.greedy_placement(4);
+        let worst_b = packed.max_loads(&b).iter().copied().max().unwrap();
+        assert_eq!(worst_b, 1, "placement still tuned to the old phase");
+        // Halving really halves.
+        let mut s = CoActivationStats::new(2);
+        s.observe(&[vec![0, 1], vec![0, 1], vec![0]]);
+        assert_eq!((s.acts[0], s.pair(0, 1), s.steps()), (3, 2, 3));
+        s.decay();
+        assert_eq!((s.acts[0], s.pair(0, 1), s.steps()), (1, 1, 1));
+    }
+
+    #[test]
+    fn packer_is_deterministic() {
+        let mut a = CoActivationStats::new(16);
+        let mut b = CoActivationStats::new(16);
+        let steps: Vec<Vec<usize>> = (0..50)
+            .map(|i| vec![i % 16, (i * 7 + 3) % 16, (i * 5 + 1) % 16])
+            .collect();
+        a.observe(&steps);
+        b.observe(&steps);
+        let pa = a.greedy_placement(4);
+        let pb = b.greedy_placement(4);
+        for e in 0..16 {
+            assert_eq!(pa.shard_of(e), pb.shard_of(e));
+        }
+    }
+
+    #[test]
+    fn single_shard_placement_is_identity_load() {
+        let p = ExpertPlacement::balanced(8, 1);
+        let ids = vec![vec![0, 3, 7], vec![1]];
+        assert_eq!(p.max_loads(&ids), vec![3, 1]);
+        assert_eq!(p.shard_sizes(), vec![8]);
+    }
+}

@@ -7,6 +7,7 @@ pub mod figures;
 pub mod pipeline;
 pub mod related;
 pub mod runner;
+pub mod sharding;
 
 pub use runner::{BackendKind, ExpCtx, RunSpec};
 
@@ -98,6 +99,11 @@ pub fn all() -> Vec<Experiment> {
             id: "pipeline",
             caption: "EXTENSION: pipelined drafting, draft(i+1) under verify(i) (sim)",
             run: pipeline::pipeline_compare,
+        },
+        Experiment {
+            id: "sharding",
+            caption: "EXTENSION: expert-parallel sharding, max-over-shards verify cost (sim)",
+            run: sharding::sharding,
         },
     ]
 }

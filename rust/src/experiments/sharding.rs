@@ -1,0 +1,123 @@
+//! Expert-parallel sharding experiment (extension beyond the paper's
+//! single-GPU setting): TPOT / verify time / Cascade-K across shard counts
+//! and placement strategies.
+//!
+//! The mechanism under test: sharding the expert set across devices turns
+//! the fused verify's expert term into a **max over per-shard deduped
+//! loads** (plus an all-to-all), so the speculative expert mass the paper's
+//! §2.4 phenomenon charges is partially hidden behind parallel fetch —
+//! utility rises, and Cascade should hold speculation on (or pick larger K)
+//! at batch sizes where the single-GPU cost made it quit. The placement
+//! axis (balanced round-robin vs the co-activation-aware greedy packer)
+//! shows that *which* experts share a shard is measurable load-balance
+//! quality, not a detail (cf. MoE-Spec's expert budgeting and SP-MoE's
+//! placement line in PAPERS.md).
+
+use crate::config::{EngineConfig, PlacementKind};
+use crate::coordinator::batch::BatchEngine;
+use crate::coordinator::scheduler::{Budget, Scheduler};
+use crate::experiments::runner::ExpCtx;
+use crate::spec::policy::PolicyKind;
+use crate::util::table::{ms, Table};
+use crate::workload::{RequestStream, Workload};
+use anyhow::Result;
+
+/// Default shard axis of `figure sharding` (and the sharding bench).
+pub const DEFAULT_SHARDS: [usize; 3] = [1, 2, 4];
+
+/// Placement strategies exercised at a given shard count — a single shard
+/// has no placement decision. Shared by `figure sharding`, `sweep
+/// --shards`, and the bench so their axes cannot drift apart.
+pub fn placement_axis(shards: usize) -> &'static [PlacementKind] {
+    if shards <= 1 {
+        &[PlacementKind::Balanced]
+    } else {
+        &[PlacementKind::Balanced, PlacementKind::CoActivation]
+    }
+}
+
+/// Table/JSON label for a placement cell ("-" where placement is moot).
+pub fn placement_cell_label(shards: usize, placement: PlacementKind) -> &'static str {
+    if shards <= 1 {
+        "-"
+    } else {
+        placement.label()
+    }
+}
+
+/// One serving run at a (model, policy, shards, placement) cell.
+pub fn run_cell(
+    ctx: &mut ExpCtx,
+    model: &str,
+    policy: &PolicyKind,
+    batch: usize,
+    shards: usize,
+    placement: PlacementKind,
+) -> Result<crate::metrics::BatchRunMetrics> {
+    let cfg = EngineConfig {
+        model: model.into(),
+        max_batch: batch,
+        shards,
+        placement,
+        max_new_tokens: ctx.max_new_tokens,
+        seed: ctx.seed,
+        ..EngineConfig::default()
+    };
+    let mut engine = BatchEngine::sim(&ctx.registry, cfg, policy.clone())?;
+    let workload = Workload::by_name("code+math").expect("known mix");
+    let stream = RequestStream::new(workload, ctx.seed, ctx.max_new_tokens);
+    let mut sched =
+        Scheduler::new(stream, Budget { max_tokens: ctx.tokens_per_cell, max_requests: 10_000 });
+    sched.run_batched(&mut engine)
+}
+
+/// The sharding comparison over an explicit shard axis (the CLI's
+/// `sweep --shards a,b,c` and `figure sharding` both land here).
+pub fn sharding_table(ctx: &mut ExpCtx, shard_counts: &[usize]) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Expert-parallel sharding (sim backend, code+math mix, batch 4): \
+         max-over-shards expert cost + all-to-all",
+        &[
+            "model",
+            "policy",
+            "shards",
+            "placement",
+            "tokens",
+            "TPOT",
+            "verify ms/iter",
+            "max-shard experts",
+            "imbalance",
+            "a2a share",
+            "K p50",
+        ],
+    );
+    let batch = 4;
+    for model in ["mixtral", "deepseek"] {
+        for policy in [PolicyKind::Static(3), PolicyKind::Cascade(Default::default())] {
+            for &shards in shard_counts {
+                for &placement in placement_axis(shards) {
+                    let m = run_cell(ctx, model, &policy, batch, shards, placement)?;
+                    t.row(vec![
+                        model.into(),
+                        policy.label(),
+                        shards.to_string(),
+                        placement_cell_label(shards, placement).to_string(),
+                        m.run.total_tokens().to_string(),
+                        ms(m.tpot_s()),
+                        format!("{:.2}", 1e3 * m.mean_verify_s()),
+                        format!("{:.1}", m.mean_max_shard_unique()),
+                        format!("{:.2}", m.mean_shard_imbalance()),
+                        format!("{:.1}%", 100.0 * m.alltoall_share()),
+                        format!("{:.1}", m.run.k_chosen_p50()),
+                    ]);
+                }
+            }
+        }
+    }
+    Ok(vec![t])
+}
+
+/// `figure sharding`: the default 1/2/4-shard axis.
+pub fn sharding(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    sharding_table(ctx, &DEFAULT_SHARDS)
+}

@@ -75,13 +75,15 @@ USAGE:
   cascade serve  [--model mixtral] [--task code|math|extract|code+math|math+extract|code+extract|all-3]
                  [--policy k0..k7|cascade|ablation0..3] [--drafter ngram|eagle]
                  [--tokens 400] [--backend real|sim] [--seed N] [--batch 1]
-                 [--pipeline on|off]
-  cascade sweep  [--tokens 300] [--out-dir results]
-                 (continuous-batching comparison: batch=1 vs 4, static-K vs Cascade)
+                 [--pipeline on|off] [--shards 1] [--placement balanced|coactivation]
+  cascade sweep  [--tokens 300] [--out-dir results] [--shards 1,2,4]
+                 (continuous-batching comparison: batch=1 vs 4, static-K vs Cascade;
+                  --shards runs the expert-parallel K-vs-shards axis instead)
   cascade bench  [--tokens 2000] [--quick 1] [--out BENCH_pipeline.json]
-                 (serial vs pipelined TPOT/bubble-fraction table at batch 1/4,
-                  written as JSON for CI perf tracking)
-  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|batch|pipeline|all>
+                 [--out-sharding BENCH_sharding.json]
+                 (serial vs pipelined TPOT/bubble-fraction table at batch 1/4 and
+                  sharded TPOT at shards 1/2/4 x batch 1/4, as JSON for CI tracking)
+  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|batch|pipeline|sharding|all>
                  [--backend real|sim] [--tokens 300] [--out-dir results]
 
   --batch N > 1 serves through the continuous-batching engine: one fused
@@ -95,6 +97,13 @@ USAGE:
   and reported). Token output is bit-identical to serial for a fixed K
   schedule (static-K policies); Cascade observes the cheaper pipelined
   cost and may legitimately choose different K.
+
+  --shards N > 1 prices the fused verify under expert parallelism: the
+  routed-expert term becomes the max over per-shard deduped expert loads
+  plus an all-to-all term, with --placement choosing how experts map to
+  shards (balanced round-robin, or an online co-activation-aware packer).
+  Sharding moves cost only, never tokens (sim backend; see
+  rust/docs/sharding.md).
 "
     );
     std::process::exit(2)
@@ -199,25 +208,41 @@ fn serve(args: &Args) -> Result<()> {
         "off" => false,
         other => bail!("unknown --pipeline {other:?} (want on|off)"),
     };
+    let shards = args.get_usize("shards", 1)?;
+    let placement = cascade::config::PlacementKind::parse(&args.get("placement", "balanced"))?;
     let backend_name = match backend {
         BackendKind::Real => "real",
         BackendKind::Sim => "sim",
     };
+    if shards > 1 && backend == BackendKind::Real {
+        eprintln!(
+            "note: sharded expert cost needs expert-id attribution (sim backend); \
+             the real backend serves with the unsharded cost model"
+        );
+    }
+    // Sharded serving lands on the batched engine even at batch=1 (it owns
+    // the placement and reproduces the single-request engine token-for-
+    // token) — but only where the backend can attribute expert ids; the
+    // real backend keeps its unsharded single-request path.
+    let use_batch_engine = batch > 1 || (shards > 1 && backend == BackendKind::Sim);
     let cfg = EngineConfig {
         model: model.clone(),
         drafter,
         seed,
         max_batch: batch,
         pipeline,
+        shards,
+        placement,
         ..EngineConfig::default()
     };
     let budget = Budget { max_tokens: tokens, max_requests: 10_000 };
     let stream = RequestStream::new(workload.clone(), seed, cfg.max_new_tokens);
     let mut sched = Scheduler::new(stream, budget);
 
-    if batch > 1 {
+    if use_batch_engine {
         // Continuous-batching path: fused verify steps, shared KV pool,
-        // batch-deduplicated expert cost.
+        // batch-deduplicated expert cost (and expert-parallel pricing at
+        // --shards > 1).
         let mut engine = match backend {
             BackendKind::Sim => BatchEngine::sim(&reg, cfg, policy.clone())?,
             BackendKind::Real => BatchEngine::real(&reg, cfg, policy.clone())?,
@@ -261,6 +286,27 @@ fn serve(args: &Args) -> Result<()> {
             "cross-request overlap saved".into(),
             format!("{:.1}%", 100.0 * m.overlap_savings()),
         ]);
+        // Always printed so sharded and unsharded runs of the same command
+        // can be compared side by side.
+        t.row(vec!["mean verify/iter".into(), format!("{:.2}ms", 1e3 * m.mean_verify_s())]);
+        if m.n_shards > 1 {
+            t.row(vec![
+                "expert-parallel shards".into(),
+                format!("{} ({})", m.n_shards, placement.label()),
+            ]);
+            t.row(vec![
+                "max-shard experts/iter".into(),
+                format!("{:.1}", m.mean_max_shard_unique()),
+            ]);
+            t.row(vec![
+                "shard imbalance (max/mean)".into(),
+                format!("{:.2}", m.mean_shard_imbalance()),
+            ]);
+            t.row(vec![
+                "all-to-all share of verify".into(),
+                format!("{:.1}%", 100.0 * m.alltoall_share()),
+            ]);
+        }
         t.row(vec![
             "test-phase fraction".into(),
             format!("{:.1}%", 100.0 * m.run.test_phase_fraction()),
@@ -456,16 +502,117 @@ fn bench(args: &Args) -> Result<()> {
     }
     std::fs::write(&out_path, json::write(&doc))?;
     println!("  -> {out_path}");
+
+    // ---- Expert-parallel sharding bench (BENCH_sharding.json) -----------
+    let shard_out = args.get("out-sharding", "BENCH_sharding.json");
+    let mut st = Table::new(
+        format!("sharding bench: mixtral/{task}/static-k3 (sim, {tokens} tokens)"),
+        &[
+            "batch",
+            "shards",
+            "placement",
+            "tokens",
+            "TPOT",
+            "tok/s",
+            "speedup",
+            "verify ms/iter",
+            "max-shard experts",
+            "imbalance",
+            "a2a share",
+        ],
+    );
+    let mut shard_rows: Vec<json::Value> = Vec::new();
+    // One cell-runner shared with `figure sharding` / `sweep --shards`
+    // (experiments::sharding), so the bench axis can never drift from the
+    // experiment's.
+    let mut ctx = ExpCtx::new(reg, BackendKind::Sim, tokens);
+    ctx.seed = seed;
+    for batch in [1usize, 4] {
+        let mut tpot_unsharded = f64::NAN;
+        for shards in experiments::sharding::DEFAULT_SHARDS {
+            for &placement in experiments::sharding::placement_axis(shards) {
+                let m = experiments::sharding::run_cell(
+                    &mut ctx,
+                    "mixtral",
+                    &policy,
+                    batch,
+                    shards,
+                    placement,
+                )?;
+                let tpot = m.tpot_s();
+                if shards == 1 {
+                    tpot_unsharded = tpot;
+                }
+                let place_label = experiments::sharding::placement_cell_label(shards, placement);
+                st.row(vec![
+                    batch.to_string(),
+                    shards.to_string(),
+                    place_label.into(),
+                    m.run.total_tokens().to_string(),
+                    ms(tpot),
+                    format!("{:.1}", 1.0 / tpot),
+                    format!("{:.3}x", tpot_unsharded / tpot),
+                    format!("{:.2}", 1e3 * m.mean_verify_s()),
+                    format!("{:.1}", m.mean_max_shard_unique()),
+                    format!("{:.2}", m.mean_shard_imbalance()),
+                    format!("{:.1}%", 100.0 * m.alltoall_share()),
+                ]);
+                shard_rows.push(json::obj(vec![
+                    ("batch", json::num(batch as f64)),
+                    ("shards", json::num(shards as f64)),
+                    ("placement", json::str(place_label)),
+                    ("tokens", json::num(m.run.total_tokens() as f64)),
+                    ("tpot_ms", json::num(1e3 * tpot)),
+                    ("tokens_per_s", json::num(1.0 / tpot)),
+                    ("speedup_vs_1_shard", json::num(tpot_unsharded / tpot)),
+                    ("mean_verify_ms", json::num(1e3 * m.mean_verify_s())),
+                    ("max_shard_unique", json::num(m.mean_max_shard_unique())),
+                    ("shard_imbalance", json::num(m.mean_shard_imbalance())),
+                    ("alltoall_share", json::num(m.alltoall_share())),
+                ]));
+            }
+        }
+    }
+    println!("{}", st.render());
+    let shard_doc = json::obj(vec![
+        ("bench", json::str("sharding")),
+        ("model", json::str("mixtral")),
+        ("task", json::str(task)),
+        ("policy", json::str("static-k3")),
+        ("drafter", json::str("ngram")),
+        ("backend", json::str("sim")),
+        ("token_budget", json::num(tokens as f64)),
+        ("quick", json::Value::Bool(quick)),
+        ("rows", json::arr(shard_rows)),
+    ]);
+    if let Some(parent) = std::path::Path::new(&shard_out).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&shard_out, json::write(&shard_doc))?;
+    println!("  -> {shard_out}");
     Ok(())
 }
 
 /// The continuous-batching comparison sweep (the `batch` experiment on the
-/// sim backend).
+/// sim backend), or — with `--shards a,b,c` — the expert-parallel
+/// K-vs-shards axis (the `sharding` experiment over an explicit axis).
 fn sweep(args: &Args) -> Result<()> {
     let tokens = args.get_usize("tokens", 300)?;
     let out_dir = args.get("out-dir", "");
     let reg = registry()?;
     let mut ctx = ExpCtx::new(reg, BackendKind::Sim, tokens);
+    if let Some(axis) = args.flags.get("shards") {
+        let shard_counts: Vec<usize> = axis
+            .split(',')
+            .map(|s| s.trim().parse().with_context(|| format!("--shards piece {s:?}")))
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(!shard_counts.is_empty(), "--shards needs at least one count");
+        println!("\n### sharding — expert-parallel sweep over shards {shard_counts:?}\n");
+        let tables = experiments::sharding::sharding_table(&mut ctx, &shard_counts)?;
+        return emit_tables("sharding", &tables, &out_dir);
+    }
     let exp = experiments::by_id("batch").expect("batch experiment registered");
     println!("\n### {} — {}\n", exp.id, exp.caption);
     let tables = (exp.run)(&mut ctx)?;

@@ -204,6 +204,23 @@ impl RunMetrics {
             .fold(0.0, f64::max)
     }
 
+    /// Median chosen speculation length across every decode iteration of
+    /// every request — the policy's typical K (the sharding experiment's
+    /// K-vs-shards axis).
+    pub fn k_chosen_p50(&self) -> f64 {
+        let mut ks: Vec<usize> = self
+            .requests
+            .iter()
+            .flat_map(|r| &r.iters)
+            .map(|i| i.k_chosen)
+            .collect();
+        if ks.is_empty() {
+            return f64::NAN;
+        }
+        ks.sort_unstable();
+        ks[(ks.len() - 1) / 2] as f64
+    }
+
     /// Fraction of iterations spent in test phases (policy overhead).
     pub fn test_phase_fraction(&self) -> f64 {
         let total: usize = self.requests.iter().map(|r| r.iters.len()).sum();
@@ -222,7 +239,7 @@ impl RunMetrics {
 
 /// One fused iteration of the continuous-batching engine: a single verify
 /// step over the concatenated spans of all in-flight requests.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct BatchIterRecord {
     /// Requests that participated in this fused step.
     pub n_active: usize,
@@ -240,6 +257,17 @@ pub struct BatchIterRecord {
     /// Mean per-layer sum of per-request unique counts (the no-dedup upper
     /// bound); the gap to `batch_unique_experts` is cross-request overlap.
     pub summed_unique_experts: f64,
+    /// Expert-parallel telemetry: mean per-layer unique experts fetched by
+    /// each shard (len = shard count; empty when unsharded/dense).
+    pub shard_unique: Vec<f64>,
+    /// Mean per-layer load of the **most-loaded** shard — the sharded
+    /// expert term's critical path. Equals `batch_unique_experts` when
+    /// unsharded (one shard holds everything).
+    pub max_shard_unique: f64,
+    /// Placement quality: max-shard load over the perfectly-balanced load
+    /// (`union / shards`). 1.0 = balanced; higher = hot shard. 1.0 when
+    /// unsharded.
+    pub shard_imbalance: f64,
     /// Spans whose drafts came from the pipelined lookahead (drafting ran
     /// hidden under the previous verify window). 0 in serial mode.
     pub pipeline_hits: usize,
@@ -266,6 +294,8 @@ pub struct BatchRunMetrics {
     pub run: RunMetrics,
     pub iters: Vec<BatchIterRecord>,
     pub max_batch: usize,
+    /// Expert-parallel shard count the run was priced under (1 = unsharded).
+    pub n_shards: usize,
 }
 
 impl BatchRunMetrics {
@@ -369,6 +399,67 @@ impl BatchRunMetrics {
     /// Host drafting wall time that ran overlapped with verification.
     pub fn draft_wall_hidden_ns(&self) -> u64 {
         self.iters.iter().map(|r| r.draft_wall_hidden_ns).sum()
+    }
+
+    // ---- Expert-parallel sharding telemetry -----------------------------
+
+    /// Mean simulated verify time per fused iteration (base + experts +
+    /// overhead + all-to-all) — the quantity sharding must lower.
+    pub fn mean_verify_s(&self) -> f64 {
+        if self.iters.is_empty() {
+            return f64::NAN;
+        }
+        self.iters.iter().map(|r| r.cost.verify_s()).sum::<f64>() / self.iters.len() as f64
+    }
+
+    /// Mean per-layer unique experts on the most-loaded shard (the sharded
+    /// critical path; equals `mean_batch_unique` when unsharded).
+    pub fn mean_max_shard_unique(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 0.0;
+        }
+        self.iters.iter().map(|r| r.max_shard_unique).sum::<f64>() / self.iters.len() as f64
+    }
+
+    /// Mean shard imbalance (max shard load / balanced load; 1.0 = ideal).
+    pub fn mean_shard_imbalance(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 1.0;
+        }
+        self.iters.iter().map(|r| r.shard_imbalance).sum::<f64>() / self.iters.len() as f64
+    }
+
+    /// Per-shard mean per-layer expert load across the run (empty when
+    /// unsharded).
+    pub fn per_shard_mean_unique(&self) -> Vec<f64> {
+        let n = self.iters.iter().map(|r| r.shard_unique.len()).max().unwrap_or(0);
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut acc = vec![0.0f64; n];
+        let mut count = 0usize;
+        for r in self.iters.iter().filter(|r| !r.shard_unique.is_empty()) {
+            for (a, &v) in acc.iter_mut().zip(&r.shard_unique) {
+                *a += v;
+            }
+            count += 1;
+        }
+        if count > 0 {
+            for a in &mut acc {
+                *a /= count as f64;
+            }
+        }
+        acc
+    }
+
+    /// All-to-all share of total verify time: Σ all-to-all / Σ verify.
+    /// Zero when unsharded.
+    pub fn alltoall_share(&self) -> f64 {
+        let verify: f64 = self.iters.iter().map(|r| r.cost.verify_s()).sum();
+        if verify == 0.0 {
+            return 0.0;
+        }
+        self.iters.iter().map(|r| r.cost.alltoall_s).sum::<f64>() / verify
     }
 }
 
@@ -498,6 +589,9 @@ mod tests {
             cost: IterCost { base_s: 0.01, expert_s: dedup * 1e-3, ..Default::default() },
             batch_unique_experts: dedup,
             summed_unique_experts: summed,
+            shard_unique: Vec::new(),
+            max_shard_unique: dedup,
+            shard_imbalance: 1.0,
             pipeline_hits: 0,
             pipeline_misses: 0,
             draft_recomputes: 0,
@@ -528,6 +622,45 @@ mod tests {
         assert_eq!(b.overlap_savings(), 0.0);
         assert_eq!(b.bubble_fraction(), 0.0);
         assert_eq!(b.draft_hidden_s(), 0.0);
+    }
+
+    #[test]
+    fn k_p50_is_the_median_iteration_k() {
+        let mut run = RunMetrics::default();
+        let mut m = RequestMetrics::default();
+        for e in [1usize, 2, 2, 3, 4] {
+            m.iters.push(rec(e, 0.02, IterPhase::Set)); // k = e - 1
+        }
+        run.push(m);
+        assert!((run.k_chosen_p50() - 1.0).abs() < 1e-12); // ks: 0,1,1,2,3
+        assert!(RunMetrics::default().k_chosen_p50().is_nan());
+    }
+
+    #[test]
+    fn sharding_telemetry_aggregates() {
+        let mut b = BatchRunMetrics { max_batch: 4, n_shards: 2, ..Default::default() };
+        let mut r1 = batch_rec(4, 8, 6.0, 12.0);
+        r1.shard_unique = vec![4.0, 2.0];
+        r1.max_shard_unique = 4.0;
+        r1.shard_imbalance = 4.0 / 3.0;
+        r1.cost.alltoall_s = 0.5e-3;
+        let mut r2 = batch_rec(2, 4, 4.0, 6.0);
+        r2.shard_unique = vec![2.0, 2.0];
+        r2.max_shard_unique = 2.0;
+        r2.shard_imbalance = 1.0;
+        r2.cost.alltoall_s = 0.5e-3;
+        b.iters.push(r1);
+        b.iters.push(r2);
+        assert!((b.mean_max_shard_unique() - 3.0).abs() < 1e-12);
+        assert!((b.mean_shard_imbalance() - (4.0 / 3.0 + 1.0) / 2.0).abs() < 1e-12);
+        assert_eq!(b.per_shard_mean_unique(), vec![3.0, 2.0]);
+        let verify: f64 = b.iters.iter().map(|r| r.cost.verify_s()).sum();
+        assert!((b.alltoall_share() - 1e-3 / verify).abs() < 1e-12);
+        // Unsharded runs degrade gracefully.
+        let plain = BatchRunMetrics { max_batch: 1, ..Default::default() };
+        assert_eq!(plain.alltoall_share(), 0.0);
+        assert!(plain.per_shard_mean_unique().is_empty());
+        assert_eq!(plain.mean_shard_imbalance(), 1.0);
     }
 
     #[test]

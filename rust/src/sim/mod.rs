@@ -176,6 +176,10 @@ impl Backend for SimBackend {
         SIM_MAX_SLOTS
     }
 
+    fn attributes_expert_ids(&self) -> bool {
+        true
+    }
+
     fn begin_slot(&mut self, slot: usize, req: &Request) -> Result<()> {
         anyhow::ensure!(slot < SIM_MAX_SLOTS, "sim backend: slot {slot} out of range");
         let layers = self.mini.layers;
@@ -276,29 +280,48 @@ impl Backend for SimBackend {
         }
         let mut slots = Vec::with_capacity(spans.len());
         for (span, (sets, sampled)) in spans.iter().zip(routed) {
-            let (unique_experts, marginal_unique_experts) = if is_moe {
+            let (unique_experts, marginal_unique_experts, marginal_expert_ids) = if is_moe {
                 let unique: Vec<usize> = sets.iter().map(|s| s.len()).collect();
-                let marginal: Vec<usize> = sets
+                let marginal_ids: Vec<Vec<usize>> = sets
                     .iter()
                     .enumerate()
-                    .map(|(l, set)| set.iter().filter(|&&e| multiplicity[l][&e] == 1).count())
+                    .map(|(l, set)| {
+                        set.iter().copied().filter(|e| multiplicity[l][e] == 1).collect()
+                    })
                     .collect();
-                (unique, marginal)
+                let marginal: Vec<usize> = marginal_ids.iter().map(|ids| ids.len()).collect();
+                (unique, marginal, marginal_ids)
             } else {
-                (Vec::new(), Vec::new())
+                (Vec::new(), Vec::new(), Vec::new())
             };
             slots.push(SlotStep {
                 slot: span.slot,
                 step: BackendStep { sampled, unique_experts },
                 marginal_unique_experts,
+                marginal_expert_ids,
             });
         }
-        let (batch_unique_experts, summed_unique_experts) = if is_moe {
-            (union.into_iter().map(|s| s.len()).collect(), summed)
-        } else {
-            (Vec::new(), Vec::new())
-        };
-        Ok(BatchStep { slots, batch_unique_experts, summed_unique_experts })
+        let (batch_unique_experts, summed_unique_experts, expert_ids, shared_expert_ids) =
+            if is_moe {
+                // Ids activated by >= 2 slots: the shared mass the marginal
+                // fairness floor amortizes (BTreeMap keeps them sorted).
+                let shared: Vec<Vec<usize>> = multiplicity
+                    .iter()
+                    .map(|m| m.iter().filter(|&(_, &c)| c >= 2).map(|(&e, _)| e).collect())
+                    .collect();
+                let ids: Vec<Vec<usize>> =
+                    union.iter().map(|s| s.iter().copied().collect()).collect();
+                (union.into_iter().map(|s| s.len()).collect(), summed, ids, shared)
+            } else {
+                (Vec::new(), Vec::new(), Vec::new(), Vec::new())
+            };
+        Ok(BatchStep {
+            slots,
+            batch_unique_experts,
+            summed_unique_experts,
+            expert_ids,
+            shared_expert_ids,
+        })
     }
 }
 
@@ -495,6 +518,33 @@ mod tests {
             .step_batch(&[VerifySpan { slot: 0, tokens: vec![0; 4], guides: vec![None; 4], eps: 1.0 }])
             .unwrap();
         assert_eq!(out.slots[0].marginal_unique_experts, out.slots[0].step.unique_experts);
+    }
+
+    #[test]
+    fn expert_id_attribution_partitions_the_union() {
+        // Per layer: every slot's marginal ids plus the shared ids must
+        // partition the batch union exactly (ids sorted, no duplicates) —
+        // the invariant the sharded cost path and fairness floor build on.
+        let mut b = SimBackend::new(mini(0.0, 8, 2), 5);
+        let spans: Vec<VerifySpan> = (0..4)
+            .map(|slot| {
+                b.begin_slot(slot, &req_id(slot as u64 + 1)).unwrap();
+                VerifySpan { slot, tokens: vec![0; 4], guides: vec![None; 4], eps: 1.0 }
+            })
+            .collect();
+        let out = b.step_batch(&spans).unwrap();
+        for l in 0..2 {
+            let union = &out.expert_ids[l];
+            assert_eq!(union.len(), out.batch_unique_experts[l]);
+            assert!(union.windows(2).all(|w| w[0] < w[1]), "union not sorted/deduped");
+            let mut rebuilt: Vec<usize> = out.shared_expert_ids[l].clone();
+            for s in &out.slots {
+                assert_eq!(s.marginal_expert_ids[l].len(), s.marginal_unique_experts[l]);
+                rebuilt.extend(s.marginal_expert_ids[l].iter().copied());
+            }
+            rebuilt.sort_unstable();
+            assert_eq!(&rebuilt, union, "marginal + shared ids != union at layer {l}");
+        }
     }
 
     #[test]
