@@ -119,6 +119,55 @@ impl PlacementKind {
     }
 }
 
+/// Victim-selection policy for KV-pool preemption (`EngineConfig::eviction`).
+/// See rust/docs/preemption.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EvictionKind {
+    /// No preemption: an oversubscribed pool keeps today's shrink-then-defer
+    /// behavior and surfaces a deadlock error when nothing can progress.
+    Off,
+    /// Evict the least-recently-admitted slot first (admission-order FIFO).
+    /// Re-admission re-stamps the clock, so a just-readmitted request is the
+    /// *last* choice next time — damping evict/readmit ping-pong.
+    Lru,
+    /// Evict the slot with the largest speculative reservation planned this
+    /// iteration (biggest K first): the request whose lookahead is costing
+    /// the pool the most blocks per emitted token.
+    MostLookahead,
+    /// Evict the slot with the lowest marginal utility (emitted tokens per
+    /// simulated second of its marginal iteration cost) as observed by its
+    /// per-request Cascade/static policy feedback — the paper's
+    /// utility-driven lens applied to victim selection.
+    CostAware,
+}
+
+impl EvictionKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "off" => Ok(EvictionKind::Off),
+            "lru" => Ok(EvictionKind::Lru),
+            "most-lookahead" => Ok(EvictionKind::MostLookahead),
+            "cost-aware" => Ok(EvictionKind::CostAware),
+            other => anyhow::bail!(
+                "unknown eviction {other:?} (want off|lru|most-lookahead|cost-aware)"
+            ),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvictionKind::Off => "off",
+            EvictionKind::Lru => "lru",
+            EvictionKind::MostLookahead => "most-lookahead",
+            EvictionKind::CostAware => "cost-aware",
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        *self != EvictionKind::Off
+    }
+}
+
 /// Engine-level configuration for one serving run.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -143,9 +192,23 @@ pub struct EngineConfig {
     /// Shared KV pool size in blocks for the batched engine. 0 = the
     /// aggregate worst case (`max_batch * max_seq / block_size`): no
     /// cross-request contention. Smaller values oversubscribe the pool so
-    /// admission and speculative lookahead genuinely compete for blocks
-    /// (eviction/preemption is future work — see ROADMAP).
+    /// admission and speculative lookahead genuinely compete for blocks;
+    /// `eviction` then decides whether the engine preempts victims to keep
+    /// decoding or (when off) surfaces a deadlock once nothing can progress.
     pub kv_pool_blocks: usize,
+    /// Preemption policy for an oversubscribed KV pool: when a slot cannot
+    /// reserve its planned verify span, evict a victim (releasing its
+    /// blocks, parking it for replay-based re-admission) or defer the whole
+    /// span — never shrink it, which is what keeps evicted-then-readmitted
+    /// token streams bit-exact with uncontended runs. `Off` (default)
+    /// preserves the pre-preemption shrink/defer/deadlock behavior
+    /// bit-exactly. See rust/docs/preemption.md.
+    pub eviction: EvictionKind,
+    /// Upper bound on how many times one request may be preempted; a
+    /// request at the cap is never selected as a victim again (it is
+    /// "pinned"), bounding re-prefill thrash at the price of possible
+    /// deadlock when every candidate is pinned.
+    pub max_preemptions_per_req: usize,
     /// Two-stage pipelined drafting (paper Fig. 14): draft iteration i+1's
     /// proposals while the backend verifies iteration i, reconciling (and
     /// recomputing) drafts whose acceptance assumption broke. Drafting
@@ -180,6 +243,8 @@ impl Default for EngineConfig {
             seed: 0xCA5CADE,
             max_batch: 1,
             kv_pool_blocks: 0,
+            eviction: EvictionKind::Off,
+            max_preemptions_per_req: 8,
             pipeline: false,
             shards: 1,
             placement: PlacementKind::Balanced,
@@ -209,6 +274,23 @@ mod tests {
         assert!(l1.enable_disable && !l1.enable_backoff);
         let l3 = CascadeParams::ablation(3);
         assert!(l3.enable_disable && l3.enable_backoff && l3.enable_hillclimb);
+    }
+
+    #[test]
+    fn eviction_kinds_roundtrip_and_default_off() {
+        for kind in [
+            EvictionKind::Off,
+            EvictionKind::Lru,
+            EvictionKind::MostLookahead,
+            EvictionKind::CostAware,
+        ] {
+            assert_eq!(EvictionKind::parse(kind.label()).unwrap(), kind);
+            assert_eq!(kind.is_on(), kind != EvictionKind::Off);
+        }
+        assert!(EvictionKind::parse("fifo").is_err());
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.eviction, EvictionKind::Off, "preemption must be opt-in");
+        assert!(cfg.max_preemptions_per_req > 0);
     }
 
     #[test]

@@ -26,6 +26,21 @@
 //!   prediction and reconciled at the next draft stage
 //!   (`coordinator::pipeline`). Token output is bit-identical to serial;
 //!   only the cost accounting changes (`IterCost::draft_hidden_s`).
+//! * **Preemption / eviction** (`EngineConfig::eviction`) — under an
+//!   oversubscribed pool, a slot that cannot reserve its full planned
+//!   verify span (1 + K tokens) selects a victim
+//!   (`coordinator::eviction`), releases the victim's blocks, invalidates
+//!   its lookahead entry by `req_id`, and parks it on a re-admission
+//!   queue; on re-admission the victim's committed context
+//!   is re-prefilled (and its decode history replayed, so the backend's
+//!   per-slot state is reconstructed exactly) and the recompute is charged
+//!   into `IterCost::reprefill_s`. With eviction on, pool pressure is
+//!   **all-or-nothing** per slot (defer the whole span rather than shrink
+//!   K): only span-preserving responses keep an evicted-then-readmitted
+//!   request's token stream bit-exact with an uncontended run — the
+//!   losslessness guarantee (rust/docs/preemption.md,
+//!   rust/tests/preemption.rs). `eviction = off` (the default) keeps the
+//!   legacy shrink-then-defer behavior and the deadlock bail bit-exactly.
 //!
 //! Per-request `RequestMetrics` keep the *latency* view (each iteration's
 //! full fused cost — that is what the request waited for); the
@@ -33,9 +48,10 @@
 //! (fused cost charged once per iteration), including pipeline hit/bubble
 //! telemetry.
 
-use crate::config::{DrafterKind, EngineConfig, PlacementKind, MAX_K};
+use crate::config::{DrafterKind, EngineConfig, EvictionKind, PlacementKind, MAX_K};
 use crate::coordinator::backend::{Backend, BatchStep, VerifySpan};
 use crate::coordinator::engine::EngineDrafter;
+use crate::coordinator::eviction::{select_victim, VictimCandidate};
 use crate::coordinator::pipeline::{plan_spec_task, reconcile_entry, run_spec_tasks, SpecDraft};
 use crate::cost::{CoActivationStats, ExpertPlacement, GpuCostModel, IterCost};
 use crate::kv::KvBlockPool;
@@ -65,6 +81,29 @@ struct SlotState {
     /// Last marginal iteration cost this request observed — seeds the
     /// policy-K forecast of the pipelined draft stage.
     last_iter_s: f64,
+    /// Monotone admission stamp (re-stamped on re-admission after an
+    /// eviction) — the `lru` victim ordering.
+    admitted_seq: u64,
+    /// Marginal utility (emitted tokens per simulated second) last observed
+    /// by this request's policy feedback; `f64::INFINITY` before the first
+    /// decode iteration — the `cost-aware` victim ordering.
+    last_utility: f64,
+    /// Backend-visible decode history (verify spans + committed advances),
+    /// recorded only under an eviction-enabled pool so an evicted request's
+    /// backend state can be replayed exactly on re-admission. Empty (and
+    /// never pushed to) with `eviction = off`.
+    history: Vec<ReplayStep>,
+}
+
+/// One recorded verify step of a request's decode history: enough to
+/// re-issue the identical backend call sequence after an eviction, which
+/// reconstructs a history-dependent backend state (the sim's per-slot rng
+/// process) bit-exactly — the foundation of the losslessness guarantee.
+struct ReplayStep {
+    tokens: Vec<u32>,
+    guides: Vec<Option<u32>>,
+    /// Positions committed after the step (1 + accepted drafts).
+    advance: usize,
 }
 
 /// Plan-stage decision for one slot: the K the policy chose after the
@@ -133,12 +172,29 @@ pub struct BatchEngine {
     /// per-layer id unions when it attributes ids).
     coact: CoActivationStats,
     iters_since_placement: usize,
+    /// Evicted requests awaiting re-admission (preemption queue, FIFO).
+    /// They hold no pool blocks and no backend slot while parked.
+    parked: VecDeque<SlotState>,
+    /// Monotone admission counter feeding `SlotState::admitted_seq`.
+    admit_seq: u64,
+    /// Re-prefill seconds accrued since the last committed iteration;
+    /// drained into that iteration's `IterCost::reprefill_s`.
+    pending_reprefill_s: f64,
+    /// Evictions / re-admissions since the last committed iteration;
+    /// drained into its `BatchIterRecord`.
+    pending_evictions: usize,
+    pending_readmissions: usize,
 }
 
 /// Fused iterations between co-activation placement rebuilds. Small enough
 /// to adapt within a serving run, large enough that the histogram has
 /// signal before the first rebuild.
 const PLACEMENT_REFRESH: usize = 32;
+
+/// KV page size (tokens per block) of the batched engine's shared pool —
+/// the one source of truth for anything sizing pools in blocks (the
+/// preemption experiment derives its half-working-set pool from it).
+pub const KV_BLOCK: usize = 16;
 
 impl BatchEngine {
     /// Build over an explicit backend. `cfg.max_batch` is clamped to what
@@ -150,7 +206,7 @@ impl BatchEngine {
         cost: GpuCostModel,
         policy_kind: PolicyKind,
     ) -> Self {
-        let kv_block = 16;
+        let kv_block = KV_BLOCK;
         let max_batch = cfg.max_batch.max(1).min(backend.max_slots());
         let blocks_per_request = backend.mini().max_seq / kv_block;
         // Pool sizing: the aggregate worst case by default (no
@@ -194,6 +250,11 @@ impl BatchEngine {
             placement,
             coact,
             iters_since_placement: 0,
+            parked: VecDeque::new(),
+            admit_seq: 0,
+            pending_reprefill_s: 0.0,
+            pending_evictions: 0,
+            pending_readmissions: 0,
         }
     }
 
@@ -254,11 +315,24 @@ impl BatchEngine {
             .flatten()
             .map(|s| s.req.max_new_tokens.saturating_sub(1))
             .sum();
-        done + active
+        // Parked (evicted) requests are admitted work: they re-enter a slot
+        // and finish their budget, so admission control must keep charging
+        // for them while they wait.
+        let parked: usize = self
+            .parked
+            .iter()
+            .map(|s| s.req.max_new_tokens.saturating_sub(1))
+            .sum();
+        done + active + parked
     }
 
     pub fn active(&self) -> usize {
         self.slots.iter().flatten().filter(|s| !s.finished).count()
+    }
+
+    /// Evicted requests currently waiting for re-admission.
+    pub fn parked_requests(&self) -> usize {
+        self.parked.len()
     }
 
     pub fn has_free_slot(&self) -> bool {
@@ -336,13 +410,13 @@ impl BatchEngine {
             }
         };
         // Prefill charge: chunked full-parallel steps (excluded from TPOT).
-        let chunks = req.prompt.len().div_ceil(self.backend.mini().prefill_chunk);
-        metrics.prefill_s = chunks as f64 * self.cost.baseline_cost().total();
+        metrics.prefill_s = self.prefill_charge(req.prompt.len());
 
         let mut context = req.prompt.clone();
         context.push(first);
         let finished = first == EOS || req.max_new_tokens <= 1;
         let d_eps = crate::coordinator::eagle::draft_eps(req.task);
+        self.admit_seq += 1;
         let state = SlotState {
             d_eps,
             policy,
@@ -354,6 +428,9 @@ impl BatchEngine {
             wall_start,
             req,
             last_iter_s: 0.0,
+            admitted_seq: self.admit_seq,
+            last_utility: f64::INFINITY,
+            history: Vec::new(),
         };
         if state.finished {
             // EOS at prefill (or a 1-token budget): finalize immediately.
@@ -385,29 +462,52 @@ impl BatchEngine {
     /// overlap-aware costs, feed policies). Returns false when nothing is
     /// in flight (the caller should admit or stop).
     pub fn step_iteration(&mut self) -> Result<bool> {
+        // ---- Stage 0: re-admission --------------------------------------
+        // Bring evicted requests back in while slots and blocks allow; each
+        // re-admission re-prefills (and replays) the victim's committed
+        // context and charges `pending_reprefill_s`.
+        self.readmit_parked()?;
+
         // ---- Stage 1: plan ----------------------------------------------
         let plans = self.plan_stage();
 
         // ---- Stage 2: draft ---------------------------------------------
-        let (spans, planned, reconcile, deferred) = self.draft_stage(&plans)?;
+        let (spans, planned, reconcile, deferred, evicted) = self.draft_stage(&plans)?;
 
         if spans.is_empty() {
             // Nothing to verify; finalize any slots that just ran out of
-            // window room. Their released blocks may unblock a deferred
-            // request, so that still counts as progress.
+            // window room. Their released blocks — like any blocks evicted
+            // this pass — may unblock a deferred request, so both count as
+            // progress.
             let swept = self.sweep_finished();
-            if deferred > 0 && swept > 0 {
+            if deferred > 0 && (swept > 0 || evicted > 0) {
                 return Ok(true);
             }
-            // Deferred slots with no progressing neighbour can never be
-            // unblocked (nothing will free pool blocks): a genuine
-            // deadlock of an oversubscribed pool, surfaced rather than
-            // spun on.
-            anyhow::ensure!(
-                deferred == 0,
-                "KV pool deadlock: {deferred} request(s) cannot reserve their next token and \
-                 nothing else is decoding; increase kv_pool_blocks (eviction is not implemented)"
-            );
+            // Deferred slots with no progressing neighbour and no evictable
+            // victim can never be unblocked (nothing will free pool
+            // blocks): a genuine deadlock of an oversubscribed pool,
+            // surfaced rather than spun on.
+            if deferred > 0 {
+                match self.cfg.eviction {
+                    EvictionKind::Off => anyhow::bail!(
+                        "KV pool deadlock: {deferred} request(s) cannot reserve their next \
+                         token and nothing else is decoding; increase kv_pool_blocks or turn \
+                         preemption on (--eviction lru|most-lookahead|cost-aware)"
+                    ),
+                    kind => anyhow::bail!(
+                        "KV pool deadlock under eviction={}: {deferred} stuck request(s) and \
+                         no evictable victim (max_preemptions_per_req = {} pins repeat \
+                         victims); raise the cap or kv_pool_blocks",
+                        kind.label(),
+                        self.cfg.max_preemptions_per_req
+                    ),
+                }
+            }
+            if !self.parked.is_empty() {
+                // All slots drained but evicted requests still wait: the
+                // freed slots/blocks let the next pass re-admit them.
+                return Ok(true);
+            }
             return Ok(false);
         }
 
@@ -481,36 +581,64 @@ impl BatchEngine {
     /// request, same context tail, same K) — its scan already ran hidden
     /// under the previous verify — otherwise scan now (a pipeline
     /// bubble). Returns spans, per-span bookkeeping, the reconcile tally
-    /// (hits, misses, recomputes), and how many slots were deferred by
-    /// pool pressure.
+    /// (hits, misses, recomputes), how many slots were deferred by pool
+    /// pressure, and how many victims were evicted to relieve it.
     #[allow(clippy::type_complexity)]
     fn draft_stage(
         &mut self,
         plans: &[SlotPlan],
-    ) -> Result<(Vec<VerifySpan>, Vec<PlannedSpan>, ReconcileTally, usize)> {
+    ) -> Result<(Vec<VerifySpan>, Vec<PlannedSpan>, ReconcileTally, usize, usize)> {
         let pipeline = self.cfg.pipeline;
         let mut spans: Vec<VerifySpan> = Vec::with_capacity(plans.len());
         let mut planned: Vec<PlannedSpan> = Vec::with_capacity(plans.len());
         let mut tally = ReconcileTally::default();
         let mut deferred = 0usize;
+        let mut evicted = 0usize;
+        // Slots whose span is already built this pass: their reservations
+        // are live inputs of the fused step, so they are never victims.
+        let mut in_spans = vec![false; self.slots.len()];
         for plan in plans {
-            let state = self.slots[plan.slot].as_mut().expect("planned slot is live");
-            // Shared-pool pressure, checked immediately before this slot's
-            // reservation (earlier slots in this pass have already taken
-            // theirs): shrink speculation until the span fits; if even the
-            // next token cannot be reserved, defer this request for one
-            // iteration — the other spans' commits and releases free
-            // blocks (preemption/eviction is future work). A deferred
-            // slot's lookahead entry stays buffered: its context has not
-            // moved, so it may still hit next iteration.
+            // The slot may have been evicted by an earlier stuck slot in
+            // this very pass — skip it (it is parked, not deferred).
+            let Some(state_ref) = self.slots[plan.slot].as_ref() else { continue };
+            let req_id = state_ref.req.id;
             let mut k = plan.k;
-            while k > 0 && !self.pool.can_reserve(state.req.id, 1 + k) {
-                k -= 1;
+            if self.cfg.eviction.is_on() {
+                // Preemption mode: pool pressure is all-or-nothing per
+                // slot. Shrinking K under pressure would change this
+                // request's span sequence — and with it the sampled token
+                // stream — versus an uncontended run; deferring or
+                // evicting preserves it (the losslessness guarantee,
+                // rust/docs/preemption.md). So: evict victims until the
+                // full planned span fits, else defer the whole iteration.
+                while !self.pool.can_reserve(req_id, 1 + k) {
+                    let Some(victim) = self.pick_victim(plan.slot, &in_spans, plans) else {
+                        break;
+                    };
+                    self.evict_slot(victim)?;
+                    evicted += 1;
+                }
+                if !self.pool.can_reserve(req_id, 1 + k) {
+                    deferred += 1;
+                    continue;
+                }
+            } else {
+                // Legacy pressure response (bit-exact with `eviction=off`
+                // builds): shrink speculation until the span fits; if even
+                // the next token cannot be reserved, defer this request
+                // for one iteration — the other spans' commits and
+                // releases free blocks. A deferred slot's lookahead entry
+                // stays buffered: its context has not moved, so it may
+                // still hit next iteration.
+                while k > 0 && !self.pool.can_reserve(req_id, 1 + k) {
+                    k -= 1;
+                }
+                if !self.pool.can_reserve(req_id, 1) {
+                    deferred += 1;
+                    continue;
+                }
             }
-            if !self.pool.can_reserve(state.req.id, 1) {
-                deferred += 1;
-                continue;
-            }
+            let state = self.slots[plan.slot].as_mut().expect("slot checked above");
             // Consume this slot's lookahead entry, valid or not: a stale
             // speculation is useless once the real iteration diverged.
             let entry_pos = self.lookahead.iter().position(|e| e.slot == plan.slot);
@@ -560,8 +688,127 @@ impl BatchEngine {
                 pipelined,
                 hidden_window_s,
             });
+            in_spans[plan.slot] = true;
         }
-        Ok((spans, planned, tally, deferred))
+        Ok((spans, planned, tally, deferred, evicted))
+    }
+
+    /// Build the victim-candidate view for `stuck` slot's eviction request
+    /// and select per the configured policy. Candidates are live,
+    /// unfinished slots other than the stuck one that are not already part
+    /// of this iteration's fused step; requests at the preemption cap are
+    /// filtered inside [`select_victim`]. With one active request there are
+    /// no candidates — the sole slot is never evicted.
+    fn pick_victim(&self, stuck: usize, in_spans: &[bool], plans: &[SlotPlan]) -> Option<usize> {
+        let planned_k =
+            |slot: usize| plans.iter().find(|p| p.slot == slot).map_or(0, |p| p.k);
+        let mut cands: Vec<VictimCandidate> = Vec::new();
+        for (slot, entry) in self.slots.iter().enumerate() {
+            let Some(s) = entry else { continue };
+            if slot == stuck || s.finished || in_spans[slot] {
+                continue;
+            }
+            cands.push(VictimCandidate {
+                slot,
+                req_id: s.req.id,
+                admitted_seq: s.admitted_seq,
+                planned_k: planned_k(slot),
+                blocks: self.pool.blocks_of(s.req.id),
+                last_utility: s.last_utility,
+                preemptions: self.pool.preemptions(s.req.id),
+            });
+        }
+        select_victim(self.cfg.eviction, &cands, self.cfg.max_preemptions_per_req)
+    }
+
+    /// Evict one slot: release its pool blocks and backend state,
+    /// invalidate its buffered lookahead by `req_id`, and park the request
+    /// (policy, drafter, output, and replay history intact) for
+    /// re-admission.
+    fn evict_slot(&mut self, slot: usize) -> Result<()> {
+        let mut state = self.slots[slot]
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("evicting empty slot {slot}"))?;
+        // Invalidate the victim's buffered speculation by request id (the
+        // reconcile rule would also reject it on req_id mismatch, but a
+        // dead entry must not linger on a slot about to be rebound).
+        self.lookahead.retain(|e| e.req_id != state.req.id);
+        self.pool.evict(state.req.id)?;
+        self.backend.release_slot(slot);
+        state.metrics.preemptions += 1;
+        self.pending_evictions += 1;
+        self.parked.push_back(state);
+        Ok(())
+    }
+
+    /// Simulated time to (re)compute `tokens` context positions through the
+    /// chunked full-parallel prefill path — the one pricing law shared by
+    /// admission prefill (`RequestMetrics::prefill_s`, outside TPOT) and
+    /// post-eviction re-prefill (`IterCost::reprefill_s`, inside TPOT).
+    fn prefill_charge(&self, tokens: usize) -> f64 {
+        let chunks = tokens.div_ceil(self.backend.mini().prefill_chunk);
+        chunks as f64 * self.cost.baseline_cost().total()
+    }
+
+    /// Re-admit parked (evicted) requests while free slots and pool blocks
+    /// allow: re-prefill the committed context through the prefill path,
+    /// replay the recorded decode history so a history-dependent backend
+    /// lands in exactly its pre-eviction state, and charge the simulated
+    /// recompute time to `pending_reprefill_s` (drained into the next
+    /// committed iteration's `IterCost::reprefill_s`). Returns how many
+    /// requests came back.
+    fn readmit_parked(&mut self) -> Result<usize> {
+        let mut readmitted = 0usize;
+        while !self.parked.is_empty() {
+            let Some(slot) = self.slots.iter().position(|s| s.is_none()) else { break };
+            let committed = {
+                let s = self.parked.front().expect("checked non-empty");
+                s.req.prompt.len() + s.history.iter().map(|h| h.advance).sum::<usize>()
+            };
+            if !self.pool.can_admit(committed) {
+                break;
+            }
+            let mut state = self.parked.pop_front().expect("checked non-empty");
+            self.pool.admit(state.req.id, committed)?;
+            self.backend.begin_slot(slot, &state.req)?;
+            // Identical call sequence as the original admission + decode:
+            // prefill the prompt, then replay every recorded verify span
+            // and its committed advance. The sim backend's per-slot rng
+            // process is a pure function of this sequence, so the slot
+            // state after replay is bit-exact with the state at eviction —
+            // the losslessness guarantee (rust/tests/preemption.rs).
+            let guide0 = state.req.reference.first().copied();
+            let first =
+                self.backend.prefill_slot(slot, &state.req.prompt, guide0, state.req.eps)?;
+            anyhow::ensure!(
+                state.output.first() == Some(&first),
+                "re-prefill diverged for request {}: first token {first} != {:?}",
+                state.req.id,
+                state.output.first(),
+            );
+            for h in &state.history {
+                let span = VerifySpan {
+                    slot,
+                    tokens: h.tokens.clone(),
+                    guides: h.guides.clone(),
+                    eps: state.req.eps,
+                };
+                self.backend.step_batch(std::slice::from_ref(&span))?;
+                self.backend.advance_slot(slot, h.advance);
+            }
+            // The honest price of the thrash: the same chunked prefill law
+            // as admission, but over the whole committed span and billed on
+            // the decode clock because decode-time pool pressure caused it.
+            let charge = self.prefill_charge(committed);
+            self.pending_reprefill_s += charge;
+            state.metrics.reprefill_s += charge;
+            self.admit_seq += 1;
+            state.admitted_seq = self.admit_seq;
+            self.pending_readmissions += 1;
+            readmitted += 1;
+            self.slots[slot] = Some(state);
+        }
+        Ok(readmitted)
     }
 
     /// Speculatively draft iteration i+1 for every span of iteration i,
@@ -664,7 +911,12 @@ impl BatchEngine {
             draft_hidden_s += d.min(p.hidden_window_s);
         }
         let draft_hidden_s = draft_hidden_s.min(cost_full.draft_s);
-        let cost = IterCost { draft_hidden_s, ..cost_full };
+        // Drain the re-prefill time accrued by re-admissions since the last
+        // committed iteration into this iteration's fused cost: the batch
+        // clock (and every waiting request's latency view) honestly pays
+        // for the preemption thrash.
+        let reprefill_s = std::mem::take(&mut self.pending_reprefill_s);
+        let cost = IterCost { draft_hidden_s, reprefill_s, ..cost_full };
 
         let layer_mean = |v: &[usize]| -> f64 {
             if v.is_empty() {
@@ -718,6 +970,16 @@ impl BatchEngine {
             let advance = 1 + vr.accepted;
             self.pool.commit(state.req.id, advance)?;
             self.backend.advance_slot(plan.slot, advance);
+            if self.cfg.eviction.is_on() {
+                // Record the step for the replay-based re-prefill an
+                // eviction of this request would need (off mode records
+                // nothing — no memory cost).
+                state.history.push(ReplayStep {
+                    tokens: span.tokens.clone(),
+                    guides: span.guides.clone(),
+                    advance,
+                });
+            }
             state.drafter.ingest(&emitted)?;
 
             state.output.extend_from_slice(&emitted);
@@ -765,6 +1027,13 @@ impl BatchEngine {
                 iter_s: req_cost.total(),
             };
             state.last_iter_s = obs.iter_s;
+            // The cost-aware victim ordering reads the same signal the
+            // policy observes: marginal tokens-per-second of this request.
+            state.last_utility = if obs.iter_s > 0.0 {
+                obs.emitted as f64 / obs.iter_s
+            } else {
+                f64::INFINITY
+            };
             state.policy.observe(&obs);
             state.metrics.iters.push(IterRecord {
                 k_chosen: plan.k_chosen,
@@ -852,6 +1121,8 @@ impl BatchEngine {
                 .filter(|p| p.pipelined)
                 .map(|p| p.draft_wall_ns)
                 .sum(),
+            evictions: std::mem::take(&mut self.pending_evictions),
+            readmissions: std::mem::take(&mut self.pending_readmissions),
         });
         Ok(cost)
     }
@@ -930,6 +1201,16 @@ impl BatchEngine {
         } else {
             String::new()
         };
-        format!("{}/{}@b{}{pipe}{shard}", self.cfg.model, self.policy_kind.label(), self.max_batch)
+        let ev = if self.cfg.eviction.is_on() {
+            format!("+ev/{}", self.cfg.eviction.label())
+        } else {
+            String::new()
+        };
+        format!(
+            "{}/{}@b{}{pipe}{shard}{ev}",
+            self.cfg.model,
+            self.policy_kind.label(),
+            self.max_batch
+        )
     }
 }

@@ -1,0 +1,171 @@
+//! Victim selection for KV-pool preemption.
+//!
+//! When a slot of the continuous-batching engine cannot reserve its full
+//! planned verify span from the shared [`KvBlockPool`] (pool pressure is
+//! all-or-nothing per slot when eviction is on — spans are never shrunk,
+//! see rust/docs/preemption.md), the engine asks this module
+//! which *other* in-flight request to evict (release its blocks, park it
+//! for replay-based re-admission — see `coordinator::batch` and
+//! rust/docs/preemption.md). Three pluggable policies
+//! ([`EvictionKind`]):
+//!
+//! * **lru** — least-recently-admitted first. Re-admission re-stamps the
+//!   admission clock, so a just-readmitted request is deprioritized,
+//!   damping evict/readmit ping-pong.
+//! * **most-lookahead** — the slot with the largest speculative
+//!   reservation planned this iteration (biggest K). Speculation is the
+//!   discretionary share of pool pressure; shedding the biggest speculator
+//!   frees the most "optional" blocks per victim.
+//! * **cost-aware** — the slot with the lowest observed marginal utility
+//!   (emitted tokens per simulated second of its marginal iteration cost):
+//!   the paper's utility lens applied to victim selection — preempt the
+//!   request whose decoding is currently buying the fewest tokens per unit
+//!   cost. Slots with no observation yet (just admitted) report infinite
+//!   utility and are only evicted when every observed candidate is
+//!   exhausted.
+//!
+//! Selection never returns the stuck slot itself, never a slot already at
+//! the `max_preemptions_per_req` cap (a "pinned" request), and therefore
+//! **never the sole active slot** — with one request in flight there are
+//! no candidates, the engine defers instead, and (because a lone request
+//! always fits a pool clamped to at least one full window) a sole slot can
+//! never be stuck in the first place. All orderings are deterministic with
+//! a slot-index tie-break, so serving stays reproducible.
+//!
+//! [`KvBlockPool`]: crate::kv::KvBlockPool
+
+use crate::config::EvictionKind;
+
+/// One eviction candidate: a live, not-yet-verifying slot other than the
+/// stuck one. The engine builds these from its slot table + pool stats.
+#[derive(Debug, Clone, Copy)]
+pub struct VictimCandidate {
+    pub slot: usize,
+    pub req_id: u64,
+    /// Monotone admission stamp (re-stamped on re-admission).
+    pub admitted_seq: u64,
+    /// Speculation length planned for this slot this iteration.
+    pub planned_k: usize,
+    /// KV blocks the slot currently holds (freed if evicted).
+    pub blocks: usize,
+    /// Marginal utility last observed by the slot's policy feedback
+    /// (tokens per simulated second); `f64::INFINITY` before the first
+    /// observation.
+    pub last_utility: f64,
+    /// How many times this request was already preempted.
+    pub preemptions: u32,
+}
+
+/// Pick the victim among `candidates` under `kind`, or `None` when no
+/// candidate is evictable (empty list, or everyone is at the
+/// `max_preemptions` cap). `EvictionKind::Off` never selects.
+pub fn select_victim(
+    kind: EvictionKind,
+    candidates: &[VictimCandidate],
+    max_preemptions: usize,
+) -> Option<usize> {
+    if !kind.is_on() {
+        return None;
+    }
+    let eligible = candidates.iter().filter(|c| (c.preemptions as usize) < max_preemptions);
+    let best = match kind {
+        EvictionKind::Off => unreachable!("checked by is_on"),
+        // Oldest admission stamp wins; tie-break on slot index for
+        // determinism.
+        EvictionKind::Lru => eligible.min_by_key(|c| (c.admitted_seq, c.slot)),
+        // Largest planned speculation wins; among equals prefer the one
+        // holding more blocks (frees more), then lowest slot index.
+        EvictionKind::MostLookahead => {
+            eligible.max_by_key(|c| (c.planned_k, c.blocks, std::cmp::Reverse(c.slot)))
+        }
+        // Lowest marginal utility wins. `total_cmp` gives a total order
+        // (infinities sort last, so unobserved slots are a last resort);
+        // tie-break on slot index.
+        EvictionKind::CostAware => eligible.min_by(|a, b| {
+            a.last_utility.total_cmp(&b.last_utility).then(a.slot.cmp(&b.slot))
+        }),
+    };
+    best.map(|c| c.slot)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(slot: usize, seq: u64, k: usize, util: f64, pre: u32) -> VictimCandidate {
+        VictimCandidate {
+            slot,
+            req_id: slot as u64 + 100,
+            admitted_seq: seq,
+            planned_k: k,
+            blocks: 4,
+            last_utility: util,
+            preemptions: pre,
+        }
+    }
+
+    #[test]
+    fn off_and_empty_select_nothing() {
+        let cands = [cand(0, 1, 3, 50.0, 0)];
+        assert_eq!(select_victim(EvictionKind::Off, &cands, 8), None);
+        for kind in [EvictionKind::Lru, EvictionKind::MostLookahead, EvictionKind::CostAware] {
+            // No candidates — the sole-active-slot case: never evict.
+            assert_eq!(select_victim(kind, &[], 8), None);
+        }
+    }
+
+    #[test]
+    fn lru_picks_oldest_admission() {
+        let cands = [cand(0, 7, 1, 10.0, 0), cand(1, 2, 5, 90.0, 0), cand(2, 9, 3, 1.0, 0)];
+        assert_eq!(select_victim(EvictionKind::Lru, &cands, 8), Some(1));
+    }
+
+    #[test]
+    fn most_lookahead_picks_biggest_speculator() {
+        let cands = [cand(0, 1, 2, 10.0, 0), cand(1, 2, 6, 90.0, 0), cand(2, 3, 4, 1.0, 0)];
+        assert_eq!(select_victim(EvictionKind::MostLookahead, &cands, 8), Some(1));
+        // Tie on K: the slot holding more blocks frees more.
+        let mut a = cand(0, 1, 4, 10.0, 0);
+        a.blocks = 2;
+        let mut b = cand(1, 2, 4, 10.0, 0);
+        b.blocks = 6;
+        assert_eq!(select_victim(EvictionKind::MostLookahead, &[a, b], 8), Some(1));
+    }
+
+    #[test]
+    fn cost_aware_picks_lowest_utility_and_spares_unobserved() {
+        let cands = [
+            cand(0, 1, 3, 40.0, 0),
+            cand(1, 2, 3, 5.0, 0),
+            cand(2, 3, 3, f64::INFINITY, 0), // just admitted, no signal yet
+        ];
+        assert_eq!(select_victim(EvictionKind::CostAware, &cands, 8), Some(1));
+        // Only unobserved candidates left: they are still evictable (last
+        // resort), deterministically by slot index.
+        let fresh = [cand(4, 1, 3, f64::INFINITY, 0), cand(3, 2, 3, f64::INFINITY, 0)];
+        assert_eq!(select_victim(EvictionKind::CostAware, &fresh, 8), Some(3));
+    }
+
+    #[test]
+    fn preemption_cap_pins_requests() {
+        let cands = [cand(0, 1, 3, 1.0, 2), cand(1, 2, 5, 99.0, 0)];
+        // Cap 2: slot 0 is pinned, the worse-on-paper slot 1 is taken.
+        for kind in [EvictionKind::Lru, EvictionKind::MostLookahead, EvictionKind::CostAware] {
+            assert_eq!(select_victim(kind, &cands, 2), Some(1), "{kind:?}");
+        }
+        // Everyone pinned: no victim, the engine must defer (and possibly
+        // surface the capped-deadlock error).
+        let pinned = [cand(0, 1, 3, 1.0, 2), cand(1, 2, 5, 99.0, 2)];
+        for kind in [EvictionKind::Lru, EvictionKind::MostLookahead, EvictionKind::CostAware] {
+            assert_eq!(select_victim(kind, &pinned, 2), None, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_tie_breaks() {
+        let cands = [cand(2, 5, 3, 7.0, 0), cand(1, 5, 3, 7.0, 0)];
+        assert_eq!(select_victim(EvictionKind::Lru, &cands, 8), Some(1));
+        assert_eq!(select_victim(EvictionKind::CostAware, &cands, 8), Some(1));
+        assert_eq!(select_victim(EvictionKind::MostLookahead, &cands, 8), Some(1));
+    }
+}

@@ -10,6 +10,7 @@
 pub mod backend;
 pub mod batch;
 pub mod eagle;
+pub mod eviction;
 pub mod engine;
 pub mod pipeline;
 pub mod scheduler;

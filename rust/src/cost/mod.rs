@@ -42,6 +42,14 @@ pub struct IterCost {
     /// shards). Always 0 at shards = 1 — single-GPU runs are bit-identical
     /// to the unsharded cost model.
     pub alltoall_s: f64,
+    /// Re-prefill time charged to this iteration: chunked full-parallel
+    /// recompute of the committed context of requests re-admitted after a
+    /// KV-pool eviction (rust/docs/preemption.md). Unlike admission prefill
+    /// (excluded from TPOT as the paper's decode-latency focus dictates),
+    /// re-prefill is *caused by* decode-time pool pressure, so it is billed
+    /// on the decode clock — TPOT and utility honestly reflect the thrash.
+    /// Always 0 with `eviction = off`.
+    pub reprefill_s: f64,
 }
 
 impl IterCost {
@@ -56,6 +64,7 @@ impl IterCost {
             + self.reject_s
             + self.overhead_s
             + self.alltoall_s
+            + self.reprefill_s
     }
 
     /// Drafting time that actually extends the iteration (not hidden under
@@ -123,6 +132,7 @@ impl GpuCostModel {
             overhead_s: self.hw.iter_overhead_s,
             draft_hidden_s: 0.0,
             alltoall_s: 0.0,
+            reprefill_s: 0.0,
         }
     }
 
@@ -174,6 +184,7 @@ impl GpuCostModel {
             overhead_s: self.hw.iter_overhead_s,
             draft_hidden_s: 0.0,
             alltoall_s: 0.0,
+            reprefill_s: 0.0,
         }
     }
 
@@ -247,6 +258,7 @@ impl GpuCostModel {
             overhead_s: self.hw.iter_overhead_s,
             draft_hidden_s: 0.0,
             alltoall_s: self.alltoall_s(n_shards, total_tokens),
+            reprefill_s: 0.0,
         }
     }
 
@@ -350,6 +362,7 @@ impl GpuCostModel {
             overhead_s: self.hw.iter_overhead_s / n,
             draft_hidden_s: 0.0,
             alltoall_s: 0.0,
+            reprefill_s: 0.0,
         }
     }
 
@@ -516,6 +529,19 @@ mod tests {
         let m = model("qwen");
         let measured = m.verify_cost(&[4, 4], 1, 0, DrafterKind::Ngram);
         assert!((measured.total() - m.baseline_cost().total()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reprefill_charges_the_decode_clock_not_verify() {
+        // Re-prefill after an eviction extends the iteration (TPOT-visible)
+        // but is not verification work: total() grows by exactly the charge,
+        // verify_s() is untouched, and the default is free.
+        let m = model("mixtral");
+        let plain = m.verify_cost(&[6, 6], 4, 3, DrafterKind::Ngram);
+        assert_eq!(plain.reprefill_s, 0.0);
+        let charged = IterCost { reprefill_s: 2e-3, ..plain };
+        assert!((charged.total() - (plain.total() + 2e-3)).abs() < 1e-15);
+        assert!((charged.verify_s() - plain.verify_s()).abs() < 1e-15);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 pub mod batching;
 pub mod figures;
 pub mod pipeline;
+pub mod preemption;
 pub mod related;
 pub mod runner;
 pub mod sharding;
@@ -104,6 +105,11 @@ pub fn all() -> Vec<Experiment> {
             id: "sharding",
             caption: "EXTENSION: expert-parallel sharding, max-over-shards verify cost (sim)",
             run: sharding::sharding,
+        },
+        Experiment {
+            id: "preemption",
+            caption: "EXTENSION: KV-pool preemption, throughput vs pool size with/without eviction (sim)",
+            run: preemption::preemption,
         },
     ]
 }

@@ -1,0 +1,178 @@
+//! Preemption/eviction experiment (extension beyond the paper's
+//! single-batch setting): completed-request throughput under an
+//! oversubscribed shared KV pool, with and without victim eviction.
+//!
+//! The serving regime the north star demands — heavy traffic into a fixed
+//! pool — makes one request's speculative lookahead crowd out another's
+//! decoding. With `eviction = off` an oversubscribed pool eventually
+//! deadlocks (every in-flight request stuck at a block boundary, nothing
+//! freeing blocks) and the run aborts with the deadlock error; the rows
+//! here report what completed before the stall. With a victim policy
+//! (`lru` / `most-lookahead` / `cost-aware`, see `coordinator::eviction`)
+//! the engine preempts, re-prefills on re-admission, and completes every
+//! request — at the honest price of the re-prefill time, charged into
+//! `IterCost::reprefill_s` (the "thrash" column). The interesting
+//! comparison is completed-request throughput at the constrained pool:
+//! eviction strictly beats the deadlocking baseline, and the policies
+//! differ in how much thrash they pay for it.
+
+use crate::config::{EngineConfig, EvictionKind};
+use crate::coordinator::batch::{BatchEngine, KV_BLOCK};
+use crate::experiments::runner::ExpCtx;
+use crate::metrics::BatchRunMetrics;
+use crate::spec::policy::PolicyKind;
+use crate::util::table::{ms, Table};
+use crate::workload::{Request, RequestStream, Workload};
+use anyhow::Result;
+
+/// Victim policies on the experiment axis (off = deadlock baseline).
+pub const EVICTIONS: [EvictionKind; 4] = [
+    EvictionKind::Off,
+    EvictionKind::Lru,
+    EvictionKind::MostLookahead,
+    EvictionKind::CostAware,
+];
+
+/// Deterministic request list for the preemption cells: long generations
+/// so a constrained pool genuinely thrashes.
+pub fn cell_requests(n: usize, max_new: usize, seed: u64) -> Vec<Request> {
+    let w = Workload::by_name("code+math").expect("known mix");
+    RequestStream::new(w, seed, max_new).take(n)
+}
+
+/// Pool size of roughly **half the batch's working set**: the `batch`
+/// largest request spans (prompt + full decode, block-rounded), halved.
+/// Small enough that the off baseline deadlocks, large enough that any
+/// single request always fits (the engine additionally clamps to one full
+/// window).
+pub fn constrained_pool_blocks(reqs: &[Request], batch: usize) -> usize {
+    let span = |r: &Request| (r.prompt.len() + 1 + r.max_new_tokens).div_ceil(KV_BLOCK) + 1;
+    let mut spans: Vec<usize> = reqs.iter().map(span).collect();
+    spans.sort_unstable_by(|a, b| b.cmp(a));
+    let working: usize = spans.iter().take(batch.max(1)).sum();
+    (working / 2).max(1)
+}
+
+/// Outcome of one serving cell: the run's metrics (partial when the pool
+/// deadlocked — only requests completed before the stall), the deadlock
+/// message when the run aborted, and the pool's victim count.
+pub struct CellOutcome {
+    pub metrics: BatchRunMetrics,
+    pub deadlock: Option<String>,
+    pub total_evicted: u64,
+}
+
+impl CellOutcome {
+    /// Completed-request throughput: tokens of *completed* requests per
+    /// simulated second of the whole run (deadlocked runs pay for the
+    /// stranded iterations without harvesting their requests).
+    pub fn completed_tokens_per_s(&self) -> f64 {
+        let time: f64 = self.metrics.iters.iter().map(|r| r.cost.total()).sum();
+        if time == 0.0 {
+            return 0.0;
+        }
+        self.metrics.run.total_tokens() as f64 / time
+    }
+}
+
+/// Serve `reqs` to completion (or deadlock) on the sim backend with the
+/// given pool size (0 = uncontended auto sizing) and eviction policy.
+/// Shared by `figure preemption` and the `bench` JSON emitter so the two
+/// can never drift.
+pub fn run_cell(
+    ctx: &mut ExpCtx,
+    model: &str,
+    policy: &PolicyKind,
+    batch: usize,
+    pool_blocks: usize,
+    eviction: EvictionKind,
+    reqs: &[Request],
+) -> Result<CellOutcome> {
+    let cfg = EngineConfig {
+        model: model.into(),
+        max_batch: batch,
+        kv_pool_blocks: pool_blocks,
+        eviction,
+        // Generous cap: the cells measure policy quality, not cap
+        // exhaustion (rust/tests/preemption.rs covers the cap bound).
+        max_preemptions_per_req: 64,
+        seed: ctx.seed,
+        ..EngineConfig::default()
+    };
+    let mut engine = BatchEngine::sim(&ctx.registry, cfg, policy.clone())?;
+    match engine.serve_all(reqs) {
+        Ok(metrics) => Ok(CellOutcome {
+            metrics,
+            deadlock: None,
+            total_evicted: engine.pool.total_evicted,
+        }),
+        Err(e) => {
+            let msg = e.to_string();
+            // Only the documented stall is a reportable outcome; anything
+            // else is a real failure.
+            anyhow::ensure!(msg.contains("deadlock"), "unexpected serving failure: {msg}");
+            Ok(CellOutcome {
+                metrics: engine.finish(),
+                deadlock: Some(msg),
+                total_evicted: engine.pool.total_evicted,
+            })
+        }
+    }
+}
+
+/// The `figure preemption` table: throughput vs pool size with and without
+/// eviction, at batch 4 on the sim backend.
+pub fn preemption(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let batch = 4usize;
+    let reqs = cell_requests(8, ctx.max_new_tokens, ctx.seed);
+    let constrained = constrained_pool_blocks(&reqs, batch);
+    let mut t = Table::new(
+        format!(
+            "Preemption (sim backend, code+math mix, batch {batch}): \
+             completed-request throughput vs pool size; constrained pool = \
+             {constrained} blocks (~half the working set)"
+        ),
+        &[
+            "policy",
+            "pool",
+            "eviction",
+            "done",
+            "tokens",
+            "TPOT",
+            "tok/s done",
+            "evict",
+            "readmit",
+            "reprefill ms",
+            "thrash",
+            "status",
+        ],
+    );
+    for policy in [PolicyKind::Static(3), PolicyKind::Cascade(Default::default())] {
+        for (pool_label, pool_blocks, evictions) in [
+            // Uncontended baseline: eviction is inert, one row suffices.
+            ("auto", 0usize, &EVICTIONS[..1]),
+            ("half", constrained, &EVICTIONS[..]),
+        ] {
+            for &eviction in evictions {
+                let out =
+                    run_cell(ctx, "mixtral", &policy, batch, pool_blocks, eviction, &reqs)?;
+                let m = &out.metrics;
+                t.row(vec![
+                    policy.label(),
+                    pool_label.into(),
+                    eviction.label().into(),
+                    format!("{}/{}", m.run.requests.len(), reqs.len()),
+                    m.run.total_tokens().to_string(),
+                    ms(m.tpot_s()),
+                    format!("{:.1}", out.completed_tokens_per_s()),
+                    m.evictions().to_string(),
+                    m.readmissions().to_string(),
+                    format!("{:.2}", 1e3 * m.reprefill_s()),
+                    format!("{:.1}%", 100.0 * m.thrash_fraction()),
+                    if out.deadlock.is_some() { "deadlock".into() } else { "ok".to_string() },
+                ]);
+            }
+        }
+    }
+    Ok(vec![t])
+}

@@ -7,6 +7,15 @@
 //! *committed* vs *speculative*, maps them onto fixed-size blocks, and
 //! accounts allocation/rollback so the engine can enforce capacity and
 //! report cache pressure.
+//!
+//! The shared [`KvBlockPool`] additionally supports **eviction**: a victim
+//! request's blocks can be released mid-decode ([`KvBlockPool::evict`]) so
+//! another request can keep decoding under an oversubscribed pool; the pool
+//! keeps the victim accounting (`total_evicted`, per-request preemption
+//! counts) that the engine's preemption cap and telemetry read. The evicted
+//! request itself is parked by the engine and later re-admitted with a
+//! recomputed (re-prefilled) KV span — see `coordinator::batch` and
+//! rust/docs/preemption.md.
 
 use anyhow::{bail, Result};
 
@@ -163,6 +172,14 @@ pub struct KvBlockPool {
     pub peak_blocks: usize,
     pub total_reserved: u64,
     pub total_rolled_back: u64,
+    /// Eviction events across the run (victim accounting).
+    pub total_evicted: u64,
+    /// Blocks released by evictions across the run.
+    pub total_evicted_blocks: u64,
+    /// Per-request preemption counts. Survives release/re-admission cycles
+    /// (unlike `allocs`), so the engine's `max_preemptions_per_req` cap has
+    /// a durable source of truth.
+    preemptions: std::collections::BTreeMap<u64, u32>,
 }
 
 impl KvBlockPool {
@@ -175,6 +192,9 @@ impl KvBlockPool {
             peak_blocks: 0,
             total_reserved: 0,
             total_rolled_back: 0,
+            total_evicted: 0,
+            total_evicted_blocks: 0,
+            preemptions: std::collections::BTreeMap::new(),
         }
     }
 
@@ -201,6 +221,12 @@ impl KvBlockPool {
     /// Committed tokens of one request (0 if unknown).
     pub fn committed(&self, id: u64) -> usize {
         self.allocs.get(&id).map_or(0, |a| a.committed)
+    }
+
+    /// Blocks currently held by one request (0 if unknown) — what an
+    /// eviction of it would free.
+    pub fn blocks_of(&self, id: u64) -> usize {
+        self.allocs.get(&id).map_or(0, |a| a.blocks)
     }
 
     /// Can a request with `prompt_tokens` committed tokens be admitted now?
@@ -279,6 +305,35 @@ impl KvBlockPool {
     /// Release a finished request's blocks.
     pub fn release(&mut self, id: u64) {
         self.allocs.remove(&id);
+    }
+
+    /// Evict a live request: release its blocks back to the shared budget
+    /// and record the preemption. Returns the number of blocks freed. The
+    /// caller owns the rest of the preemption protocol (parking the request,
+    /// invalidating its lookahead, re-prefilling on re-admission).
+    pub fn evict(&mut self, id: u64) -> Result<usize> {
+        let a = self
+            .allocs
+            .remove(&id)
+            .ok_or_else(|| anyhow::anyhow!("evict for unknown request {id}"))?;
+        // Any outstanding speculative reservation dies with the victim:
+        // credit the rollback ledger so `total_reserved − total_rolled_back`
+        // keeps meaning "tokens that ended up committed".
+        self.total_rolled_back += a.lookahead as u64;
+        self.total_evicted += 1;
+        self.total_evicted_blocks += a.blocks as u64;
+        *self.preemptions.entry(id).or_insert(0) += 1;
+        Ok(a.blocks)
+    }
+
+    /// How many times request `id` has been evicted so far (0 if never).
+    pub fn preemptions(&self, id: u64) -> u32 {
+        self.preemptions.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Requests that were preempted at least once over the run.
+    pub fn preempted_requests(&self) -> usize {
+        self.preemptions.len()
     }
 
     /// Fraction of pool capacity in use (committed + lookahead tokens).
@@ -464,8 +519,9 @@ mod tests {
         assert!(pool.commit(9, 0).is_err());
     }
 
-    /// Shared-pool property: random admit/reserve/commit/release traces
-    /// never exceed `total_blocks` and keep every request's span covered.
+    /// Shared-pool property: random admit/reserve/commit/release/evict
+    /// traces never exceed `total_blocks`, keep every request's span
+    /// covered, and keep the victim accounting consistent.
     #[test]
     fn prop_pool_never_exceeds_budget() {
         let mut rng = Rng::new(0x100F);
@@ -474,8 +530,9 @@ mod tests {
             let mut pool = KvBlockPool::new(total_blocks, 16);
             let mut live: Vec<u64> = Vec::new();
             let mut next_id = 0u64;
+            let mut evictions = 0u64;
             for _ in 0..rng.range(10, 200) {
-                match rng.below(4) {
+                match rng.below(5) {
                     0 => {
                         let prompt = rng.range(1, 64);
                         if pool.can_admit(prompt) {
@@ -496,6 +553,24 @@ mod tests {
                         let idx = rng.below(live.len());
                         pool.release(live.swap_remove(idx));
                     }
+                    4 if !live.is_empty() => {
+                        // Evict a live request, then sometimes re-admit it
+                        // immediately (the park/readmit cycle's pool view).
+                        let idx = rng.below(live.len());
+                        let id = live[idx];
+                        let before = pool.preemptions(id);
+                        let free_before = pool.free_blocks();
+                        let freed = pool.evict(id).unwrap();
+                        evictions += 1;
+                        assert_eq!(pool.preemptions(id), before + 1);
+                        assert_eq!(pool.free_blocks(), free_before + freed);
+                        let committed = rng.range(1, 48);
+                        if pool.can_admit(committed) && rng.chance(0.5) {
+                            pool.admit(id, committed).unwrap();
+                        } else {
+                            live.swap_remove(idx);
+                        }
+                    }
                     _ => {}
                 }
                 assert!(
@@ -506,7 +581,49 @@ mod tests {
                 pool.check_invariants()
                     .unwrap_or_else(|e| panic!("case {case}: {e}"));
             }
+            assert_eq!(pool.total_evicted, evictions, "case {case}: eviction count drift");
         }
+    }
+
+    #[test]
+    fn evict_frees_blocks_and_counts_victims() {
+        let mut pool = KvBlockPool::new(8, 16);
+        pool.admit(1, 30).unwrap(); // 2 blocks
+        pool.admit(2, 17).unwrap(); // 2 blocks
+        assert_eq!(pool.blocks_in_use(), 4);
+        let freed = pool.evict(1).unwrap();
+        assert_eq!(freed, 2);
+        assert_eq!(pool.blocks_in_use(), 2);
+        assert_eq!(pool.total_evicted, 1);
+        assert_eq!(pool.total_evicted_blocks, 2);
+        assert_eq!(pool.preemptions(1), 1);
+        assert_eq!(pool.preemptions(2), 0);
+        assert_eq!(pool.preempted_requests(), 1);
+        // An evicted request is gone from the live set…
+        assert!(pool.evict(1).is_err());
+        assert!(!pool.can_reserve(1, 1));
+        // …but can be re-admitted with its committed span, and its
+        // preemption count survives the cycle.
+        pool.admit(1, 31).unwrap();
+        assert_eq!(pool.preemptions(1), 1);
+        pool.evict(1).unwrap();
+        assert_eq!(pool.preemptions(1), 2);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evict_releases_lookahead_backed_blocks_too() {
+        let mut pool = KvBlockPool::new(8, 16);
+        pool.admit(1, 10).unwrap(); // 1 block
+        pool.reserve(1, 8).unwrap(); // 10+8 crosses into block 2
+        assert_eq!(pool.blocks_in_use(), 2);
+        let freed = pool.evict(1).unwrap();
+        assert_eq!(freed, 2, "speculative blocks must return with the victim");
+        assert_eq!(pool.blocks_in_use(), 0);
+        // The outstanding reservation died with the victim: the ledger
+        // rolls it back, keeping reserved − rolled_back == committed mass.
+        assert_eq!(pool.total_reserved, 8);
+        assert_eq!(pool.total_rolled_back, 8);
     }
 
     #[test]

@@ -76,14 +76,18 @@ USAGE:
                  [--policy k0..k7|cascade|ablation0..3] [--drafter ngram|eagle]
                  [--tokens 400] [--backend real|sim] [--seed N] [--batch 1]
                  [--pipeline on|off] [--shards 1] [--placement balanced|coactivation]
+                 [--kv-pool-blocks N] [--eviction off|lru|most-lookahead|cost-aware]
+                 [--max-preemptions 8]
   cascade sweep  [--tokens 300] [--out-dir results] [--shards 1,2,4]
                  (continuous-batching comparison: batch=1 vs 4, static-K vs Cascade;
                   --shards runs the expert-parallel K-vs-shards axis instead)
   cascade bench  [--tokens 2000] [--quick 1] [--out BENCH_pipeline.json]
                  [--out-sharding BENCH_sharding.json]
-                 (serial vs pipelined TPOT/bubble-fraction table at batch 1/4 and
-                  sharded TPOT at shards 1/2/4 x batch 1/4, as JSON for CI tracking)
-  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|batch|pipeline|sharding|all>
+                 [--out-preemption BENCH_preemption.json]
+                 (serial vs pipelined TPOT/bubble-fraction table at batch 1/4,
+                  sharded TPOT at shards 1/2/4 x batch 1/4, and eviction-policy
+                  throughput under a half-working-set pool, as JSON for CI tracking)
+  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|batch|pipeline|sharding|preemption|all>
                  [--backend real|sim] [--tokens 300] [--out-dir results]
 
   --batch N > 1 serves through the continuous-batching engine: one fused
@@ -104,6 +108,15 @@ USAGE:
   shards (balanced round-robin, or an online co-activation-aware packer).
   Sharding moves cost only, never tokens (sim backend; see
   rust/docs/sharding.md).
+
+  --kv-pool-blocks N oversubscribes the shared KV pool (0 = the
+  uncontended aggregate worst case); --eviction picks the preemption
+  policy for it: off keeps the legacy shrink/defer behavior and surfaces
+  a deadlock error when nothing can progress, lru / most-lookahead /
+  cost-aware evict a victim instead (its blocks are released, its
+  committed context re-prefilled on re-admission, the recompute charged
+  into TPOT). An evicted-then-readmitted request's token stream is
+  bit-exact with an uncontended run (see rust/docs/preemption.md).
 "
     );
     std::process::exit(2)
@@ -210,6 +223,9 @@ fn serve(args: &Args) -> Result<()> {
     };
     let shards = args.get_usize("shards", 1)?;
     let placement = cascade::config::PlacementKind::parse(&args.get("placement", "balanced"))?;
+    let kv_pool_blocks = args.get_usize("kv-pool-blocks", 0)?;
+    let eviction = cascade::config::EvictionKind::parse(&args.get("eviction", "off"))?;
+    let max_preemptions = args.get_usize("max-preemptions", 8)?;
     let backend_name = match backend {
         BackendKind::Real => "real",
         BackendKind::Sim => "sim",
@@ -223,8 +239,13 @@ fn serve(args: &Args) -> Result<()> {
     // Sharded serving lands on the batched engine even at batch=1 (it owns
     // the placement and reproduces the single-request engine token-for-
     // token) — but only where the backend can attribute expert ids; the
-    // real backend keeps its unsharded single-request path.
-    let use_batch_engine = batch > 1 || (shards > 1 && backend == BackendKind::Sim);
+    // real backend keeps its unsharded single-request path. A constrained
+    // pool / eviction policy also belongs to the batched engine (the shared
+    // pool is its admission surface).
+    let use_batch_engine = batch > 1
+        || (shards > 1 && backend == BackendKind::Sim)
+        || kv_pool_blocks > 0
+        || eviction.is_on();
     let cfg = EngineConfig {
         model: model.clone(),
         drafter,
@@ -233,6 +254,9 @@ fn serve(args: &Args) -> Result<()> {
         pipeline,
         shards,
         placement,
+        kv_pool_blocks,
+        eviction,
+        max_preemptions_per_req: max_preemptions,
         ..EngineConfig::default()
     };
     let budget = Budget { max_tokens: tokens, max_requests: 10_000 };
@@ -307,6 +331,28 @@ fn serve(args: &Args) -> Result<()> {
                 format!("{:.1}%", 100.0 * m.alltoall_share()),
             ]);
         }
+        if eviction.is_on() || kv_pool_blocks > 0 {
+            t.row(vec![
+                "kv pool".into(),
+                format!(
+                    "{} blocks, eviction={}",
+                    engine.pool.total_blocks(),
+                    eviction.label()
+                ),
+            ]);
+            t.row(vec![
+                "evictions / readmissions".into(),
+                format!("{} / {}", m.evictions(), m.readmissions()),
+            ]);
+            t.row(vec![
+                "re-prefill (sim)".into(),
+                format!("{:.2}ms", 1e3 * m.reprefill_s()),
+            ]);
+            t.row(vec![
+                "thrash fraction".into(),
+                format!("{:.1}%", 100.0 * m.thrash_fraction()),
+            ]);
+        }
         t.row(vec![
             "test-phase fraction".into(),
             format!("{:.1}%", 100.0 * m.run.test_phase_fraction()),
@@ -372,6 +418,19 @@ fn serve(args: &Args) -> Result<()> {
         format!("{:.1}", run.total_tokens() as f64 / wall.as_secs_f64()),
     ]);
     println!("{}", t.render());
+    Ok(())
+}
+
+/// Write one bench JSON artifact (creating parent dirs) and announce it.
+fn write_json_artifact(path: &str, doc: &cascade::util::json::Value) -> Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, cascade::util::json::write(doc))
+        .with_context(|| format!("writing bench artifact {path}"))?;
+    println!("  -> {path}");
     Ok(())
 }
 
@@ -495,13 +554,7 @@ fn bench(args: &Args) -> Result<()> {
         ("rows", json::arr(rows)),
         ("speedup_pipelined_over_serial", json::obj(speedups)),
     ]);
-    if let Some(parent) = std::path::Path::new(&out_path).parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent)?;
-        }
-    }
-    std::fs::write(&out_path, json::write(&doc))?;
-    println!("  -> {out_path}");
+    write_json_artifact(&out_path, &doc)?;
 
     // ---- Expert-parallel sharding bench (BENCH_sharding.json) -----------
     let shard_out = args.get("out-sharding", "BENCH_sharding.json");
@@ -585,13 +638,87 @@ fn bench(args: &Args) -> Result<()> {
         ("quick", json::Value::Bool(quick)),
         ("rows", json::arr(shard_rows)),
     ]);
-    if let Some(parent) = std::path::Path::new(&shard_out).parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent)?;
-        }
+    write_json_artifact(&shard_out, &shard_doc)?;
+
+    // ---- Preemption bench (BENCH_preemption.json) -----------------------
+    // Completed-request throughput at batch 4 under a half-working-set KV
+    // pool, per eviction policy (off = the deadlock baseline). Shares its
+    // cell runner with `figure preemption` so the two can never drift.
+    let preempt_out = args.get("out-preemption", "BENCH_preemption.json");
+    let preempt_reqs =
+        experiments::preemption::cell_requests(if quick { 6 } else { 8 }, 200, seed);
+    let pool_blocks = experiments::preemption::constrained_pool_blocks(&preempt_reqs, 4);
+    let mut pt = Table::new(
+        format!(
+            "preemption bench: mixtral/{task}/static-k3 (sim, batch 4, pool {pool_blocks} blocks)"
+        ),
+        &[
+            "eviction",
+            "done",
+            "tokens",
+            "TPOT",
+            "tok/s done",
+            "evictions",
+            "readmits",
+            "reprefill ms",
+            "thrash",
+            "status",
+        ],
+    );
+    let mut preempt_rows: Vec<json::Value> = Vec::new();
+    for eviction in experiments::preemption::EVICTIONS {
+        let out = experiments::preemption::run_cell(
+            &mut ctx,
+            "mixtral",
+            &policy,
+            4,
+            pool_blocks,
+            eviction,
+            &preempt_reqs,
+        )?;
+        let m = &out.metrics;
+        pt.row(vec![
+            eviction.label().into(),
+            format!("{}/{}", m.run.requests.len(), preempt_reqs.len()),
+            m.run.total_tokens().to_string(),
+            ms(m.tpot_s()),
+            format!("{:.1}", out.completed_tokens_per_s()),
+            m.evictions().to_string(),
+            m.readmissions().to_string(),
+            format!("{:.2}", 1e3 * m.reprefill_s()),
+            format!("{:.1}%", 100.0 * m.thrash_fraction()),
+            if out.deadlock.is_some() { "deadlock".into() } else { "ok".to_string() },
+        ]);
+        preempt_rows.push(json::obj(vec![
+            ("eviction", json::str(eviction.label())),
+            ("pool_blocks", json::num(pool_blocks as f64)),
+            ("requests_completed", json::num(m.run.requests.len() as f64)),
+            ("requests_total", json::num(preempt_reqs.len() as f64)),
+            ("tokens", json::num(m.run.total_tokens() as f64)),
+            ("tpot_ms", json::num(1e3 * m.tpot_s())),
+            ("completed_tokens_per_s", json::num(out.completed_tokens_per_s())),
+            ("evictions", json::num(m.evictions() as f64)),
+            ("readmissions", json::num(m.readmissions() as f64)),
+            ("reprefill_ms", json::num(1e3 * m.reprefill_s())),
+            ("thrash_fraction", json::num(m.thrash_fraction())),
+            ("total_evicted", json::num(out.total_evicted as f64)),
+            ("deadlock", json::Value::Bool(out.deadlock.is_some())),
+        ]));
     }
-    std::fs::write(&shard_out, json::write(&shard_doc))?;
-    println!("  -> {shard_out}");
+    println!("{}", pt.render());
+    let preempt_doc = json::obj(vec![
+        ("bench", json::str("preemption")),
+        ("model", json::str("mixtral")),
+        ("task", json::str("code+math")),
+        ("policy", json::str("static-k3")),
+        ("drafter", json::str("ngram")),
+        ("backend", json::str("sim")),
+        ("batch", json::num(4.0)),
+        ("pool_blocks", json::num(pool_blocks as f64)),
+        ("quick", json::Value::Bool(quick)),
+        ("rows", json::arr(preempt_rows)),
+    ]);
+    write_json_artifact(&preempt_out, &preempt_doc)?;
     Ok(())
 }
 

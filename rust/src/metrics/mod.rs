@@ -56,6 +56,13 @@ pub struct RequestMetrics {
     /// The emitted token stream (first token + every decode emission) —
     /// what losslessness and batch-determinism tests compare.
     pub output: Vec<u32>,
+    /// How many times this request was preempted (evicted from the shared
+    /// KV pool and later re-admitted). 0 with `eviction = off`.
+    pub preemptions: usize,
+    /// Simulated seconds spent re-prefilling this request's committed
+    /// context after evictions (charged to the decode clock, unlike
+    /// `prefill_s`).
+    pub reprefill_s: f64,
 }
 
 impl RequestMetrics {
@@ -284,6 +291,12 @@ pub struct BatchIterRecord {
     /// The slice of `draft_wall_ns` that ran hidden under the previous
     /// verify window (pipeline hits).
     pub draft_wall_hidden_ns: u64,
+    /// Requests evicted from the shared KV pool since the last committed
+    /// iteration (preemption pressure telemetry). 0 with `eviction = off`.
+    pub evictions: usize,
+    /// Evicted requests re-admitted (re-prefilled) since the last committed
+    /// iteration; their recompute time is in `cost.reprefill_s`.
+    pub readmissions: usize,
 }
 
 /// Aggregate over a continuous-batching run: per-request traces (latency
@@ -399,6 +412,36 @@ impl BatchRunMetrics {
     /// Host drafting wall time that ran overlapped with verification.
     pub fn draft_wall_hidden_ns(&self) -> u64 {
         self.iters.iter().map(|r| r.draft_wall_hidden_ns).sum()
+    }
+
+    // ---- Preemption / eviction telemetry --------------------------------
+
+    /// Requests evicted from the shared KV pool across the run.
+    pub fn evictions(&self) -> usize {
+        self.iters.iter().map(|r| r.evictions).sum()
+    }
+
+    /// Evicted requests re-admitted (re-prefilled) across the run.
+    pub fn readmissions(&self) -> usize {
+        self.iters.iter().map(|r| r.readmissions).sum()
+    }
+
+    /// Simulated seconds spent re-prefilling evicted requests' committed
+    /// context across the run (Σ per-iteration `IterCost::reprefill_s`).
+    pub fn reprefill_s(&self) -> f64 {
+        self.iters.iter().map(|r| r.cost.reprefill_s).sum()
+    }
+
+    /// Fraction of the batch clock spent re-prefilling after evictions:
+    /// Σ reprefill / Σ total iteration time. 0.0 with `eviction = off` (or
+    /// an uncontended pool); high values mean the pool is thrashing and
+    /// either the cap or the pool size should grow.
+    pub fn thrash_fraction(&self) -> f64 {
+        let total: f64 = self.iters.iter().map(|r| r.cost.total()).sum();
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.reprefill_s() / total
     }
 
     // ---- Expert-parallel sharding telemetry -----------------------------
@@ -597,6 +640,8 @@ mod tests {
             draft_recomputes: 0,
             draft_wall_ns: 0,
             draft_wall_hidden_ns: 0,
+            evictions: 0,
+            readmissions: 0,
         }
     }
 
@@ -661,6 +706,31 @@ mod tests {
         assert_eq!(plain.alltoall_share(), 0.0);
         assert!(plain.per_shard_mean_unique().is_empty());
         assert_eq!(plain.mean_shard_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn preemption_telemetry_aggregates() {
+        let mut b = BatchRunMetrics { max_batch: 4, ..Default::default() };
+        let mut r1 = batch_rec(4, 8, 6.0, 12.0);
+        r1.evictions = 2;
+        r1.readmissions = 1;
+        r1.cost.reprefill_s = 3e-3;
+        let r2 = batch_rec(2, 4, 4.0, 6.0);
+        b.iters.push(r1);
+        b.iters.push(r2);
+        assert_eq!(b.evictions(), 2);
+        assert_eq!(b.readmissions(), 1);
+        assert!((b.reprefill_s() - 3e-3).abs() < 1e-15);
+        let total: f64 = b.iters.iter().map(|r| r.cost.total()).sum();
+        assert!((b.thrash_fraction() - 3e-3 / total).abs() < 1e-12);
+        // Re-prefill extends the batch clock: TPOT must see it.
+        let mut without = b.clone();
+        without.iters[0].cost.reprefill_s = 0.0;
+        assert!(b.tpot_s() > without.tpot_s());
+        // Eviction-free runs degrade to zeros.
+        let plain = BatchRunMetrics::default();
+        assert_eq!(plain.evictions(), 0);
+        assert_eq!(plain.thrash_fraction(), 0.0);
     }
 
     #[test]
