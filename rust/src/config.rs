@@ -119,6 +119,51 @@ impl PlacementKind {
     }
 }
 
+/// Admission-ordering policy of the serving stack (`EngineConfig::admission`):
+/// when a slot frees, who enters it — a fresh arrival or a parked eviction
+/// victim, and in what order among the waiting arrivals. The policy objects
+/// themselves live in `coordinator::admission`; see rust/docs/serving.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AdmissionKind {
+    /// First-come-first-served over arrived requests, with parked eviction
+    /// victims re-admitted at iteration start (the engine's stage-0 drain).
+    /// Fresh arrivals admitted in the same scheduler pass grab slots and
+    /// pool blocks *before* that drain runs — the pre-refactor behavior,
+    /// kept bit-exactly as the default.
+    Fcfs,
+    /// Parked eviction victims re-admit ahead of fresh arrivals: while any
+    /// victim waits, fresh admission is held back so the stage-0 drain gets
+    /// first pick of slots and pool blocks — closing the ROADMAP's
+    /// "eviction-aware admission ordering" follow-on (less re-admission
+    /// starvation, less thrash under bursty load).
+    ParkedFirst,
+    /// Earliest-deadline-first against the per-request latency SLO
+    /// (deadline = arrival + `EngineConfig::slo_s`): waiting arrivals are
+    /// admitted in deadline order, and parked victims (whose deadlines are
+    /// the oldest outstanding) both drain first and re-admit in deadline
+    /// order.
+    Edf,
+}
+
+impl AdmissionKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "fcfs" => Ok(AdmissionKind::Fcfs),
+            "parked-first" => Ok(AdmissionKind::ParkedFirst),
+            "edf" => Ok(AdmissionKind::Edf),
+            other => anyhow::bail!("unknown admission {other:?} (want fcfs|parked-first|edf)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdmissionKind::Fcfs => "fcfs",
+            AdmissionKind::ParkedFirst => "parked-first",
+            AdmissionKind::Edf => "edf",
+        }
+    }
+}
+
 /// Victim-selection policy for KV-pool preemption (`EngineConfig::eviction`).
 /// See rust/docs/preemption.md.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -228,6 +273,16 @@ pub struct EngineConfig {
     pub shards: usize,
     /// Expert→shard placement strategy at `shards > 1`.
     pub placement: PlacementKind,
+    /// Admission-ordering policy: who takes a freed slot — a fresh arrival
+    /// or a parked eviction victim, and in what order among waiting
+    /// arrivals. `Fcfs` (default) preserves the pre-refactor ordering
+    /// bit-exactly. See `coordinator::admission` / rust/docs/serving.md.
+    pub admission: AdmissionKind,
+    /// Per-request latency SLO in simulated seconds, measured on TTFT
+    /// (arrival → first token on the virtual clock). 0 = no SLO. Feeds the
+    /// `edf` admission deadline (arrival + slo_s) and the SLO-goodput
+    /// telemetry; it never changes token output.
+    pub slo_s: f64,
     pub cascade: CascadeParams,
 }
 
@@ -248,6 +303,8 @@ impl Default for EngineConfig {
             pipeline: false,
             shards: 1,
             placement: PlacementKind::Balanced,
+            admission: AdmissionKind::Fcfs,
+            slo_s: 0.0,
             cascade: CascadeParams::default(),
         }
     }
@@ -291,6 +348,17 @@ mod tests {
         let cfg = EngineConfig::default();
         assert_eq!(cfg.eviction, EvictionKind::Off, "preemption must be opt-in");
         assert!(cfg.max_preemptions_per_req > 0);
+    }
+
+    #[test]
+    fn admission_kinds_roundtrip_and_default_fcfs() {
+        for kind in [AdmissionKind::Fcfs, AdmissionKind::ParkedFirst, AdmissionKind::Edf] {
+            assert_eq!(AdmissionKind::parse(kind.label()).unwrap(), kind);
+        }
+        assert!(AdmissionKind::parse("lifo").is_err());
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.admission, AdmissionKind::Fcfs, "legacy ordering must be the default");
+        assert_eq!(cfg.slo_s, 0.0, "no SLO unless asked");
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Admission policies: the ordering layer between arrivals and slots.
+//!
+//! Before this module, admission ordering was split across two ad-hoc
+//! mechanisms: the scheduler's `push_front` requeue (a pool-pressured
+//! request went back to the head of a hidden FIFO) and the batch engine's
+//! internal FIFO of parked eviction victims (always drained at iteration
+//! start, *after* the scheduler's fresh admissions had already grabbed
+//! slots and blocks). Both decisions now live behind one
+//! [`AdmissionPolicy`]:
+//!
+//! * **ordering among waiting arrivals** — [`AdmissionPolicy::select`]
+//!   picks the next entry of the [`AdmissionQueue`] (FCFS by arrival
+//!   sequence, or EDF by `arrival + SLO` deadline);
+//! * **parked victims vs fresh arrivals** — [`AdmissionPolicy::parked_first`]
+//!   decides whether fresh admission is held back while evicted requests
+//!   wait for re-admission (the ROADMAP's "eviction-aware admission
+//!   ordering" follow-on);
+//! * **the PR-1 budget law** — [`AdmissionQueue::clamp`] clamps the tail
+//!   request to the remaining token budget, exactly as the scheduler used
+//!   to inline it (a request emits at most `max_new_tokens - 1` counted
+//!   tokens, hence the `+ 1`).
+//!
+//! `fcfs` (the default) reproduces the pre-refactor ordering bit-exactly;
+//! see rust/docs/serving.md for the policy semantics and the losslessness
+//! argument.
+
+use crate::config::AdmissionKind;
+use crate::workload::Request;
+use std::collections::VecDeque;
+
+/// One arrived-but-not-admitted request.
+#[derive(Debug, Clone)]
+pub struct QueuedRequest {
+    pub req: Request,
+    /// Arrival stamp on the engine's virtual clock (simulated seconds).
+    pub arrival_s: f64,
+    /// Monotone arrival sequence number (FCFS order, EDF tie-break).
+    pub seq: u64,
+}
+
+/// The per-entry facts a policy may order by.
+#[derive(Debug, Clone, Copy)]
+pub struct WaitingView {
+    /// `arrival_s + slo_s` (equals the arrival time when no SLO is set).
+    pub deadline_s: f64,
+    pub seq: u64,
+}
+
+/// Admission-ordering policy. Implementations are stateless orderings; the
+/// queue itself (and the budget accounting) stays in the scheduler layer.
+pub trait AdmissionPolicy {
+    fn kind(&self) -> AdmissionKind;
+
+    /// Fresh admissions are held back while parked eviction victims wait
+    /// (the engine's stage-0 re-admission drain then gets first pick of
+    /// slots and pool blocks).
+    fn parked_first(&self) -> bool;
+
+    /// Index of the next entry to admit, or `None` when nothing waits.
+    fn select(&self, waiting: &[WaitingView]) -> Option<usize>;
+}
+
+/// First-come-first-served (the legacy ordering, bit-exact default).
+struct Fcfs;
+
+/// FCFS among arrivals, but parked victims re-admit ahead of fresh ones.
+struct ParkedFirst;
+
+/// Earliest-deadline-first against the per-request SLO; parked victims
+/// (the oldest outstanding deadlines) also drain first.
+struct Edf;
+
+fn min_by_seq(waiting: &[WaitingView]) -> Option<usize> {
+    waiting
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, w)| w.seq)
+        .map(|(i, _)| i)
+}
+
+impl AdmissionPolicy for Fcfs {
+    fn kind(&self) -> AdmissionKind {
+        AdmissionKind::Fcfs
+    }
+    fn parked_first(&self) -> bool {
+        false
+    }
+    fn select(&self, waiting: &[WaitingView]) -> Option<usize> {
+        min_by_seq(waiting)
+    }
+}
+
+impl AdmissionPolicy for ParkedFirst {
+    fn kind(&self) -> AdmissionKind {
+        AdmissionKind::ParkedFirst
+    }
+    fn parked_first(&self) -> bool {
+        true
+    }
+    fn select(&self, waiting: &[WaitingView]) -> Option<usize> {
+        min_by_seq(waiting)
+    }
+}
+
+impl AdmissionPolicy for Edf {
+    fn kind(&self) -> AdmissionKind {
+        AdmissionKind::Edf
+    }
+    fn parked_first(&self) -> bool {
+        true
+    }
+    fn select(&self, waiting: &[WaitingView]) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, w) in waiting.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(j) => {
+                    let b = &waiting[j];
+                    match w.deadline_s.total_cmp(&b.deadline_s) {
+                        std::cmp::Ordering::Less => true,
+                        std::cmp::Ordering::Equal => w.seq < b.seq,
+                        std::cmp::Ordering::Greater => false,
+                    }
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+}
+
+/// Instantiate the policy for a configured kind.
+pub fn build_policy(kind: AdmissionKind) -> Box<dyn AdmissionPolicy> {
+    match kind {
+        AdmissionKind::Fcfs => Box::new(Fcfs),
+        AdmissionKind::ParkedFirst => Box::new(ParkedFirst),
+        AdmissionKind::Edf => Box::new(Edf),
+    }
+}
+
+/// The wait queue of arrived requests, held in arrival order. Selection is
+/// policy-driven; entries leave only on admission (`remove`) — a
+/// pool-pressured candidate simply stays queued, replacing the old
+/// `push_front` requeue hack.
+#[derive(Default)]
+pub struct AdmissionQueue {
+    entries: VecDeque<QueuedRequest>,
+    next_seq: u64,
+}
+
+impl AdmissionQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Append an arrival; returns its index (always the back).
+    pub fn push(&mut self, req: Request, arrival_s: f64) -> usize {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.entries.push_back(QueuedRequest { req, arrival_s, seq });
+        self.entries.len() - 1
+    }
+
+    pub fn req(&self, i: usize) -> &Request {
+        &self.entries[i].req
+    }
+
+    pub fn remove(&mut self, i: usize) -> QueuedRequest {
+        self.entries.remove(i).expect("admission queue index in range")
+    }
+
+    /// The PR-1 budget law, folded in from the scheduler: clamp entry `i`
+    /// to the remaining token budget so the run can never overshoot
+    /// `max_tokens`. A request with `max_new_tokens = n` contributes at
+    /// most `n - 1` counted tokens (the prefill token is not an iteration
+    /// emission), hence the `+ 1`. Destructive on the queued entry — like
+    /// the legacy pull-clamp-requeue, a re-attempt re-clamps against the
+    /// then-current remaining budget.
+    pub fn clamp(&mut self, i: usize, remaining: usize) {
+        let req = &mut self.entries[i].req;
+        req.max_new_tokens = req.max_new_tokens.min(remaining + 1);
+    }
+
+    /// Policy-ordered pick among the waiting entries.
+    pub fn select(&self, policy: &dyn AdmissionPolicy, slo_s: f64) -> Option<usize> {
+        let views: Vec<WaitingView> = self
+            .entries
+            .iter()
+            .map(|e| WaitingView { deadline_s: e.arrival_s + slo_s, seq: e.seq })
+            .collect();
+        policy.select(&views)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{RequestStream, Workload};
+
+    fn reqs(n: usize) -> Vec<Request> {
+        let w = Workload::by_name("code+math").unwrap();
+        RequestStream::new(w, 3, 50).take(n)
+    }
+
+    #[test]
+    fn fcfs_selects_in_arrival_order() {
+        let mut q = AdmissionQueue::new();
+        for (i, r) in reqs(3).into_iter().enumerate() {
+            q.push(r, i as f64);
+        }
+        let p = build_policy(AdmissionKind::Fcfs);
+        assert!(!p.parked_first());
+        let i = q.select(p.as_ref(), 0.0).unwrap();
+        assert_eq!(i, 0, "FCFS admits the oldest arrival");
+        let first = q.remove(i);
+        assert_eq!(first.seq, 0);
+        assert_eq!(q.select(p.as_ref(), 0.0).unwrap(), 0);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn parked_first_is_fcfs_plus_priority() {
+        let p = build_policy(AdmissionKind::ParkedFirst);
+        assert!(p.parked_first());
+        let mut q = AdmissionQueue::new();
+        for (i, r) in reqs(2).into_iter().enumerate() {
+            q.push(r, i as f64);
+        }
+        assert_eq!(q.select(p.as_ref(), 0.0).unwrap(), 0);
+    }
+
+    #[test]
+    fn edf_selects_earliest_deadline() {
+        let mut q = AdmissionQueue::new();
+        // Arrivals at t = 0, 1, 2 with a uniform SLO: deadlines follow
+        // arrival order, so EDF == FCFS here…
+        for (i, r) in reqs(3).into_iter().enumerate() {
+            q.push(r, i as f64);
+        }
+        let p = build_policy(AdmissionKind::Edf);
+        assert!(p.parked_first());
+        assert_eq!(q.select(p.as_ref(), 0.5).unwrap(), 0);
+        // …but an explicit earlier deadline wins regardless of queue
+        // position (simulate by giving a later entry an earlier arrival).
+        let mut q2 = AdmissionQueue::new();
+        let rs = reqs(3);
+        q2.push(rs[0].clone(), 5.0);
+        q2.push(rs[1].clone(), 1.0);
+        q2.push(rs[2].clone(), 3.0);
+        assert_eq!(q2.select(p.as_ref(), 2.0).unwrap(), 1);
+        // Deadline ties break by arrival sequence.
+        let mut q3 = AdmissionQueue::new();
+        q3.push(rs[0].clone(), 2.0);
+        q3.push(rs[1].clone(), 2.0);
+        assert_eq!(q3.select(p.as_ref(), 1.0).unwrap(), 0);
+    }
+
+    #[test]
+    fn clamp_is_the_pr1_budget_law() {
+        let mut q = AdmissionQueue::new();
+        let mut r = reqs(1).remove(0);
+        r.max_new_tokens = 100;
+        q.push(r, 0.0);
+        // remaining + 1, never widening.
+        q.clamp(0, 40);
+        assert_eq!(q.req(0).max_new_tokens, 41);
+        q.clamp(0, 70);
+        assert_eq!(q.req(0).max_new_tokens, 41, "re-clamp must never widen");
+        q.clamp(0, 10);
+        assert_eq!(q.req(0).max_new_tokens, 11);
+    }
+
+    #[test]
+    fn empty_queue_selects_nothing() {
+        let q = AdmissionQueue::new();
+        for kind in [AdmissionKind::Fcfs, AdmissionKind::ParkedFirst, AdmissionKind::Edf] {
+            assert!(q.select(build_policy(kind).as_ref(), 1.0).is_none());
+        }
+    }
+}

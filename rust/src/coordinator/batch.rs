@@ -48,7 +48,8 @@
 //! (fused cost charged once per iteration), including pipeline hit/bubble
 //! telemetry.
 
-use crate::config::{DrafterKind, EngineConfig, EvictionKind, PlacementKind, MAX_K};
+use crate::config::{AdmissionKind, DrafterKind, EngineConfig, EvictionKind, PlacementKind, MAX_K};
+use crate::coordinator::admission::{build_policy, AdmissionPolicy};
 use crate::coordinator::backend::{Backend, BatchStep, VerifySpan};
 use crate::coordinator::engine::EngineDrafter;
 use crate::coordinator::eviction::{select_victim, VictimCandidate};
@@ -93,6 +94,9 @@ struct SlotState {
     /// backend state can be replayed exactly on re-admission. Empty (and
     /// never pushed to) with `eviction = off`.
     history: Vec<ReplayStep>,
+    /// Virtual-clock instant this request was parked (evicted); the wait
+    /// until re-admission accrues into `RequestMetrics::queue_wait_s`.
+    parked_since: f64,
 }
 
 /// One recorded verify step of a request's decode history: enough to
@@ -184,6 +188,22 @@ pub struct BatchEngine {
     /// drained into its `BatchIterRecord`.
     pending_evictions: usize,
     pending_readmissions: usize,
+    /// Admission-ordering policy (`cfg.admission`): consulted by the
+    /// scheduler for waiting-arrival order and by stage-0 re-admission for
+    /// parked-victim priority/order. `fcfs` reproduces the pre-policy
+    /// behavior bit-exactly.
+    admission: Box<dyn AdmissionPolicy>,
+    /// Virtual clock (simulated seconds): Σ prefill charges + Σ committed
+    /// iteration costs + explicit idle advances. Arrival stamps, TTFT, and
+    /// queueing delay are measured on this clock; it never influences
+    /// token output.
+    clock_s: f64,
+    /// Clock time spent fully idle (open-loop low rate).
+    idle_s: f64,
+    /// Arrived-but-unadmitted requests the driving loop reported before
+    /// this iteration (stamped into `BatchIterRecord::queue_depth` along
+    /// with the parked count).
+    queue_depth_hint: usize,
 }
 
 /// Fused iterations between co-activation placement rebuilds. Small enough
@@ -234,6 +254,7 @@ impl BatchEngine {
         };
         let placement = ExpertPlacement::balanced(n_experts, n_shards);
         let coact = CoActivationStats::new(n_experts);
+        let admission = build_policy(cfg.admission);
         Self {
             cfg,
             backend,
@@ -255,7 +276,45 @@ impl BatchEngine {
             pending_reprefill_s: 0.0,
             pending_evictions: 0,
             pending_readmissions: 0,
+            admission,
+            clock_s: 0.0,
+            idle_s: 0.0,
+            queue_depth_hint: 0,
         }
+    }
+
+    /// The virtual clock: simulated seconds of prefill + decode + idle so
+    /// far. Arrival processes and latency telemetry read this; tokens
+    /// never depend on it.
+    pub fn clock_s(&self) -> f64 {
+        self.clock_s
+    }
+
+    /// Advance the clock across an idle gap (no slot occupied, the next
+    /// arrival is in the future). No-op when `t` is in the past.
+    pub fn idle_until(&mut self, t: f64) {
+        if t > self.clock_s {
+            self.idle_s += t - self.clock_s;
+            self.clock_s = t;
+        }
+    }
+
+    /// The configured admission-ordering policy.
+    pub fn admission(&self) -> &dyn AdmissionPolicy {
+        self.admission.as_ref()
+    }
+
+    /// Fresh admissions are currently held back: a parked-priority policy
+    /// with eviction victims still waiting (they get first pick of slots
+    /// and pool blocks at the next stage-0 drain).
+    pub fn fresh_admission_blocked(&self) -> bool {
+        self.admission.parked_first() && !self.parked.is_empty()
+    }
+
+    /// Report how many arrived requests wait unadmitted; stamped (plus the
+    /// parked count) into the next committed `BatchIterRecord`.
+    pub fn set_queue_depth(&mut self, waiting: usize) {
+        self.queue_depth_hint = waiting;
     }
 
     /// Effective expert-parallel shard count (1 = unsharded).
@@ -365,8 +424,18 @@ impl BatchEngine {
         })
     }
 
-    /// Admit one request: bind a slot, prefill, charge the pool.
+    /// Admit one request arriving "now" (closed-loop semantics: arrival ==
+    /// admission instant, so queueing delay is zero unless the scheduler
+    /// deferred the stamped entry).
     pub fn admit(&mut self, req: Request) -> Result<()> {
+        let now = self.clock_s;
+        self.admit_at(req, now)
+    }
+
+    /// Admit one request that arrived at `arrival_s` on the virtual clock:
+    /// bind a slot, prefill, charge the pool, stamp the latency telemetry
+    /// (arrival, admission, first token).
+    pub fn admit_at(&mut self, req: Request, arrival_s: f64) -> Result<()> {
         let slot = self
             .slots
             .iter()
@@ -393,6 +462,9 @@ impl BatchEngine {
             id: req.id,
             task: req.task.name().into(),
             prompt_tokens: req.prompt.len(),
+            arrival_s,
+            admitted_s: self.clock_s,
+            queue_wait_s: (self.clock_s - arrival_s).max(0.0),
             ..Default::default()
         };
         let wall_start = Instant::now();
@@ -409,8 +481,11 @@ impl BatchEngine {
                 return Err(e);
             }
         };
-        // Prefill charge: chunked full-parallel steps (excluded from TPOT).
+        // Prefill charge: chunked full-parallel steps (excluded from TPOT,
+        // but on the virtual clock — the first token exists only after it).
         metrics.prefill_s = self.prefill_charge(req.prompt.len());
+        self.clock_s += metrics.prefill_s;
+        metrics.first_token_s = self.clock_s;
 
         let mut context = req.prompt.clone();
         context.push(first);
@@ -431,6 +506,7 @@ impl BatchEngine {
             admitted_seq: self.admit_seq,
             last_utility: f64::INFINITY,
             history: Vec::new(),
+            parked_since: 0.0,
         };
         if state.finished {
             // EOS at prefill (or a 1-token budget): finalize immediately.
@@ -449,6 +525,7 @@ impl BatchEngine {
         self.lookahead.retain(|e| e.slot != slot);
         self.pool.release(state.req.id);
         self.backend.release_slot(slot);
+        state.metrics.finish_s = self.clock_s;
         state.metrics.wall_total_ns = state.wall_start.elapsed().as_nanos() as u64;
         state.metrics.output = std::mem::take(&mut state.output);
         self.done.push(state.metrics);
@@ -736,6 +813,7 @@ impl BatchEngine {
         self.pool.evict(state.req.id)?;
         self.backend.release_slot(slot);
         state.metrics.preemptions += 1;
+        state.parked_since = self.clock_s;
         self.pending_evictions += 1;
         self.parked.push_back(state);
         Ok(())
@@ -758,6 +836,14 @@ impl BatchEngine {
     /// committed iteration's `IterCost::reprefill_s`). Returns how many
     /// requests came back.
     fn readmit_parked(&mut self) -> Result<usize> {
+        if self.admission.kind() == AdmissionKind::Edf && self.parked.len() > 1 {
+            // EDF re-admits victims in deadline order (deadline = arrival +
+            // the uniform SLO, so arrival order; stable on ties). Fcfs /
+            // parked-first keep the legacy eviction-order FIFO bit-exactly.
+            let mut v: Vec<SlotState> = std::mem::take(&mut self.parked).into();
+            v.sort_by(|a, b| a.metrics.arrival_s.total_cmp(&b.metrics.arrival_s));
+            self.parked = v.into();
+        }
         let mut readmitted = 0usize;
         while !self.parked.is_empty() {
             let Some(slot) = self.slots.iter().position(|s| s.is_none()) else { break };
@@ -802,6 +888,9 @@ impl BatchEngine {
             let charge = self.prefill_charge(committed);
             self.pending_reprefill_s += charge;
             state.metrics.reprefill_s += charge;
+            // The parked interval is out-of-service wait: queueing delay on
+            // the virtual clock, same ledger as the pre-admission wait.
+            state.metrics.queue_wait_s += (self.clock_s - state.parked_since).max(0.0);
             self.admit_seq += 1;
             state.admitted_seq = self.admit_seq;
             self.pending_readmissions += 1;
@@ -917,6 +1006,13 @@ impl BatchEngine {
         // for the preemption thrash.
         let reprefill_s = std::mem::take(&mut self.pending_reprefill_s);
         let cost = IterCost { draft_hidden_s, reprefill_s, ..cost_full };
+        // Advance the virtual clock by the fused iteration, so finalize
+        // stamps (`finish_s`, taken in the sweep after this commit) see the
+        // post-iteration instant. Evictions stamped `parked_since` earlier
+        // in this pass carry the PRE-iteration clock: a victim's queue wait
+        // deliberately includes the iteration it was evicted during — it
+        // spent that iteration out of service.
+        self.clock_s += cost.total();
 
         let layer_mean = |v: &[usize]| -> f64 {
             if v.is_empty() {
@@ -1123,6 +1219,7 @@ impl BatchEngine {
                 .sum(),
             evictions: std::mem::take(&mut self.pending_evictions),
             readmissions: std::mem::take(&mut self.pending_readmissions),
+            queue_depth: self.queue_depth_hint + self.parked.len(),
         });
         Ok(cost)
     }
@@ -1154,6 +1251,8 @@ impl BatchEngine {
             iters: std::mem::take(&mut self.batch_iters),
             max_batch: self.max_batch,
             n_shards: self.n_shards,
+            clock_s: self.clock_s,
+            idle_s: self.idle_s,
         }
     }
 
@@ -1167,7 +1266,9 @@ impl BatchEngine {
     pub fn serve_all(&mut self, reqs: &[Request]) -> Result<BatchRunMetrics> {
         let mut queue: VecDeque<Request> = reqs.iter().cloned().collect();
         loop {
-            while self.has_free_slot() {
+            // Parked-priority policies hold fresh admissions while eviction
+            // victims wait (inert under the default fcfs).
+            while self.has_free_slot() && !self.fresh_admission_blocked() {
                 match queue.front() {
                     Some(req) if self.can_admit(req) => {
                         let req = queue.pop_front().unwrap();
@@ -1176,6 +1277,7 @@ impl BatchEngine {
                     _ => break,
                 }
             }
+            self.set_queue_depth(queue.len());
             if !self.step_iteration()? {
                 if queue.is_empty() {
                     break;

@@ -7,6 +7,7 @@
 //! Both paths optionally run the two-stage drafting pipeline (`pipeline`):
 //! draft iteration i+1 under iteration i's verify, reconcile on commit.
 
+pub mod admission;
 pub mod backend;
 pub mod batch;
 pub mod eagle;

@@ -1,25 +1,42 @@
-//! Request scheduler: admission control over a request stream.
+//! Request scheduler: a thin event loop over arrivals, admission, and the
+//! engine clock.
 //!
 //! The paper's setting is single-batch, low-latency serving: one request
 //! decodes at a time; mixed workloads interleave tasks *across* requests
 //! (§3: "mixed workloads … comprise request streams from 2 or 3 tasks with
-//! equal sharing"). The scheduler owns admission (token budget / request
-//! count) and drains the stream through an engine — either the FIFO
-//! single-request [`Engine`] or the continuous-batching [`BatchEngine`],
-//! where it keeps every free slot fed.
+//! equal sharing"). The scheduler owns the run budget and drives an engine
+//! — either the FIFO single-request [`Engine`] or the continuous-batching
+//! [`BatchEngine`] — but the *ordering* decisions live elsewhere:
 //!
-//! Budget law: the **tail request is clamped** to the remaining token
-//! budget, so a run can never overshoot `max_tokens` by a full
-//! `max_new_tokens` — overshoot would skew task sharing in mixed
-//! workloads (the last-admitted task would get up to an extra request's
-//! worth of tokens).
+//! * **when requests exist** is the [`ArrivalProcess`]'s call (closed-loop
+//!   legacy, Poisson, bursty, trace replay), stamped on the engine's
+//!   virtual clock;
+//! * **who takes a freed slot** is the engine's
+//!   [`AdmissionPolicy`](crate::coordinator::admission::AdmissionPolicy)'s
+//!   call (fcfs / parked-first / edf), applied to the [`AdmissionQueue`]
+//!   of arrived-but-unadmitted requests;
+//! * the scheduler itself only loops: release due arrivals → admit per
+//!   policy → step the engine → idle the clock forward when open-loop
+//!   slots have nothing to do (a state the old closed loop could not
+//!   express).
+//!
+//! Budget law (PR 1, now enforced in [`AdmissionQueue::clamp`]): the
+//! **tail request is clamped** to the remaining token budget, so a run can
+//! never overshoot `max_tokens` by a full `max_new_tokens` — overshoot
+//! would skew task sharing in mixed workloads.
+//!
+//! With `--arrivals closed --admission fcfs` (the defaults) this loop is
+//! bit-exact with the pre-refactor closed-loop scheduler: identical stream
+//! pulls, identical clamp points, identical admission order
+//! (rust/tests/arrivals.rs guards this token-for-token).
 
+use crate::coordinator::admission::AdmissionQueue;
 use crate::coordinator::batch::BatchEngine;
 use crate::coordinator::engine::Engine;
 use crate::metrics::{BatchRunMetrics, RunMetrics};
+use crate::workload::arrivals::ArrivalProcess;
 use crate::workload::{Request, RequestStream};
 use anyhow::Result;
-use std::collections::VecDeque;
 
 /// Admission limits for a serving run.
 #[derive(Debug, Clone, Copy)]
@@ -37,39 +54,57 @@ impl Default for Budget {
     }
 }
 
-/// FIFO scheduler over a request stream.
+/// Event-loop scheduler over an arrival process.
 pub struct Scheduler {
-    queue: VecDeque<Request>,
-    stream: RequestStream,
+    queue: AdmissionQueue,
+    arrivals: ArrivalProcess,
     budget: Budget,
 }
 
 impl Scheduler {
+    /// Closed-loop scheduler over a request stream (the legacy default:
+    /// a request "arrives" the instant a slot wants one).
     pub fn new(stream: RequestStream, budget: Budget) -> Self {
-        Self { queue: VecDeque::new(), stream, budget }
+        Self::with_arrivals(ArrivalProcess::closed(stream), budget)
     }
 
-    /// Admit the next request (from queue, else freshly generated).
-    fn next_request(&mut self) -> Request {
-        self.queue.pop_front().unwrap_or_else(|| self.stream.next_request())
+    /// Scheduler over an explicit arrival process (open-loop serving).
+    pub fn with_arrivals(arrivals: ArrivalProcess, budget: Budget) -> Self {
+        Self { queue: AdmissionQueue::new(), arrivals, budget }
     }
 
-    /// Enqueue an explicit request (tests / replay).
+    /// Enqueue an explicit request (tests / replay); it is treated as
+    /// having arrived at clock 0.
     pub fn enqueue(&mut self, req: Request) {
-        self.queue.push_back(req);
+        self.queue.push(req, 0.0);
+    }
+
+    /// Closed-loop pull: the oldest queued request, else a fresh one from
+    /// the stream.
+    fn next_closed(&mut self) -> Request {
+        if self.queue.is_empty() {
+            self.arrivals.pull_closed()
+        } else {
+            self.queue.remove(0).req
+        }
     }
 
     /// Drain the stream through `engine` until the token budget is spent.
+    /// Closed-loop only: the single-request engine has no virtual clock for
+    /// arrivals to land on.
     pub fn run(&mut self, engine: &mut Engine) -> Result<RunMetrics> {
+        anyhow::ensure!(
+            self.arrivals.is_closed(),
+            "open-loop arrivals need the batched serving path (serve --batch / BatchEngine)"
+        );
         let mut metrics = RunMetrics::default();
         let mut tokens = 0usize;
         let mut served = 0usize;
         while tokens < self.budget.max_tokens && served < self.budget.max_requests {
-            let mut req = self.next_request();
-            // Clamp the tail request to the remaining budget so the run
-            // cannot overshoot max_tokens. A request with max_new_tokens=n
-            // contributes at most n-1 counted tokens (the prefill token is
-            // not an iteration emission), hence the +1.
+            let mut req = self.next_closed();
+            // The PR-1 budget law (see AdmissionQueue::clamp): a request
+            // with max_new_tokens = n contributes at most n-1 counted
+            // tokens, hence the +1.
             let remaining = self.budget.max_tokens - tokens;
             req.max_new_tokens = req.max_new_tokens.min(remaining + 1);
             let m = engine.serve_request(&req)?;
@@ -80,37 +115,77 @@ impl Scheduler {
         Ok(metrics)
     }
 
-    /// Drain the stream through a continuous-batching engine: keep every
-    /// free slot fed until the token budget is fully allocated, then let
-    /// the in-flight requests finish. Admission is charged against
-    /// [`BatchEngine::output_bound`] — the worst-case total the admitted
-    /// requests can still emit — so the bound both prevents overshoot and
-    /// self-corrects when a request finishes early (its unused headroom
-    /// returns to the budget and admission resumes).
+    /// Admission pass: admit policy-selected arrived requests while slots,
+    /// pool blocks, and the token budget allow. Admission is charged
+    /// against [`BatchEngine::output_bound`] — the worst-case total the
+    /// admitted requests can still emit — so the bound both prevents
+    /// overshoot and self-corrects when a request finishes early (its
+    /// unused headroom returns to the budget and admission resumes).
+    fn admit_phase(&mut self, engine: &mut BatchEngine, served: &mut usize) -> Result<()> {
+        if engine.fresh_admission_blocked() {
+            // Parked-priority policy with eviction victims still waiting:
+            // the engine's stage-0 drain gets first pick of slots/blocks.
+            return Ok(());
+        }
+        loop {
+            let bound = engine.output_bound();
+            if !engine.has_free_slot()
+                || bound >= self.budget.max_tokens
+                || *served >= self.budget.max_requests
+            {
+                return Ok(());
+            }
+            // Candidate: the policy's pick among arrived requests; in
+            // closed-loop mode an empty queue pulls a fresh request from
+            // the stream, arriving "now" by definition.
+            let idx = match self.queue.select(engine.admission(), engine.cfg.slo_s) {
+                Some(i) => i,
+                None => {
+                    if !self.arrivals.is_closed() {
+                        return Ok(()); // nothing has arrived yet
+                    }
+                    let req = self.arrivals.pull_closed();
+                    self.queue.push(req, engine.clock_s())
+                }
+            };
+            // Clamp the tail request to the remaining budget (in place, so
+            // a pool-deferred entry stays clamped — the legacy
+            // pull-clamp-requeue semantics).
+            let remaining = self.budget.max_tokens - bound;
+            self.queue.clamp(idx, remaining);
+            if !engine.can_admit(self.queue.req(idx)) {
+                // Pool pressure: the entry stays queued; decode to free
+                // blocks.
+                return Ok(());
+            }
+            let entry = self.queue.remove(idx);
+            *served += 1;
+            engine.admit_at(entry.req, entry.arrival_s)?;
+        }
+    }
+
+    /// Drain the arrival process through a continuous-batching engine:
+    /// release arrivals due on the virtual clock, keep admissible slots
+    /// fed per the admission policy until the token budget is fully
+    /// allocated, then let the in-flight requests finish. Under open-loop
+    /// arrivals the engine may sit idle between requests (the clock jumps
+    /// to the next arrival); under the closed loop this reproduces the
+    /// legacy pull-the-stream behavior bit-exactly.
     pub fn run_batched(&mut self, engine: &mut BatchEngine) -> Result<BatchRunMetrics> {
         let mut served = 0usize;
         loop {
-            loop {
-                let bound = engine.output_bound();
-                if !engine.has_free_slot()
-                    || bound >= self.budget.max_tokens
-                    || served >= self.budget.max_requests
-                {
-                    break;
+            // Release due arrivals into the wait queue (no-op closed-loop).
+            // Skipped once the budget is fully allocated: late arrivals
+            // could never be admitted anyway.
+            if engine.output_bound() < self.budget.max_tokens
+                && served < self.budget.max_requests
+            {
+                for (arrival_s, req) in self.arrivals.due(engine.clock_s()) {
+                    self.queue.push(req, arrival_s);
                 }
-                let mut req = self.next_request();
-                // Clamp the tail request (a request emits at most
-                // max_new_tokens - 1 counted tokens, hence the +1).
-                let remaining = self.budget.max_tokens - bound;
-                req.max_new_tokens = req.max_new_tokens.min(remaining + 1);
-                if !engine.can_admit(&req) {
-                    // Pool pressure: requeue and decode to free blocks.
-                    self.queue.push_front(req);
-                    break;
-                }
-                served += 1;
-                engine.admit(req)?;
             }
+            self.admit_phase(engine, &mut served)?;
+            engine.set_queue_depth(self.queue.len());
             if !engine.step_iteration()? {
                 // An idle step means every slot was swept.
                 debug_assert_eq!(engine.active(), 0, "idle step left active slots");
@@ -119,14 +194,23 @@ impl Scheduler {
                 {
                     break;
                 }
-                // Engine idle with budget left: the head request must be
-                // admittable next pass, otherwise it can never fit.
-                if let Some(req) = self.queue.front() {
+                // Engine idle with budget left: the policy's next pick must
+                // be admittable against an empty pool, otherwise it can
+                // never fit.
+                if let Some(i) = self.queue.select(engine.admission(), engine.cfg.slo_s) {
                     anyhow::ensure!(
-                        engine.can_admit(req),
+                        engine.can_admit(self.queue.req(i)),
                         "request {} cannot fit the KV pool",
-                        req.id
+                        self.queue.req(i).id
                     );
+                } else if !self.arrivals.is_closed() {
+                    // Open loop with nothing arrived: idle the slots
+                    // forward to the next arrival — or end the run when
+                    // the trace is exhausted.
+                    match self.arrivals.next_arrival_s() {
+                        Some(t) => engine.idle_until(t),
+                        None => break,
+                    }
                 }
             }
         }
@@ -140,6 +224,7 @@ mod tests {
     use crate::config::EngineConfig;
     use crate::models::{default_artifacts_dir, Registry};
     use crate::spec::policy::PolicyKind;
+    use crate::workload::arrivals::ArrivalKind;
     use crate::workload::{Task, Workload};
 
     #[test]
@@ -155,9 +240,21 @@ mod tests {
         let mut req = RequestStream::new(Workload::single(Task::Math), 2, 50).next_request();
         req.id = 999;
         s.enqueue(req);
-        assert_eq!(s.next_request().id, 999);
+        assert_eq!(s.next_closed().id, 999);
         // subsequent requests come from the stream
-        assert_ne!(s.next_request().id, 999);
+        assert_ne!(s.next_closed().id, 999);
+    }
+
+    #[test]
+    fn open_loop_rejects_single_request_engine() {
+        let reg = Registry::load_or_builtin(default_artifacts_dir());
+        let cfg = EngineConfig { model: "mixtral".into(), ..Default::default() };
+        let mut engine = Engine::sim(&reg, cfg, PolicyKind::Static(2).build()).unwrap();
+        let stream = RequestStream::new(Workload::single(Task::Code), 1, 50);
+        let arrivals =
+            ArrivalProcess::new(ArrivalKind::Poisson { rate: 1.0 }, stream, 1).unwrap();
+        let mut sched = Scheduler::with_arrivals(arrivals, Budget::default());
+        assert!(sched.run(&mut engine).is_err());
     }
 
     #[test]

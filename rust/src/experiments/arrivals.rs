@@ -1,0 +1,218 @@
+//! Open-loop arrivals experiment (extension beyond the paper's closed-loop
+//! evaluation): latency-SLO telemetry under bursty load, per admission
+//! policy.
+//!
+//! A closed-loop driver admits a fresh request the instant a slot frees, so
+//! offered load always equals service rate and queueing delay / TTFT / tail
+//! latency are structurally unobservable. These cells drive the engine
+//! **open-loop**: arrivals land on the virtual clock (Poisson or bursty
+//! on/off phases, `workload::arrivals`), wait in the admission queue, and
+//! enter per the configured [`AdmissionKind`]. The contended cell points a
+//! bursty stream at a half-working-set KV pool with LRU eviction — the
+//! regime where admission *ordering* matters: under `fcfs`, fresh arrivals
+//! grab freed slots and blocks ahead of parked eviction victims, so victims
+//! ping-pong (evict → wait → re-prefill → evict again) and their cumulative
+//! out-of-service wait balloons; `parked-first` drains victims first, which
+//! cuts both the re-prefill thrash and the p95 queueing delay (the ROADMAP's
+//! "eviction-aware admission ordering" follow-on, closed here); `edf` admits
+//! by `arrival + SLO` deadline. Shared by `figure arrivals`, `sweep --rate`,
+//! and the `bench` BENCH_arrivals.json emitter so the axes can never drift.
+
+use crate::config::{AdmissionKind, EvictionKind};
+use crate::coordinator::scheduler::{Budget, Scheduler};
+use crate::experiments::preemption::constrained_pool_blocks;
+use crate::experiments::runner::ExpCtx;
+use crate::metrics::BatchRunMetrics;
+use crate::spec::policy::PolicyKind;
+use crate::util::table::{ms, Table};
+use crate::workload::arrivals::{ArrivalKind, ArrivalProcess};
+use crate::workload::{RequestStream, Workload};
+use anyhow::Result;
+
+/// Admission policies on the arrivals axis.
+pub const ADMISSIONS: [AdmissionKind; 3] =
+    [AdmissionKind::Fcfs, AdmissionKind::ParkedFirst, AdmissionKind::Edf];
+
+/// One open-loop serving cell.
+pub struct ArrivalCell {
+    pub admission: AdmissionKind,
+    pub arrivals: ArrivalKind,
+    /// KV pool size in blocks (0 = uncontended auto sizing; contention is
+    /// what makes admission ordering visible).
+    pub pool_blocks: usize,
+    /// Eviction policy (victims must exist for parked ordering to matter).
+    pub eviction: EvictionKind,
+    /// Per-request TTFT SLO on the virtual clock (feeds edf + goodput).
+    pub slo_s: f64,
+    /// Per-request output cap (short requests → enough completions for
+    /// meaningful percentiles within the budget).
+    pub max_new: usize,
+    /// Output-token budget of the cell.
+    pub tokens: usize,
+}
+
+/// Requests per contended cell the budget is sized for.
+const CELL_REQUESTS: usize = 12;
+
+/// The canonical contended cell: bursty arrivals at `rate` (mean req/s)
+/// into a half-working-set KV pool with LRU eviction — the preemption
+/// experiment's pool sizing applied to this cell's own request shape.
+pub fn contended_cell(admission: AdmissionKind, rate: f64, seed: u64) -> ArrivalCell {
+    let max_new = 120usize;
+    let sample = RequestStream::new(cell_workload(), seed, max_new).take(8);
+    ArrivalCell {
+        admission,
+        arrivals: ArrivalKind::bursty(rate),
+        pool_blocks: constrained_pool_blocks(&sample, 4),
+        eviction: EvictionKind::Lru,
+        slo_s: 0.5,
+        max_new,
+        tokens: CELL_REQUESTS * max_new,
+    }
+}
+
+fn cell_workload() -> Workload {
+    Workload::by_name("code+math").expect("known mix")
+}
+
+/// Serve one open-loop cell on the sim backend at batch 4.
+pub fn run_cell(
+    ctx: &ExpCtx,
+    model: &str,
+    policy: &PolicyKind,
+    cell: &ArrivalCell,
+) -> Result<BatchRunMetrics> {
+    let mut cfg = ctx.batch_cfg(model, 4);
+    cfg.max_new_tokens = cell.max_new;
+    cfg.kv_pool_blocks = cell.pool_blocks;
+    cfg.eviction = cell.eviction;
+    // Generous cap, as in the preemption cells: these measure ordering
+    // quality, not cap exhaustion.
+    cfg.max_preemptions_per_req = 64;
+    cfg.admission = cell.admission;
+    cfg.slo_s = cell.slo_s;
+    let mut engine = ctx.batch_engine(cfg, policy)?;
+    let stream = RequestStream::new(cell_workload(), ctx.seed, cell.max_new);
+    let arrivals = ArrivalProcess::new(cell.arrivals.clone(), stream, ctx.seed)?;
+    let mut sched = Scheduler::with_arrivals(
+        arrivals,
+        Budget { max_tokens: cell.tokens, max_requests: 10_000 },
+    );
+    sched.run_batched(&mut engine)
+}
+
+fn pct(m: &BatchRunMetrics, p: f64) -> (f64, f64, f64) {
+    (m.run.ttft_percentile(p), m.run.queue_wait_percentile(p), m.run.e2e_percentile(p))
+}
+
+/// `figure arrivals`: TTFT / queueing-delay / E2E percentiles and SLO
+/// goodput per admission policy, under bursty arrivals into a contended
+/// pool (sim backend, batch 4).
+pub fn arrivals(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let rate = 2.0;
+    let probe = contended_cell(AdmissionKind::Fcfs, rate, ctx.seed);
+    let mut t = Table::new(
+        format!(
+            "Open-loop arrivals (sim backend, code+math mix, batch 4): \
+             {} into a {}-block pool (eviction=lru), SLO {:.0}ms TTFT",
+            probe.arrivals.label(),
+            probe.pool_blocks,
+            1e3 * probe.slo_s
+        ),
+        &[
+            "policy",
+            "admission",
+            "reqs",
+            "tokens",
+            "TTFT p50",
+            "TTFT p95",
+            "TTFT p99",
+            "queue p50",
+            "queue p95",
+            "queue p99",
+            "E2E p95",
+            "goodput",
+            "evict/readmit",
+            "depth",
+            "idle",
+        ],
+    );
+    for policy in [PolicyKind::Static(3), PolicyKind::Cascade(Default::default())] {
+        for admission in ADMISSIONS {
+            let cell = contended_cell(admission, rate, ctx.seed);
+            let m = run_cell(ctx, "mixtral", &policy, &cell)?;
+            let (t50, q50, _) = pct(&m, 0.50);
+            let (t95, q95, e95) = pct(&m, 0.95);
+            let (t99, q99, _) = pct(&m, 0.99);
+            t.row(vec![
+                policy.label(),
+                admission.label().into(),
+                m.run.requests.len().to_string(),
+                m.run.total_tokens().to_string(),
+                ms(t50),
+                ms(t95),
+                ms(t99),
+                ms(q50),
+                ms(q95),
+                ms(q99),
+                ms(e95),
+                format!("{:.0}%", 100.0 * m.run.slo_goodput(cell.slo_s)),
+                format!("{}/{}", m.evictions(), m.readmissions()),
+                format!("{:.1}", m.mean_queue_depth()),
+                format!("{:.0}%", 100.0 * m.slot_idle_fraction()),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+/// `sweep --rate a,b,c`: Poisson saturation sweep — latency and occupancy
+/// vs offered rate on an uncontended pool (fcfs admission). Low rates show
+/// idle slots (the state a closed loop cannot express); high rates show
+/// the queue building.
+pub fn rate_sweep_table(ctx: &mut ExpCtx, rates: &[f64]) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Open-loop rate sweep (sim backend, code+math mix, batch 4, \
+         poisson arrivals, fcfs admission, uncontended pool)",
+        &[
+            "rate/s",
+            "reqs",
+            "tokens",
+            "duration s",
+            "TPOT",
+            "TTFT p50",
+            "TTFT p95",
+            "queue p95",
+            "depth",
+            "idle",
+        ],
+    );
+    for &rate in rates {
+        anyhow::ensure!(rate > 0.0, "--rate entries must be positive");
+        let cell = ArrivalCell {
+            admission: AdmissionKind::Fcfs,
+            arrivals: ArrivalKind::Poisson { rate },
+            pool_blocks: 0,
+            eviction: EvictionKind::Off,
+            slo_s: 0.0,
+            max_new: 120,
+            tokens: ctx.tokens_per_cell,
+        };
+        let m = run_cell(ctx, "mixtral", &PolicyKind::Static(3), &cell)?;
+        let (t50, _, _) = pct(&m, 0.50);
+        let (t95, q95, _) = pct(&m, 0.95);
+        t.row(vec![
+            format!("{rate:.2}"),
+            m.run.requests.len().to_string(),
+            m.run.total_tokens().to_string(),
+            format!("{:.2}", m.clock_s),
+            ms(m.tpot_s()),
+            ms(t50),
+            ms(t95),
+            ms(q95),
+            format!("{:.1}", m.mean_queue_depth()),
+            format!("{:.0}%", 100.0 * m.slot_idle_fraction()),
+        ]);
+    }
+    Ok(vec![t])
+}

@@ -9,13 +9,10 @@
 //! latency-hiding line in PAPERS.md). Runs on the sim backend, whose fused
 //! `step_batch` attributes expert ids.
 
-use crate::config::EngineConfig;
-use crate::coordinator::batch::BatchEngine;
-use crate::coordinator::scheduler::{Budget, Scheduler};
 use crate::experiments::runner::ExpCtx;
 use crate::spec::policy::PolicyKind;
 use crate::util::table::{ms, Table};
-use crate::workload::{RequestStream, Workload};
+use crate::workload::Workload;
 use anyhow::Result;
 
 const BATCHES: [usize; 2] = [1, 4];
@@ -41,20 +38,8 @@ pub fn batch_compare(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         for policy in [PolicyKind::Static(3), PolicyKind::Cascade(Default::default())] {
             let mut expert_s_b1 = f64::NAN;
             for batch in BATCHES {
-                let cfg = EngineConfig {
-                    model: model.into(),
-                    max_batch: batch,
-                    max_new_tokens: ctx.max_new_tokens,
-                    seed: ctx.seed,
-                    ..EngineConfig::default()
-                };
-                let mut engine = BatchEngine::sim(&ctx.registry, cfg, policy.clone())?;
-                let stream = RequestStream::new(workload.clone(), ctx.seed, ctx.max_new_tokens);
-                let mut sched = Scheduler::new(
-                    stream,
-                    Budget { max_tokens: ctx.tokens_per_cell, max_requests: 10_000 },
-                );
-                let m = sched.run_batched(&mut engine)?;
+                let cfg = ctx.batch_cfg(model, batch);
+                let m = ctx.run_batch_cell(cfg, &policy, &workload)?;
                 if batch == 1 {
                     expert_s_b1 = m.mean_expert_s();
                 }

@@ -2,6 +2,7 @@
 //! (see DESIGN.md §4 for the index). Each harness returns `Table`s that are
 //! printed and optionally written to `results/` as CSV.
 
+pub mod arrivals;
 pub mod batching;
 pub mod figures;
 pub mod pipeline;
@@ -110,6 +111,11 @@ pub fn all() -> Vec<Experiment> {
             id: "preemption",
             caption: "EXTENSION: KV-pool preemption, throughput vs pool size with/without eviction (sim)",
             run: preemption::preemption,
+        },
+        Experiment {
+            id: "arrivals",
+            caption: "EXTENSION: open-loop arrivals, TTFT/queueing-delay/E2E percentiles per admission policy (sim)",
+            run: arrivals::arrivals,
         },
     ]
 }

@@ -13,13 +13,10 @@
 //! because utility is measured against pipeline-true (and marginal)
 //! per-request cost.
 
-use crate::config::EngineConfig;
-use crate::coordinator::batch::BatchEngine;
-use crate::coordinator::scheduler::{Budget, Scheduler};
 use crate::experiments::runner::ExpCtx;
 use crate::spec::policy::PolicyKind;
 use crate::util::table::{ms, Table};
-use crate::workload::{RequestStream, Workload};
+use crate::workload::Workload;
 use anyhow::Result;
 
 const BATCHES: [usize; 3] = [1, 2, 4];
@@ -46,22 +43,9 @@ pub fn pipeline_compare(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
             for batch in BATCHES {
                 let mut tpot_serial = f64::NAN;
                 for pipeline in [false, true] {
-                    let cfg = EngineConfig {
-                        model: model.into(),
-                        max_batch: batch,
-                        pipeline,
-                        max_new_tokens: ctx.max_new_tokens,
-                        seed: ctx.seed,
-                        ..EngineConfig::default()
-                    };
-                    let mut engine = BatchEngine::sim(&ctx.registry, cfg, policy.clone())?;
-                    let stream =
-                        RequestStream::new(workload.clone(), ctx.seed, ctx.max_new_tokens);
-                    let mut sched = Scheduler::new(
-                        stream,
-                        Budget { max_tokens: ctx.tokens_per_cell, max_requests: 10_000 },
-                    );
-                    let m = sched.run_batched(&mut engine)?;
+                    let mut cfg = ctx.batch_cfg(model, batch);
+                    cfg.pipeline = pipeline;
+                    let m = ctx.run_batch_cell(cfg, &policy, &workload)?;
                     let tpot = m.tpot_s();
                     if !pipeline {
                         tpot_serial = tpot;

@@ -16,8 +16,8 @@
 //! eviction strictly beats the deadlocking baseline, and the policies
 //! differ in how much thrash they pay for it.
 
-use crate::config::{EngineConfig, EvictionKind};
-use crate::coordinator::batch::{BatchEngine, KV_BLOCK};
+use crate::config::EvictionKind;
+use crate::coordinator::batch::KV_BLOCK;
 use crate::experiments::runner::ExpCtx;
 use crate::metrics::BatchRunMetrics;
 use crate::spec::policy::PolicyKind;
@@ -88,18 +88,13 @@ pub fn run_cell(
     eviction: EvictionKind,
     reqs: &[Request],
 ) -> Result<CellOutcome> {
-    let cfg = EngineConfig {
-        model: model.into(),
-        max_batch: batch,
-        kv_pool_blocks: pool_blocks,
-        eviction,
-        // Generous cap: the cells measure policy quality, not cap
-        // exhaustion (rust/tests/preemption.rs covers the cap bound).
-        max_preemptions_per_req: 64,
-        seed: ctx.seed,
-        ..EngineConfig::default()
-    };
-    let mut engine = BatchEngine::sim(&ctx.registry, cfg, policy.clone())?;
+    let mut cfg = ctx.batch_cfg(model, batch);
+    cfg.kv_pool_blocks = pool_blocks;
+    cfg.eviction = eviction;
+    // Generous cap: the cells measure policy quality, not cap exhaustion
+    // (rust/tests/preemption.rs covers the cap bound).
+    cfg.max_preemptions_per_req = 64;
+    let mut engine = ctx.batch_engine(cfg, policy)?;
     match engine.serve_all(reqs) {
         Ok(metrics) => Ok(CellOutcome {
             metrics,

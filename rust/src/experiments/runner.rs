@@ -5,9 +5,10 @@
 //! figure touching 5 models x 4 policies compiles each variant once.
 
 use crate::config::{DrafterKind, EngineConfig};
+use crate::coordinator::batch::BatchEngine;
 use crate::coordinator::engine::{Engine, RunSummary};
 use crate::coordinator::scheduler::{Budget, Scheduler};
-use crate::metrics::RunMetrics;
+use crate::metrics::{BatchRunMetrics, RunMetrics};
 use crate::models::Registry;
 use crate::spec::policy::PolicyKind;
 use crate::workload::{RequestStream, Workload};
@@ -177,6 +178,44 @@ impl ExpCtx {
             &run,
         );
         Ok((summary, run))
+    }
+
+    /// Batched-engine config for one experiment cell, carrying the ctx's
+    /// seed and per-request token cap — the base every batched experiment
+    /// (batching / pipeline / sharding / preemption / arrivals) builds on,
+    /// so their cells cannot drift apart on the shared knobs.
+    pub fn batch_cfg(&self, model: &str, batch: usize) -> EngineConfig {
+        EngineConfig {
+            model: model.into(),
+            max_batch: batch,
+            max_new_tokens: self.max_new_tokens,
+            seed: self.seed,
+            ..EngineConfig::default()
+        }
+    }
+
+    /// Sim-backend batched engine for a cell config.
+    pub fn batch_engine(&self, cfg: EngineConfig, policy: &PolicyKind) -> Result<BatchEngine> {
+        BatchEngine::sim(&self.registry, cfg, policy.clone())
+    }
+
+    /// One batched serving cell: a fresh closed-loop stream of `workload`
+    /// served until the ctx token budget is spent. The per-cell runner the
+    /// batching, pipeline, and sharding experiments (and the bench
+    /// emitters) share — previously each re-grew its own copy.
+    pub fn run_batch_cell(
+        &self,
+        cfg: EngineConfig,
+        policy: &PolicyKind,
+        workload: &Workload,
+    ) -> Result<BatchRunMetrics> {
+        let mut engine = self.batch_engine(cfg, policy)?;
+        let stream = RequestStream::new(workload.clone(), self.seed, self.max_new_tokens);
+        let mut sched = Scheduler::new(
+            stream,
+            Budget { max_tokens: self.tokens_per_cell, max_requests: 10_000 },
+        );
+        sched.run_batched(&mut engine)
     }
 
     /// Baseline (K=0) TPOT for a (model, workload, drafter) cell, memoized.

@@ -13,13 +13,11 @@
 //! quality, not a detail (cf. MoE-Spec's expert budgeting and SP-MoE's
 //! placement line in PAPERS.md).
 
-use crate::config::{EngineConfig, PlacementKind};
-use crate::coordinator::batch::BatchEngine;
-use crate::coordinator::scheduler::{Budget, Scheduler};
+use crate::config::PlacementKind;
 use crate::experiments::runner::ExpCtx;
 use crate::spec::policy::PolicyKind;
 use crate::util::table::{ms, Table};
-use crate::workload::{RequestStream, Workload};
+use crate::workload::Workload;
 use anyhow::Result;
 
 /// Default shard axis of `figure sharding` (and the sharding bench).
@@ -45,7 +43,8 @@ pub fn placement_cell_label(shards: usize, placement: PlacementKind) -> &'static
     }
 }
 
-/// One serving run at a (model, policy, shards, placement) cell.
+/// One serving run at a (model, policy, shards, placement) cell, through
+/// the shared per-cell runner (`ExpCtx::run_batch_cell`).
 pub fn run_cell(
     ctx: &mut ExpCtx,
     model: &str,
@@ -54,21 +53,11 @@ pub fn run_cell(
     shards: usize,
     placement: PlacementKind,
 ) -> Result<crate::metrics::BatchRunMetrics> {
-    let cfg = EngineConfig {
-        model: model.into(),
-        max_batch: batch,
-        shards,
-        placement,
-        max_new_tokens: ctx.max_new_tokens,
-        seed: ctx.seed,
-        ..EngineConfig::default()
-    };
-    let mut engine = BatchEngine::sim(&ctx.registry, cfg, policy.clone())?;
+    let mut cfg = ctx.batch_cfg(model, batch);
+    cfg.shards = shards;
+    cfg.placement = placement;
     let workload = Workload::by_name("code+math").expect("known mix");
-    let stream = RequestStream::new(workload, ctx.seed, ctx.max_new_tokens);
-    let mut sched =
-        Scheduler::new(stream, Budget { max_tokens: ctx.tokens_per_cell, max_requests: 10_000 });
-    sched.run_batched(&mut engine)
+    ctx.run_batch_cell(cfg, policy, &workload)
 }
 
 /// The sharding comparison over an explicit shard axis (the CLI's

@@ -63,6 +63,13 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} {v:?} not a number")),
+            None => Ok(default),
+        }
+    }
 }
 
 fn usage() -> ! {
@@ -78,16 +85,21 @@ USAGE:
                  [--pipeline on|off] [--shards 1] [--placement balanced|coactivation]
                  [--kv-pool-blocks N] [--eviction off|lru|most-lookahead|cost-aware]
                  [--max-preemptions 8]
-  cascade sweep  [--tokens 300] [--out-dir results] [--shards 1,2,4]
+                 [--arrivals closed|poisson|bursty|trace:<path>] [--rate R]
+                 [--admission fcfs|parked-first|edf] [--slo-ms MS]
+  cascade sweep  [--tokens 300] [--out-dir results] [--shards 1,2,4] [--rate 0.5,1,2]
                  (continuous-batching comparison: batch=1 vs 4, static-K vs Cascade;
-                  --shards runs the expert-parallel K-vs-shards axis instead)
+                  --shards runs the expert-parallel K-vs-shards axis instead;
+                  --rate runs the open-loop Poisson saturation sweep instead)
   cascade bench  [--tokens 2000] [--quick 1] [--out BENCH_pipeline.json]
                  [--out-sharding BENCH_sharding.json]
                  [--out-preemption BENCH_preemption.json]
+                 [--out-arrivals BENCH_arrivals.json]
                  (serial vs pipelined TPOT/bubble-fraction table at batch 1/4,
-                  sharded TPOT at shards 1/2/4 x batch 1/4, and eviction-policy
-                  throughput under a half-working-set pool, as JSON for CI tracking)
-  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|batch|pipeline|sharding|preemption|all>
+                  sharded TPOT at shards 1/2/4 x batch 1/4, eviction-policy
+                  throughput under a half-working-set pool, and per-admission
+                  p95 queueing delay under bursty arrivals, as JSON for CI)
+  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|batch|pipeline|sharding|preemption|arrivals|all>
                  [--backend real|sim] [--tokens 300] [--out-dir results]
 
   --batch N > 1 serves through the continuous-batching engine: one fused
@@ -117,6 +129,15 @@ USAGE:
   committed context re-prefilled on re-admission, the recompute charged
   into TPOT). An evicted-then-readmitted request's token stream is
   bit-exact with an uncontended run (see rust/docs/preemption.md).
+
+  --arrivals opens the serving loop: requests arrive on the engine's
+  virtual clock (poisson / bursty at --rate req/s, or a JSONL trace) and
+  wait in an admission queue, so TTFT / queueing delay / E2E tails and
+  slot idleness become observable. --admission orders that queue (fcfs,
+  parked-first = eviction victims re-admit ahead of fresh arrivals, edf =
+  earliest deadline first against --slo-ms). closed + fcfs (the default)
+  is bit-exact with the legacy closed-loop scheduler (see
+  rust/docs/serving.md).
 "
     );
     std::process::exit(2)
@@ -226,6 +247,12 @@ fn serve(args: &Args) -> Result<()> {
     let kv_pool_blocks = args.get_usize("kv-pool-blocks", 0)?;
     let eviction = cascade::config::EvictionKind::parse(&args.get("eviction", "off"))?;
     let max_preemptions = args.get_usize("max-preemptions", 8)?;
+    let rate = args.get_f64("rate", 0.0)?;
+    let arrival_kind =
+        cascade::workload::arrivals::ArrivalKind::parse(&args.get("arrivals", "closed"), rate)?;
+    let admission = cascade::config::AdmissionKind::parse(&args.get("admission", "fcfs"))?;
+    let slo_s = args.get_f64("slo-ms", 0.0)? / 1e3;
+    anyhow::ensure!(slo_s >= 0.0, "--slo-ms cannot be negative");
     let backend_name = match backend {
         BackendKind::Real => "real",
         BackendKind::Sim => "sim",
@@ -245,7 +272,10 @@ fn serve(args: &Args) -> Result<()> {
     let use_batch_engine = batch > 1
         || (shards > 1 && backend == BackendKind::Sim)
         || kv_pool_blocks > 0
-        || eviction.is_on();
+        || eviction.is_on()
+        || !arrival_kind.is_closed()
+        || admission != cascade::config::AdmissionKind::Fcfs
+        || slo_s > 0.0;
     let cfg = EngineConfig {
         model: model.clone(),
         drafter,
@@ -257,11 +287,19 @@ fn serve(args: &Args) -> Result<()> {
         kv_pool_blocks,
         eviction,
         max_preemptions_per_req: max_preemptions,
+        admission,
+        slo_s,
         ..EngineConfig::default()
     };
     let budget = Budget { max_tokens: tokens, max_requests: 10_000 };
     let stream = RequestStream::new(workload.clone(), seed, cfg.max_new_tokens);
-    let mut sched = Scheduler::new(stream, budget);
+    let mut sched = if arrival_kind.is_closed() {
+        Scheduler::new(stream, budget)
+    } else {
+        let arrivals =
+            cascade::workload::arrivals::ArrivalProcess::new(arrival_kind.clone(), stream, seed)?;
+        Scheduler::with_arrivals(arrivals, budget)
+    };
 
     if use_batch_engine {
         // Continuous-batching path: fused verify steps, shared KV pool,
@@ -351,6 +389,55 @@ fn serve(args: &Args) -> Result<()> {
             t.row(vec![
                 "thrash fraction".into(),
                 format!("{:.1}%", 100.0 * m.thrash_fraction()),
+            ]);
+        }
+        t.row(vec!["admission".into(), admission.label().into()]);
+        if !arrival_kind.is_closed() {
+            t.row(vec!["arrivals".into(), arrival_kind.label()]);
+            t.row(vec![
+                "virtual duration".into(),
+                format!("{:.2}s ({:.2}s idle)", m.clock_s, m.idle_s),
+            ]);
+            t.row(vec![
+                "TTFT p50/p95/p99".into(),
+                format!(
+                    "{} / {} / {}",
+                    ms(m.run.ttft_percentile(0.50)),
+                    ms(m.run.ttft_percentile(0.95)),
+                    ms(m.run.ttft_percentile(0.99))
+                ),
+            ]);
+            t.row(vec![
+                "queue delay p50/p95/p99".into(),
+                format!(
+                    "{} / {} / {}",
+                    ms(m.run.queue_wait_percentile(0.50)),
+                    ms(m.run.queue_wait_percentile(0.95)),
+                    ms(m.run.queue_wait_percentile(0.99))
+                ),
+            ]);
+            t.row(vec![
+                "E2E p50/p95/p99".into(),
+                format!(
+                    "{} / {} / {}",
+                    ms(m.run.e2e_percentile(0.50)),
+                    ms(m.run.e2e_percentile(0.95)),
+                    ms(m.run.e2e_percentile(0.99))
+                ),
+            ]);
+            t.row(vec![
+                "mean queue depth".into(),
+                format!("{:.1}", m.mean_queue_depth()),
+            ]);
+            t.row(vec![
+                "slot idle fraction".into(),
+                format!("{:.1}%", 100.0 * m.slot_idle_fraction()),
+            ]);
+        }
+        if slo_s > 0.0 {
+            t.row(vec![
+                format!("SLO goodput (TTFT <= {:.0}ms)", 1e3 * slo_s),
+                format!("{:.1}%", 100.0 * m.run.slo_goodput(slo_s)),
             ]);
         }
         t.row(vec![
@@ -464,6 +551,11 @@ fn bench(args: &Args) -> Result<()> {
     let task = "code+math";
     let workload = Workload::by_name(task).expect("known mix");
     let policy = PolicyKind::Static(3);
+    // One experiment context drives every section: its cell runners are
+    // shared with `figure pipeline|sharding|preemption|arrivals`, so bench
+    // axes can never drift from the experiments'.
+    let mut ctx = ExpCtx::new(reg, BackendKind::Sim, tokens);
+    ctx.seed = seed;
 
     let mut t = Table::new(
         format!("pipeline bench: mixtral/{task}/static-k3 (sim, {tokens} tokens)"),
@@ -484,20 +576,10 @@ fn bench(args: &Args) -> Result<()> {
     for batch in [1usize, 4] {
         let mut tpot_serial = f64::NAN;
         for pipeline in [false, true] {
-            let cfg = EngineConfig {
-                model: "mixtral".into(),
-                max_batch: batch,
-                pipeline,
-                seed,
-                ..EngineConfig::default()
-            };
-            let max_new = cfg.max_new_tokens;
-            let mut engine = BatchEngine::sim(&reg, cfg, policy.clone())?;
-            let stream = RequestStream::new(workload.clone(), seed, max_new);
-            let mut sched =
-                Scheduler::new(stream, Budget { max_tokens: tokens, max_requests: 10_000 });
+            let mut cfg = ctx.batch_cfg("mixtral", batch);
+            cfg.pipeline = pipeline;
             let t0 = std::time::Instant::now();
-            let m = sched.run_batched(&mut engine)?;
+            let m = ctx.run_batch_cell(cfg, &policy, &workload)?;
             let host_s = t0.elapsed().as_secs_f64();
 
             let mode = if pipeline { "pipelined" } else { "serial" };
@@ -575,11 +657,6 @@ fn bench(args: &Args) -> Result<()> {
         ],
     );
     let mut shard_rows: Vec<json::Value> = Vec::new();
-    // One cell-runner shared with `figure sharding` / `sweep --shards`
-    // (experiments::sharding), so the bench axis can never drift from the
-    // experiment's.
-    let mut ctx = ExpCtx::new(reg, BackendKind::Sim, tokens);
-    ctx.seed = seed;
     for batch in [1usize, 4] {
         let mut tpot_unsharded = f64::NAN;
         for shards in experiments::sharding::DEFAULT_SHARDS {
@@ -719,17 +796,135 @@ fn bench(args: &Args) -> Result<()> {
         ("rows", json::arr(preempt_rows)),
     ]);
     write_json_artifact(&preempt_out, &preempt_doc)?;
+
+    // ---- Arrivals bench (BENCH_arrivals.json) ---------------------------
+    // Queueing-delay tail per admission policy under bursty open-loop
+    // arrivals into a half-working-set KV pool (LRU eviction). Shares its
+    // cell runner with `figure arrivals` so the two can never drift. The
+    // headline comparison: fcfs vs parked-first — priority re-admission of
+    // eviction victims cuts the p95 queueing delay (and the re-prefill
+    // thrash that causes it). Budget is fixed per cell (independent of
+    // --tokens) so the percentiles always see a full request population.
+    let arrivals_out = args.get("out-arrivals", "BENCH_arrivals.json");
+    let arr_rate = 2.0;
+    let probe = experiments::arrivals::contended_cell(
+        cascade::config::AdmissionKind::Fcfs,
+        arr_rate,
+        seed,
+    );
+    let mut at = Table::new(
+        format!(
+            "arrivals bench: mixtral/{task}/static-k3 (sim, batch 4, {}, pool {} blocks)",
+            probe.arrivals.label(),
+            probe.pool_blocks
+        ),
+        &[
+            "admission",
+            "reqs",
+            "tokens",
+            "TTFT p95",
+            "queue p50",
+            "queue p95",
+            "E2E p95",
+            "goodput",
+            "evict",
+            "readmit",
+            "thrash",
+            "depth",
+            "idle",
+        ],
+    );
+    let mut arr_rows: Vec<json::Value> = Vec::new();
+    for admission in experiments::arrivals::ADMISSIONS {
+        let cell = experiments::arrivals::contended_cell(admission, arr_rate, seed);
+        let m = experiments::arrivals::run_cell(&ctx, "mixtral", &policy, &cell)?;
+        at.row(vec![
+            admission.label().into(),
+            m.run.requests.len().to_string(),
+            m.run.total_tokens().to_string(),
+            ms(m.run.ttft_percentile(0.95)),
+            ms(m.run.queue_wait_percentile(0.50)),
+            ms(m.run.queue_wait_percentile(0.95)),
+            ms(m.run.e2e_percentile(0.95)),
+            format!("{:.0}%", 100.0 * m.run.slo_goodput(cell.slo_s)),
+            m.evictions().to_string(),
+            m.readmissions().to_string(),
+            format!("{:.1}%", 100.0 * m.thrash_fraction()),
+            format!("{:.1}", m.mean_queue_depth()),
+            format!("{:.0}%", 100.0 * m.slot_idle_fraction()),
+        ]);
+        arr_rows.push(json::obj(vec![
+            ("admission", json::str(admission.label())),
+            ("pool_blocks", json::num(cell.pool_blocks as f64)),
+            ("requests_completed", json::num(m.run.requests.len() as f64)),
+            ("tokens", json::num(m.run.total_tokens() as f64)),
+            ("ttft_p50_ms", json::num(1e3 * m.run.ttft_percentile(0.50))),
+            ("ttft_p95_ms", json::num(1e3 * m.run.ttft_percentile(0.95))),
+            ("ttft_p99_ms", json::num(1e3 * m.run.ttft_percentile(0.99))),
+            ("queue_delay_p50_ms", json::num(1e3 * m.run.queue_wait_percentile(0.50))),
+            ("queue_delay_p95_ms", json::num(1e3 * m.run.queue_wait_percentile(0.95))),
+            ("queue_delay_p99_ms", json::num(1e3 * m.run.queue_wait_percentile(0.99))),
+            ("e2e_p95_ms", json::num(1e3 * m.run.e2e_percentile(0.95))),
+            ("slo_ms", json::num(1e3 * cell.slo_s)),
+            ("slo_goodput", json::num(m.run.slo_goodput(cell.slo_s))),
+            ("evictions", json::num(m.evictions() as f64)),
+            ("readmissions", json::num(m.readmissions() as f64)),
+            ("reprefill_ms", json::num(1e3 * m.reprefill_s())),
+            ("thrash_fraction", json::num(m.thrash_fraction())),
+            ("mean_queue_depth", json::num(m.mean_queue_depth())),
+            ("slot_idle_fraction", json::num(m.slot_idle_fraction())),
+            ("virtual_duration_s", json::num(m.clock_s)),
+        ]));
+    }
+    println!("{}", at.render());
+    let arr_doc = json::obj(vec![
+        ("bench", json::str("arrivals")),
+        ("model", json::str("mixtral")),
+        ("task", json::str(task)),
+        ("policy", json::str("static-k3")),
+        ("drafter", json::str("ngram")),
+        ("backend", json::str("sim")),
+        ("batch", json::num(4.0)),
+        ("arrivals", json::str(probe.arrivals.label())),
+        ("rate_mean_per_s", json::num(arr_rate)),
+        ("pool_blocks", json::num(probe.pool_blocks as f64)),
+        ("quick", json::Value::Bool(quick)),
+        ("rows", json::arr(arr_rows)),
+    ]);
+    write_json_artifact(&arrivals_out, &arr_doc)?;
     Ok(())
 }
 
 /// The continuous-batching comparison sweep (the `batch` experiment on the
 /// sim backend), or — with `--shards a,b,c` — the expert-parallel
-/// K-vs-shards axis (the `sharding` experiment over an explicit axis).
+/// K-vs-shards axis (the `sharding` experiment over an explicit axis), or —
+/// with `--rate a,b,c` — the open-loop Poisson saturation sweep (the
+/// `arrivals` experiment's rate axis).
 fn sweep(args: &Args) -> Result<()> {
     let tokens = args.get_usize("tokens", 300)?;
     let out_dir = args.get("out-dir", "");
+    anyhow::ensure!(
+        !(args.flags.contains_key("rate") && args.flags.contains_key("shards")),
+        "--rate and --shards are mutually exclusive sweep axes; pick one"
+    );
     let reg = registry()?;
     let mut ctx = ExpCtx::new(reg, BackendKind::Sim, tokens);
+    if let Some(axis) = args.flags.get("rate") {
+        let rates: Vec<f64> = axis
+            .split(',')
+            .map(|s| s.trim().parse().with_context(|| format!("--rate piece {s:?}")))
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(!rates.is_empty(), "--rate needs at least one arrival rate");
+        if !args.flags.contains_key("tokens") {
+            // An explicit --tokens is honored exactly; the 300-token sweep
+            // default is too small for stable latency percentiles, so the
+            // rate axis defaults to a dozen 120-token requests per cell.
+            ctx.tokens_per_cell = 12 * 120;
+        }
+        println!("\n### arrivals — open-loop Poisson saturation sweep over rates {rates:?}\n");
+        let tables = experiments::arrivals::rate_sweep_table(&mut ctx, &rates)?;
+        return emit_tables("arrivals-rate", &tables, &out_dir);
+    }
     if let Some(axis) = args.flags.get("shards") {
         let shard_counts: Vec<usize> = axis
             .split(',')

@@ -63,11 +63,39 @@ pub struct RequestMetrics {
     /// context after evictions (charged to the decode clock, unlike
     /// `prefill_s`).
     pub reprefill_s: f64,
+    /// Arrival stamp on the engine's virtual clock (simulated seconds).
+    /// Closed-loop serving stamps arrival at the pull instant, so queueing
+    /// delay is nonzero only when pool pressure deferred admission.
+    pub arrival_s: f64,
+    /// First admission instant on the virtual clock.
+    pub admitted_s: f64,
+    /// Instant the first output token existed (prefill end) — TTFT's
+    /// endpoint.
+    pub first_token_s: f64,
+    /// Instant the request finished (finalized) on the virtual clock.
+    pub finish_s: f64,
+    /// Cumulative out-of-service wait on the virtual clock: arrival →
+    /// first admission, plus every parked interval between an eviction and
+    /// its re-admission. The queueing-delay figure of merit — unlike
+    /// `admitted_s - arrival_s` it keeps counting when a victim waits to
+    /// get back in.
+    pub queue_wait_s: f64,
 }
 
 impl RequestMetrics {
     pub fn tokens_emitted(&self) -> usize {
         self.iters.iter().map(|r| r.emitted).sum()
+    }
+
+    /// Time to first token on the virtual clock: arrival → prefill end
+    /// (includes queueing delay, unlike TPOT's decode-only view).
+    pub fn ttft_s(&self) -> f64 {
+        self.first_token_s - self.arrival_s
+    }
+
+    /// End-to-end latency on the virtual clock: arrival → finalize.
+    pub fn e2e_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
     }
 
     /// Simulated decode time.
@@ -188,17 +216,42 @@ impl RunMetrics {
     /// TPOT percentile across requests (SLO view, paper 7.1: deployments
     /// "require tight latency bounds per request").
     pub fn tpot_percentile(&self, p: f64) -> f64 {
-        let mut tpots: Vec<f64> = self
-            .requests
-            .iter()
-            .filter(|r| !r.iters.is_empty())
-            .map(|r| r.tpot_s())
-            .collect();
-        if tpots.is_empty() {
+        percentile(
+            self.requests
+                .iter()
+                .filter(|r| !r.iters.is_empty())
+                .map(|r| r.tpot_s())
+                .collect(),
+            p,
+        )
+    }
+
+    /// TTFT percentile across requests (arrival → first token, virtual
+    /// clock) — the open-loop latency SLO's usual target.
+    pub fn ttft_percentile(&self, p: f64) -> f64 {
+        percentile(self.requests.iter().map(|r| r.ttft_s()).collect(), p)
+    }
+
+    /// End-to-end latency percentile (arrival → finalize, virtual clock).
+    pub fn e2e_percentile(&self, p: f64) -> f64 {
+        percentile(self.requests.iter().map(|r| r.e2e_s()).collect(), p)
+    }
+
+    /// Queueing-delay percentile: cumulative out-of-service wait
+    /// (`RequestMetrics::queue_wait_s` — initial wait plus parked
+    /// intervals).
+    pub fn queue_wait_percentile(&self, p: f64) -> f64 {
+        percentile(self.requests.iter().map(|r| r.queue_wait_s).collect(), p)
+    }
+
+    /// SLO goodput: fraction of completed requests whose TTFT met the SLO.
+    /// NaN with no completed requests.
+    pub fn slo_goodput(&self, slo_s: f64) -> f64 {
+        if self.requests.is_empty() {
             return f64::NAN;
         }
-        tpots.sort_by(|a, b| a.total_cmp(b));
-        tpots[((tpots.len() - 1) as f64 * p).round() as usize]
+        let met = self.requests.iter().filter(|r| r.ttft_s() <= slo_s).count();
+        met as f64 / self.requests.len() as f64
     }
 
     /// Worst windowed slowdown across all requests relative to a baseline
@@ -242,6 +295,16 @@ impl RunMetrics {
             .count();
         test as f64 / total as f64
     }
+}
+
+/// Nearest-rank percentile over an unsorted sample (NaN when empty) — the
+/// same convention `tpot_percentile` has always used.
+fn percentile(mut vals: Vec<f64>, p: f64) -> f64 {
+    if vals.is_empty() {
+        return f64::NAN;
+    }
+    vals.sort_by(|a, b| a.total_cmp(b));
+    vals[((vals.len() - 1) as f64 * p).round() as usize]
 }
 
 /// One fused iteration of the continuous-batching engine: a single verify
@@ -297,6 +360,11 @@ pub struct BatchIterRecord {
     /// Evicted requests re-admitted (re-prefilled) since the last committed
     /// iteration; their recompute time is in `cost.reprefill_s`.
     pub readmissions: usize,
+    /// Requests waiting for a slot when this iteration committed: arrived
+    /// but unadmitted (the scheduler's wait queue) plus parked eviction
+    /// victims. 0 in closed-loop serving unless pool pressure defers
+    /// admission.
+    pub queue_depth: usize,
 }
 
 /// Aggregate over a continuous-batching run: per-request traces (latency
@@ -309,6 +377,12 @@ pub struct BatchRunMetrics {
     pub max_batch: usize,
     /// Expert-parallel shard count the run was priced under (1 = unsharded).
     pub n_shards: usize,
+    /// Final virtual-clock reading: Σ prefill charges + Σ iteration costs +
+    /// idle time. The denominator of open-loop rate/duration views.
+    pub clock_s: f64,
+    /// Virtual seconds the engine sat fully idle (no slot occupied, clock
+    /// advanced to the next arrival). 0 in closed-loop serving.
+    pub idle_s: f64,
 }
 
 impl BatchRunMetrics {
@@ -367,6 +441,35 @@ impl BatchRunMetrics {
             return 0.0;
         }
         self.iters.iter().map(|r| r.cost.expert_s).sum::<f64>() / self.iters.len() as f64
+    }
+
+    // ---- Open-loop occupancy telemetry ----------------------------------
+
+    /// Mean wait-queue depth over committed iterations (arrived-but-
+    /// unadmitted + parked victims, sampled at each commit).
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 0.0;
+        }
+        self.iters.iter().map(|r| r.queue_depth as f64).sum::<f64>() / self.iters.len() as f64
+    }
+
+    /// Fraction of slot-time spent idle on the decode clock: empty slots
+    /// during iterations plus whole-engine idle gaps, over
+    /// `max_batch × (Σ iteration time + idle time)`. Prefill time is
+    /// outside both numerator and denominator (it occupies exactly the
+    /// admitting slot). 0.0 for a fully-occupied closed-loop run.
+    pub fn slot_idle_fraction(&self) -> f64 {
+        if self.max_batch == 0 {
+            return 0.0;
+        }
+        let iter_s: f64 = self.iters.iter().map(|r| r.cost.total()).sum();
+        let span = iter_s + self.idle_s;
+        if span <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self.iters.iter().map(|r| r.n_active as f64 * r.cost.total()).sum();
+        1.0 - busy / (self.max_batch as f64 * span)
     }
 
     // ---- Pipelined-drafting telemetry -----------------------------------
@@ -642,6 +745,7 @@ mod tests {
             draft_wall_hidden_ns: 0,
             evictions: 0,
             readmissions: 0,
+            queue_depth: 0,
         }
     }
 
@@ -731,6 +835,58 @@ mod tests {
         let plain = BatchRunMetrics::default();
         assert_eq!(plain.evictions(), 0);
         assert_eq!(plain.thrash_fraction(), 0.0);
+    }
+
+    #[test]
+    fn latency_percentiles_and_goodput() {
+        let mut run = RunMetrics::default();
+        for (arr, adm, first, fin) in
+            [(0.0, 0.0, 0.1, 1.0), (1.0, 1.5, 1.7, 3.0), (2.0, 4.0, 4.5, 9.0)]
+        {
+            let mut m = RequestMetrics {
+                arrival_s: arr,
+                admitted_s: adm,
+                first_token_s: first,
+                finish_s: fin,
+                queue_wait_s: adm - arr,
+                ..Default::default()
+            };
+            m.iters.push(rec(1, 0.01, IterPhase::Set));
+            run.push(m);
+        }
+        // TTFTs: 0.1, 0.7, 2.5 — E2Es: 1.0, 2.0, 7.0 — waits: 0.0, 0.5, 2.0.
+        assert!((run.ttft_percentile(0.5) - 0.7).abs() < 1e-12);
+        assert!((run.ttft_percentile(1.0) - 2.5).abs() < 1e-12);
+        assert!((run.e2e_percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((run.queue_wait_percentile(1.0) - 2.0).abs() < 1e-12);
+        // SLO at 1.0s TTFT: 2 of 3 met.
+        assert!((run.slo_goodput(1.0) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((run.slo_goodput(0.05) - 0.0).abs() < 1e-12);
+        assert!(RunMetrics::default().ttft_percentile(0.5).is_nan());
+        assert!(RunMetrics::default().slo_goodput(1.0).is_nan());
+    }
+
+    #[test]
+    fn queue_depth_and_idle_aggregates() {
+        let mut b = BatchRunMetrics { max_batch: 4, ..Default::default() };
+        let mut r1 = batch_rec(4, 8, 6.0, 12.0); // cost.total() = 0.016
+        r1.queue_depth = 3;
+        let mut r2 = batch_rec(2, 4, 4.0, 6.0); // cost.total() = 0.014
+        r2.queue_depth = 1;
+        b.iters.push(r1);
+        b.iters.push(r2);
+        b.idle_s = 0.010;
+        b.clock_s = 0.040;
+        assert!((b.mean_queue_depth() - 2.0).abs() < 1e-12);
+        // busy = 4*0.016 + 2*0.014 = 0.092; span = 0.030 + 0.010 = 0.040.
+        let expect = 1.0 - 0.092 / (4.0 * 0.040);
+        assert!((b.slot_idle_fraction() - expect).abs() < 1e-12, "{}", b.slot_idle_fraction());
+        // Empty and fully-busy runs degrade sensibly.
+        assert_eq!(BatchRunMetrics::default().slot_idle_fraction(), 0.0);
+        assert_eq!(BatchRunMetrics::default().mean_queue_depth(), 0.0);
+        let mut full = BatchRunMetrics { max_batch: 1, ..Default::default() };
+        full.iters.push(batch_rec(1, 2, 2.0, 2.0));
+        assert!(full.slot_idle_fraction().abs() < 1e-12);
     }
 
     #[test]

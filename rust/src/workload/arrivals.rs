@@ -1,0 +1,439 @@
+//! Arrival processes: who shows up when, on the virtual clock.
+//!
+//! The paper's premise is a *serving* system under bursty traffic, but a
+//! closed-loop scheduler (pull a fresh request the instant a slot frees)
+//! can never observe queueing delay, TTFT, or tail latency — the offered
+//! load is always exactly the service rate. An [`ArrivalProcess`] breaks
+//! that loop: requests are stamped with an **arrival time on the engine's
+//! virtual clock** (summed simulated iteration seconds, see
+//! `BatchEngine::clock_s`) and become admissible only once the clock
+//! reaches them. Slots may idle under low rate; queues build under bursts.
+//!
+//! Four processes:
+//! * `closed` — the legacy closed loop (arrival == admission instant);
+//!   kept as the default and bit-exact with the pre-arrival scheduler.
+//! * `poisson(rate)` — memoryless arrivals at a constant mean rate.
+//! * `bursty` — an on/off modulated Poisson process (phases of high and
+//!   low rate), the standard bursty-traffic stand-in.
+//! * `trace` — JSONL replay: one object per line,
+//!   `{"t": <seconds>, "task": "code|math|extract", "max_new": <opt>}`.
+//!
+//! All randomness comes from the crate's deterministic [`Rng`], so a given
+//! (process, seed) pair always produces the identical arrival sequence.
+
+use crate::rng::Rng;
+use crate::workload::{Request, RequestStream, Task};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+
+/// Which arrival process drives the run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalKind {
+    /// Closed loop: a request "arrives" the instant the scheduler wants
+    /// one. Queueing delay is structurally zero at admission time.
+    Closed,
+    /// Poisson arrivals at `rate` requests per simulated second.
+    Poisson { rate: f64 },
+    /// On/off modulated Poisson: `on_s` seconds at `rate_on`, then `off_s`
+    /// seconds at `rate_off`, repeating. `rate_off` may be 0 (silent gaps).
+    Bursty { rate_on: f64, rate_off: f64, on_s: f64, off_s: f64 },
+    /// JSONL trace replay (arrival times fixed by the file).
+    Trace { path: String },
+}
+
+impl ArrivalKind {
+    /// Parse the CLI spec: `closed`, `poisson`, `bursty` (both rate-driven
+    /// via `--rate`), or `trace:<path>`.
+    pub fn parse(spec: &str, rate: f64) -> Result<Self> {
+        if let Some(path) = spec.strip_prefix("trace:") {
+            anyhow::ensure!(!path.is_empty(), "trace spec needs a path (trace:<file>)");
+            return Ok(ArrivalKind::Trace { path: path.to_string() });
+        }
+        match spec {
+            "closed" => Ok(ArrivalKind::Closed),
+            "poisson" => {
+                anyhow::ensure!(
+                    rate > 0.0 && rate.is_finite(),
+                    "--arrivals poisson needs a positive finite --rate"
+                );
+                Ok(ArrivalKind::Poisson { rate })
+            }
+            "bursty" => {
+                anyhow::ensure!(
+                    rate > 0.0 && rate.is_finite(),
+                    "--arrivals bursty needs a positive finite --rate"
+                );
+                Ok(ArrivalKind::bursty(rate))
+            }
+            other => anyhow::bail!(
+                "unknown arrivals {other:?} (want closed|poisson|bursty|trace:<path>)"
+            ),
+        }
+    }
+
+    /// Canonical bursty shape at a given *mean* rate: 2-second phases
+    /// alternating 1.8x and 0.2x the mean (so the long-run rate is `rate`,
+    /// but admission sees 9:1 load swings).
+    pub fn bursty(rate: f64) -> Self {
+        ArrivalKind::Bursty {
+            rate_on: 1.8 * rate,
+            rate_off: 0.2 * rate,
+            on_s: 2.0,
+            off_s: 2.0,
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        *self == ArrivalKind::Closed
+    }
+
+    /// Display label for tables and run summaries.
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalKind::Closed => "closed".into(),
+            ArrivalKind::Poisson { rate } => format!("poisson({rate:.2}/s)"),
+            ArrivalKind::Bursty { rate_on, rate_off, on_s, off_s } => {
+                format!("bursty({rate_on:.2}/{rate_off:.2}/s, {on_s:.0}s/{off_s:.0}s)")
+            }
+            ArrivalKind::Trace { path } => format!("trace:{path}"),
+        }
+    }
+}
+
+/// One pre-parsed trace line.
+struct TraceEntry {
+    t: f64,
+    task: Task,
+    max_new: Option<usize>,
+}
+
+/// A request stream with arrival times: wraps the deterministic
+/// [`RequestStream`] (request *content*) with an [`ArrivalKind`] (request
+/// *timing*). Closed mode bypasses timing entirely via [`pull_closed`].
+///
+/// [`pull_closed`]: ArrivalProcess::pull_closed
+pub struct ArrivalProcess {
+    kind: ArrivalKind,
+    stream: RequestStream,
+    rng: Rng,
+    /// Time of the last generated arrival (the generator cursor).
+    cursor_s: f64,
+    /// Generated but not yet released arrival (peek buffer).
+    pending: Option<(f64, Request)>,
+    // Bursty phase state.
+    phase_on: bool,
+    phase_end_s: f64,
+    trace: VecDeque<TraceEntry>,
+}
+
+/// Inverse-CDF exponential sample; `1 - u` lies in (0, 1] so the log is
+/// finite and the delta non-negative.
+fn exp_sample(rng: &mut Rng, rate: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+impl ArrivalProcess {
+    /// The legacy closed loop over a request stream.
+    pub fn closed(stream: RequestStream) -> Self {
+        Self::build(ArrivalKind::Closed, stream, 0, VecDeque::new())
+    }
+
+    /// An open-loop process. Trace files are loaded (and validated) here.
+    pub fn new(kind: ArrivalKind, stream: RequestStream, seed: u64) -> Result<Self> {
+        if let ArrivalKind::Poisson { rate } = kind {
+            anyhow::ensure!(
+                rate > 0.0 && rate.is_finite(),
+                "poisson arrivals need a positive finite rate"
+            );
+        }
+        if let ArrivalKind::Bursty { rate_on, rate_off, on_s, off_s } = kind {
+            anyhow::ensure!(
+                rate_on > 0.0 || rate_off > 0.0,
+                "bursty arrivals need a positive rate in at least one phase"
+            );
+            anyhow::ensure!(
+                on_s > 0.0 && off_s > 0.0 && on_s.is_finite() && off_s.is_finite(),
+                "bursty phases need positive finite durations"
+            );
+            anyhow::ensure!(
+                rate_on >= 0.0 && rate_off >= 0.0 && rate_on.is_finite() && rate_off.is_finite(),
+                "bursty rates must be non-negative and finite"
+            );
+        }
+        let trace = match &kind {
+            ArrivalKind::Trace { path } => Self::load_trace(path)?,
+            _ => VecDeque::new(),
+        };
+        Ok(Self::build(kind, stream, seed, trace))
+    }
+
+    fn build(
+        kind: ArrivalKind,
+        stream: RequestStream,
+        seed: u64,
+        trace: VecDeque<TraceEntry>,
+    ) -> Self {
+        let phase_end_s = match kind {
+            ArrivalKind::Bursty { on_s, .. } => on_s,
+            _ => 0.0,
+        };
+        Self {
+            kind,
+            stream,
+            rng: Rng::new(seed ^ 0xA881_7AA1),
+            cursor_s: 0.0,
+            pending: None,
+            phase_on: true,
+            phase_end_s,
+            trace,
+        }
+    }
+
+    /// Parse a JSONL trace: one `{"t": seconds, "task": name, "max_new":
+    /// optional}` object per line (blank lines skipped). Entries are sorted
+    /// by `t`, so out-of-order traces replay in arrival order.
+    fn load_trace(path: &str) -> Result<VecDeque<TraceEntry>> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading arrival trace {path}"))?;
+        let mut entries: Vec<TraceEntry> = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let v = crate::util::json::parse(line)
+                .with_context(|| format!("{path}:{}: bad JSON", lineno + 1))?;
+            let t = v.req("t")?.as_f64()?;
+            anyhow::ensure!(
+                t.is_finite() && t >= 0.0,
+                "{path}:{}: arrival time {t} must be finite and >= 0",
+                lineno + 1
+            );
+            let task = Task::parse(v.req("task")?.as_str()?)
+                .with_context(|| format!("{path}:{}", lineno + 1))?;
+            let max_new = match v.get("max_new") {
+                Some(m) => Some(m.as_usize()?),
+                None => None,
+            };
+            entries.push(TraceEntry { t, task, max_new });
+        }
+        anyhow::ensure!(!entries.is_empty(), "arrival trace {path} is empty");
+        entries.sort_by(|a, b| a.t.total_cmp(&b.t));
+        Ok(entries.into())
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.kind.is_closed()
+    }
+
+    /// Closed-loop pull: the next request, arriving "now" by definition.
+    /// Must not be called on an open-loop process (requests would skip the
+    /// arrival clock).
+    pub fn pull_closed(&mut self) -> Request {
+        debug_assert!(self.is_closed(), "pull_closed on an open-loop arrival process");
+        self.stream.next_request()
+    }
+
+    /// Generate the next arrival (time, request); `None` when the process
+    /// is closed or a trace is exhausted.
+    fn gen_next(&mut self) -> Option<(f64, Request)> {
+        // Match on the place, not a clone: every binding is Copy, so the
+        // enum (which carries a heap path in trace mode) is never moved.
+        match self.kind {
+            ArrivalKind::Closed => None,
+            ArrivalKind::Poisson { rate } => {
+                self.cursor_s += exp_sample(&mut self.rng, rate);
+                let req = self.stream.next_request();
+                Some((self.cursor_s, req))
+            }
+            ArrivalKind::Bursty { rate_on, rate_off, on_s, off_s } => {
+                loop {
+                    let rate = if self.phase_on { rate_on } else { rate_off };
+                    let remaining = (self.phase_end_s - self.cursor_s).max(0.0);
+                    if rate > 0.0 {
+                        let dt = exp_sample(&mut self.rng, rate);
+                        if dt <= remaining {
+                            self.cursor_s += dt;
+                            let req = self.stream.next_request();
+                            return Some((self.cursor_s, req));
+                        }
+                    }
+                    // No arrival in this phase's remainder: jump to the
+                    // boundary and flip. Redrawing in the next phase is
+                    // exact (exponentials are memoryless).
+                    self.cursor_s = self.phase_end_s;
+                    self.phase_on = !self.phase_on;
+                    self.phase_end_s += if self.phase_on { on_s } else { off_s };
+                }
+            }
+            ArrivalKind::Trace { .. } => {
+                let e = self.trace.pop_front()?;
+                let mut req = self.stream.next_request_for(e.task);
+                if let Some(m) = e.max_new {
+                    req.max_new_tokens = m.max(1);
+                }
+                self.cursor_s = e.t;
+                Some((e.t, req))
+            }
+        }
+    }
+
+    fn refill(&mut self) {
+        if self.pending.is_none() {
+            self.pending = self.gen_next();
+        }
+    }
+
+    /// Time of the next arrival not yet released (`None` for closed mode or
+    /// an exhausted trace). The scheduler advances the engine's idle clock
+    /// to this when every slot is empty and nothing has arrived.
+    pub fn next_arrival_s(&mut self) -> Option<f64> {
+        self.refill();
+        self.pending.as_ref().map(|(t, _)| *t)
+    }
+
+    /// Release every arrival with time <= `now_s`, in order.
+    pub fn due(&mut self, now_s: f64) -> Vec<(f64, Request)> {
+        let mut out = Vec::new();
+        loop {
+            self.refill();
+            let is_due = matches!(&self.pending, Some((t, _)) if *t <= now_s);
+            if !is_due {
+                break;
+            }
+            out.push(self.pending.take().expect("checked due above"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Workload;
+
+    fn stream() -> RequestStream {
+        RequestStream::new(Workload::by_name("code+math").unwrap(), 7, 100)
+    }
+
+    fn take_times(p: &mut ArrivalProcess, n: usize) -> Vec<f64> {
+        (0..n).map(|_| p.gen_next().expect("open process never exhausts").0).collect()
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert!(ArrivalKind::parse("closed", 0.0).unwrap().is_closed());
+        assert_eq!(
+            ArrivalKind::parse("poisson", 2.0).unwrap(),
+            ArrivalKind::Poisson { rate: 2.0 }
+        );
+        assert!(ArrivalKind::parse("poisson", 0.0).is_err());
+        assert!(ArrivalKind::parse("bursty", 0.0).is_err());
+        assert!(matches!(
+            ArrivalKind::parse("bursty", 1.0).unwrap(),
+            ArrivalKind::Bursty { .. }
+        ));
+        assert_eq!(
+            ArrivalKind::parse("trace:/tmp/x.jsonl", 0.0).unwrap(),
+            ArrivalKind::Trace { path: "/tmp/x.jsonl".into() }
+        );
+        assert!(ArrivalKind::parse("trace:", 0.0).is_err());
+        assert!(ArrivalKind::parse("uniform", 1.0).is_err());
+    }
+
+    #[test]
+    fn poisson_deterministic_and_monotone() {
+        let mk = || {
+            ArrivalProcess::new(ArrivalKind::Poisson { rate: 3.0 }, stream(), 42).unwrap()
+        };
+        let (mut a, mut b) = (mk(), mk());
+        let (ta, tb) = (take_times(&mut a, 50), take_times(&mut b, 50));
+        assert_eq!(ta, tb, "same seed must give the identical arrival sequence");
+        for w in ta.windows(2) {
+            assert!(w[1] >= w[0], "arrival times must be non-decreasing");
+        }
+        assert!(ta[49] > 0.0);
+    }
+
+    #[test]
+    fn bursty_silent_phases_are_silent() {
+        // rate_off = 0 with 1s/1s phases: every arrival must land in an
+        // on-phase, i.e. t mod 2 in [0, 1].
+        let kind =
+            ArrivalKind::Bursty { rate_on: 5.0, rate_off: 0.0, on_s: 1.0, off_s: 1.0 };
+        let mut p = ArrivalProcess::new(kind, stream(), 9).unwrap();
+        let times = take_times(&mut p, 80);
+        for t in &times {
+            let phase = t.rem_euclid(2.0);
+            assert!(phase <= 1.0 + 1e-9, "arrival at {t} fell in a silent phase");
+        }
+        for w in times.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn due_releases_in_order_and_peek_matches() {
+        let mut p =
+            ArrivalProcess::new(ArrivalKind::Poisson { rate: 10.0 }, stream(), 1).unwrap();
+        let first = p.next_arrival_s().unwrap();
+        let batch = p.due(first + 1.0);
+        assert!(!batch.is_empty());
+        assert!((batch[0].0 - first).abs() < 1e-12, "peeked time must be released first");
+        for w in batch.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+        }
+        // Everything released is due; the next peek is beyond the horizon.
+        assert!(batch.iter().all(|(t, _)| *t <= first + 1.0));
+        assert!(p.next_arrival_s().unwrap() > first + 1.0);
+    }
+
+    #[test]
+    fn closed_never_generates() {
+        let mut p = ArrivalProcess::closed(stream());
+        assert!(p.next_arrival_s().is_none());
+        assert!(p.due(1e9).is_empty());
+        let r = p.pull_closed();
+        assert!(!r.prompt.is_empty());
+    }
+
+    #[test]
+    fn trace_replay_roundtrip() {
+        let path = std::env::temp_dir().join("cascade_arrivals_test_trace.jsonl");
+        let text = "\
+{\"t\": 0.5, \"task\": \"math\", \"max_new\": 32}\n\
+{\"t\": 0.1, \"task\": \"code\"}\n\
+\n\
+{\"t\": 2.0, \"task\": \"extract\", \"max_new\": 64}\n";
+        std::fs::write(&path, text).unwrap();
+        let kind = ArrivalKind::Trace { path: path.to_string_lossy().into_owned() };
+        let mut p = ArrivalProcess::new(kind, stream(), 0).unwrap();
+        let a = p.gen_next().unwrap();
+        let b = p.gen_next().unwrap();
+        let c = p.gen_next().unwrap();
+        assert!(p.gen_next().is_none(), "trace must exhaust");
+        // Sorted by t: code@0.1, math@0.5 (max_new 32), extract@2.0.
+        assert_eq!((a.0, a.1.task), (0.1, Task::Code));
+        assert_eq!((b.0, b.1.task), (0.5, Task::Math));
+        assert_eq!(b.1.max_new_tokens, 32);
+        assert_eq!((c.0, c.1.task), (2.0, Task::Extract));
+        assert_eq!(c.1.max_new_tokens, 64);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bad_traces_are_errors() {
+        let dir = std::env::temp_dir();
+        let empty = dir.join("cascade_arrivals_empty.jsonl");
+        std::fs::write(&empty, "\n\n").unwrap();
+        let kind = ArrivalKind::Trace { path: empty.to_string_lossy().into_owned() };
+        assert!(ArrivalProcess::new(kind, stream(), 0).is_err());
+        let _ = std::fs::remove_file(&empty);
+
+        let bad = dir.join("cascade_arrivals_bad.jsonl");
+        std::fs::write(&bad, "{\"t\": -1.0, \"task\": \"code\"}\n").unwrap();
+        let kind = ArrivalKind::Trace { path: bad.to_string_lossy().into_owned() };
+        assert!(ArrivalProcess::new(kind, stream(), 0).is_err());
+        let _ = std::fs::remove_file(&bad);
+    }
+}

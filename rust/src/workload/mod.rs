@@ -7,6 +7,7 @@
 //! synthesized (`corpus.rs`) with the drafter-relevant statistics of each
 //! task; see DESIGN.md §Substitutions.
 
+pub mod arrivals;
 pub mod corpus;
 
 use crate::rng::Rng;
@@ -21,6 +22,15 @@ pub enum Task {
 }
 
 impl Task {
+    pub fn parse(s: &str) -> anyhow::Result<Task> {
+        match s {
+            "code" => Ok(Task::Code),
+            "math" => Ok(Task::Math),
+            "extract" => Ok(Task::Extract),
+            other => anyhow::bail!("unknown task {other:?} (want code|math|extract)"),
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Task::Code => "code",
@@ -103,9 +113,16 @@ impl RequestStream {
         Self { workload, rng: Rng::new(seed), next_id: 0, max_new_tokens }
     }
 
-    /// Generate the next request.
+    /// Generate the next request (round-robin task per the workload mix).
     pub fn next_request(&mut self) -> Request {
         let task = self.workload.tasks[(self.next_id as usize) % self.workload.tasks.len()];
+        self.next_request_for(task)
+    }
+
+    /// Generate the next request with an explicit task (trace replay picks
+    /// the task per trace line; the id/rng stream advances identically to
+    /// `next_request`, so mixing the two stays deterministic).
+    pub fn next_request_for(&mut self, task: Task) -> Request {
         let mut rng = self.rng.fork(self.next_id);
         let (prompt_text, reference_text) = corpus::generate(task, &mut rng);
         let req = Request {

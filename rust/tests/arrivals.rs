@@ -1,0 +1,353 @@
+//! Open-loop serving integration (sim backend; no artifacts needed):
+//!
+//! * **determinism guard** — the refactored event-loop scheduler with
+//!   `--arrivals closed --admission fcfs` (the defaults) reproduces the
+//!   pre-refactor closed-loop scheduler token-for-token and
+//!   metric-for-metric, across eviction on/off × pipeline on/off. The
+//!   legacy loop is replicated inline below (it was small) and driven
+//!   against a second engine built identically;
+//! * **budget law** — the PR-1 token-budget clamp, now folded into the
+//!   admission layer (`AdmissionQueue::clamp`), still holds exactly:
+//!   batched runs never overshoot `max_tokens`;
+//! * **latency stamps** are ordered (arrival ≤ admitted ≤ first token ≤
+//!   finish) and open-loop runs are bit-reproducible;
+//! * **trace replay** serves requests at trace times: the engine idles
+//!   between spaced arrivals (`idle_s > 0`, a state the closed loop cannot
+//!   express) and completes every traced request;
+//! * **overload builds a queue** — bursty arrivals beyond service capacity
+//!   leave arrived requests waiting (`mean_queue_depth > 0`);
+//! * the **contended bursty cell** (the `figure arrivals` / bench cell)
+//!   genuinely evicts and still completes under every admission policy.
+
+use cascade::config::{EngineConfig, EvictionKind};
+use cascade::coordinator::batch::BatchEngine;
+use cascade::coordinator::scheduler::{Budget, Scheduler};
+use cascade::experiments::arrivals::{contended_cell, run_cell, ADMISSIONS};
+use cascade::experiments::runner::{BackendKind, ExpCtx};
+use cascade::metrics::BatchRunMetrics;
+use cascade::models::{default_artifacts_dir, Registry};
+use cascade::spec::policy::PolicyKind;
+use cascade::workload::arrivals::{ArrivalKind, ArrivalProcess};
+use cascade::workload::{Request, RequestStream, Workload};
+use std::collections::VecDeque;
+
+fn registry() -> Registry {
+    Registry::load_or_builtin(default_artifacts_dir())
+}
+
+fn workload() -> Workload {
+    Workload::by_name("code+math").unwrap()
+}
+
+fn engine(cfg: &EngineConfig, policy: &PolicyKind) -> BatchEngine {
+    BatchEngine::sim(&registry(), cfg.clone(), policy.clone()).unwrap()
+}
+
+/// The PR-4 closed-loop scheduler, replicated verbatim (pull → clamp →
+/// requeue-on-pressure → step): the reference the refactored event loop
+/// must match bit-exactly under closed+fcfs.
+fn legacy_run_batched(
+    engine: &mut BatchEngine,
+    stream: &mut RequestStream,
+    max_tokens: usize,
+    max_requests: usize,
+) -> anyhow::Result<BatchRunMetrics> {
+    let mut queue: VecDeque<Request> = VecDeque::new();
+    let mut served = 0usize;
+    loop {
+        loop {
+            let bound = engine.output_bound();
+            if !engine.has_free_slot() || bound >= max_tokens || served >= max_requests {
+                break;
+            }
+            let mut req = queue.pop_front().unwrap_or_else(|| stream.next_request());
+            let remaining = max_tokens - bound;
+            req.max_new_tokens = req.max_new_tokens.min(remaining + 1);
+            if !engine.can_admit(&req) {
+                queue.push_front(req);
+                break;
+            }
+            served += 1;
+            engine.admit(req)?;
+        }
+        if !engine.step_iteration()? {
+            if engine.output_bound() >= max_tokens || served >= max_requests {
+                break;
+            }
+            if let Some(req) = queue.front() {
+                anyhow::ensure!(
+                    engine.can_admit(req),
+                    "request {} cannot fit the KV pool",
+                    req.id
+                );
+            }
+        }
+    }
+    Ok(engine.finish())
+}
+
+/// Assert two runs agree token-for-token and in iteration structure.
+fn assert_runs_identical(a: &BatchRunMetrics, b: &BatchRunMetrics, label: &str) {
+    assert_eq!(a.run.requests.len(), b.run.requests.len(), "{label}: request count");
+    for (x, y) in a.run.requests.iter().zip(&b.run.requests) {
+        assert_eq!(x.id, y.id, "{label}: request order");
+        assert_eq!(x.output, y.output, "{label}: token stream of request {}", x.id);
+        assert_eq!(x.iters.len(), y.iters.len(), "{label}: iterations of request {}", x.id);
+        for (i, (ix, iy)) in x.iters.iter().zip(&y.iters).enumerate() {
+            assert_eq!(
+                (ix.k_chosen, ix.drafted, ix.accepted, ix.emitted),
+                (iy.k_chosen, iy.drafted, iy.accepted, iy.emitted),
+                "{label}: iteration {i} structure of request {}",
+                x.id
+            );
+        }
+        assert_eq!(x.preemptions, y.preemptions, "{label}: preemptions of request {}", x.id);
+    }
+    assert_eq!(a.iters.len(), b.iters.len(), "{label}: fused iteration count");
+    for (i, (ix, iy)) in a.iters.iter().zip(&b.iters).enumerate() {
+        assert_eq!(
+            (ix.n_active, ix.total_tokens, ix.total_drafted, ix.emitted),
+            (iy.n_active, iy.total_tokens, iy.total_drafted, iy.emitted),
+            "{label}: fused iteration {i}"
+        );
+        assert_eq!(
+            (ix.evictions, ix.readmissions),
+            (iy.evictions, iy.readmissions),
+            "{label}: preemption telemetry at fused iteration {i}"
+        );
+    }
+}
+
+/// Satellite: the refactored scheduler's default path is bit-exact with
+/// PR-4 serving across the eviction × pipeline matrix.
+#[test]
+fn closed_fcfs_reproduces_legacy_scheduler() {
+    let budget = Budget { max_tokens: 1_000, max_requests: 10_000 };
+    for (eviction, kv_pool_blocks) in
+        [(EvictionKind::Off, 0usize), (EvictionKind::Lru, 32)]
+    {
+        for pipeline in [false, true] {
+            let label = format!(
+                "eviction={} pool={kv_pool_blocks} pipeline={pipeline}",
+                eviction.label()
+            );
+            let cfg = EngineConfig {
+                model: "mixtral".into(),
+                max_batch: 4,
+                kv_pool_blocks,
+                eviction,
+                max_preemptions_per_req: 64,
+                pipeline,
+                ..EngineConfig::default()
+            };
+            let policy = PolicyKind::Static(3);
+
+            let mut legacy_engine = engine(&cfg, &policy);
+            let mut legacy_stream = RequestStream::new(workload(), 0xCA5CADE, 200);
+            let legacy = legacy_run_batched(
+                &mut legacy_engine,
+                &mut legacy_stream,
+                budget.max_tokens,
+                budget.max_requests,
+            );
+
+            let mut new_engine = engine(&cfg, &policy);
+            let stream = RequestStream::new(workload(), 0xCA5CADE, 200);
+            let mut sched = Scheduler::new(stream, budget);
+            let fresh = sched.run_batched(&mut new_engine);
+
+            match (legacy, fresh) {
+                (Ok(a), Ok(b)) => assert_runs_identical(&a, &b, &label),
+                (Err(a), Err(b)) => {
+                    assert_eq!(a.to_string(), b.to_string(), "{label}: error divergence")
+                }
+                (a, b) => panic!(
+                    "{label}: outcome divergence (legacy ok={}, refactor ok={})",
+                    a.is_ok(),
+                    b.is_ok()
+                ),
+            }
+        }
+    }
+}
+
+/// Satellite: the PR-1 token-budget clamp holds exactly through the
+/// admission layer (never overshoots, and matches the legacy totals).
+#[test]
+fn budget_clamp_holds_through_admission_layer() {
+    for budget_tokens in [130usize, 250, 777] {
+        let cfg = EngineConfig { model: "mixtral".into(), max_batch: 4, ..Default::default() };
+        let policy = PolicyKind::Static(2);
+
+        let mut new_engine = engine(&cfg, &policy);
+        let stream = RequestStream::new(workload(), 5, 100);
+        let mut sched = Scheduler::new(
+            stream,
+            Budget { max_tokens: budget_tokens, max_requests: 10_000 },
+        );
+        let m = sched.run_batched(&mut new_engine).unwrap();
+        assert!(
+            m.run.total_tokens() <= budget_tokens,
+            "budget {budget_tokens} overshot: {}",
+            m.run.total_tokens()
+        );
+        assert!(m.run.total_tokens() > 0);
+
+        let mut legacy_engine = engine(&cfg, &policy);
+        let mut legacy_stream = RequestStream::new(workload(), 5, 100);
+        let legacy = legacy_run_batched(
+            &mut legacy_engine,
+            &mut legacy_stream,
+            budget_tokens,
+            10_000,
+        )
+        .unwrap();
+        assert_eq!(
+            m.run.total_tokens(),
+            legacy.run.total_tokens(),
+            "budget {budget_tokens}: clamp semantics drifted from the legacy scheduler"
+        );
+    }
+}
+
+fn open_loop_run(kind: ArrivalKind, cfg: &EngineConfig, tokens: usize) -> BatchRunMetrics {
+    let policy = PolicyKind::Static(3);
+    let mut eng = engine(cfg, &policy);
+    let stream = RequestStream::new(workload(), cfg.seed, cfg.max_new_tokens);
+    let arrivals = ArrivalProcess::new(kind, stream, cfg.seed).unwrap();
+    let mut sched = Scheduler::with_arrivals(
+        arrivals,
+        Budget { max_tokens: tokens, max_requests: 10_000 },
+    );
+    sched.run_batched(&mut eng).unwrap()
+}
+
+#[test]
+fn open_loop_latency_stamps_are_ordered_and_deterministic() {
+    let cfg = EngineConfig {
+        model: "mixtral".into(),
+        max_batch: 4,
+        max_new_tokens: 120,
+        ..Default::default()
+    };
+    let kind = ArrivalKind::Poisson { rate: 2.0 };
+    let m = open_loop_run(kind.clone(), &cfg, 600);
+    assert!(!m.run.requests.is_empty());
+    for r in &m.run.requests {
+        assert!(r.arrival_s >= 0.0, "request {}: negative arrival", r.id);
+        assert!(
+            r.admitted_s >= r.arrival_s,
+            "request {}: admitted before arrival",
+            r.id
+        );
+        assert!(
+            r.first_token_s >= r.admitted_s,
+            "request {}: first token before admission",
+            r.id
+        );
+        assert!(r.finish_s >= r.first_token_s, "request {}: finished before TTFT", r.id);
+        assert!(r.queue_wait_s >= r.admitted_s - r.arrival_s - 1e-12);
+        assert!(r.ttft_s() >= 0.0 && r.e2e_s() >= r.ttft_s());
+    }
+    assert!(m.clock_s > 0.0);
+    // The percentile views are finite and ordered.
+    assert!(m.run.ttft_percentile(0.5) <= m.run.ttft_percentile(0.95));
+    assert!(m.run.e2e_percentile(0.5) <= m.run.e2e_percentile(0.95));
+
+    // Bit-reproducible: the virtual clock and streams are deterministic.
+    let m2 = open_loop_run(kind, &cfg, 600);
+    assert_runs_identical(&m, &m2, "open-loop determinism");
+    assert_eq!(m.clock_s.to_bits(), m2.clock_s.to_bits(), "virtual clock drifted");
+    for (a, b) in m.run.requests.iter().zip(&m2.run.requests) {
+        assert_eq!(a.ttft_s().to_bits(), b.ttft_s().to_bits());
+        assert_eq!(a.queue_wait_s.to_bits(), b.queue_wait_s.to_bits());
+    }
+}
+
+#[test]
+fn trace_replay_idles_between_spaced_arrivals() {
+    // Three arrivals 50 virtual seconds apart: each request finishes long
+    // before the next arrives, so the engine must idle — the state the
+    // closed loop could never express.
+    let path = std::env::temp_dir().join("cascade_arrivals_idle_trace.jsonl");
+    let text = "{\"t\": 0.5, \"task\": \"code\", \"max_new\": 40}\n\
+                {\"t\": 50.5, \"task\": \"math\", \"max_new\": 40}\n\
+                {\"t\": 100.5, \"task\": \"code\", \"max_new\": 40}\n";
+    std::fs::write(&path, text).unwrap();
+    let cfg = EngineConfig {
+        model: "mixtral".into(),
+        max_batch: 4,
+        max_new_tokens: 40,
+        ..Default::default()
+    };
+    let kind = ArrivalKind::Trace { path: path.to_string_lossy().into_owned() };
+    let m = open_loop_run(kind, &cfg, 10_000);
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(m.run.requests.len(), 3, "every traced request must complete");
+    assert!(m.idle_s > 0.0, "spaced arrivals must leave the engine idle");
+    assert!(m.slot_idle_fraction() > 0.5, "idle gaps dominate this trace");
+    assert!(m.clock_s >= 100.5, "the clock must reach the last arrival");
+    // Requests arrive (and are admitted) in trace order, uncontended:
+    // queueing delay is (near) zero and TTFT ≈ prefill.
+    for r in &m.run.requests {
+        assert!(r.queue_wait_s < 1e-9, "request {} queued unexpectedly", r.id);
+    }
+}
+
+#[test]
+fn bursty_overload_builds_a_queue() {
+    let cfg = EngineConfig {
+        model: "mixtral".into(),
+        max_batch: 4,
+        max_new_tokens: 120,
+        ..Default::default()
+    };
+    // Mean 50 req/s into a ~4-slot engine: the wait queue must be occupied
+    // while the first batch decodes.
+    let m = open_loop_run(ArrivalKind::bursty(50.0), &cfg, 600);
+    assert!(m.run.requests.len() >= 4);
+    assert!(
+        m.mean_queue_depth() > 0.0,
+        "overload must leave arrived requests waiting (depth {})",
+        m.mean_queue_depth()
+    );
+    assert!(
+        m.iters.iter().any(|r| r.queue_depth > 0),
+        "no iteration ever observed a waiting request"
+    );
+}
+
+/// The contended bursty cell behind `figure arrivals` and
+/// BENCH_arrivals.json: every admission policy completes the run, and the
+/// pool pressure is real (victims actually get evicted, so admission
+/// *ordering* is actually exercised).
+#[test]
+fn contended_cells_evict_and_complete_under_every_policy() {
+    let reg = registry();
+    let ctx = ExpCtx::new(reg, BackendKind::Sim, 300);
+    for admission in ADMISSIONS {
+        let cell = contended_cell(admission, 2.0, ctx.seed);
+        let m = run_cell(&ctx, "mixtral", &PolicyKind::Static(3), &cell).unwrap();
+        assert!(
+            m.run.requests.len() >= 8,
+            "{}: too few completions ({})",
+            admission.label(),
+            m.run.requests.len()
+        );
+        assert!(
+            m.evictions() > 0,
+            "{}: the contended cell never evicted — pool sizing is too loose",
+            admission.label()
+        );
+        assert!(
+            m.readmissions() > 0 && m.readmissions() <= m.evictions(),
+            "{}: victims must come back (evict {} readmit {})",
+            admission.label(),
+            m.evictions(),
+            m.readmissions()
+        );
+        for r in &m.run.requests {
+            assert!(r.finish_s >= r.first_token_s && r.first_token_s >= r.arrival_s);
+        }
+    }
+}
