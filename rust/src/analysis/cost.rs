@@ -1,0 +1,241 @@
+//! Cost-conservation lint.
+//!
+//! The paper's contribution is a cost/benefit metric, so a cost component
+//! that silently leaks out of the accounting is the worst bug class this
+//! repo can ship. PRs 2–4 each added an `IterCost` field and each had to
+//! *remember* to thread it through `total()`, `verify_s()`, the README
+//! cost-law table, and telemetry/docs. This rule makes forgetting
+//! impossible: every field of [`crate::cost::IterCost`] must be
+//!
+//! 1. referenced in `total()` (directly or through a one-level
+//!    `self.helper()` — how `draft_s` flows via `exposed_draft_s()`),
+//! 2. referenced in `verify_s()` **or** carried in [`VERIFY_EXEMPT`] with
+//!    a written reason (and the exemption must not go stale),
+//! 3. named in the README cost-law table, and
+//! 4. visible to users: referenced by `metrics/mod.rs` (non-test region)
+//!    or described in `rust/docs/*.md`.
+//!
+//! Failures name the missing sink, so the fix is mechanical.
+
+use super::{
+    contains_word, field_decl_line, fn_body, non_test_region, self_method_calls,
+    struct_fields, RepoTree, Violation,
+};
+
+pub const COST_PATH: &str = "rust/src/cost/mod.rs";
+pub const METRICS_PATH: &str = "rust/src/metrics/mod.rs";
+pub const README_PATH: &str = "README.md";
+
+/// Fields legitimately absent from `verify_s()`, each with the reason the
+/// exemption is sound. A field that later *does* appear in `verify_s()`
+/// must drop its entry here (the stale-exemption check below).
+pub const VERIFY_EXEMPT: &[(&str, &str)] = &[
+    ("draft_s", "drafting is not verify work; it is charged via exposed_draft_s() in total()"),
+    ("draft_hidden_s", "pipeline-overlap bookkeeping inside exposed_draft_s(), not verify"),
+    ("reject_s", "rejection sampling runs after the verify step returns"),
+    ("reprefill_s", "re-prefill of evicted context happens outside the fused verify"),
+];
+
+pub fn check(tree: &RepoTree, out: &mut Vec<Violation>) {
+    let Some(cost_file) = tree.get(COST_PATH) else {
+        out.push(file_level(COST_PATH, "file not found in repo snapshot"));
+        return;
+    };
+    let fields = struct_fields(&cost_file.text, "IterCost");
+    if fields.is_empty() {
+        out.push(file_level(COST_PATH, "could not parse the IterCost struct"));
+        return;
+    }
+    let total = inlined_body(&cost_file.text, "total");
+    let verify = inlined_body(&cost_file.text, "verify_s");
+    let readme = tree.get(README_PATH).map(|f| f.text.as_str()).unwrap_or("");
+    let metrics = tree.get(METRICS_PATH).map(|f| non_test_region(&f.text)).unwrap_or("");
+    let docs_text: String = tree
+        .doc_pages()
+        .map(|f| f.text.as_str())
+        .collect::<Vec<_>>()
+        .join("\n");
+
+    for f in &fields {
+        let line = field_decl_line(&cost_file.text, f);
+        let mut missing: Vec<String> = Vec::new();
+        if !contains_word(&total, f) {
+            missing.push(
+                "total() — every cost component must reach the iteration total".to_string(),
+            );
+        }
+        let in_verify = contains_word(&verify, f);
+        let exempt = VERIFY_EXEMPT.iter().any(|(n, _)| *n == f.as_str());
+        if !in_verify && !exempt {
+            missing.push(
+                "verify_s() — add the term, or an analysis::cost::VERIFY_EXEMPT entry \
+                 with a written reason"
+                    .to_string(),
+            );
+        }
+        if in_verify && exempt {
+            missing.push(format!(
+                "stale exemption — `{f}` appears in verify_s(); drop its VERIFY_EXEMPT \
+                 entry"
+            ));
+        }
+        if !contains_word(readme, f) {
+            missing.push("README.md cost-law table — name the field there".to_string());
+        }
+        if !contains_word(metrics, f) && !contains_word(&docs_text, f) {
+            missing.push(
+                "telemetry/docs — reference it in metrics/mod.rs or describe it in \
+                 rust/docs/*.md"
+                    .to_string(),
+            );
+        }
+        for sink in missing {
+            out.push(Violation {
+                rule: "cost-conservation",
+                path: COST_PATH.to_string(),
+                line,
+                msg: format!("IterCost field `{f}` missing sink: {sink}"),
+            });
+        }
+    }
+}
+
+/// Body of `fn name` with every directly-called `self.helper()` body
+/// appended — one level of inlining, enough to see `draft_s` reach
+/// `total()` through `exposed_draft_s()`.
+fn inlined_body(text: &str, name: &str) -> String {
+    let mut body = fn_body(text, name).unwrap_or("").to_string();
+    let calls = self_method_calls(&body);
+    for callee in calls {
+        if let Some(b) = fn_body(text, &callee) {
+            body.push('\n');
+            body.push_str(b);
+        }
+    }
+    body
+}
+
+fn file_level(path: &str, msg: &str) -> Violation {
+    Violation {
+        rule: "cost-conservation",
+        path: path.to_string(),
+        line: 0,
+        msg: msg.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::SourceFile;
+
+    /// Fixture tree: a two-field IterCost (one verify term, one exempt
+    /// field) plus every sink file.
+    fn tree(total_terms: &str, verify_terms: &str, readme: &str, metrics: &str) -> RepoTree {
+        let cost = format!(
+            "pub struct IterCost {{\n    pub a_s: f64,\n    pub reprefill_s: f64,\n}}\n\n\
+             impl IterCost {{\n    pub fn total(&self) -> f64 {{\n        {total_terms}\n    \
+             }}\n\n    pub fn verify_s(&self) -> f64 {{\n        {verify_terms}\n    }}\n}}\n"
+        );
+        RepoTree {
+            files: vec![
+                SourceFile { path: COST_PATH.into(), text: cost },
+                SourceFile { path: README_PATH.into(), text: readme.to_string() },
+                SourceFile { path: METRICS_PATH.into(), text: metrics.to_string() },
+            ],
+        }
+    }
+
+    fn run(tree: &RepoTree) -> Vec<Violation> {
+        let mut v = Vec::new();
+        check(tree, &mut v);
+        v
+    }
+
+    #[test]
+    fn conserved_fields_pass() {
+        let t = tree(
+            "self.a_s + self.reprefill_s",
+            "self.a_s",
+            "| a_s | reprefill_s |",
+            "fn x(c: &IterCost) -> f64 { c.a_s + c.reprefill_s }",
+        );
+        let v = run(&t);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn field_absent_from_total_names_the_sink() {
+        let t = tree(
+            "self.a_s",
+            "self.a_s",
+            "| a_s | reprefill_s |",
+            "fn x(c: &IterCost) -> f64 { c.a_s + c.reprefill_s }",
+        );
+        let v = run(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "cost-conservation");
+        assert!(v[0].msg.contains("reprefill_s") && v[0].msg.contains("total()"), "{}", v[0]);
+        assert_eq!(v[0].line, 3); // the field's declaration line
+    }
+
+    #[test]
+    fn non_exempt_field_must_reach_verify() {
+        // a_s is not in VERIFY_EXEMPT, so dropping it from verify_s fails.
+        let t = tree(
+            "self.a_s + self.reprefill_s",
+            "self.reprefill_s + 0.0",
+            "| a_s | reprefill_s |",
+            "fn x(c: &IterCost) -> f64 { c.a_s + c.reprefill_s }",
+        );
+        let v = run(&t);
+        let msgs: Vec<String> = v.iter().map(|v| v.msg.clone()).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("`a_s`") && m.contains("verify_s()")),
+            "{msgs:?}"
+        );
+        // ... and reprefill_s showing up in verify_s makes its exemption
+        // stale.
+        assert!(
+            msgs.iter().any(|m| m.contains("`reprefill_s`") && m.contains("stale")),
+            "{msgs:?}"
+        );
+    }
+
+    #[test]
+    fn readme_and_docs_sinks_are_checked() {
+        let t = tree(
+            "self.a_s + self.reprefill_s",
+            "self.a_s",
+            "cost table without the field names",
+            "fn x() {}",
+        );
+        let v = run(&t);
+        let msgs: Vec<String> = v.iter().map(|v| v.msg.clone()).collect();
+        assert!(msgs.iter().any(|m| m.contains("README")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("telemetry/docs")), "{msgs:?}");
+    }
+
+    #[test]
+    fn helper_indirection_counts_for_total() {
+        // a_s flows into total() only through a helper — one-level
+        // inlining must see it.
+        let cost = "pub struct IterCost {\n    pub a_s: f64,\n    pub reprefill_s: f64,\n}\n\n\
+                    impl IterCost {\n    pub fn total(&self) -> f64 {\n        \
+                    self.helper() + self.reprefill_s\n    }\n\n    pub fn helper(&self) -> \
+                    f64 {\n        self.a_s\n    }\n\n    pub fn verify_s(&self) -> f64 {\n        \
+                    self.a_s\n    }\n}\n";
+        let t = RepoTree {
+            files: vec![
+                SourceFile { path: COST_PATH.into(), text: cost.to_string() },
+                SourceFile { path: README_PATH.into(), text: "a_s reprefill_s".into() },
+                SourceFile {
+                    path: METRICS_PATH.into(),
+                    text: "fn x(c: &IterCost) -> f64 { c.a_s + c.reprefill_s }".into(),
+                },
+            ],
+        };
+        let v = run(&t);
+        assert!(v.is_empty(), "{v:?}");
+    }
+}

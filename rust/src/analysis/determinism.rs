@@ -1,0 +1,157 @@
+//! Determinism lints.
+//!
+//! Every losslessness guarantee in `rust/tests/` — bit-exact token
+//! streams across eviction, sharding, pipelining, and arrival replay —
+//! rests on the serving stack being a pure function of (config, seed).
+//! Three source-level invariants keep it that way, each enforced as a
+//! line rule over `rust/src/**/*.rs`:
+//!
+//! * **hash-collection** — no hash-map/set types: their iteration order
+//!   is randomized per process, so any aggregate built by iterating one
+//!   can differ between identical-seed runs. Use BTree types (or sort
+//!   before iterating).
+//! * **wall-clock** — no host-clock reads: the virtual clock (simulated
+//!   seconds) must never observe host time. Host-wall *telemetry* (e.g.
+//!   drafter wall-time measurement) is legitimate and carries a justified
+//!   per-line allow.
+//! * **foreign-rng** — no RNG but the crate PRNG ([`crate::rng`]): its
+//!   streams are bit-stable across platforms and versions; any other
+//!   source of randomness is not.
+
+use super::{allowed, code_portion, contains_word, RepoTree, SourceFile, Violation};
+
+struct LineRule {
+    rule: &'static str,
+    /// Banned tokens, assembled from pieces so this file never flags
+    /// itself.
+    needles: &'static [&'static str],
+    why: &'static str,
+}
+
+const LINE_RULES: &[LineRule] = &[
+    LineRule {
+        rule: "hash-collection",
+        needles: &[concat!("Hash", "Map"), concat!("Hash", "Set")],
+        why: "hash iteration order is nondeterministic; use BTreeMap/BTreeSet or sort \
+              before iterating",
+    },
+    LineRule {
+        rule: "wall-clock",
+        needles: &[concat!("Instant", "::now"), concat!("System", "Time")],
+        why: "the virtual clock must never read host time; wall-telemetry sites need a \
+              justified per-line allow",
+    },
+    LineRule {
+        rule: "foreign-rng",
+        needles: &[
+            concat!("rand", "::"),
+            concat!("thread", "_rng"),
+            concat!("Std", "Rng"),
+            concat!("Small", "Rng"),
+            concat!("get", "random"),
+            concat!("Random", "State"),
+        ],
+        why: "all randomness must flow through the crate PRNG (rng.rs) so streams stay \
+              bit-reproducible",
+    },
+];
+
+/// Sweep every crate source.
+pub fn check(tree: &RepoTree, out: &mut Vec<Violation>) {
+    for file in tree.rust_sources() {
+        check_file(file, out);
+    }
+}
+
+/// Line sweep over one file (the fixture self-tests drive this directly).
+pub fn check_file(file: &SourceFile, out: &mut Vec<Violation>) {
+    let lines: Vec<&str> = file.text.lines().collect();
+    for (i, raw) in lines.iter().enumerate() {
+        let code = code_portion(raw);
+        for rule in LINE_RULES {
+            for needle in rule.needles {
+                if contains_word(code, needle) && !allowed(&lines, i, rule.rule) {
+                    out.push(Violation {
+                        rule: rule.rule,
+                        path: file.path.clone(),
+                        line: i + 1,
+                        msg: format!("`{needle}`: {}", rule.why),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::ALLOW_TOKEN;
+
+    fn sweep(text: String) -> Vec<Violation> {
+        let file = SourceFile { path: "rust/src/fixture.rs".into(), text };
+        let mut out = Vec::new();
+        check_file(&file, &mut out);
+        out
+    }
+
+    #[test]
+    fn clean_source_passes() {
+        let v = sweep(
+            "use std::collections::BTreeMap;\nfn f() { let m: BTreeMap<u32, u32> = \
+             BTreeMap::new(); }\n"
+                .to_string(),
+        );
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn hash_collection_flagged_with_file_and_line() {
+        let ty = concat!("Hash", "Map");
+        let v = sweep(format!("fn f() {{\n    let m = std::collections::{ty}::new();\n}}\n"));
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "hash-collection");
+        assert_eq!((v[0].path.as_str(), v[0].line), ("rust/src/fixture.rs", 2));
+    }
+
+    #[test]
+    fn wall_clock_flagged_unless_allowed() {
+        let call = concat!("Instant", "::now");
+        let v = sweep(format!("fn f() {{ let t = std::time::{call}(); }}\n"));
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "wall-clock");
+
+        let v = sweep(format!(
+            "fn f() {{\n    // {ALLOW_TOKEN}(wall-clock): host telemetry, never the \
+             virtual clock\n    let t = std::time::{call}();\n}}\n"
+        ));
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn allow_for_the_wrong_rule_does_not_suppress() {
+        let call = concat!("Instant", "::now");
+        let v = sweep(format!(
+            "fn f() {{ let t = std::time::{call}(); // {ALLOW_TOKEN}(foreign-rng): \
+             wrong rule named here }}\n"
+        ));
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "wall-clock");
+    }
+
+    #[test]
+    fn foreign_rng_flagged() {
+        let path = concat!("rand", "::");
+        let v = sweep(format!("fn f() {{ let x = {path}random::<u64>(); }}\n"));
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "foreign-rng");
+    }
+
+    #[test]
+    fn banned_token_in_comment_is_ignored() {
+        let ty = concat!("Hash", "Map");
+        let v = sweep(format!("fn f() {{}} // a {ty} would be bad here\n"));
+        assert!(v.is_empty(), "{v:?}");
+    }
+}

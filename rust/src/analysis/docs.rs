@@ -1,0 +1,155 @@
+//! Doc-integrity lint: relative markdown links resolve.
+//!
+//! The README and `rust/docs/*.md` cross-link heavily (every cost-law row
+//! points at the doc that derives it), and a renamed file silently strands
+//! readers. This rule extracts every inline `](target)` link from
+//! `README.md` and `rust/docs/*.md`, skips absolute/external targets
+//! (`http…`, `#…`, `mailto:`), resolves the rest against the linking
+//! file's directory, and requires the target to exist in the repo
+//! snapshot. A `..` escaping the repository root is its own finding.
+
+use super::{RepoTree, SourceFile, Violation};
+
+pub fn check(tree: &RepoTree, out: &mut Vec<Violation>) {
+    for file in &tree.files {
+        let in_scope = file.path == "README.md"
+            || (file.path.starts_with("rust/docs/") && file.path.ends_with(".md"));
+        if in_scope {
+            check_file(tree, file, out);
+        }
+    }
+}
+
+pub fn check_file(tree: &RepoTree, file: &SourceFile, out: &mut Vec<Violation>) {
+    let dir = match file.path.rfind('/') {
+        Some(i) => &file.path[..i],
+        None => "",
+    };
+    for (i, line) in file.text.lines().enumerate() {
+        for target in link_targets(line) {
+            if target.starts_with("http://")
+                || target.starts_with("https://")
+                || target.starts_with('#')
+                || target.starts_with("mailto:")
+            {
+                continue;
+            }
+            let path_part = target.split('#').next().unwrap_or("");
+            if path_part.is_empty() {
+                continue;
+            }
+            match resolve(dir, path_part) {
+                Some(resolved) if tree.get(&resolved).is_some() => {}
+                Some(resolved) => out.push(Violation {
+                    rule: "doc-links",
+                    path: file.path.clone(),
+                    line: i + 1,
+                    msg: format!("broken relative link `{target}` (resolves to `{resolved}`)"),
+                }),
+                None => out.push(Violation {
+                    rule: "doc-links",
+                    path: file.path.clone(),
+                    line: i + 1,
+                    msg: format!("link `{target}` escapes the repository root"),
+                }),
+            }
+        }
+    }
+}
+
+/// Every inline-link target (`](target)`) on one line.
+fn link_targets(line: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut rest = line;
+    while let Some(at) = rest.find("](") {
+        let tail = &rest[at + 2..];
+        match tail.find(')') {
+            Some(end) => {
+                out.push(&tail[..end]);
+                rest = &tail[end + 1..];
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+/// Normalize `target` relative to `dir` (forward-slash paths); `None`
+/// when a `..` segment climbs past the repository root.
+fn resolve(dir: &str, target: &str) -> Option<String> {
+    let mut parts: Vec<&str> =
+        if dir.is_empty() { Vec::new() } else { dir.split('/').collect() };
+    for seg in target.split('/') {
+        match seg {
+            "" | "." => {}
+            ".." => {
+                parts.pop()?;
+            }
+            s => parts.push(s),
+        }
+    }
+    Some(parts.join("/"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree() -> RepoTree {
+        RepoTree {
+            files: vec![
+                SourceFile {
+                    path: "README.md".into(),
+                    text: "see [docs](rust/docs/a.md) and [site](https://example.com)\n"
+                        .into(),
+                },
+                SourceFile {
+                    path: "rust/docs/a.md".into(),
+                    text: "back to the [README](../../README.md)\n".into(),
+                },
+            ],
+        }
+    }
+
+    fn run(t: &RepoTree) -> Vec<Violation> {
+        let mut v = Vec::new();
+        check(t, &mut v);
+        v
+    }
+
+    #[test]
+    fn resolving_links_pass() {
+        let t = tree();
+        let v = run(&t);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn broken_link_names_file_line_and_target() {
+        let mut t = tree();
+        t.files[0].text.push_str("and a [gone](rust/docs/missing.md) link\n");
+        let v = run(&t);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "doc-links");
+        assert_eq!((v[0].path.as_str(), v[0].line), ("README.md", 2));
+        assert!(v[0].msg.contains("rust/docs/missing.md"), "{}", v[0]);
+    }
+
+    #[test]
+    fn dotdot_resolution_and_root_escape() {
+        let mut t = tree();
+        t.files[1].text.push_str("escape [up](../../../outside.md)\n");
+        let v = run(&t);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("escapes"), "{}", v[0]);
+        assert_eq!(v[0].path, "rust/docs/a.md");
+    }
+
+    #[test]
+    fn fragments_and_anchors_are_tolerated() {
+        let mut t = tree();
+        t.files[0].text.push_str("[sec](rust/docs/a.md#anchor) [self](#local)\n");
+        let v = run(&t);
+        assert!(v.is_empty(), "{v:?}");
+    }
+}

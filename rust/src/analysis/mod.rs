@@ -1,0 +1,524 @@
+//! Repo-native lint suite: tidy-style static analysis over the source tree.
+//!
+//! Modeled on rust-lang's `src/tools/tidy`: zero-dependency, line/AST-lite
+//! passes wired into `cargo test` through `rust/tests/repo_lints.rs`, so
+//! the invariants every headline number rests on are machine-checked on
+//! every run:
+//!
+//! * [`determinism`] — no hash-order iteration, no host-clock reads outside
+//!   justified wall-telemetry sites (the virtual clock must never read host
+//!   time), and no RNG but the crate PRNG ([`crate::rng`]);
+//! * [`cost`] — every [`crate::cost::IterCost`] field is conserved through
+//!   `total()`, `verify_s()` (or a written exemption), the README cost-law
+//!   table, and a telemetry/docs sink;
+//! * [`telemetry`] — every metrics field is serialized by at least one
+//!   CLI/bench/figure emitter, and every `EngineConfig` field is reachable
+//!   from a `main.rs` flag and mentioned in `rust/docs/`;
+//! * [`docs`] — relative markdown links in README.md and rust/docs/*.md
+//!   resolve to real files.
+//!
+//! Violations are suppressible only per line, with a named rule and a
+//! written justification (see rust/docs/lints.md for the directive
+//! grammar). A blanket, unjustified, or unknown-rule directive is itself a
+//! violation (`lint-allow`).
+
+pub mod cost;
+pub mod determinism;
+pub mod docs;
+pub mod telemetry;
+
+use anyhow::{Context, Result};
+use std::fmt;
+use std::path::Path;
+
+/// Every rule the suite knows. A suppression directive naming anything
+/// else is rejected by the `lint-allow` meta-rule.
+pub const KNOWN_RULES: &[&str] = &[
+    "hash-collection",
+    "wall-clock",
+    "foreign-rng",
+    "cost-conservation",
+    "telemetry-dead-field",
+    "config-coverage",
+    "doc-links",
+    "lint-allow",
+];
+
+/// The suppression token, assembled from pieces so the code that validates
+/// directives never mistakes its own source for one.
+pub const ALLOW_TOKEN: &str = concat!("lint", ":", "allow");
+
+/// One file of the repo snapshot the rules consult.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes (e.g. `rust/src/kv/mod.rs`).
+    pub path: String,
+    pub text: String,
+}
+
+/// Snapshot of every file the rules consult: crate sources, root markdown,
+/// and `rust/docs/*.md`. Loaded from disk by [`load_repo`] for the real
+/// run; built inline by the fixture self-tests.
+#[derive(Debug, Clone, Default)]
+pub struct RepoTree {
+    pub files: Vec<SourceFile>,
+}
+
+impl RepoTree {
+    pub fn get(&self, path: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.path == path)
+    }
+
+    /// Crate sources the determinism rules sweep (`rust/src/**/*.rs`).
+    pub fn rust_sources(&self) -> impl Iterator<Item = &SourceFile> {
+        self.files
+            .iter()
+            .filter(|f| f.path.starts_with("rust/src/") && f.path.ends_with(".rs"))
+    }
+
+    /// The crate's documentation pages (`rust/docs/*.md`).
+    pub fn doc_pages(&self) -> impl Iterator<Item = &SourceFile> {
+        self.files
+            .iter()
+            .filter(|f| f.path.starts_with("rust/docs/") && f.path.ends_with(".md"))
+    }
+}
+
+/// One finding, carrying everything the failure report needs: the rule,
+/// the file, the line (1-based; 0 for file-level findings such as a
+/// missing sink), and a message naming what is broken and how to fix it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line == 0 {
+            write!(f, "[{}] {}: {}", self.rule, self.path, self.msg)
+        } else {
+            write!(f, "[{}] {}:{}: {}", self.rule, self.path, self.line, self.msg)
+        }
+    }
+}
+
+/// Load the repo snapshot from disk. `root` is the repository root (the
+/// parent of `rust/`): root-level `*.md`, `rust/docs/*.md`, and
+/// `rust/src/**/*.rs` are read; everything else (vendor trees, artifacts,
+/// target/) stays out of scope.
+pub fn load_repo(root: &Path) -> Result<RepoTree> {
+    let mut files = Vec::new();
+    push_dir(root, &root.join("rust/src"), &mut files, "rs")?;
+    push_dir(root, &root.join("rust/docs"), &mut files, "md")?;
+    for entry in std::fs::read_dir(root).with_context(|| format!("reading {root:?}"))? {
+        let path = entry?.path();
+        if path.is_file() && path.extension().and_then(|e| e.to_str()) == Some("md") {
+            push_file(root, &path, &mut files)?;
+        }
+    }
+    files.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(RepoTree { files })
+}
+
+fn push_dir(root: &Path, dir: &Path, out: &mut Vec<SourceFile>, ext: &str) -> Result<()> {
+    for entry in std::fs::read_dir(dir).with_context(|| format!("reading {dir:?}"))? {
+        let path = entry?.path();
+        if path.is_dir() {
+            push_dir(root, &path, out, ext)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some(ext) {
+            push_file(root, &path, out)?;
+        }
+    }
+    Ok(())
+}
+
+fn push_file(root: &Path, path: &Path, out: &mut Vec<SourceFile>) -> Result<()> {
+    let rel = path.strip_prefix(root).unwrap_or(path).to_string_lossy().replace('\\', "/");
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    out.push(SourceFile { path: rel, text });
+    Ok(())
+}
+
+/// Run every rule over the tree; findings come back sorted by
+/// (path, line, rule) so the report is stable.
+pub fn run_all(tree: &RepoTree) -> Vec<Violation> {
+    let mut v = Vec::new();
+    determinism::check(tree, &mut v);
+    check_allow_directives(tree, &mut v);
+    cost::check(tree, &mut v);
+    telemetry::check(tree, &mut v);
+    docs::check(tree, &mut v);
+    v.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    v
+}
+
+/// Render findings for the failing test's panic message.
+pub fn report(violations: &[Violation]) -> String {
+    let mut s = String::new();
+    for v in violations {
+        s.push_str(&v.to_string());
+        s.push('\n');
+    }
+    s.push_str(&format!("{} repo-lint violation(s)", violations.len()));
+    s
+}
+
+// ---- Suppression directives ---------------------------------------------
+
+/// Parse a suppression directive out of one raw source line.
+///
+/// * `None` — the line carries no directive;
+/// * `Some(Ok((rule, justification)))` — a well-formed directive;
+/// * `Some(Err(msg))` — a directive that must be rejected: blanket (no
+///   rule named), unknown rule, or missing/empty justification.
+pub fn parse_allow(line: &str) -> Option<std::result::Result<(&str, &str), String>> {
+    let at = line.find(ALLOW_TOKEN)?;
+    let rest = &line[at + ALLOW_TOKEN.len()..];
+    let Some(rest) = rest.strip_prefix('(') else {
+        return Some(Err(
+            "blanket allow: a rule name in parentheses is required".to_string()
+        ));
+    };
+    let Some(close) = rest.find(')') else {
+        return Some(Err("unterminated rule name in allow directive".to_string()));
+    };
+    let rule = rest[..close].trim();
+    if rule.is_empty() {
+        return Some(Err("blanket allow: empty rule name".to_string()));
+    }
+    if !KNOWN_RULES.contains(&rule) {
+        return Some(Err(format!("allow names unknown rule {rule:?}")));
+    }
+    let Some(why) = rest[close + 1..].trim_start().strip_prefix(':') else {
+        return Some(Err(format!(
+            "unjustified allow for {rule:?}: a `: <reason>` clause is required"
+        )));
+    };
+    let why = why.trim();
+    if why.len() < 8 {
+        return Some(Err(format!(
+            "allow for {rule:?} needs a written justification, not {why:?}"
+        )));
+    }
+    Some(Ok((rule, why)))
+}
+
+/// Is a violation of `rule` at 0-based line index `idx` suppressed? A
+/// well-formed directive counts on the offending line itself or on the
+/// line directly above it — never file- or block-wide.
+pub fn allowed(lines: &[&str], idx: usize, rule: &str) -> bool {
+    let hit = |i: usize| matches!(parse_allow(lines[i]), Some(Ok((r, _))) if r == rule);
+    hit(idx) || (idx > 0 && hit(idx - 1))
+}
+
+/// The meta-rule: every suppression directive in crate sources must be
+/// well-formed. Blanket or unjustified allows are violations themselves,
+/// so suppression can never silently widen.
+fn check_allow_directives(tree: &RepoTree, out: &mut Vec<Violation>) {
+    for file in tree.rust_sources() {
+        for (i, line) in file.text.lines().enumerate() {
+            if let Some(Err(msg)) = parse_allow(line) {
+                out.push(Violation {
+                    rule: "lint-allow",
+                    path: file.path.clone(),
+                    line: i + 1,
+                    msg,
+                });
+            }
+        }
+    }
+}
+
+// ---- AST-lite parsing helpers -------------------------------------------
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// The code portion of one source line: everything before a `//` comment
+/// start, with enough string/char-literal awareness that a `"//"` inside a
+/// string does not truncate the line. AST-lite by design; block comments
+/// and raw strings are not handled (the crate style avoids both on lines
+/// the rules care about).
+pub fn code_portion(line: &str) -> &str {
+    let b = line.as_bytes();
+    let mut i = 0;
+    let mut in_str = false;
+    while i < b.len() {
+        match b[i] {
+            b'\\' if in_str => i += 1,
+            b'"' => in_str = !in_str,
+            b'\'' if !in_str => {
+                // Char literal ('x', '\n') vs lifetime ('a in &'a str): a
+                // closing quote within the next 4 bytes means char literal.
+                if let Some(rel) = b[i + 1..].iter().take(4).position(|&c| c == b'\'') {
+                    i += rel + 1;
+                }
+            }
+            b'/' if !in_str && i + 1 < b.len() && b[i + 1] == b'/' => {
+                return &line[..i];
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    line
+}
+
+/// Substring search requiring identifier boundaries wherever the needle
+/// itself starts/ends with an identifier character (so `Instant` never
+/// matches inside `MyInstant`, while a needle ending in `::` matches the
+/// start of any path).
+pub fn find_word(hay: &str, needle: &str) -> Option<usize> {
+    let h = hay.as_bytes();
+    let n = needle.as_bytes();
+    if n.is_empty() || h.len() < n.len() {
+        return None;
+    }
+    let need_pre = is_ident(n[0]);
+    let need_post = is_ident(n[n.len() - 1]);
+    let mut from = 0;
+    while let Some(rel) = hay[from..].find(needle) {
+        let at = from + rel;
+        let end = at + n.len();
+        let pre_ok = !need_pre || at == 0 || !is_ident(h[at - 1]);
+        let post_ok = !need_post || end >= h.len() || !is_ident(h[end]);
+        if pre_ok && post_ok {
+            return Some(at);
+        }
+        from = at + 1;
+    }
+    None
+}
+
+pub fn contains_word(hay: &str, needle: &str) -> bool {
+    find_word(hay, needle).is_some()
+}
+
+/// The `{ ... }` body (exclusive of the outer braces) opening at byte
+/// `open` (which must index a `{`), found by brace counting. `None` when
+/// unbalanced.
+fn brace_body(text: &str, open: usize) -> Option<&str> {
+    let b = text.as_bytes();
+    debug_assert_eq!(b.get(open), Some(&b'{'));
+    let mut depth = 0usize;
+    for (i, &c) in b.iter().enumerate().skip(open) {
+        match c {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&text[open + 1..i]);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Body of the first `fn name(...)` definition in `text` (AST-lite: the
+/// declaration must start its line, the crate style).
+pub fn fn_body<'a>(text: &'a str, name: &str) -> Option<&'a str> {
+    let pat = format!("fn {name}(");
+    let mut offset = 0usize;
+    for line in text.lines() {
+        let t = line.trim_start();
+        let is_decl = t.starts_with(&pat)
+            || (t.starts_with("pub ") && t[4..].trim_start().starts_with(&pat));
+        if is_decl {
+            let open = offset + text[offset..].find('{')?;
+            return brace_body(text, open);
+        }
+        offset += line.len() + 1;
+    }
+    None
+}
+
+/// `(name, body)` of every `pub fn` defined in `text` — duplicates (same
+/// method name on different impl blocks) are all returned.
+pub fn pub_fn_bodies(text: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let mut offset = 0usize;
+    for line in text.lines() {
+        let t = line.trim_start();
+        if let Some(rest) = t.strip_prefix("pub fn ") {
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                if let Some(open) = text[offset..].find('{').map(|i| offset + i) {
+                    if let Some(body) = brace_body(text, open) {
+                        out.push((name, body.to_string()));
+                    }
+                }
+            }
+        }
+        offset += line.len() + 1;
+    }
+    out
+}
+
+/// Field names of `pub struct <name> { ... }` in `text` (AST-lite: one
+/// `pub field: Type,` per line, the crate style).
+pub fn struct_fields(text: &str, name: &str) -> Vec<String> {
+    let mut offset = 0usize;
+    let mut decl_at = None;
+    for line in text.lines() {
+        let t = line.trim_start();
+        if (t.starts_with("pub struct ") || t.starts_with("struct "))
+            && contains_word(t, name)
+        {
+            decl_at = Some(offset);
+            break;
+        }
+        offset += line.len() + 1;
+    }
+    let Some(at) = decl_at else { return Vec::new() };
+    let Some(open) = text[at..].find('{').map(|i| at + i) else { return Vec::new() };
+    let Some(body) = brace_body(text, open) else { return Vec::new() };
+    let mut fields = Vec::new();
+    for line in body.lines() {
+        let t = line.trim_start();
+        if let Some(rest) = t.strip_prefix("pub ") {
+            if let Some(colon) = rest.find(':') {
+                let ident = rest[..colon].trim();
+                if !ident.is_empty() && ident.bytes().all(is_ident) {
+                    fields.push(ident.to_string());
+                }
+            }
+        }
+    }
+    fields
+}
+
+/// 1-based declaration line of `pub <field>: ...` in `text`, or 0 when
+/// not found (good enough for pointing a violation at its field).
+pub fn field_decl_line(text: &str, field: &str) -> usize {
+    for (i, line) in text.lines().enumerate() {
+        let t = line.trim_start();
+        if let Some(rest) = t.strip_prefix("pub ") {
+            if rest.starts_with(field) && rest[field.len()..].trim_start().starts_with(':') {
+                return i + 1;
+            }
+        }
+    }
+    0
+}
+
+/// Every `self.method()` call name in a function body (for one-level
+/// inlining of cost helpers).
+pub fn self_method_calls(body: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for chunk in body.split("self.").skip(1) {
+        let ident: String = chunk
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if !ident.is_empty() && chunk[ident.len()..].starts_with("()") && !out.contains(&ident)
+        {
+            out.push(ident);
+        }
+    }
+    out
+}
+
+/// Text before the first `#[cfg(test)]` marker — the part of a module that
+/// ships, which is what the telemetry/cost sinks must live in.
+pub fn non_test_region(text: &str) -> &str {
+    match text.find("#[cfg(test)]") {
+        Some(at) => &text[..at],
+        None => text,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn code_portion_strips_comments_not_strings() {
+        assert_eq!(code_portion("let x = 1; // trailing"), "let x = 1; ");
+        assert_eq!(code_portion("let s = \"a // b\";"), "let s = \"a // b\";");
+        assert_eq!(code_portion("// whole line"), "");
+        assert_eq!(code_portion("let c = '\"'; // after char"), "let c = '\"'; ");
+        assert_eq!(code_portion("fn f<'a>(x: &'a str) {} // c"), "fn f<'a>(x: &'a str) {} ");
+    }
+
+    #[test]
+    fn find_word_respects_ident_boundaries() {
+        assert!(contains_word("let m = Foo::new();", "Foo"));
+        assert!(!contains_word("let m = MyFoo::new();", "Foo"));
+        assert!(!contains_word("let m = Foos::new();", "Foo"));
+        // A needle ending in punctuation matches the start of any path.
+        assert!(contains_word("bar::baz()", "bar::"));
+        assert!(!contains_word("rebar::baz()", "bar::"));
+    }
+
+    #[test]
+    fn parse_allow_accepts_wellformed_rejects_malformed() {
+        let good = format!("let x = 1; // {ALLOW_TOKEN}(wall-clock): host telemetry only");
+        assert!(matches!(parse_allow(&good), Some(Ok(("wall-clock", _)))));
+        assert!(parse_allow("let x = 1; // plain comment").is_none());
+
+        let blanket = format!("// {ALLOW_TOKEN}: because");
+        assert!(matches!(parse_allow(&blanket), Some(Err(_))));
+        let unknown = format!("// {ALLOW_TOKEN}(no-such-rule): reasonable words");
+        assert!(matches!(parse_allow(&unknown), Some(Err(_))));
+        let unjustified = format!("// {ALLOW_TOKEN}(wall-clock)");
+        assert!(matches!(parse_allow(&unjustified), Some(Err(_))));
+        let short = format!("// {ALLOW_TOKEN}(wall-clock): ok");
+        assert!(matches!(parse_allow(&short), Some(Err(_))));
+    }
+
+    #[test]
+    fn allowed_covers_same_line_and_line_above() {
+        let above = format!("// {ALLOW_TOKEN}(foreign-rng): fixture needs it");
+        let lines = vec![above.as_str(), "offending line", "unrelated"];
+        assert!(allowed(&lines, 1, "foreign-rng"));
+        assert!(!allowed(&lines, 1, "wall-clock"));
+        assert!(!allowed(&lines, 2, "foreign-rng"));
+    }
+
+    #[test]
+    fn malformed_allow_is_flagged_by_meta_rule() {
+        let text = format!("fn f() {{}}\n// {ALLOW_TOKEN}: everything\n");
+        let tree = RepoTree {
+            files: vec![SourceFile { path: "rust/src/x.rs".into(), text }],
+        };
+        let mut v = Vec::new();
+        check_allow_directives(&tree, &mut v);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "lint-allow");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn struct_and_fn_parsers_read_crate_style() {
+        let src = "/// doc\npub struct Thing {\n    /// doc\n    pub a: f64,\n    pub b_x: usize,\n    private: u8,\n}\n\nimpl Thing {\n    pub fn total(&self) -> f64 {\n        self.a + self.helper()\n    }\n\n    pub fn helper(&self) -> f64 {\n        self.b_x as f64\n    }\n}\n";
+        assert_eq!(struct_fields(src, "Thing"), vec!["a".to_string(), "b_x".to_string()]);
+        let body = fn_body(src, "total").unwrap();
+        assert!(body.contains("self.a"));
+        assert_eq!(self_method_calls(body), vec!["helper".to_string()]);
+        let names: Vec<String> = pub_fn_bodies(src).into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["total".to_string(), "helper".to_string()]);
+        assert_eq!(field_decl_line(src, "b_x"), 5);
+    }
+
+    #[test]
+    fn violations_render_rule_file_line() {
+        let v = Violation {
+            rule: "wall-clock",
+            path: "rust/src/x.rs".into(),
+            line: 7,
+            msg: "nope".into(),
+        };
+        assert_eq!(v.to_string(), "[wall-clock] rust/src/x.rs:7: nope");
+    }
+}

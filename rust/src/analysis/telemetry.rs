@@ -1,0 +1,250 @@
+//! Telemetry- and config-completeness lints.
+//!
+//! **telemetry-dead-field** — every field of `BatchIterRecord`,
+//! `BatchRunMetrics`, and `RunMetrics` must be serialized by at least one
+//! emitter (the CLI in `main.rs`, the bench harness, or a figure runner in
+//! `experiments/`). A field is live when an emitter names it directly, or
+//! names a metrics method whose body reads it (the usual path: field →
+//! aggregator → table row / JSON key). Recording telemetry nobody can see
+//! is how instrumentation rots.
+//!
+//! **config-coverage** — every `EngineConfig` field must be reachable from
+//! a `main.rs` flag (named somewhere in its code) and mentioned in
+//! `rust/docs/*.md`, so no knob is ever CLI-invisible or undocumented.
+
+use super::{
+    code_portion, contains_word, field_decl_line, non_test_region, pub_fn_bodies,
+    struct_fields, RepoTree, Violation,
+};
+
+pub const METRICS_PATH: &str = "rust/src/metrics/mod.rs";
+pub const CONFIG_PATH: &str = "rust/src/config.rs";
+pub const MAIN_PATH: &str = "rust/src/main.rs";
+
+/// The metrics structs whose fields must all be emitted somewhere.
+const METRIC_STRUCTS: &[&str] = &["BatchIterRecord", "BatchRunMetrics", "RunMetrics"];
+
+pub fn check(tree: &RepoTree, out: &mut Vec<Violation>) {
+    check_metrics(tree, out);
+    check_config(tree, out);
+}
+
+/// Comment-stripped text of every emitter file.
+fn emitter_text(tree: &RepoTree) -> String {
+    let mut s = String::new();
+    for f in &tree.files {
+        let is_emitter = f.path == MAIN_PATH
+            || f.path == "rust/src/bench.rs"
+            || f.path.starts_with("rust/src/experiments/");
+        if is_emitter {
+            for line in f.text.lines() {
+                s.push_str(code_portion(line));
+                s.push('\n');
+            }
+        }
+    }
+    s
+}
+
+fn check_metrics(tree: &RepoTree, out: &mut Vec<Violation>) {
+    let Some(metrics) = tree.get(METRICS_PATH) else {
+        out.push(missing_file("telemetry-dead-field", METRICS_PATH));
+        return;
+    };
+    let emitters = emitter_text(tree);
+    let src = non_test_region(&metrics.text);
+    let methods = pub_fn_bodies(src);
+    for st in METRIC_STRUCTS {
+        let fields = struct_fields(src, st);
+        if fields.is_empty() {
+            out.push(Violation {
+                rule: "telemetry-dead-field",
+                path: METRICS_PATH.to_string(),
+                line: 0,
+                msg: format!("could not parse struct {st}"),
+            });
+            continue;
+        }
+        for f in &fields {
+            let direct = contains_word(&emitters, f);
+            let via_method = methods
+                .iter()
+                .any(|(name, body)| contains_word(body, f) && contains_word(&emitters, name));
+            if !direct && !via_method {
+                out.push(Violation {
+                    rule: "telemetry-dead-field",
+                    path: METRICS_PATH.to_string(),
+                    line: field_decl_line(src, f),
+                    msg: format!(
+                        "{st} field `{f}` is recorded but never serialized: no CLI/bench/\
+                         figure emitter reads it, directly or through an aggregator method"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn check_config(tree: &RepoTree, out: &mut Vec<Violation>) {
+    let Some(config) = tree.get(CONFIG_PATH) else {
+        out.push(missing_file("config-coverage", CONFIG_PATH));
+        return;
+    };
+    let Some(main) = tree.get(MAIN_PATH) else {
+        out.push(missing_file("config-coverage", MAIN_PATH));
+        return;
+    };
+    let fields = struct_fields(non_test_region(&config.text), "EngineConfig");
+    if fields.is_empty() {
+        out.push(Violation {
+            rule: "config-coverage",
+            path: CONFIG_PATH.to_string(),
+            line: 0,
+            msg: "could not parse struct EngineConfig".to_string(),
+        });
+        return;
+    }
+    let main_code: String =
+        main.text.lines().map(code_portion).collect::<Vec<_>>().join("\n");
+    for f in &fields {
+        let line = field_decl_line(&config.text, f);
+        if !contains_word(&main_code, f) {
+            out.push(Violation {
+                rule: "config-coverage",
+                path: CONFIG_PATH.to_string(),
+                line,
+                msg: format!(
+                    "EngineConfig field `{f}` is not reachable from main.rs (plumb a \
+                     --flag through serve/bench, or name it where it is set)"
+                ),
+            });
+        }
+        if !tree.doc_pages().any(|d| contains_word(&d.text, f)) {
+            out.push(Violation {
+                rule: "config-coverage",
+                path: CONFIG_PATH.to_string(),
+                line,
+                msg: format!("EngineConfig field `{f}` is never mentioned in rust/docs/"),
+            });
+        }
+    }
+}
+
+fn missing_file(rule: &'static str, path: &str) -> Violation {
+    Violation {
+        rule,
+        path: path.to_string(),
+        line: 0,
+        msg: "file not found in repo snapshot".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::SourceFile;
+
+    fn metrics_fixture() -> String {
+        "pub struct BatchIterRecord {\n    pub live_direct: usize,\n    pub live_via: usize,\n\
+         }\n\npub struct BatchRunMetrics {\n    pub iters: usize,\n}\n\n\
+         pub struct RunMetrics {\n    pub requests: usize,\n}\n\nimpl BatchRunMetrics {\n    \
+         pub fn agg(&self) -> f64 {\n        self.live_via as f64 + self.iters as f64\n    }\n\
+         }\n\nimpl RunMetrics {\n    pub fn count(&self) -> usize {\n        self.requests\n    \
+         }\n}\n"
+            .to_string()
+    }
+
+    fn tree(metrics: String, main: &str, docs: &str) -> RepoTree {
+        RepoTree {
+            files: vec![
+                SourceFile { path: METRICS_PATH.into(), text: metrics },
+                SourceFile { path: MAIN_PATH.into(), text: main.to_string() },
+                SourceFile {
+                    path: CONFIG_PATH.into(),
+                    text: "pub struct EngineConfig {\n    pub seed: u64,\n    pub knob: \
+                           usize,\n}\n"
+                        .to_string(),
+                },
+                SourceFile { path: "rust/docs/serving.md".into(), text: docs.to_string() },
+            ],
+        }
+    }
+
+    fn run(t: &RepoTree) -> Vec<Violation> {
+        let mut v = Vec::new();
+        check(t, &mut v);
+        v
+    }
+
+    #[test]
+    fn live_fields_and_covered_config_pass() {
+        let t = tree(
+            metrics_fixture(),
+            "fn serve() { let seed = 1; let knob = 2; print(m.live_direct, m.agg(), \
+             m.count()); }",
+            "`seed` and `knob` are documented here",
+        );
+        let v = run(&t);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn dead_field_is_flagged_with_struct_and_line() {
+        // live_via is only reachable through agg(), and no emitter calls
+        // agg() — both it and the never-read live_direct must flag.
+        let t = tree(
+            metrics_fixture(),
+            "fn serve() { let seed = 1; let knob = 2; print(m.count()); }",
+            "`seed` and `knob` are documented here",
+        );
+        let v = run(&t);
+        let dead: Vec<&Violation> =
+            v.iter().filter(|v| v.rule == "telemetry-dead-field").collect();
+        assert_eq!(dead.len(), 3, "{v:?}"); // live_direct, live_via, iters
+        assert!(dead.iter().any(|v| v.msg.contains("`live_direct`") && v.line == 2));
+        assert!(dead.iter().any(|v| v.msg.contains("BatchRunMetrics field `iters`")));
+    }
+
+    #[test]
+    fn method_indirection_keeps_a_field_live() {
+        // live_via has no direct emitter mention, but agg() reads it and
+        // an emitter calls agg().
+        let t = tree(
+            metrics_fixture(),
+            "fn serve() { let seed = 1; let knob = 2; print(m.live_direct, m.agg(), \
+             m.count()); }",
+            "`seed` and `knob` are documented here",
+        );
+        assert!(run(&t).iter().all(|v| !v.msg.contains("`live_via`")));
+    }
+
+    #[test]
+    fn unflagged_or_undocumented_config_field_fails() {
+        let t = tree(
+            metrics_fixture(),
+            "fn serve() { let seed = 1; print(m.live_direct, m.agg(), m.count()); }",
+            "only `seed` is documented here",
+        );
+        let v = run(&t);
+        let cfg: Vec<&Violation> = v.iter().filter(|v| v.rule == "config-coverage").collect();
+        assert_eq!(cfg.len(), 2, "{v:?}");
+        assert!(cfg.iter().any(|v| v.msg.contains("main.rs")));
+        assert!(cfg.iter().any(|v| v.msg.contains("rust/docs")));
+        assert!(cfg.iter().all(|v| v.msg.contains("`knob`")));
+    }
+
+    #[test]
+    fn emitter_mentions_in_comments_do_not_count() {
+        let t = tree(
+            metrics_fixture(),
+            "fn serve() { let seed = 1; let knob = 2; print(m.agg(), m.count()); }\n\
+             // live_direct is mentioned only in this comment\n",
+            "`seed` and `knob` are documented here",
+        );
+        let v = run(&t);
+        assert!(
+            v.iter().any(|v| v.msg.contains("`live_direct`")),
+            "comment mention must not keep the field live: {v:?}"
+        );
+    }
+}

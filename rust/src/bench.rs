@@ -72,16 +72,16 @@ impl Bench {
     /// Time `f` (called once per iteration).
     pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Measurement {
         // Warm-up: one call, then estimate batch size.
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // lint:allow(wall-clock): the bench harness measures host wall time by design
         std::hint::black_box(f());
         let once = t0.elapsed().max(Duration::from_nanos(20));
         let batch = (Duration::from_millis(10).as_nanos() / once.as_nanos()).clamp(1, 10_000) as u64;
 
         let mut samples = Vec::new();
         let mut iters = 0u64;
-        let start = Instant::now();
+        let start = Instant::now(); // lint:allow(wall-clock): the bench harness measures host wall time by design
         while start.elapsed() < self.min_duration || samples.len() < self.min_samples {
-            let t = Instant::now();
+            let t = Instant::now(); // lint:allow(wall-clock): the bench harness measures host wall time by design
             for _ in 0..batch {
                 std::hint::black_box(f());
             }

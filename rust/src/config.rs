@@ -79,7 +79,8 @@ impl CascadeParams {
 }
 
 /// Which drafter generates the speculative tokens.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// `Ord` so the kind can key deterministic `BTreeMap` caches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum DrafterKind {
     /// Prompt-lookup n-gram matching (paper's primary technique, [38]).
     Ngram,

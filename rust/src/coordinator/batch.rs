@@ -467,7 +467,7 @@ impl BatchEngine {
             queue_wait_s: (self.clock_s - arrival_s).max(0.0),
             ..Default::default()
         };
-        let wall_start = Instant::now();
+        let wall_start = Instant::now(); // lint:allow(wall-clock): host-wall prefill telemetry, never the virtual clock
         let guide0 = req.reference.first().copied();
         let prefilled = self
             .backend
@@ -589,7 +589,7 @@ impl BatchEngine {
         }
 
         // ---- Stage 3: verify (+ pipelined draft of iteration i+1) -------
-        let iter_wall = Instant::now();
+        let iter_wall = Instant::now(); // lint:allow(wall-clock): host-wall verify telemetry, never the virtual clock
         let pending = self.backend.submit_batch(&spans)?;
         let mut spec_wall_ns = 0u64;
         if self.cfg.pipeline {
@@ -599,7 +599,7 @@ impl BatchEngine {
             // charge it to the overlap window rather than the critical
             // path (both current backends execute the verify eagerly in
             // submit_batch, so on this host the scans run after it).
-            let spec_wall = Instant::now();
+            let spec_wall = Instant::now(); // lint:allow(wall-clock): measures spec_wall_ns overlap telemetry
             self.spec_draft_next(&planned, &spans);
             spec_wall_ns = spec_wall.elapsed().as_nanos() as u64;
         }
@@ -688,6 +688,26 @@ impl BatchEngine {
                 // evicting preserves it (the losslessness guarantee,
                 // rust/docs/preemption.md). So: evict victims until the
                 // full planned span fits, else defer the whole iteration.
+                //
+                // Feasibility pre-check (ROADMAP: pressure-signal plumbing):
+                // before paying any eviction, compare the reservation's
+                // block shortfall against what the whole eligible victim
+                // set could free. When no victim set can satisfy the
+                // reservation, evicting would trash other requests' state
+                // and still defer — skip straight to defer/deadlock.
+                let shortfall = self.pool.reserve_shortfall(req_id, 1 + k);
+                if shortfall > 0 {
+                    let evictable: usize = self
+                        .victim_candidates(plan.slot, &in_spans, plans)
+                        .iter()
+                        .filter(|c| (c.preemptions as usize) < self.cfg.max_preemptions_per_req)
+                        .map(|c| c.blocks)
+                        .sum();
+                    if evictable < shortfall {
+                        deferred += 1;
+                        continue;
+                    }
+                }
                 while !self.pool.can_reserve(req_id, 1 + k) {
                     let Some(victim) = self.pick_victim(plan.slot, &in_spans, plans) else {
                         break;
@@ -735,7 +755,7 @@ impl BatchEngine {
                     if pipeline && k > 0 {
                         tally.misses += 1; // bubble: drafting on the critical path
                     }
-                    let draft_wall = Instant::now();
+                    let draft_wall = Instant::now(); // lint:allow(wall-clock): measures draft_wall_ns telemetry
                     let d = state.drafter.propose(
                         &state.context,
                         &state.req.reference,
@@ -770,13 +790,18 @@ impl BatchEngine {
         Ok((spans, planned, tally, deferred, evicted))
     }
 
-    /// Build the victim-candidate view for `stuck` slot's eviction request
-    /// and select per the configured policy. Candidates are live,
-    /// unfinished slots other than the stuck one that are not already part
-    /// of this iteration's fused step; requests at the preemption cap are
-    /// filtered inside [`select_victim`]. With one active request there are
-    /// no candidates — the sole slot is never evicted.
-    fn pick_victim(&self, stuck: usize, in_spans: &[bool], plans: &[SlotPlan]) -> Option<usize> {
+    /// The victim-candidate view for `stuck` slot's eviction request:
+    /// live, unfinished slots other than the stuck one that are not
+    /// already part of this iteration's fused step. The feasibility
+    /// pre-check sums this set's blocks; [`select_victim`] picks from it
+    /// (filtering requests at the preemption cap). With one active request
+    /// there are no candidates — the sole slot is never evicted.
+    fn victim_candidates(
+        &self,
+        stuck: usize,
+        in_spans: &[bool],
+        plans: &[SlotPlan],
+    ) -> Vec<VictimCandidate> {
         let planned_k =
             |slot: usize| plans.iter().find(|p| p.slot == slot).map_or(0, |p| p.k);
         let mut cands: Vec<VictimCandidate> = Vec::new();
@@ -795,6 +820,12 @@ impl BatchEngine {
                 preemptions: self.pool.preemptions(s.req.id),
             });
         }
+        cands
+    }
+
+    /// Select an eviction victim per the configured policy.
+    fn pick_victim(&self, stuck: usize, in_spans: &[bool], plans: &[SlotPlan]) -> Option<usize> {
+        let cands = self.victim_candidates(stuck, in_spans, plans);
         select_victim(self.cfg.eviction, &cands, self.cfg.max_preemptions_per_req)
     }
 

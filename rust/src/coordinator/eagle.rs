@@ -71,7 +71,7 @@ impl EagleLite {
             let valid = piece.len();
             let mut tokens = piece.to_vec();
             tokens.resize(chunk, crate::tokenizer::PAD);
-            let t0 = std::time::Instant::now();
+            let t0 = std::time::Instant::now(); // lint:allow(wall-clock): measures draft_wall_ns telemetry
             self.runtime.borrow_mut().step(&mut self.state, &tokens)?;
             self.draft_wall_ns += t0.elapsed().as_nanos();
             self.state.cache_len += valid;
@@ -92,7 +92,7 @@ impl EagleLite {
             if self.state.cache_len + 1 > self.state.max_seq {
                 break;
             }
-            let t0 = std::time::Instant::now();
+            let t0 = std::time::Instant::now(); // lint:allow(wall-clock): measures draft_wall_ns telemetry
             let out = self.runtime.borrow_mut().step(&mut self.state, &[cur])?;
             self.draft_wall_ns += t0.elapsed().as_nanos();
             self.state.cache_len += 1;
@@ -137,7 +137,7 @@ impl EagleLite {
             if self.state.cache_len + piece.len() > self.state.max_seq {
                 break; // drafter window exhausted; proposals will stop
             }
-            let t0 = std::time::Instant::now();
+            let t0 = std::time::Instant::now(); // lint:allow(wall-clock): measures draft_wall_ns telemetry
             self.runtime.borrow_mut().step(&mut self.state, piece)?;
             self.draft_wall_ns += t0.elapsed().as_nanos();
             self.state.cache_len += piece.len();

@@ -198,7 +198,7 @@ impl Engine {
 
     /// Serve one request to completion; returns its full decode trace.
     pub fn serve_request(&mut self, req: &Request) -> Result<RequestMetrics> {
-        let wall_start = Instant::now();
+        let wall_start = Instant::now(); // lint:allow(wall-clock): host-wall request telemetry, never the virtual clock
         self.policy.reset();
         self.backend.begin(req)?;
 
@@ -281,7 +281,7 @@ impl Engine {
                     if pipeline && k > 0 {
                         self.pipeline_misses += 1; // a bubble: draft on the critical path
                     }
-                    let draft_wall = Instant::now();
+                    let draft_wall = Instant::now(); // lint:allow(wall-clock): measures draft_wall_ns telemetry
                     let d = self.drafter.propose(&context, &req.reference, out_idx, k, d_eps)?;
                     (d, draft_wall.elapsed().as_nanos() as u64)
                 }
@@ -296,7 +296,7 @@ impl Engine {
             tokens.extend_from_slice(&drafts);
             let guides: Vec<Option<u32>> = (0..t).map(|i| ref_at(out_idx + i)).collect();
 
-            let iter_wall = Instant::now();
+            let iter_wall = Instant::now(); // lint:allow(wall-clock): host-wall verify telemetry, never the virtual clock
             let step = self.backend.step(&tokens, &guides, req.eps)?;
 
             // Speculatively draft the *next* iteration — conceptually under
@@ -306,7 +306,7 @@ impl Engine {
             // iteration (see `spec_wall_ns` below).
             let mut spec_wall_ns = 0u64;
             if pipeline {
-                let spec_wall = Instant::now();
+                let spec_wall = Instant::now(); // lint:allow(wall-clock): measures spec_wall_ns overlap telemetry
                 lookahead = plan_spec_task(
                     0,
                     req,

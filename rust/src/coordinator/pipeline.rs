@@ -281,7 +281,7 @@ pub fn reconcile_entry(
 /// Execute one speculative draft (on whatever thread it lands on).
 pub fn run_spec_task(task: SpecTask) -> SpecDraft {
     let mut snapshot = task.snapshot;
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(wall-clock): measures draft_wall_ns telemetry
     let drafts = snapshot.propose(&task.ctx, &task.reference, task.out_idx, task.k, task.d_eps);
     SpecDraft {
         slot: task.slot,

@@ -13,7 +13,7 @@ use crate::models::Registry;
 use crate::spec::policy::PolicyKind;
 use crate::workload::{RequestStream, Workload};
 use anyhow::{Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Which backend executes the target model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -75,10 +75,10 @@ pub struct ExpCtx {
     client: Option<xla::PjRtClient>,
     /// Memoized no-speculation baselines: (model, workload, drafter, tokens)
     /// -> baseline TPOT.
-    baseline_cache: HashMap<(String, String, DrafterKind, usize), f64>,
+    baseline_cache: BTreeMap<(String, String, DrafterKind, usize), f64>,
     /// Shared compiled runtimes: one PJRT compile + weight upload per model
     /// per process (engines share; request state is per-engine).
-    runtimes: HashMap<String, crate::coordinator::backend::SharedRuntime>,
+    runtimes: BTreeMap<String, crate::coordinator::backend::SharedRuntime>,
 }
 
 impl ExpCtx {
@@ -90,8 +90,8 @@ impl ExpCtx {
             max_new_tokens: 200,
             seed: 0xCA5CADE,
             client: None,
-            baseline_cache: HashMap::new(),
-            runtimes: HashMap::new(),
+            baseline_cache: BTreeMap::new(),
+            runtimes: BTreeMap::new(),
         }
     }
 

@@ -264,6 +264,21 @@ impl KvBlockPool {
         }
     }
 
+    /// Blocks still missing before `can_reserve(id, t)` would hold: the
+    /// eviction feasibility pre-check's demand signal. 0 means the
+    /// reservation fits as-is; an unknown request reports `usize::MAX`
+    /// because no amount of eviction admits a request that is not in the
+    /// pool.
+    pub fn reserve_shortfall(&self, id: u64, t: usize) -> usize {
+        match self.allocs.get(&id) {
+            None => usize::MAX,
+            Some(a) => self
+                .blocks_for(a.committed + t)
+                .saturating_sub(a.blocks)
+                .saturating_sub(self.free_blocks()),
+        }
+    }
+
     /// Reserve lookahead slots for one request's verify step.
     pub fn reserve(&mut self, id: u64, t: usize) -> Result<()> {
         if !self.can_reserve(id, t) {
@@ -511,6 +526,22 @@ mod tests {
     }
 
     #[test]
+    fn reserve_shortfall_measures_missing_blocks() {
+        let mut pool = KvBlockPool::new(4, 16);
+        pool.admit(1, 33).unwrap(); // 3 blocks
+        pool.admit(2, 16).unwrap(); // 1 block, pool full
+        // Request 2's next token spills into a new block: 1 short.
+        assert_eq!(pool.reserve_shortfall(2, 1), 1);
+        // A 17-token span needs two new blocks.
+        assert_eq!(pool.reserve_shortfall(2, 17), 2);
+        // An unknown request can never be satisfied by eviction.
+        assert_eq!(pool.reserve_shortfall(99, 1), usize::MAX);
+        pool.release(1);
+        assert_eq!(pool.reserve_shortfall(2, 1), 0);
+        assert!(pool.can_reserve(2, 1));
+    }
+
+    #[test]
     fn pool_rejects_double_admit_and_unknown_ids() {
         let mut pool = KvBlockPool::new(8, 16);
         pool.admit(7, 5).unwrap();
@@ -544,6 +575,13 @@ mod tests {
                     1 | 2 if !live.is_empty() => {
                         let id = live[rng.below(live.len())];
                         let t = rng.range(1, 8);
+                        // Shortfall and can_reserve must agree: 0 missing
+                        // blocks iff the reservation fits right now.
+                        assert_eq!(
+                            pool.reserve_shortfall(id, t) == 0,
+                            pool.can_reserve(id, t),
+                            "case {case}: shortfall / can_reserve disagree"
+                        );
                         if pool.can_reserve(id, t) {
                             pool.reserve(id, t).unwrap();
                             pool.commit(id, rng.range(0, t)).unwrap();

@@ -18,6 +18,7 @@
 //! the substitution argument); [`experiments`] regenerates every table and
 //! figure in the paper's evaluation.
 
+pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -24,18 +24,18 @@ use cascade::models::{default_artifacts_dir, Registry};
 use cascade::spec::policy::PolicyKind;
 use cascade::util::table::{ms, Table};
 use cascade::workload::{RequestStream, Workload};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Tiny `--flag value` parser: positional args + string flags.
 struct Args {
     positional: Vec<String>,
-    flags: HashMap<String, String>,
+    flags: BTreeMap<String, String>,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Self> {
         let mut positional = Vec::new();
-        let mut flags = HashMap::new();
+        let mut flags = BTreeMap::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
@@ -84,7 +84,8 @@ USAGE:
                  [--tokens 400] [--backend real|sim] [--seed N] [--batch 1]
                  [--pipeline on|off] [--shards 1] [--placement balanced|coactivation]
                  [--kv-pool-blocks N] [--eviction off|lru|most-lookahead|cost-aware]
-                 [--max-preemptions 8]
+                 [--max-preemptions 8] [--ngram-max 4] [--ngram-min 1]
+                 [--guide-strength 48] [--max-new 200]
                  [--arrivals closed|poisson|bursty|trace:<path>] [--rate R]
                  [--admission fcfs|parked-first|edf] [--slo-ms MS]
   cascade sweep  [--tokens 300] [--out-dir results] [--shards 1,2,4] [--rate 0.5,1,2]
@@ -253,6 +254,16 @@ fn serve(args: &Args) -> Result<()> {
     let admission = cascade::config::AdmissionKind::parse(&args.get("admission", "fcfs"))?;
     let slo_s = args.get_f64("slo-ms", 0.0)? / 1e3;
     anyhow::ensure!(slo_s >= 0.0, "--slo-ms cannot be negative");
+    let d = EngineConfig::default();
+    let ngram_max = args.get_usize("ngram-max", d.ngram_max)?;
+    let ngram_min = args.get_usize("ngram-min", d.ngram_min)?;
+    anyhow::ensure!(
+        ngram_min >= 1 && ngram_min <= ngram_max,
+        "--ngram-min must satisfy 1 <= min <= max ({ngram_min} vs {ngram_max})"
+    );
+    let guide_strength = args.get_f64("guide-strength", d.guide_strength as f64)? as f32;
+    let max_new_tokens = args.get_usize("max-new", d.max_new_tokens)?;
+    anyhow::ensure!(max_new_tokens >= 1, "--max-new must be at least 1");
     let backend_name = match backend {
         BackendKind::Real => "real",
         BackendKind::Sim => "sim",
@@ -279,6 +290,10 @@ fn serve(args: &Args) -> Result<()> {
     let cfg = EngineConfig {
         model: model.clone(),
         drafter,
+        ngram_max,
+        ngram_min,
+        guide_strength,
+        max_new_tokens,
         seed,
         max_batch: batch,
         pipeline,
@@ -315,7 +330,7 @@ fn serve(args: &Args) -> Result<()> {
                 engine.max_batch()
             );
         }
-        let t0 = std::time::Instant::now();
+        let t0 = std::time::Instant::now(); // lint:allow(wall-clock): host wall-time table row only
         let m = sched.run_batched(&mut engine)?;
         let wall = t0.elapsed();
 
@@ -335,6 +350,14 @@ fn serve(args: &Args) -> Result<()> {
             format!("{:.1} tok/s", 1.0 / m.tpot_s()),
         ]);
         t.row(vec!["mean ETR".into(), format!("{:.2} tok/iter", m.run.mean_etr())]);
+        t.row(vec![
+            "verify span tokens/iter".into(),
+            format!("{:.2}", m.mean_span_tokens()),
+        ]);
+        t.row(vec![
+            "draft share of span".into(),
+            format!("{:.1}%", 100.0 * m.draft_share()),
+        ]);
         t.row(vec!["batch occupancy".into(), format!("{:.2}", m.mean_occupancy())]);
         t.row(vec![
             "unique experts/iter (dedup)".into(),
@@ -359,6 +382,14 @@ fn serve(args: &Args) -> Result<()> {
             t.row(vec![
                 "max-shard experts/iter".into(),
                 format!("{:.1}", m.mean_max_shard_unique()),
+            ]);
+            t.row(vec![
+                "per-shard experts/iter".into(),
+                m.per_shard_mean_unique()
+                    .iter()
+                    .map(|u| format!("{u:.1}"))
+                    .collect::<Vec<_>>()
+                    .join(" / "),
             ]);
             t.row(vec![
                 "shard imbalance (max/mean)".into(),
@@ -468,7 +499,7 @@ fn serve(args: &Args) -> Result<()> {
         BackendKind::Real => Engine::real(&reg, cfg, policy.build())?,
         BackendKind::Sim => Engine::sim(&reg, cfg, policy.build())?,
     };
-    let t0 = std::time::Instant::now();
+    let t0 = std::time::Instant::now(); // lint:allow(wall-clock): host wall-time table row only
     let run = sched.run(&mut engine)?;
     let wall = t0.elapsed();
 
@@ -578,7 +609,7 @@ fn bench(args: &Args) -> Result<()> {
         for pipeline in [false, true] {
             let mut cfg = ctx.batch_cfg("mixtral", batch);
             cfg.pipeline = pipeline;
-            let t0 = std::time::Instant::now();
+            let t0 = std::time::Instant::now(); // lint:allow(wall-clock): host wall-time bench column only
             let m = ctx.run_batch_cell(cfg, &policy, &workload)?;
             let host_s = t0.elapsed().as_secs_f64();
 
@@ -958,7 +989,7 @@ fn figure(args: &Args) -> Result<()> {
 
     for exp in experiments {
         println!("\n### {} — {}\n", exp.id, exp.caption);
-        let t0 = std::time::Instant::now();
+        let t0 = std::time::Instant::now(); // lint:allow(wall-clock): host wall-time progress line only
         let tables = (exp.run)(&mut ctx)?;
         emit_tables(exp.id, &tables, &out_dir)?;
         println!("[{} done in {:.1}s]", exp.id, t0.elapsed().as_secs_f64());

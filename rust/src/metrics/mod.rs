@@ -443,6 +443,26 @@ impl BatchRunMetrics {
         self.iters.iter().map(|r| r.cost.expert_s).sum::<f64>() / self.iters.len() as f64
     }
 
+    /// Mean fused verify-span width: in-flight tokens (Σ 1 + drafted across
+    /// the batch) per committed iteration.
+    pub fn mean_span_tokens(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 0.0;
+        }
+        self.iters.iter().map(|r| r.total_tokens as f64).sum::<f64>() / self.iters.len() as f64
+    }
+
+    /// Fraction of the fused verify span that was speculative: Σ drafted /
+    /// Σ in-flight tokens. 0 at K=0 (every span is the single bonus token).
+    pub fn draft_share(&self) -> f64 {
+        let toks: usize = self.iters.iter().map(|r| r.total_tokens).sum();
+        if toks == 0 {
+            return 0.0;
+        }
+        let drafted: usize = self.iters.iter().map(|r| r.total_drafted).sum();
+        drafted as f64 / toks as f64
+    }
+
     // ---- Open-loop occupancy telemetry ----------------------------------
 
     /// Mean wait-queue depth over committed iterations (arrived-but-

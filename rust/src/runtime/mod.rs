@@ -19,7 +19,7 @@ pub use step::StepOutput;
 
 use crate::models::{Model, Registry};
 use anyhow::{Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Compiled runtime for one model: PJRT executables per token-count variant
@@ -27,7 +27,7 @@ use std::time::Instant;
 pub struct ModelRuntime {
     pub model: Model,
     client: xla::PjRtClient,
-    exes: HashMap<usize, xla::PjRtLoadedExecutable>,
+    exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
     /// Model parameters, uploaded once (leading step arguments).
     weights: Vec<xla::PjRtBuffer>,
     /// Host copies backing `weights`: PJRT's CopyFromLiteral is
@@ -56,7 +56,7 @@ impl ModelRuntime {
         Ok(Self {
             model,
             client,
-            exes: HashMap::new(),
+            exes: BTreeMap::new(),
             weights,
             _weight_literals: lits,
             exec_wall_ns: 0,
@@ -112,7 +112,7 @@ impl ModelRuntime {
         let tok_lit = xla::Literal::vec1(&tok_i32);
         let len_lit = xla::Literal::scalar(state.cache_len as i32);
 
-        let start = Instant::now();
+        let start = Instant::now(); // lint:allow(wall-clock): exec_wall_ns profiling counter, host-only
         // Per-step uploads (tokens/cache_len are tiny; KV/router state are
         // the only real copies). Weights stay device-resident.
         let up = |lit: &xla::Literal| -> Result<xla::PjRtBuffer> {

@@ -124,12 +124,12 @@ fn extract(rng: &mut Rng) -> (String, String) {
 /// Repetition score used by tests: fraction of 4-grams that repeat.
 #[cfg(test)]
 fn repeat_fraction(text: &str, n: usize) -> f64 {
-    use std::collections::HashMap;
+    use std::collections::BTreeMap;
     let b = text.as_bytes();
     if b.len() <= n {
         return 0.0;
     }
-    let mut counts: HashMap<&[u8], usize> = HashMap::new();
+    let mut counts: BTreeMap<&[u8], usize> = BTreeMap::new();
     for w in b.windows(n) {
         *counts.entry(w).or_default() += 1;
     }

@@ -210,6 +210,32 @@ fn eviction_off_reproduces_pool_deadlock() {
 }
 
 #[test]
+fn infeasible_reservation_defers_without_paying_evictions() {
+    // Feasibility pre-check: with `max_preemptions_per_req = 0`, every
+    // candidate is pinned, so no victim set can cover any shortfall. The
+    // engine must recognize the reservation as infeasible and go straight
+    // to defer/deadlock — paying *zero* evictions along the way, rather
+    // than trashing a victim's state only to defer anyway.
+    let reg = registry();
+    let reqs = crafted_requests(6, 150);
+    let mut engine = BatchEngine::sim(
+        &reg,
+        cfg(1, EvictionKind::Lru, 0, DrafterKind::Ngram, false),
+        PolicyKind::Static(3),
+    )
+    .unwrap();
+    let err = engine
+        .serve_all(&reqs)
+        .expect_err("an oversubscribed pool with every candidate pinned must deadlock");
+    let msg = err.to_string();
+    assert!(msg.contains("KV pool deadlock"), "unexpected error: {msg}");
+    assert_eq!(
+        engine.pool.total_evicted, 0,
+        "infeasible reservations must not pay evictions before deferring"
+    );
+}
+
+#[test]
 fn eviction_serves_oversubscribed_pool_where_off_deadlocks() {
     // Same deterministic scenario as the deadlock test, but with a victim
     // policy: every request completes, and (eps = 0) every stream is

@@ -1,0 +1,99 @@
+//! Tier-1 gate for the repo-native lint suite (`cascade::analysis`): the
+//! checked-in tree must be violation-free, and the suite must actually
+//! catch the regressions it exists for — a reintroduced hash collection,
+//! a cost field leaking out of `total()`, a dead metrics field. See
+//! rust/docs/lints.md.
+
+use cascade::analysis::{self, RepoTree, SourceFile};
+
+/// Repo root = parent of the crate manifest dir (`rust/`).
+fn load() -> RepoTree {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = manifest.parent().expect("rust/ lives under the repo root");
+    let tree = analysis::load_repo(root).expect("loading repo snapshot");
+    assert!(tree.get("rust/src/lib.rs").is_some(), "snapshot missed crate sources");
+    assert!(tree.get("README.md").is_some(), "snapshot missed the README");
+    tree
+}
+
+#[test]
+fn repo_is_lint_clean() {
+    let violations = analysis::run_all(&load());
+    assert!(violations.is_empty(), "\n{}", analysis::report(&violations));
+}
+
+#[test]
+fn reintroducing_a_hash_collection_fails_with_rule_and_location() {
+    let mut tree = load();
+    tree.files.push(SourceFile {
+        path: "rust/src/tampered.rs".into(),
+        text: format!("use std::collections::{};\n", concat!("Hash", "Map")),
+    });
+    let v = analysis::run_all(&tree);
+    assert!(
+        v.iter().any(|v| v.rule == "hash-collection"
+            && v.path == "rust/src/tampered.rs"
+            && v.line == 1),
+        "{}",
+        analysis::report(&v)
+    );
+}
+
+#[test]
+fn dropping_a_cost_field_from_total_fails() {
+    let mut tree = load();
+    let cost = tree
+        .files
+        .iter_mut()
+        .find(|f| f.path == "rust/src/cost/mod.rs")
+        .expect("cost module in snapshot");
+    let patched = cost.text.replace("+ self.reprefill_s", "");
+    assert_ne!(patched, cost.text, "expected the reprefill_s term in total()");
+    cost.text = patched;
+    let v = analysis::run_all(&tree);
+    assert!(
+        v.iter().any(|v| v.rule == "cost-conservation"
+            && v.msg.contains("`reprefill_s`")
+            && v.msg.contains("total()")),
+        "{}",
+        analysis::report(&v)
+    );
+}
+
+#[test]
+fn a_dead_metrics_field_fails() {
+    let mut tree = load();
+    let metrics = tree
+        .files
+        .iter_mut()
+        .find(|f| f.path == "rust/src/metrics/mod.rs")
+        .expect("metrics module in snapshot");
+    let patched = metrics.text.replace(
+        "pub struct BatchRunMetrics {",
+        "pub struct BatchRunMetrics {\n    pub dead_knob_xyz: usize,",
+    );
+    assert_ne!(patched, metrics.text, "expected the BatchRunMetrics declaration");
+    metrics.text = patched;
+    let v = analysis::run_all(&tree);
+    assert!(
+        v.iter().any(|v| v.rule == "telemetry-dead-field"
+            && v.msg.contains("`dead_knob_xyz`")),
+        "{}",
+        analysis::report(&v)
+    );
+}
+
+#[test]
+fn a_blanket_allow_fails() {
+    let mut tree = load();
+    tree.files.push(SourceFile {
+        path: "rust/src/tampered.rs".into(),
+        text: format!("fn f() {{}} // {}: everything\n", analysis::ALLOW_TOKEN),
+    });
+    let v = analysis::run_all(&tree);
+    assert!(
+        v.iter().any(|v| v.rule == "lint-allow" && v.path == "rust/src/tampered.rs"),
+        "{}",
+        analysis::report(&v)
+    );
+}
