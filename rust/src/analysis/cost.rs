@@ -34,6 +34,7 @@ pub const VERIFY_EXEMPT: &[(&str, &str)] = &[
     ("draft_hidden_s", "pipeline-overlap bookkeeping inside exposed_draft_s(), not verify"),
     ("reject_s", "rejection sampling runs after the verify step returns"),
     ("reprefill_s", "re-prefill of evicted context happens outside the fused verify"),
+    ("stall_s", "injected-stall retries waste wall time around the verify, not inside it"),
 ];
 
 pub fn check(tree: &RepoTree, out: &mut Vec<Violation>) {

@@ -214,6 +214,42 @@ impl EvictionKind {
     }
 }
 
+/// Degradation-controller policy (`EngineConfig::controller`): whether the
+/// engine reacts to pressure — KV reserve shortfall, queue depth, and EDF
+/// deadline slack — by throttling speculation, capping the verify expert
+/// budget (MoE-Spec-style), and shedding already-unmeetable requests. The
+/// controller logic lives in `coordinator::faults`; see rust/docs/faults.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ControllerKind {
+    /// No reaction: today's behavior, bit-exact.
+    Off,
+    /// Pressure-adaptive degradation: cap K under moderate pressure,
+    /// disable speculation and cap the verify expert budget under high
+    /// pressure, shed waiting requests whose TTFT SLO is already missed.
+    Adaptive,
+}
+
+impl ControllerKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "off" => Ok(ControllerKind::Off),
+            "adaptive" => Ok(ControllerKind::Adaptive),
+            other => anyhow::bail!("unknown controller {other:?} (want off|adaptive)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ControllerKind::Off => "off",
+            ControllerKind::Adaptive => "adaptive",
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        *self != ControllerKind::Off
+    }
+}
+
 /// Engine-level configuration for one serving run.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -284,6 +320,15 @@ pub struct EngineConfig {
     /// `edf` admission deadline (arrival + slo_s) and the SLO-goodput
     /// telemetry; it never changes token output.
     pub slo_s: f64,
+    /// Fault-injection plan spec (`"off"`, a builtin name like `"chaos"`,
+    /// `"file:<path>"`, or inline `;`-separated clauses) scheduling
+    /// deterministic faults — shard stragglers, transient stalls, shard
+    /// kills, KV-pool shrinks — against the virtual clock. Parsed by
+    /// `coordinator::faults::FaultPlan`; `"off"` (default) injects nothing
+    /// and is bit-exact with the fault-free engine. See rust/docs/faults.md.
+    pub faults: String,
+    /// Graceful-degradation controller (`Off` = bit-exact today's behavior).
+    pub controller: ControllerKind,
     pub cascade: CascadeParams,
 }
 
@@ -306,6 +351,8 @@ impl Default for EngineConfig {
             placement: PlacementKind::Balanced,
             admission: AdmissionKind::Fcfs,
             slo_s: 0.0,
+            faults: "off".into(),
+            controller: ControllerKind::Off,
             cascade: CascadeParams::default(),
         }
     }
@@ -360,6 +407,18 @@ mod tests {
         let cfg = EngineConfig::default();
         assert_eq!(cfg.admission, AdmissionKind::Fcfs, "legacy ordering must be the default");
         assert_eq!(cfg.slo_s, 0.0, "no SLO unless asked");
+    }
+
+    #[test]
+    fn controller_kinds_roundtrip_and_default_off() {
+        for kind in [ControllerKind::Off, ControllerKind::Adaptive] {
+            assert_eq!(ControllerKind::parse(kind.label()).unwrap(), kind);
+            assert_eq!(kind.is_on(), kind != ControllerKind::Off);
+        }
+        assert!(ControllerKind::parse("pid").is_err());
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.controller, ControllerKind::Off, "degradation must be opt-in");
+        assert_eq!(cfg.faults, "off", "fault injection must be opt-in");
     }
 
     #[test]

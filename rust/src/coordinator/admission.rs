@@ -191,6 +191,29 @@ impl AdmissionQueue {
         req.max_new_tokens = req.max_new_tokens.min(remaining + 1);
     }
 
+    /// Load shedding for the degradation controller (rust/docs/faults.md):
+    /// drop every waiting entry whose `arrival_s + slo_s` deadline has
+    /// already passed at `now_s` — the request cannot possibly meet its
+    /// TTFT SLO, so admitting it would burn pool blocks and verify time on
+    /// work the goodput metric must count as a miss anyway. Returns how
+    /// many entries were shed. Only the scheduler calls this, and only
+    /// with `--controller adaptive` under a positive SLO; shed requests
+    /// never reach the engine, so they appear in no per-request metrics.
+    pub fn shed_overdue(&mut self, now_s: f64, slo_s: f64) -> usize {
+        let before = self.entries.len();
+        self.entries.retain(|e| e.arrival_s + slo_s > now_s);
+        before - self.entries.len()
+    }
+
+    /// The tightest waiting deadline (`arrival_s + slo_s`), or `None` when
+    /// the queue is empty — the degradation controller's EDF slack signal.
+    pub fn min_deadline_s(&self, slo_s: f64) -> Option<f64> {
+        self.entries
+            .iter()
+            .map(|e| e.arrival_s + slo_s)
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
     /// Policy-ordered pick among the waiting entries.
     pub fn select(&self, policy: &dyn AdmissionPolicy, slo_s: f64) -> Option<usize> {
         let views: Vec<WaitingView> = self
@@ -278,6 +301,33 @@ mod tests {
         assert_eq!(q.req(0).max_new_tokens, 41, "re-clamp must never widen");
         q.clamp(0, 10);
         assert_eq!(q.req(0).max_new_tokens, 11);
+    }
+
+    #[test]
+    fn shed_overdue_drops_only_unmeetable_deadlines() {
+        let mut q = AdmissionQueue::new();
+        for (i, r) in reqs(3).into_iter().enumerate() {
+            q.push(r, i as f64); // arrivals at t = 0, 1, 2
+        }
+        // SLO 0.5s at now = 1.6: deadlines 0.5 and 1.5 are past, 2.5 holds.
+        assert_eq!(q.shed_overdue(1.6, 0.5), 2);
+        assert_eq!(q.len(), 1);
+        let p = build_policy(AdmissionKind::Fcfs);
+        let i = q.select(p.as_ref(), 0.5).unwrap();
+        assert_eq!(q.remove(i).arrival_s, 2.0, "the survivor is the freshest arrival");
+        // A deadline exactly at `now` is already missed (strict >).
+        let mut q2 = AdmissionQueue::new();
+        q2.push(reqs(1).remove(0), 1.0);
+        assert_eq!(q2.shed_overdue(1.5, 0.5), 1);
+        assert!(q2.is_empty());
+        // Nothing overdue: no-op.
+        let mut q3 = AdmissionQueue::new();
+        q3.push(reqs(1).remove(0), 1.0);
+        assert_eq!(q3.shed_overdue(1.0, 0.5), 0);
+        assert_eq!(q3.len(), 1);
+        // The controller's slack signal: tightest waiting deadline.
+        assert_eq!(q3.min_deadline_s(0.5), Some(1.5));
+        assert_eq!(AdmissionQueue::new().min_deadline_s(0.5), None);
     }
 
     #[test]

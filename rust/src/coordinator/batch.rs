@@ -53,7 +53,11 @@ use crate::coordinator::admission::{build_policy, AdmissionPolicy};
 use crate::coordinator::backend::{Backend, BatchStep, VerifySpan};
 use crate::coordinator::engine::EngineDrafter;
 use crate::coordinator::eviction::{select_victim, VictimCandidate};
+use crate::coordinator::faults::{
+    degrade_level, DegradeLevel, FaultPlan, PressureSignal, THROTTLE_K_CAP,
+};
 use crate::coordinator::pipeline::{plan_spec_task, reconcile_entry, run_spec_tasks, SpecDraft};
+use crate::coordinator::EngineError;
 use crate::cost::{CoActivationStats, ExpertPlacement, GpuCostModel, IterCost};
 use crate::kv::KvBlockPool;
 use crate::metrics::{BatchIterRecord, BatchRunMetrics, IterRecord, RequestMetrics, RunMetrics};
@@ -204,6 +208,49 @@ pub struct BatchEngine {
     /// this iteration (stamped into `BatchIterRecord::queue_depth` along
     /// with the parked count).
     queue_depth_hint: usize,
+    /// Tightest deadline (`arrival + slo`) among the driving loop's waiting
+    /// arrivals, reported alongside `queue_depth_hint`; `f64::INFINITY`
+    /// when nothing waits. Feeds the controller's EDF slack signal.
+    queue_min_deadline_s: f64,
+    /// The fault schedule (`cfg.faults`, rust/docs/faults.md). Empty with
+    /// `--faults off` — every fault query then short-circuits, keeping the
+    /// default path bit-exact.
+    faults: FaultPlan,
+    /// `faults.stalls()` (sorted by t0) and the monotone cursor of stalls
+    /// already injected.
+    stall_schedule: Vec<(f64, u32, f64)>,
+    stalls_fired: usize,
+    /// Which shards are currently fault-killed (all-false when healthy).
+    dead_shards: Vec<bool>,
+    /// Pool capacity with no shrink active — the target `set_capacity`
+    /// restores when a shrink window closes.
+    normal_pool_blocks: usize,
+    /// A pool-shrink window is currently applied (edge-detects the
+    /// `fault_events` count).
+    pool_shrunk: bool,
+    /// A straggler window was active at the last commit (edge-detects the
+    /// `fault_events` count).
+    straggler_active: bool,
+    /// Requests evicted by shard kills and not yet re-admitted; when the
+    /// set drains, the elapsed virtual time since `kill_started_s` accrues
+    /// into `recovery_s`.
+    kill_victims: Vec<u64>,
+    kill_started_s: f64,
+    /// Fault-plan events that actually fired (stall injections, straggler
+    /// window entries, shard kills, pool shrink entries).
+    fault_events: usize,
+    /// Virtual seconds from each shard kill until its victims were all
+    /// re-admitted.
+    recovery_s: f64,
+    /// Requests the driving loop shed as unmeetable (`note_shed`).
+    sheds: usize,
+    /// The degradation controller's verdict for the current iteration
+    /// (always `Normal` with `--controller off` — planning is then
+    /// bit-exact with pre-controller builds).
+    degrade: DegradeLevel,
+    /// Pool-block shortfall summed over the previous iteration's deferred
+    /// slots — the controller's admission-starvation signal.
+    last_shortfall_blocks: usize,
 }
 
 /// Fused iterations between co-activation placement rebuilds. Small enough
@@ -255,6 +302,17 @@ impl BatchEngine {
         let placement = ExpertPlacement::balanced(n_experts, n_shards);
         let coact = CoActivationStats::new(n_experts);
         let admission = build_policy(cfg.admission);
+        // The CLI validates the fault spec before building an engine, so a
+        // parse failure here is a programming error (a test passing a bad
+        // inline spec): fail loudly in debug builds, degrade to fault-free
+        // serving in release rather than panicking mid-serve.
+        debug_assert!(
+            FaultPlan::parse(&cfg.faults).is_ok(),
+            "invalid fault spec {:?}",
+            cfg.faults
+        );
+        let faults = FaultPlan::parse(&cfg.faults).unwrap_or_default();
+        let stall_schedule = faults.stalls();
         Self {
             cfg,
             backend,
@@ -280,6 +338,21 @@ impl BatchEngine {
             clock_s: 0.0,
             idle_s: 0.0,
             queue_depth_hint: 0,
+            queue_min_deadline_s: f64::INFINITY,
+            faults,
+            stall_schedule,
+            stalls_fired: 0,
+            dead_shards: vec![false; n_shards],
+            normal_pool_blocks: total_blocks,
+            pool_shrunk: false,
+            straggler_active: false,
+            kill_victims: Vec::new(),
+            kill_started_s: 0.0,
+            fault_events: 0,
+            recovery_s: 0.0,
+            sheds: 0,
+            degrade: DegradeLevel::Normal,
+            last_shortfall_blocks: 0,
         }
     }
 
@@ -315,6 +388,136 @@ impl BatchEngine {
     /// parked count) into the next committed `BatchIterRecord`.
     pub fn set_queue_depth(&mut self, waiting: usize) {
         self.queue_depth_hint = waiting;
+    }
+
+    /// Report the tightest deadline (`arrival + slo`) among waiting
+    /// arrivals, or `f64::INFINITY` when none wait. Feeds the degradation
+    /// controller's EDF slack signal.
+    pub fn set_queue_deadline(&mut self, deadline_s: f64) {
+        self.queue_min_deadline_s = deadline_s;
+    }
+
+    /// Record `n` requests the driving loop shed before admission because
+    /// their SLO deadline already passed (rust/docs/faults.md). Shed
+    /// requests never produce a `RequestMetrics`, so they can never count
+    /// toward `slo_goodput`.
+    pub fn note_shed(&mut self, n: usize) {
+        self.sheds += n;
+    }
+
+    /// The active fault schedule (empty with `--faults off`).
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
+    }
+
+    /// Fault-plan events that actually fired so far.
+    pub fn fault_events(&self) -> usize {
+        self.fault_events
+    }
+
+    /// The degradation controller's verdict for the iteration being
+    /// planned (always `Normal` with `--controller off`).
+    pub fn degrade_state(&self) -> DegradeLevel {
+        self.degrade
+    }
+
+    /// Snapshot the pressure signals the degradation controller reads.
+    /// Pure observation: building the signal never mutates engine state.
+    fn pressure_signal(&self) -> PressureSignal {
+        let min_slack_s = if self.queue_min_deadline_s.is_finite() {
+            self.queue_min_deadline_s - self.clock_s
+        } else {
+            f64::INFINITY
+        };
+        PressureSignal {
+            pool_util: self.pool.utilization(),
+            shortfall_blocks: self.last_shortfall_blocks,
+            queue_depth: self.queue_depth_hint + self.parked.len(),
+            max_batch: self.max_batch,
+            slo_s: self.cfg.slo_s,
+            min_slack_s,
+        }
+    }
+
+    /// Apply fault-plan transitions for the iteration starting at the
+    /// current clock: pool-shrink windows (re-applied every iteration so
+    /// freed blocks cannot sneak past an active window), and shard
+    /// kill/recovery edges. Killing a shard evicts its striped requests
+    /// (KV striping modeled as `request id % n_shards`) through the same
+    /// lossless park/replay path as pool preemption, then rebuilds the
+    /// expert placement on the survivors; recovery restores the balanced
+    /// placement. Both rebuilds reset the co-activation refresh window so
+    /// a stale greedy placement is never carried across a topology change.
+    fn apply_fault_transitions(&mut self) -> Result<()> {
+        if self.faults.is_off() {
+            return Ok(());
+        }
+        // Pool shrink: clamp-to-committed semantics live in
+        // `KvBlockPool::set_capacity`; re-applying each iteration ratchets
+        // the capacity down as slots release blocks during the window.
+        if self.faults.has_pool_shrink() {
+            let frac = self.faults.pool_frac(self.clock_s);
+            if frac < 1.0 {
+                let target = ((self.normal_pool_blocks as f64 * frac).floor() as usize).max(1);
+                self.pool.set_capacity(target);
+                if !self.pool_shrunk {
+                    self.pool_shrunk = true;
+                    self.fault_events += 1;
+                }
+            } else if self.pool_shrunk {
+                self.pool.set_capacity(self.normal_pool_blocks);
+                self.pool_shrunk = false;
+            }
+        }
+        // Shard kill / recovery edges.
+        let mask = self
+            .faults
+            .dead_shards(self.clock_s, self.n_shards)
+            .unwrap_or_else(|| vec![false; self.n_shards]);
+        let mut mask = mask;
+        if mask.iter().all(|&d| d) {
+            // Never kill the last survivor: the fault model degrades
+            // service, it does not halt it.
+            mask[0] = false;
+        }
+        if mask != self.dead_shards {
+            let newly_dead: Vec<usize> = (0..self.n_shards)
+                .filter(|&s| mask[s] && !self.dead_shards[s])
+                .collect();
+            for &shard in &newly_dead {
+                self.fault_events += 1;
+                if self.kill_victims.is_empty() {
+                    self.kill_started_s = self.clock_s;
+                }
+                let victims: Vec<usize> = self
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(slot, entry)| {
+                        let state = entry.as_ref()?;
+                        (!state.finished && (state.req.id as usize) % self.n_shards == shard)
+                            .then_some(slot)
+                    })
+                    .collect();
+                for slot in victims {
+                    let id = self.slots[slot]
+                        .as_ref()
+                        .map(|s| s.req.id)
+                        .expect("victim slot selected while occupied");
+                    self.kill_victims.push(id);
+                    self.evict_slot(slot)?;
+                }
+            }
+            self.dead_shards = mask;
+            let n_experts = self.backend.mini().n_experts;
+            self.placement = if self.dead_shards.iter().any(|&d| d) {
+                ExpertPlacement::balanced_surviving(n_experts, self.n_shards, &self.dead_shards)
+            } else {
+                ExpertPlacement::balanced(n_experts, self.n_shards)
+            };
+            self.iters_since_placement = 0;
+        }
+        Ok(())
     }
 
     /// Effective expert-parallel shard count (1 = unsharded).
@@ -539,7 +742,19 @@ impl BatchEngine {
     /// overlap-aware costs, feed policies). Returns false when nothing is
     /// in flight (the caller should admit or stop).
     pub fn step_iteration(&mut self) -> Result<bool> {
-        // ---- Stage 0: re-admission --------------------------------------
+        // ---- Stage 0: faults, controller verdict, re-admission ----------
+        // Fault-plan transitions (pool shrink, shard kill/recovery) apply
+        // on the virtual clock before anything is planned, and the
+        // degradation controller takes its verdict from the pre-plan
+        // pressure snapshot. Both are no-ops with
+        // `--faults off --controller off`, keeping that path bit-exact
+        // with pre-fault builds.
+        self.apply_fault_transitions()?;
+        self.degrade = if self.cfg.controller.is_on() {
+            degrade_level(&self.pressure_signal())
+        } else {
+            DegradeLevel::Normal
+        };
         // Bring evicted requests back in while slots and blocks allow; each
         // re-admission re-prefills (and replays) the victim's committed
         // context and charges `pending_reprefill_s`.
@@ -565,20 +780,18 @@ impl BatchEngine {
             // blocks): a genuine deadlock of an oversubscribed pool,
             // surfaced rather than spun on.
             if deferred > 0 {
-                match self.cfg.eviction {
-                    EvictionKind::Off => anyhow::bail!(
-                        "KV pool deadlock: {deferred} request(s) cannot reserve their next \
-                         token and nothing else is decoding; increase kv_pool_blocks or turn \
-                         preemption on (--eviction lru|most-lookahead|cost-aware)"
-                    ),
-                    kind => anyhow::bail!(
-                        "KV pool deadlock under eviction={}: {deferred} stuck request(s) and \
-                         no evictable victim (max_preemptions_per_req = {} pins repeat \
-                         victims); raise the cap or kv_pool_blocks",
-                        kind.label(),
-                        self.cfg.max_preemptions_per_req
-                    ),
+                // Structured, not a bare bail: the serve path downcasts
+                // `EngineError` to emit the partial metrics collected so
+                // far and exit with a distinct code instead of a panic or
+                // an opaque error string.
+                return Err(match self.cfg.eviction {
+                    EvictionKind::Off => EngineError::Deadlock { waiting: deferred },
+                    _ => EngineError::CappedDeadlock {
+                        cap: self.cfg.max_preemptions_per_req,
+                        waiting: deferred,
+                    },
                 }
+                .into());
             }
             if !self.parked.is_empty() {
                 // All slots drained but evicted requests still wait: the
@@ -631,6 +844,18 @@ impl BatchEngine {
     /// or two slots could both be planned against the same free blocks.
     fn plan_stage(&mut self) -> Vec<SlotPlan> {
         let max_seq = self.backend.mini().max_seq;
+        // Degradation controller: under Throttle, speculation is capped
+        // (shorter spans reserve fewer pool blocks and verify fewer
+        // tokens); under Halt it is disabled outright — K=0 steps still
+        // emit one token each, so service degrades instead of stopping.
+        // The policy keeps driving (`next_k` runs, and it observes the
+        // executed K like any other cap), so control returns to it the
+        // moment pressure clears.
+        let k_cap = match self.degrade {
+            DegradeLevel::Normal => MAX_K,
+            DegradeLevel::Throttle => THROTTLE_K_CAP,
+            DegradeLevel::Halt => 0,
+        };
         let mut plans: Vec<SlotPlan> = Vec::new();
         for slot in 0..self.slots.len() {
             let Some(state) = self.slots[slot].as_mut() else { continue };
@@ -638,7 +863,7 @@ impl BatchEngine {
                 continue;
             }
             let out_idx = state.output.len();
-            let mut k = state.policy.next_k().min(MAX_K);
+            let mut k = state.policy.next_k().min(MAX_K).min(k_cap);
             let room = max_seq.saturating_sub(self.backend.cache_len_slot(slot) + 1);
             k = k.min(room);
             k = k.min(state.req.max_new_tokens.saturating_sub(out_idx).saturating_sub(1));
@@ -671,6 +896,9 @@ impl BatchEngine {
         let mut tally = ReconcileTally::default();
         let mut deferred = 0usize;
         let mut evicted = 0usize;
+        // Blocks the deferred slots fell short by — the controller's
+        // admission-starvation signal for the *next* iteration's verdict.
+        let mut shortfall_blocks = 0usize;
         // Slots whose span is already built this pass: their reservations
         // are live inputs of the fused step, so they are never victims.
         let mut in_spans = vec![false; self.slots.len()];
@@ -705,6 +933,7 @@ impl BatchEngine {
                         .sum();
                     if evictable < shortfall {
                         deferred += 1;
+                        shortfall_blocks += shortfall;
                         continue;
                     }
                 }
@@ -717,6 +946,7 @@ impl BatchEngine {
                 }
                 if !self.pool.can_reserve(req_id, 1 + k) {
                     deferred += 1;
+                    shortfall_blocks += self.pool.reserve_shortfall(req_id, 1 + k);
                     continue;
                 }
             } else {
@@ -732,6 +962,7 @@ impl BatchEngine {
                 }
                 if !self.pool.can_reserve(req_id, 1) {
                     deferred += 1;
+                    shortfall_blocks += self.pool.reserve_shortfall(req_id, 1);
                     continue;
                 }
             }
@@ -771,7 +1002,13 @@ impl BatchEngine {
             let t = 1 + drafted;
             self.pool.reserve(state.req.id, t)?;
             let mut tokens = Vec::with_capacity(t);
-            tokens.push(*state.output.last().unwrap());
+            // Every admitted slot owns at least its prefill token; a bare
+            // output here means slot bookkeeping corrupted — surface it as
+            // an error, not a serve-path panic.
+            let Some(&head_token) = state.output.last() else {
+                anyhow::bail!("slot {} (request {}) lost its output head", plan.slot, req_id);
+            };
+            tokens.push(head_token);
             tokens.extend_from_slice(&drafts);
             let guides: Vec<Option<u32>> = (0..t)
                 .map(|i| state.req.reference.get(plan.out_idx + i).copied())
@@ -787,6 +1024,7 @@ impl BatchEngine {
             });
             in_spans[plan.slot] = true;
         }
+        self.last_shortfall_blocks = shortfall_blocks;
         Ok((spans, planned, tally, deferred, evicted))
     }
 
@@ -926,6 +1164,16 @@ impl BatchEngine {
             state.admitted_seq = self.admit_seq;
             self.pending_readmissions += 1;
             readmitted += 1;
+            // Shard-kill recovery bookkeeping: when the last kill victim
+            // re-enters service, the outage window closes and its span
+            // lands in `recovery_s` (time-to-recover telemetry).
+            if !self.kill_victims.is_empty() {
+                let id = state.req.id;
+                self.kill_victims.retain(|&v| v != id);
+                if self.kill_victims.is_empty() {
+                    self.recovery_s += (self.clock_s - self.kill_started_s).max(0.0);
+                }
+            }
             self.slots[slot] = Some(state);
         }
         Ok(readmitted)
@@ -1002,8 +1250,72 @@ impl BatchEngine {
         } else {
             None
         };
-        let cost_full = match &shard_loads {
-            Some((_, maxes)) => self.cost.sharded_batch_verify_cost(
+        // Fault/degradation cost routing. A straggler window, a dead
+        // shard, or the controller's Halt expert budget all change the
+        // *effective* per-layer verify load. The healthy pricing paths cap
+        // the per-layer mean at physical bounds (div_ceil(E/S) per shard,
+        // E unsharded) that hold for balanced placements — but a
+        // survivors-only placement concentrates experts past div_ceil(E/S),
+        // and a straggler's slowdown is not an expert count at all, so the
+        // healthy caps would silently clip the degradation. Those
+        // iterations are therefore priced through the cap-free
+        // `degraded_sharded_batch_verify_cost` on engine-computed effective
+        // loads: per layer, max over shards of min(load, budget) × scale.
+        // Telemetry keeps reporting the *real* expert counts; only the
+        // charge changes. Without expert attribution (dense model or the
+        // sequential fallback) there is no per-layer load to scale, so the
+        // healthy charge stands.
+        let straggler = self.faults.straggler_scales(self.clock_s, self.n_shards);
+        if straggler.is_some() && !self.straggler_active {
+            self.fault_events += 1;
+        }
+        self.straggler_active = straggler.is_some();
+        let any_dead = self.dead_shards.iter().any(|&d| d);
+        let expert_budget = if self.degrade == DegradeLevel::Halt {
+            // MoE-Spec-style verify expert budget: under Halt, charge at
+            // most top_k experts per layer per shard — the floor a plain
+            // K=0 decode step of one request needs anyway.
+            self.backend.mini().top_k.max(1)
+        } else {
+            usize::MAX
+        };
+        let degraded_pricing = straggler.is_some() || any_dead || expert_budget != usize::MAX;
+        let eff_loads: Option<Vec<f64>> = if degraded_pricing {
+            let scales = straggler.unwrap_or_else(|| vec![1.0; self.n_shards]);
+            match &shard_loads {
+                Some((loads, _)) => Some(
+                    loads
+                        .iter()
+                        .map(|l| {
+                            l.iter()
+                                .enumerate()
+                                .map(|(s, &c)| c.min(expert_budget) as f64 * scales[s])
+                                .fold(0.0f64, f64::max)
+                        })
+                        .collect(),
+                ),
+                None if !batch.batch_unique_experts.is_empty() => Some(
+                    batch
+                        .batch_unique_experts
+                        .iter()
+                        .map(|&u| u.min(expert_budget) as f64 * scales[0])
+                        .collect(),
+                ),
+                None => None,
+            }
+        } else {
+            None
+        };
+        let cost_full = match (&eff_loads, &shard_loads) {
+            (Some(eff), _) => self.cost.degraded_sharded_batch_verify_cost(
+                eff,
+                self.n_shards,
+                total_tokens,
+                total_drafted,
+                drafting_requests,
+                drafter_kind,
+            ),
+            (None, Some((_, maxes))) => self.cost.sharded_batch_verify_cost(
                 maxes,
                 self.n_shards,
                 total_tokens,
@@ -1011,7 +1323,7 @@ impl BatchEngine {
                 drafting_requests,
                 drafter_kind,
             ),
-            None => self.cost.batch_verify_cost(
+            (None, None) => self.cost.batch_verify_cost(
                 &batch.batch_unique_experts,
                 total_tokens,
                 total_drafted,
@@ -1036,7 +1348,28 @@ impl BatchEngine {
         // clock (and every waiting request's latency view) honestly pays
         // for the preemption thrash.
         let reprefill_s = std::mem::take(&mut self.pending_reprefill_s);
-        let cost = IterCost { draft_hidden_s, reprefill_s, ..cost_full };
+        let mut cost = IterCost { draft_hidden_s, reprefill_s, ..cost_full };
+        // Transient stall: the next scheduled stall whose trigger time
+        // falls inside this iteration fires here. Each of its `retries`
+        // failed attempts re-pays the verify pass plus an exponential
+        // backoff sleep (base · 2^attempt), charged into the lint-audited
+        // `stall_s` lane — cost conservation holds because the retries are
+        // wasted *time*, not extra committed work. The cursor is monotone,
+        // so each scheduled stall fires at most once, in order.
+        let mut stall_retries = 0usize;
+        if let Some(&(t0, retries, base_s)) = self.stall_schedule.get(self.stalls_fired) {
+            if t0 <= self.clock_s + cost.total() {
+                let verify_s = cost.verify_s();
+                let mut stall_s = 0.0;
+                for attempt in 0..retries {
+                    stall_s += verify_s + base_s * f64::powi(2.0, attempt as i32);
+                }
+                cost.stall_s = stall_s;
+                stall_retries = retries as usize;
+                self.stalls_fired += 1;
+                self.fault_events += 1;
+            }
+        }
         // Advance the virtual clock by the fused iteration, so finalize
         // stamps (`finish_s`, taken in the sweep after this commit) see the
         // post-iteration instant. Evictions stamped `parked_since` earlier
@@ -1097,10 +1430,12 @@ impl BatchEngine {
             let advance = 1 + vr.accepted;
             self.pool.commit(state.req.id, advance)?;
             self.backend.advance_slot(plan.slot, advance);
-            if self.cfg.eviction.is_on() {
+            if self.cfg.eviction.is_on() || self.faults.has_kills() {
                 // Record the step for the replay-based re-prefill an
                 // eviction of this request would need (off mode records
-                // nothing — no memory cost).
+                // nothing — no memory cost). A fault plan with shard kills
+                // needs the history even with eviction off: kill victims
+                // take the same lossless park/replay path.
                 state.history.push(ReplayStep {
                     tokens: span.tokens.clone(),
                     guides: span.guides.clone(),
@@ -1251,6 +1586,8 @@ impl BatchEngine {
             evictions: std::mem::take(&mut self.pending_evictions),
             readmissions: std::mem::take(&mut self.pending_readmissions),
             queue_depth: self.queue_depth_hint + self.parked.len(),
+            stall_retries,
+            degraded: self.degrade != DegradeLevel::Normal,
         });
         Ok(cost)
     }
@@ -1261,9 +1598,10 @@ impl BatchEngine {
         let mut swept = 0;
         for slot in 0..self.slots.len() {
             if self.slots[slot].as_ref().is_some_and(|s| s.finished) {
-                let state = self.slots[slot].take().unwrap();
-                self.finalize(slot, state);
-                swept += 1;
+                if let Some(state) = self.slots[slot].take() {
+                    self.finalize(slot, state);
+                    swept += 1;
+                }
             }
         }
         swept
@@ -1284,6 +1622,9 @@ impl BatchEngine {
             n_shards: self.n_shards,
             clock_s: self.clock_s,
             idle_s: self.idle_s,
+            sheds: self.sheds,
+            fault_events: self.fault_events,
+            recovery_s: self.recovery_s,
         }
     }
 
@@ -1302,7 +1643,7 @@ impl BatchEngine {
             while self.has_free_slot() && !self.fresh_admission_blocked() {
                 match queue.front() {
                     Some(req) if self.can_admit(req) => {
-                        let req = queue.pop_front().unwrap();
+                        let Some(req) = queue.pop_front() else { break };
                         self.admit(req)?;
                     }
                     _ => break,
@@ -1310,16 +1651,14 @@ impl BatchEngine {
             }
             self.set_queue_depth(queue.len());
             if !self.step_iteration()? {
-                if queue.is_empty() {
-                    break;
-                }
+                let Some(head) = queue.front() else { break };
                 // Engine drained but the head request still does not fit:
                 // with an empty engine the whole pool is free, so this can
                 // only mean the request can never fit.
                 anyhow::ensure!(
-                    self.active() == 0 && self.can_admit(queue.front().unwrap()),
+                    self.active() == 0 && self.can_admit(head),
                     "request {} cannot fit the KV pool",
-                    queue.front().unwrap().id
+                    head.id
                 );
             }
         }
@@ -1339,8 +1678,10 @@ impl BatchEngine {
         } else {
             String::new()
         };
+        let faults = if self.faults.is_off() { "" } else { "+faults" };
+        let ctl = if self.cfg.controller.is_on() { "+ctl" } else { "" };
         format!(
-            "{}/{}@b{}{pipe}{shard}{ev}",
+            "{}/{}@b{}{pipe}{shard}{ev}{faults}{ctl}",
             self.cfg.model,
             self.policy_kind.label(),
             self.max_batch

@@ -1,0 +1,515 @@
+//! Deterministic fault injection & graceful degradation.
+//!
+//! A production engine is judged by what happens when the machine stops
+//! being uniform and fault-free: a shard straggles, a backend step times
+//! out, a device dies, the KV pool loses headroom to a neighbour. This
+//! module supplies both halves of that story:
+//!
+//! * [`FaultPlan`] — a parsed schedule of faults pinned to the **virtual
+//!   clock** (never the wall clock; the determinism lints ban host time
+//!   from the serving path), so a fault scenario is as reproducible as a
+//!   seed. Four fault kinds: per-shard *stragglers* (that shard's expert
+//!   fetches run `factor`× slower for a window), transient *stalls* (a
+//!   verify step fails and is retried under exponential backoff, the lost
+//!   time charged to `IterCost::stall_s`), *shard kills* (placement is
+//!   rebuilt on the survivors, KV state striped to the dead shard is
+//!   recovered through the preemption subsystem's replay re-prefill), and
+//!   *pool shrinks* (KV capacity drops to a fraction — a pressure spike).
+//! * the degradation **controller** ([`degrade_level`]) — the system-level
+//!   Cascade of the ROADMAP: fold KV reserve shortfall, queue depth, and
+//!   EDF deadline slack into one pressure verdict that throttles K, then
+//!   disables speculation and caps the verify expert budget
+//!   (MoE-Spec-style, arXiv 2602.16052), while the scheduler sheds queued
+//!   requests whose TTFT SLO is already unmeetable.
+//!
+//! The headline property is **losslessness under chaos**: faults and
+//! degradation move *time and scheduling*, never token values — every
+//! request that completes under any plan emits a stream bit-exact with the
+//! fault-free run (rust/tests/chaos.rs; see rust/docs/faults.md for the
+//! spec grammar and the recovery protocols).
+
+use anyhow::{Context, Result};
+
+/// One scheduled fault. Times are virtual-clock seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// Shard `shard`'s per-layer expert fetch runs `factor`× slower while
+    /// `t0 <= t < t0 + dur_s` (a slow device: more time, not more experts).
+    Straggler { t0: f64, dur_s: f64, shard: usize, factor: f64 },
+    /// The first verify step whose window reaches `t0` fails `retries`
+    /// times before succeeding; attempt `i` sleeps `base_s * 2^i` before
+    /// retrying. The wasted verify windows plus the backoff sleeps are
+    /// charged to `IterCost::stall_s`. Token output is unchanged — the
+    /// retried step re-runs the identical computation.
+    Stall { t0: f64, retries: u32, base_s: f64 },
+    /// Shard `shard` is dead while `t0 <= t < t0 + dur_s`: its resident
+    /// experts are re-placed on the survivors and every in-flight request
+    /// whose KV is striped to it is evicted for replay re-admission.
+    ShardKill { t0: f64, dur_s: f64, shard: usize },
+    /// KV pool capacity is multiplied by `frac` while `t0 <= t < t0 + dur_s`
+    /// (committed blocks are never revoked — the clamp happens in
+    /// `KvBlockPool::set_capacity`).
+    PoolShrink { t0: f64, dur_s: f64, frac: f64 },
+}
+
+impl FaultEvent {
+    /// Start of the event's window (stalls are instants).
+    pub fn t0(&self) -> f64 {
+        match self {
+            FaultEvent::Straggler { t0, .. }
+            | FaultEvent::Stall { t0, .. }
+            | FaultEvent::ShardKill { t0, .. }
+            | FaultEvent::PoolShrink { t0, .. } => *t0,
+        }
+    }
+}
+
+/// A parsed, validated fault schedule. Constructed once per run from the
+/// `--faults` spec; every query is a pure function of the virtual clock,
+/// so identical (plan, seed) pairs replay identically.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+/// Built-in plan names accepted by `--faults` and their expansions
+/// (see [`FaultPlan::parse`]). `chaos` — one of everything — is the
+/// canonical bench plan behind `BENCH_faults.json`.
+pub const BUILTIN_PLANS: &[(&str, &str)] = &[
+    ("straggler", "straggler@0.3+2:shard=1,factor=4"),
+    ("stall", "stall@0.2:retries=2,base-ms=5;stall@1.2:retries=3,base-ms=5"),
+    ("shard-kill", "shard-kill@0.4+1:shard=1"),
+    ("pool-shrink", "pool-shrink@0.3+2:frac=0.5"),
+    (
+        "chaos",
+        "straggler@0.3+2:shard=1,factor=4;stall@0.2:retries=2,base-ms=5;\
+         shard-kill@0.6+1:shard=1;pool-shrink@0.4+2:frac=0.6",
+    ),
+];
+
+impl FaultPlan {
+    /// The empty plan (`--faults off`): injects nothing, queries are inert.
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    pub fn is_off(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse a `--faults` spec: `off`, a builtin name (`straggler`,
+    /// `stall`, `shard-kill`, `pool-shrink`, `chaos`), `file:<path>` (a
+    /// file whose contents are a spec, `;`- or newline-separated, `#`
+    /// comments allowed), or inline `;`-separated clauses:
+    ///
+    /// ```text
+    /// straggler@<t0>+<dur>:shard=<s>,factor=<f>
+    /// stall@<t0>:retries=<n>,base-ms=<ms>
+    /// shard-kill@<t0>+<dur>:shard=<s>
+    /// pool-shrink@<t0>+<dur>:frac=<f>
+    /// ```
+    ///
+    /// Shard indices wrap modulo the run's shard count (like
+    /// `ExpertPlacement::shard_of`), so one plan is valid under any
+    /// topology. Events are sorted by `t0` on load.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "off" {
+            return Ok(Self::off());
+        }
+        for (name, expansion) in BUILTIN_PLANS {
+            if spec == *name {
+                return Self::parse_clauses(expansion);
+            }
+        }
+        if let Some(path) = spec.strip_prefix("file:") {
+            anyhow::ensure!(!path.is_empty(), "fault spec needs a path (file:<path>)");
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading fault plan {path}"))?;
+            let clauses: Vec<&str> = text
+                .lines()
+                .map(|l| l.split('#').next().unwrap_or("").trim())
+                .filter(|l| !l.is_empty())
+                .collect();
+            anyhow::ensure!(!clauses.is_empty(), "fault plan {path} is empty");
+            return Self::parse_clauses(&clauses.join(";"));
+        }
+        Self::parse_clauses(spec)
+    }
+
+    fn parse_clauses(spec: &str) -> Result<Self> {
+        let mut events = Vec::new();
+        for clause in spec.split(';') {
+            let clause: String = clause.split_whitespace().collect::<Vec<_>>().join("");
+            if clause.is_empty() {
+                continue;
+            }
+            events.push(parse_clause(&clause).with_context(|| format!("fault clause {clause:?}"))?);
+        }
+        anyhow::ensure!(!events.is_empty(), "fault spec has no events (use 'off' to disable)");
+        events.sort_by(|a, b| a.t0().total_cmp(&b.t0()));
+        Ok(Self { events })
+    }
+
+    /// Per-shard slowdown scales at clock `t`, or `None` when every shard
+    /// is healthy (the bit-exact fast path). Overlapping stragglers on one
+    /// shard multiply.
+    pub fn straggler_scales(&self, t: f64, n_shards: usize) -> Option<Vec<f64>> {
+        let mut scales: Option<Vec<f64>> = None;
+        for e in &self.events {
+            if let FaultEvent::Straggler { t0, dur_s, shard, factor } = e {
+                if *t0 <= t && t < t0 + dur_s {
+                    let s = scales.get_or_insert_with(|| vec![1.0; n_shards.max(1)]);
+                    s[shard % n_shards.max(1)] *= factor;
+                }
+            }
+        }
+        scales
+    }
+
+    /// Dead-shard mask at clock `t` (`mask[s]` = shard `s` is down), or
+    /// `None` when every shard is up. All-dead plans are clamped by the
+    /// engine (the last survivor is never killed — a cluster with zero
+    /// shards cannot make progress or recover).
+    pub fn dead_shards(&self, t: f64, n_shards: usize) -> Option<Vec<bool>> {
+        let mut mask: Option<Vec<bool>> = None;
+        for e in &self.events {
+            if let FaultEvent::ShardKill { t0, dur_s, shard } = e {
+                if *t0 <= t && t < t0 + dur_s {
+                    let m = mask.get_or_insert_with(|| vec![false; n_shards.max(1)]);
+                    m[shard % n_shards.max(1)] = true;
+                }
+            }
+        }
+        mask
+    }
+
+    /// KV-pool capacity fraction at clock `t` (1.0 = full capacity).
+    /// Overlapping shrinks take the tightest.
+    pub fn pool_frac(&self, t: f64) -> f64 {
+        let mut frac: f64 = 1.0;
+        for e in &self.events {
+            if let FaultEvent::PoolShrink { t0, dur_s, frac: f } = e {
+                if *t0 <= t && t < t0 + dur_s {
+                    frac = frac.min(*f);
+                }
+            }
+        }
+        frac
+    }
+
+    /// The stall schedule, sorted by `t0`: `(t0, retries, base_s)`. The
+    /// engine consumes this with a monotone cursor (each stall fires on
+    /// the first verify step whose window reaches its `t0`).
+    pub fn stalls(&self) -> Vec<(f64, u32, f64)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::Stall { t0, retries, base_s } => Some((*t0, *retries, *base_s)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Whether the plan can kill a shard — the engine must then record
+    /// replay history even with `eviction = off`, so kill victims can be
+    /// re-admitted losslessly.
+    pub fn has_kills(&self) -> bool {
+        self.events.iter().any(|e| matches!(e, FaultEvent::ShardKill { .. }))
+    }
+
+    /// Whether the plan can shrink the pool.
+    pub fn has_pool_shrink(&self) -> bool {
+        self.events.iter().any(|e| matches!(e, FaultEvent::PoolShrink { .. }))
+    }
+}
+
+fn parse_clause(clause: &str) -> Result<FaultEvent> {
+    let (kind, rest) = clause
+        .split_once('@')
+        .ok_or_else(|| anyhow::anyhow!("expected <kind>@<t0>[+<dur>][:k=v,...]"))?;
+    let (when, params) = match rest.split_once(':') {
+        Some((w, p)) => (w, p),
+        None => (rest, ""),
+    };
+    let (t0, dur_s) = match when.split_once('+') {
+        Some((a, b)) => (parse_f64(a, "t0")?, Some(parse_f64(b, "dur")?)),
+        None => (parse_f64(when, "t0")?, None),
+    };
+    anyhow::ensure!(t0 >= 0.0, "t0 must be >= 0");
+    if let Some(d) = dur_s {
+        anyhow::ensure!(d > 0.0, "window duration must be > 0");
+    }
+    let mut shard = 0usize;
+    let mut factor = 4.0f64;
+    let mut retries = 2u32;
+    let mut base_s = 5e-3f64;
+    let mut frac = 0.5f64;
+    for kv in params.split(',').filter(|s| !s.is_empty()) {
+        let (k, v) = kv.split_once('=').ok_or_else(|| anyhow::anyhow!("bad param {kv:?}"))?;
+        match k {
+            "shard" => shard = v.parse().with_context(|| format!("shard {v:?}"))?,
+            "factor" => factor = parse_f64(v, "factor")?,
+            "retries" => retries = v.parse().with_context(|| format!("retries {v:?}"))?,
+            "base-ms" => base_s = parse_f64(v, "base-ms")? / 1e3,
+            "frac" => frac = parse_f64(v, "frac")?,
+            other => anyhow::bail!("unknown param {other:?} for {kind:?}"),
+        }
+    }
+    let dur = dur_s.unwrap_or(1.0);
+    match kind {
+        "straggler" => {
+            anyhow::ensure!(factor >= 1.0 && factor.is_finite(), "factor must be >= 1");
+            Ok(FaultEvent::Straggler { t0, dur_s: dur, shard, factor })
+        }
+        "stall" => {
+            anyhow::ensure!(dur_s.is_none(), "stall is an instant (no +dur window)");
+            anyhow::ensure!(retries >= 1, "stall needs retries >= 1");
+            anyhow::ensure!(base_s > 0.0 && base_s.is_finite(), "base-ms must be > 0");
+            Ok(FaultEvent::Stall { t0, retries, base_s })
+        }
+        "shard-kill" => Ok(FaultEvent::ShardKill { t0, dur_s: dur, shard }),
+        "pool-shrink" => {
+            anyhow::ensure!(frac > 0.0 && frac <= 1.0, "frac must be in (0, 1]");
+            Ok(FaultEvent::PoolShrink { t0, dur_s: dur, frac })
+        }
+        other => anyhow::bail!(
+            "unknown fault kind {other:?} (want straggler|stall|shard-kill|pool-shrink)"
+        ),
+    }
+}
+
+fn parse_f64(s: &str, what: &str) -> Result<f64> {
+    let v: f64 = s.parse().with_context(|| format!("{what} {s:?}"))?;
+    anyhow::ensure!(v.is_finite(), "{what} must be finite");
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Degradation controller
+// ---------------------------------------------------------------------------
+
+/// The pressure facts the controller folds, sampled once per iteration at
+/// plan time. All on the virtual clock / current pool state — nothing here
+/// can desynchronize two identically-seeded runs.
+#[derive(Debug, Clone, Copy)]
+pub struct PressureSignal {
+    /// KV pool block utilization in [0, 1] (committed + lookahead).
+    pub pool_util: f64,
+    /// Blocks the deferred slots are short of (`KvBlockPool::reserve_shortfall`
+    /// summed over last iteration's deferrals); 0 when everything fit.
+    pub shortfall_blocks: usize,
+    /// Waiting requests: arrived-but-unadmitted plus parked victims.
+    pub queue_depth: usize,
+    /// Engine batch width (queue depth is judged relative to it).
+    pub max_batch: usize,
+    /// Per-request TTFT SLO in seconds; 0 = no SLO configured.
+    pub slo_s: f64,
+    /// Tightest EDF slack among waiting requests, `deadline − now`
+    /// (`f64::INFINITY` when nothing waits or no SLO is set).
+    pub min_slack_s: f64,
+}
+
+/// The controller's verdict for one iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DegradeLevel {
+    /// No pressure: the speculation policy's K stands.
+    Normal,
+    /// Moderate pressure: cap K at [`THROTTLE_K_CAP`] — lookahead blocks
+    /// are exactly the blocks admission is starved for.
+    Throttle,
+    /// High pressure: disable speculation (K = 0) and cap the verify
+    /// expert budget at the no-speculation activation (MoE-Spec-style).
+    Halt,
+}
+
+/// K cap under [`DegradeLevel::Throttle`].
+pub const THROTTLE_K_CAP: usize = 2;
+
+/// Fold the pressure signal into a verdict. Thresholds are deliberately
+/// simple step functions of deterministic inputs (documented in
+/// rust/docs/faults.md):
+///
+/// * **Halt** when the pool is effectively exhausted (reserve shortfall
+///   with > 90% utilization), or the tightest waiting deadline has less
+///   than 25% of the SLO left;
+/// * **Throttle** when the pool runs hot (> 75% utilization), any
+///   shortfall was observed, the queue backs up past 2× the batch width,
+///   or the tightest waiting deadline is inside 75% of the SLO;
+/// * **Normal** otherwise — and the engine's planning path is bit-exact
+///   with the controller off.
+pub fn degrade_level(sig: &PressureSignal) -> DegradeLevel {
+    let slack_frac = if sig.slo_s > 0.0 && sig.min_slack_s.is_finite() {
+        sig.min_slack_s / sig.slo_s
+    } else {
+        f64::INFINITY
+    };
+    if (sig.shortfall_blocks > 0 && sig.pool_util > 0.90) || slack_frac < 0.25 {
+        return DegradeLevel::Halt;
+    }
+    if sig.pool_util > 0.75
+        || sig.shortfall_blocks > 0
+        || sig.queue_depth > 2 * sig.max_batch.max(1)
+        || slack_frac < 0.75
+    {
+        return DegradeLevel::Throttle;
+    }
+    DegradeLevel::Normal
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_specs_are_inert() {
+        for spec in ["off", "", "  off  "] {
+            let p = FaultPlan::parse(spec).unwrap();
+            assert!(p.is_off());
+            assert!(p.straggler_scales(1.0, 2).is_none());
+            assert!(p.dead_shards(1.0, 2).is_none());
+            assert_eq!(p.pool_frac(1.0), 1.0);
+            assert!(p.stalls().is_empty());
+            assert!(!p.has_kills());
+        }
+    }
+
+    #[test]
+    fn inline_clauses_parse_and_sort() {
+        let p = FaultPlan::parse(
+            "stall@2:retries=3,base-ms=10; straggler@0.5+1:shard=1,factor=2.5",
+        )
+        .unwrap();
+        assert_eq!(p.events.len(), 2);
+        // Sorted by t0: straggler first.
+        assert_eq!(
+            p.events[0],
+            FaultEvent::Straggler { t0: 0.5, dur_s: 1.0, shard: 1, factor: 2.5 }
+        );
+        assert_eq!(p.events[1], FaultEvent::Stall { t0: 2.0, retries: 3, base_s: 0.01 });
+        assert_eq!(p.stalls(), vec![(2.0, 3, 0.01)]);
+    }
+
+    #[test]
+    fn builtins_parse_and_chaos_has_everything() {
+        for (name, _) in BUILTIN_PLANS {
+            let p = FaultPlan::parse(name).unwrap();
+            assert!(!p.is_off(), "builtin {name} is empty");
+        }
+        let chaos = FaultPlan::parse("chaos").unwrap();
+        assert!(chaos.has_kills());
+        assert!(chaos.has_pool_shrink());
+        assert!(!chaos.stalls().is_empty());
+        assert!(chaos.straggler_scales(0.4, 2).is_some());
+    }
+
+    #[test]
+    fn windows_are_half_open_and_scales_multiply() {
+        let p = FaultPlan::parse("straggler@1+2:shard=0,factor=3").unwrap();
+        assert!(p.straggler_scales(0.999, 2).is_none());
+        assert_eq!(p.straggler_scales(1.0, 2).unwrap(), vec![3.0, 1.0]);
+        assert_eq!(p.straggler_scales(2.999, 2).unwrap(), vec![3.0, 1.0]);
+        assert!(p.straggler_scales(3.0, 2).is_none(), "window end is exclusive");
+        // Overlapping stragglers on one shard compound.
+        let q = FaultPlan::parse("straggler@0+2:shard=0,factor=2;straggler@1+2:shard=0,factor=3")
+            .unwrap();
+        assert_eq!(q.straggler_scales(1.5, 2).unwrap(), vec![6.0, 1.0]);
+    }
+
+    #[test]
+    fn shard_indices_wrap_modulo_topology() {
+        let p = FaultPlan::parse("shard-kill@0+1:shard=3").unwrap();
+        // 2-shard run: shard 3 wraps to shard 1.
+        assert_eq!(p.dead_shards(0.5, 2).unwrap(), vec![false, true]);
+        // 1-shard run: wraps to the only shard (the engine clamps the
+        // last-survivor case; the plan just reports the mask).
+        assert_eq!(p.dead_shards(0.5, 1).unwrap(), vec![true]);
+        assert!(p.dead_shards(1.5, 2).is_none(), "recovered after the window");
+    }
+
+    #[test]
+    fn pool_frac_takes_the_tightest_active_shrink() {
+        let p = FaultPlan::parse("pool-shrink@0+2:frac=0.6;pool-shrink@1+2:frac=0.3").unwrap();
+        assert_eq!(p.pool_frac(0.5), 0.6);
+        assert_eq!(p.pool_frac(1.5), 0.3);
+        assert_eq!(p.pool_frac(2.5), 0.3);
+        assert_eq!(p.pool_frac(3.5), 1.0);
+        assert!(p.has_pool_shrink());
+    }
+
+    #[test]
+    fn file_specs_roundtrip() {
+        let path = std::env::temp_dir().join("cascade_fault_plan_test.txt");
+        std::fs::write(
+            &path,
+            "# canonical two-fault plan\nstraggler@0.5+1:shard=1,factor=2\n\nstall@1:retries=1,base-ms=2 # inline comment\n",
+        )
+        .unwrap();
+        let p = FaultPlan::parse(&format!("file:{}", path.display())).unwrap();
+        assert_eq!(p.events.len(), 2);
+        assert_eq!(p.stalls(), vec![(1.0, 1, 2e-3)]);
+        let _ = std::fs::remove_file(&path);
+        assert!(FaultPlan::parse("file:").is_err());
+        assert!(FaultPlan::parse("file:/nonexistent/plan.txt").is_err());
+    }
+
+    #[test]
+    fn bad_specs_are_errors() {
+        for bad in [
+            "straggler@-1+2:shard=0",       // negative t0
+            "straggler@0+0:shard=0",        // zero window
+            "straggler@0+1:factor=0.5",     // speedup, not a fault
+            "stall@1+2:retries=2",          // stalls are instants
+            "stall@1:retries=0",            // no retries = no fault
+            "pool-shrink@0+1:frac=0",       // empty pool can't hold state
+            "pool-shrink@0+1:frac=1.5",     // growth is not a fault
+            "quake@0+1:shard=0",            // unknown kind
+            "straggler@0+1:zap=3",          // unknown param
+            "straggler",                    // missing @t0
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted bad spec {bad:?}");
+        }
+    }
+
+    fn calm() -> PressureSignal {
+        PressureSignal {
+            pool_util: 0.2,
+            shortfall_blocks: 0,
+            queue_depth: 0,
+            max_batch: 4,
+            slo_s: 0.0,
+            min_slack_s: f64::INFINITY,
+        }
+    }
+
+    #[test]
+    fn controller_is_monotone_in_pressure() {
+        assert_eq!(degrade_level(&calm()), DegradeLevel::Normal);
+        // Hot pool throttles.
+        let hot = PressureSignal { pool_util: 0.8, ..calm() };
+        assert_eq!(degrade_level(&hot), DegradeLevel::Throttle);
+        // Any observed shortfall throttles; with an exhausted pool it halts.
+        let short = PressureSignal { shortfall_blocks: 3, ..calm() };
+        assert_eq!(degrade_level(&short), DegradeLevel::Throttle);
+        let exhausted = PressureSignal { shortfall_blocks: 3, pool_util: 0.95, ..calm() };
+        assert_eq!(degrade_level(&exhausted), DegradeLevel::Halt);
+        // Deep queues throttle.
+        let backed_up = PressureSignal { queue_depth: 9, ..calm() };
+        assert_eq!(degrade_level(&backed_up), DegradeLevel::Throttle);
+        assert_eq!(
+            degrade_level(&PressureSignal { queue_depth: 8, ..calm() }),
+            DegradeLevel::Normal,
+            "threshold is strictly more than 2x batch"
+        );
+        // Deadline slack: tight throttles, critical halts.
+        let tight = PressureSignal { slo_s: 1.0, min_slack_s: 0.5, ..calm() };
+        assert_eq!(degrade_level(&tight), DegradeLevel::Throttle);
+        let critical = PressureSignal { slo_s: 1.0, min_slack_s: 0.1, ..calm() };
+        assert_eq!(degrade_level(&critical), DegradeLevel::Halt);
+        // No SLO => slack never triggers.
+        let no_slo = PressureSignal { slo_s: 0.0, min_slack_s: 0.0, ..calm() };
+        assert_eq!(degrade_level(&no_slo), DegradeLevel::Normal);
+        assert!(DegradeLevel::Normal < DegradeLevel::Throttle);
+        assert!(DegradeLevel::Throttle < DegradeLevel::Halt);
+    }
+}

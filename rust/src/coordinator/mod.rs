@@ -13,6 +13,7 @@ pub mod batch;
 pub mod eagle;
 pub mod eviction;
 pub mod engine;
+pub mod faults;
 pub mod pipeline;
 pub mod scheduler;
 
@@ -20,3 +21,39 @@ pub use backend::{Backend, BackendStep, BatchStep, PendingBatch, RealBackend, Sl
 pub use batch::BatchEngine;
 pub use engine::{Engine, RunSummary};
 pub use scheduler::Scheduler;
+
+/// Structured serve-path failure. The batched engine's hot loops used to
+/// surface scheduling dead-ends as ad-hoc `anyhow::bail!` strings (and a
+/// few hard `panic!`s); callers could neither distinguish a deadlock from
+/// an I/O error nor salvage the partial run. Every non-bug engine failure
+/// now carries this type (via `anyhow::Error`, so existing `?` plumbing is
+/// untouched) — `main` downcasts it to emit partial metrics and a distinct
+/// exit code instead of discarding the run. See rust/docs/faults.md.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// KV-pool deadlock with eviction off (or no feasible victim set):
+    /// nothing in flight can reserve its span and nothing can progress.
+    Deadlock { waiting: usize },
+    /// Every eviction candidate is pinned at `max_preemptions_per_req`:
+    /// the preemption cap turned pool pressure into a dead-end.
+    CappedDeadlock { cap: usize, waiting: usize },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Deadlock { waiting } => write!(
+                f,
+                "KV pool deadlock: {waiting} request(s) deferred and no slot can \
+                 reserve its span (grow --kv-pool-blocks or enable --eviction)"
+            ),
+            EngineError::CappedDeadlock { cap, waiting } => write!(
+                f,
+                "KV pool deadlock: {waiting} request(s) deferred and every eviction \
+                 candidate is pinned at the --max-preemptions cap ({cap})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}

@@ -59,6 +59,14 @@ pub struct Scheduler {
     queue: AdmissionQueue,
     arrivals: ArrivalProcess,
     budget: Budget,
+    /// When set (`serve --capture-trace <path>`), every arrival released
+    /// into the wait queue is recorded pre-clamp and written at the end of
+    /// `run_batched` as an [`ArrivalKind::Trace`]-replayable JSONL file —
+    /// turn any stochastic arrival run into a frozen regression workload.
+    ///
+    /// [`ArrivalKind::Trace`]: crate::workload::arrivals::ArrivalKind::Trace
+    capture_path: Option<String>,
+    captured: Vec<(f64, &'static str, usize)>,
 }
 
 impl Scheduler {
@@ -70,7 +78,49 @@ impl Scheduler {
 
     /// Scheduler over an explicit arrival process (open-loop serving).
     pub fn with_arrivals(arrivals: ArrivalProcess, budget: Budget) -> Self {
-        Self { queue: AdmissionQueue::new(), arrivals, budget }
+        Self {
+            queue: AdmissionQueue::new(),
+            arrivals,
+            budget,
+            capture_path: None,
+            captured: Vec::new(),
+        }
+    }
+
+    /// Record every arrival this run releases and write them to `path` as
+    /// a replayable arrival trace when `run_batched` completes.
+    pub fn capture_trace(&mut self, path: &str) {
+        self.capture_path = Some(path.to_string());
+    }
+
+    /// Note one queue entry in the capture buffer (no-op unless
+    /// `capture_trace` armed it). Entries carry the *pre-clamp*
+    /// `max_new_tokens`: the trace records what arrived, not what the
+    /// run's token budget happened to leave of it.
+    fn record_arrival(&mut self, arrival_s: f64, req: &Request) {
+        if self.capture_path.is_some() {
+            self.captured.push((arrival_s, req.task.name(), req.max_new_tokens));
+        }
+    }
+
+    /// Write the captured arrivals (sorted by time; the capture order is
+    /// already chronological per arrival site, but closed-loop pulls can
+    /// interleave with due-arrival releases) in the `ArrivalKind::Trace`
+    /// line format: `{"t": <s>, "task": "<name>", "max_new": <n>}`.
+    fn write_capture(&mut self) -> Result<()> {
+        let Some(path) = self.capture_path.as_ref() else {
+            return Ok(());
+        };
+        let mut entries = std::mem::take(&mut self.captured);
+        entries.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut out = String::new();
+        for (t, task, max_new) in &entries {
+            out.push_str(&format!(
+                "{{\"t\": {t}, \"task\": \"{task}\", \"max_new\": {max_new}}}\n"
+            ));
+        }
+        std::fs::write(path, out)
+            .map_err(|e| anyhow::anyhow!("writing arrival trace {path}: {e}"))
     }
 
     /// Enqueue an explicit request (tests / replay); it is treated as
@@ -145,6 +195,7 @@ impl Scheduler {
                         return Ok(()); // nothing has arrived yet
                     }
                     let req = self.arrivals.pull_closed();
+                    self.record_arrival(engine.clock_s(), &req);
                     self.queue.push(req, engine.clock_s())
                 }
             };
@@ -181,11 +232,24 @@ impl Scheduler {
                 && served < self.budget.max_requests
             {
                 for (arrival_s, req) in self.arrivals.due(engine.clock_s()) {
+                    self.record_arrival(arrival_s, &req);
                     self.queue.push(req, arrival_s);
                 }
             }
+            // Load shedding (degradation controller, rust/docs/faults.md):
+            // with an SLO configured, entries whose TTFT deadline already
+            // passed can only be served as goodput misses — drop them
+            // before they burn a slot. Opt-in: `--controller off` (the
+            // default) never sheds, keeping admission bit-exact.
+            if engine.cfg.controller.is_on() && engine.cfg.slo_s > 0.0 {
+                let shed = self.queue.shed_overdue(engine.clock_s(), engine.cfg.slo_s);
+                engine.note_shed(shed);
+            }
             self.admit_phase(engine, &mut served)?;
             engine.set_queue_depth(self.queue.len());
+            engine.set_queue_deadline(
+                self.queue.min_deadline_s(engine.cfg.slo_s).unwrap_or(f64::INFINITY),
+            );
             if !engine.step_iteration()? {
                 // An idle step means every slot was swept.
                 debug_assert_eq!(engine.active(), 0, "idle step left active slots");
@@ -214,6 +278,7 @@ impl Scheduler {
                 }
             }
         }
+        self.write_capture()?;
         Ok(engine.finish())
     }
 }
@@ -293,5 +358,35 @@ mod tests {
         assert!(m.run.total_tokens() <= 300, "batched overshoot: {}", m.run.total_tokens());
         assert!(m.run.total_tokens() > 0);
         assert!(m.run.requests.len() >= 3);
+    }
+
+    #[test]
+    fn captured_trace_is_replayable() {
+        let reg = Registry::load_or_builtin(default_artifacts_dir());
+        let path = std::env::temp_dir().join("cascade_capture_test.jsonl");
+        let path = path.to_string_lossy().into_owned();
+        let cfg = EngineConfig { model: "mixtral".into(), max_batch: 2, ..Default::default() };
+        let mut engine = BatchEngine::sim(&reg, cfg, PolicyKind::Static(2)).unwrap();
+        let stream = RequestStream::new(Workload::single(Task::Code), 5, 100);
+        let arrivals =
+            ArrivalProcess::new(ArrivalKind::Poisson { rate: 50.0 }, stream, 7).unwrap();
+        let mut sched = Scheduler::with_arrivals(
+            arrivals,
+            Budget { max_tokens: 200, max_requests: 4 },
+        );
+        sched.capture_trace(&path);
+        let m = sched.run_batched(&mut engine).unwrap();
+        assert!(!m.run.requests.is_empty());
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines = text.lines().count();
+        assert!(lines > 0, "capture recorded nothing");
+        // The capture loads as a replayable trace with the same arrivals.
+        let stream2 = RequestStream::new(Workload::single(Task::Code), 5, 100);
+        let mut replay =
+            ArrivalProcess::new(ArrivalKind::Trace { path: path.clone() }, stream2, 7)
+                .unwrap();
+        let due = replay.due(f64::INFINITY);
+        assert_eq!(due.len(), lines);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -50,6 +50,14 @@ pub struct IterCost {
     /// on the decode clock — TPOT and utility honestly reflect the thrash.
     /// Always 0 with `eviction = off`.
     pub reprefill_s: f64,
+    /// Transient-stall retry time charged to this iteration: when a fault
+    /// plan injects a backend stall (rust/docs/faults.md), the failed step
+    /// is retried with exponential backoff and every wasted attempt — the
+    /// lost verify windows plus the backoff sleeps — is billed here. Like
+    /// `reprefill_s` it extends the decode clock (TPOT sees the outage
+    /// honestly) without polluting the verify term the utility signal
+    /// prices speculation against. Always 0 with `--faults off`.
+    pub stall_s: f64,
 }
 
 impl IterCost {
@@ -65,6 +73,7 @@ impl IterCost {
             + self.overhead_s
             + self.alltoall_s
             + self.reprefill_s
+            + self.stall_s
     }
 
     /// Drafting time that actually extends the iteration (not hidden under
@@ -133,6 +142,7 @@ impl GpuCostModel {
             draft_hidden_s: 0.0,
             alltoall_s: 0.0,
             reprefill_s: 0.0,
+            stall_s: 0.0,
         }
     }
 
@@ -185,6 +195,7 @@ impl GpuCostModel {
             draft_hidden_s: 0.0,
             alltoall_s: 0.0,
             reprefill_s: 0.0,
+            stall_s: 0.0,
         }
     }
 
@@ -259,6 +270,52 @@ impl GpuCostModel {
             draft_hidden_s: 0.0,
             alltoall_s: self.alltoall_s(n_shards, total_tokens),
             reprefill_s: 0.0,
+            stall_s: 0.0,
+        }
+    }
+
+    /// Straggler-degraded variant of [`Self::sharded_batch_verify_cost`]
+    /// for fault injection (rust/docs/faults.md): a straggling shard runs
+    /// its per-layer expert fetch `factor`× slower, so the per-layer
+    /// critical path is `max_s(load[l][s] × scale[s])` — a *time* scale,
+    /// not extra experts. The caller therefore pre-applies the capacity and
+    /// activation caps to the raw per-shard loads **before** scaling and
+    /// passes the effective per-layer maxima as `f64`; no cap is re-applied
+    /// here (clipping a slowdown at the shard's expert capacity would
+    /// silently erase the fault). Dense models have no expert term to
+    /// degrade. Only called while a straggler window is active, so the
+    /// fault-free path is bit-exact by construction.
+    pub fn degraded_sharded_batch_verify_cost(
+        &self,
+        effective_max_per_mini_layer: &[f64],
+        n_shards: usize,
+        total_tokens: usize,
+        total_drafted: usize,
+        drafting_requests: usize,
+        drafter: DrafterKind,
+    ) -> IterCost {
+        let expert_s = if self.spec.is_moe() && !effective_max_per_mini_layer.is_empty() {
+            let mean_max = effective_max_per_mini_layer.iter().sum::<f64>()
+                / effective_max_per_mini_layer.len() as f64;
+            self.spec.layers as f64 * mean_max.max(0.0) * self.spec.expert_bytes()
+                / self.hw.eff_bw()
+        } else {
+            0.0
+        };
+        IterCost {
+            base_s: self.spec.base_bytes() / self.hw.eff_bw(),
+            expert_s,
+            draft_s: self.draft_cost_batch(total_drafted, drafting_requests, drafter),
+            reject_s: if total_drafted > 0 {
+                self.hw.reject_fixed_s + self.hw.reject_per_token_s * total_drafted as f64
+            } else {
+                0.0
+            },
+            overhead_s: self.hw.iter_overhead_s,
+            draft_hidden_s: 0.0,
+            alltoall_s: self.alltoall_s(n_shards, total_tokens),
+            reprefill_s: 0.0,
+            stall_s: 0.0,
         }
     }
 
@@ -363,6 +420,7 @@ impl GpuCostModel {
             draft_hidden_s: 0.0,
             alltoall_s: 0.0,
             reprefill_s: 0.0,
+            stall_s: 0.0,
         }
     }
 
@@ -542,6 +600,58 @@ mod tests {
         let charged = IterCost { reprefill_s: 2e-3, ..plain };
         assert!((charged.total() - (plain.total() + 2e-3)).abs() < 1e-15);
         assert!((charged.verify_s() - plain.verify_s()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn stalls_charge_the_decode_clock_not_verify() {
+        // A transient-stall retry extends the iteration (TPOT-visible) but
+        // is not verification work: total() grows by exactly the charge,
+        // verify_s() is untouched, and the fault-free default is free.
+        let m = model("mixtral");
+        let plain = m.verify_cost(&[6, 6], 4, 3, DrafterKind::Ngram);
+        assert_eq!(plain.stall_s, 0.0);
+        let stalled = IterCost { stall_s: 5e-3, ..plain };
+        assert!((stalled.total() - (plain.total() + 5e-3)).abs() < 1e-15);
+        assert!((stalled.verify_s() - plain.verify_s()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn degraded_sharded_cost_scales_expert_term_only() {
+        let m = model("mixtral"); // 8 experts, 2/shard at 4 shards
+        let healthy = m.sharded_batch_verify_cost(&[2, 2], 4, 16, 12, 4, DrafterKind::Ngram);
+        // Unit scale reproduces the healthy sharded charge bit-for-bit
+        // (loads already below every cap, so no clipping differs).
+        let unit =
+            m.degraded_sharded_batch_verify_cost(&[2.0, 2.0], 4, 16, 12, 4, DrafterKind::Ngram);
+        assert_eq!(healthy, unit, "unit-scale degraded cost diverged");
+        // A 4x straggler on the critical shard quadruples the expert term
+        // and nothing else — the fault slows fetches, it adds no experts.
+        let slow =
+            m.degraded_sharded_batch_verify_cost(&[8.0, 8.0], 4, 16, 12, 4, DrafterKind::Ngram);
+        assert!((slow.expert_s - 4.0 * healthy.expert_s).abs() < 1e-15);
+        assert!((slow.base_s - healthy.base_s).abs() < 1e-15);
+        assert!((slow.alltoall_s - healthy.alltoall_s).abs() < 1e-15);
+        // The scaled load may exceed the shard's expert capacity: that is
+        // the point (time, not fetch count), so no cap clips it.
+        let way_over = m.degraded_sharded_batch_verify_cost(
+            &[80.0, 80.0],
+            4,
+            16,
+            12,
+            4,
+            DrafterKind::Ngram,
+        );
+        assert!(way_over.expert_s > slow.expert_s);
+        // Dense models have no expert term to degrade.
+        let dense = model("llama").degraded_sharded_batch_verify_cost(
+            &[8.0, 8.0],
+            4,
+            16,
+            12,
+            4,
+            DrafterKind::Ngram,
+        );
+        assert_eq!(dense.expert_s, 0.0);
     }
 
     #[test]

@@ -85,6 +85,27 @@ impl ExpertPlacement {
             .collect()
     }
 
+    /// Round-robin placement over the *surviving* shards only — the
+    /// fault-injection recovery path (rust/docs/faults.md): when a shard
+    /// dies, its experts must be re-hosted on the survivors so verify can
+    /// continue (at a worse critical path — fewer shards hold the same
+    /// union). `dead[s]` marks shard `s` failed; experts are dealt
+    /// round-robin across the alive shards in index order, keeping weight
+    /// balance among survivors. The shard *count* is preserved so
+    /// `shard_loads` rows stay comparable across the failure window; dead
+    /// shards simply end up with zero residents. With every shard dead (or
+    /// an empty mask) this falls back to the fully balanced placement.
+    pub fn balanced_surviving(n_experts: usize, n_shards: usize, dead: &[bool]) -> Self {
+        let n_shards = n_shards.max(1);
+        let alive: Vec<usize> =
+            (0..n_shards).filter(|&s| !dead.get(s).copied().unwrap_or(false)).collect();
+        if alive.is_empty() || alive.len() == n_shards {
+            return Self::balanced(n_experts, n_shards);
+        }
+        let assign = (0..n_experts).map(|e| alive[e % alive.len()]).collect();
+        Self { n_shards, assign }
+    }
+
     /// Per-layer max-over-shards load — the expert-parallel critical path
     /// the sharded cost model charges.
     pub fn max_loads(&self, per_layer_ids: &[Vec<usize>]) -> Vec<usize> {
@@ -307,6 +328,31 @@ mod tests {
         for e in 0..16 {
             assert_eq!(pa.shard_of(e), pb.shard_of(e));
         }
+    }
+
+    #[test]
+    fn surviving_placement_rehosts_dead_shards_experts() {
+        // Shard 1 of 4 dead: all 8 experts land on {0, 2, 3}, balanced.
+        let p = ExpertPlacement::balanced_surviving(8, 4, &[false, true, false, false]);
+        assert_eq!(p.n_shards(), 4, "topology width is preserved across the failure");
+        let sizes = p.shard_sizes();
+        assert_eq!(sizes[1], 0, "dead shard must hold no experts");
+        assert_eq!(sizes.iter().sum::<usize>(), 8);
+        assert!(sizes.iter().max().unwrap() - [sizes[0], sizes[2], sizes[3]].iter().min().unwrap() <= 1);
+        // The survivors carry a worse critical path than the healthy map.
+        let ids = vec![(0..8).collect::<Vec<_>>()];
+        let healthy = ExpertPlacement::balanced(8, 4);
+        assert!(p.max_loads(&ids)[0] > healthy.max_loads(&ids)[0]);
+        // No dead shards (or an all-dead mask) degenerates to balanced.
+        let none = ExpertPlacement::balanced_surviving(8, 4, &[false; 4]);
+        let all = ExpertPlacement::balanced_surviving(8, 4, &[true; 4]);
+        for e in 0..8 {
+            assert_eq!(none.shard_of(e), healthy.shard_of(e));
+            assert_eq!(all.shard_of(e), healthy.shard_of(e));
+        }
+        // A short mask treats unmentioned shards as alive.
+        let short = ExpertPlacement::balanced_surviving(6, 3, &[true]);
+        assert_eq!(short.shard_sizes(), vec![0, 3, 3]);
     }
 
     #[test]

@@ -1,0 +1,154 @@
+//! Fault-injection & graceful-degradation experiment (extension beyond the
+//! paper's fault-free evaluation): goodput under deterministic chaos, with
+//! the degradation controller on vs off.
+//!
+//! Every cell is the arrivals experiment's contended open-loop shape —
+//! bursty arrivals into a half-working-set KV pool with LRU eviction, a
+//! 500 ms TTFT SLO — plus a [`FaultPlan`] scheduled on the virtual clock
+//! (stragglers, stalls, shard kills, pool shrinks; rust/docs/faults.md)
+//! and 2 expert-parallel shards so shard-scoped faults have a topology to
+//! act on. The headline comparison is the chaos plan (one of everything)
+//! served with `--controller off` vs `adaptive`: the controller cannot
+//! un-fail hardware, but by throttling speculation under pressure and
+//! shedding unmeetable arrivals it keeps the SLO-goodput slowdown bounded.
+//! Faults and degradation move time and scheduling, never token values
+//! (rust/tests/chaos.rs), so the goodput numbers are comparable
+//! request-for-request. Shared by `figure faults` and the `bench`
+//! BENCH_faults.json emitter so the axes can never drift.
+//!
+//! [`FaultPlan`]: crate::coordinator::faults::FaultPlan
+
+use crate::config::{AdmissionKind, ControllerKind, EvictionKind};
+use crate::coordinator::faults::BUILTIN_PLANS;
+use crate::coordinator::scheduler::{Budget, Scheduler};
+use crate::experiments::preemption::constrained_pool_blocks;
+use crate::experiments::runner::ExpCtx;
+use crate::metrics::BatchRunMetrics;
+use crate::spec::policy::PolicyKind;
+use crate::util::table::{ms, Table};
+use crate::workload::arrivals::{ArrivalKind, ArrivalProcess};
+use crate::workload::{RequestStream, Workload};
+use anyhow::Result;
+
+/// One fault-injection serving cell.
+pub struct FaultCell {
+    /// `--faults` spec (`off`, a builtin plan name, or inline clauses).
+    pub faults: String,
+    pub controller: ControllerKind,
+    pub arrivals: ArrivalKind,
+    /// Half-working-set pool (contention is what the controller manages).
+    pub pool_blocks: usize,
+    pub eviction: EvictionKind,
+    /// TTFT SLO on the virtual clock (goodput + shedding + EDF slack).
+    pub slo_s: f64,
+    pub max_new: usize,
+    /// Output-token budget of the cell.
+    pub tokens: usize,
+}
+
+/// Requests per cell the budget is sized for (matches the arrivals cells).
+const CELL_REQUESTS: usize = 12;
+
+/// The canonical chaos cell: the arrivals experiment's contended shape
+/// with a fault plan layered on top.
+pub fn chaos_cell(faults: &str, controller: ControllerKind, seed: u64) -> FaultCell {
+    let max_new = 120usize;
+    let sample = RequestStream::new(cell_workload(), seed, max_new).take(8);
+    FaultCell {
+        faults: faults.to_string(),
+        controller,
+        arrivals: ArrivalKind::bursty(2.0),
+        pool_blocks: constrained_pool_blocks(&sample, 4),
+        eviction: EvictionKind::Lru,
+        slo_s: 0.5,
+        max_new,
+        tokens: CELL_REQUESTS * max_new,
+    }
+}
+
+fn cell_workload() -> Workload {
+    Workload::by_name("code+math").expect("known mix")
+}
+
+/// Serve one fault cell on the sim backend at batch 4 with 2 expert
+/// shards (shard-scoped faults need a topology to act on).
+pub fn run_cell(
+    ctx: &ExpCtx,
+    model: &str,
+    policy: &PolicyKind,
+    cell: &FaultCell,
+) -> Result<BatchRunMetrics> {
+    let mut cfg = ctx.batch_cfg(model, 4);
+    cfg.max_new_tokens = cell.max_new;
+    cfg.kv_pool_blocks = cell.pool_blocks;
+    cfg.eviction = cell.eviction;
+    cfg.max_preemptions_per_req = 64;
+    cfg.admission = AdmissionKind::Edf;
+    cfg.slo_s = cell.slo_s;
+    cfg.shards = 2;
+    cfg.faults = cell.faults.clone();
+    cfg.controller = cell.controller;
+    let mut engine = ctx.batch_engine(cfg, policy)?;
+    let stream = RequestStream::new(cell_workload(), ctx.seed, cell.max_new);
+    let arrivals = ArrivalProcess::new(cell.arrivals.clone(), stream, ctx.seed)?;
+    let mut sched = Scheduler::with_arrivals(
+        arrivals,
+        Budget { max_tokens: cell.tokens, max_requests: 10_000 },
+    );
+    sched.run_batched(&mut engine)
+}
+
+/// `figure faults`: SLO goodput, latency tails, and fault telemetry for
+/// every builtin plan (plus fault-free), controller off vs adaptive.
+pub fn faults(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let probe = chaos_cell("off", ControllerKind::Off, ctx.seed);
+    let mut t = Table::new(
+        format!(
+            "Fault injection (sim backend, code+math mix, batch 4, 2 shards): \
+             {} into a {}-block pool (eviction=lru, admission=edf), SLO {:.0}ms TTFT",
+            probe.arrivals.label(),
+            probe.pool_blocks,
+            1e3 * probe.slo_s
+        ),
+        &[
+            "faults",
+            "controller",
+            "reqs",
+            "tokens",
+            "TPOT",
+            "TTFT p95",
+            "E2E p99",
+            "goodput",
+            "shed",
+            "events",
+            "stall ms",
+            "degraded",
+            "recovery s",
+        ],
+    );
+    let policy = PolicyKind::Static(3);
+    let mut plans: Vec<&str> = vec!["off"];
+    plans.extend(BUILTIN_PLANS.iter().map(|(name, _)| *name));
+    for plan in plans {
+        for controller in [ControllerKind::Off, ControllerKind::Adaptive] {
+            let cell = chaos_cell(plan, controller, ctx.seed);
+            let m = run_cell(ctx, "mixtral", &policy, &cell)?;
+            t.row(vec![
+                plan.into(),
+                controller.label().into(),
+                m.run.requests.len().to_string(),
+                m.run.total_tokens().to_string(),
+                ms(m.tpot_s()),
+                ms(m.run.ttft_percentile(0.95)),
+                ms(m.run.e2e_percentile(0.99)),
+                format!("{:.0}%", 100.0 * m.run.slo_goodput(cell.slo_s)),
+                m.sheds.to_string(),
+                m.fault_events.to_string(),
+                format!("{:.1}", 1e3 * m.stall_s()),
+                format!("{:.0}%", 100.0 * m.degraded_fraction()),
+                format!("{:.2}", m.recovery_s),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}

@@ -4,6 +4,7 @@
 
 pub mod arrivals;
 pub mod batching;
+pub mod faults;
 pub mod figures;
 pub mod pipeline;
 pub mod preemption;
@@ -116,6 +117,11 @@ pub fn all() -> Vec<Experiment> {
             id: "arrivals",
             caption: "EXTENSION: open-loop arrivals, TTFT/queueing-delay/E2E percentiles per admission policy (sim)",
             run: arrivals::arrivals,
+        },
+        Experiment {
+            id: "faults",
+            caption: "EXTENSION: fault injection, SLO goodput under chaos with the degradation controller on vs off (sim)",
+            run: faults::faults,
         },
     ]
 }

@@ -351,6 +351,18 @@ impl KvBlockPool {
         self.preemptions.len()
     }
 
+    /// Retarget the pool's capacity mid-run (fault injection's pool-shrink
+    /// pressure spike, rust/docs/faults.md). Committed state is never
+    /// revoked: the capacity is clamped to at least the blocks currently
+    /// in use (and at least 1), so `free_blocks` cannot underflow and
+    /// `check_invariants` keeps holding — a shrink below the working set
+    /// takes effect progressively as requests finish or are evicted.
+    /// Returns the capacity actually applied.
+    pub fn set_capacity(&mut self, blocks: usize) -> usize {
+        self.total_blocks = blocks.max(self.blocks_in_use()).max(1);
+        self.total_blocks
+    }
+
     /// Fraction of pool capacity in use (committed + lookahead tokens).
     pub fn utilization(&self) -> f64 {
         let used: usize = self.allocs.values().map(|a| a.committed + a.lookahead).sum();
@@ -539,6 +551,34 @@ mod tests {
         pool.release(1);
         assert_eq!(pool.reserve_shortfall(2, 1), 0);
         assert!(pool.can_reserve(2, 1));
+    }
+
+    #[test]
+    fn set_capacity_shrinks_without_revoking_committed_state() {
+        let mut pool = KvBlockPool::new(8, 16);
+        pool.admit(1, 33).unwrap(); // 3 blocks
+        pool.admit(2, 17).unwrap(); // 2 blocks
+        assert_eq!(pool.blocks_in_use(), 5);
+        // Shrink below the working set: clamps to blocks_in_use, so
+        // free_blocks cannot underflow and invariants keep holding.
+        assert_eq!(pool.set_capacity(2), 5);
+        assert_eq!(pool.total_blocks(), 5);
+        assert_eq!(pool.free_blocks(), 0);
+        pool.check_invariants().unwrap();
+        assert!(!pool.can_admit(1));
+        // The shrink tightens as requests drain…
+        pool.release(1);
+        assert_eq!(pool.set_capacity(2), 2);
+        assert_eq!(pool.free_blocks(), 0);
+        pool.check_invariants().unwrap();
+        // …and growing back restores admission headroom.
+        assert_eq!(pool.set_capacity(8), 8);
+        assert!(pool.can_admit(16));
+        assert_eq!(pool.free_blocks(), 6);
+        // Capacity never drops to zero even on an empty pool.
+        pool.release(2);
+        assert_eq!(pool.set_capacity(0), 1);
+        pool.check_invariants().unwrap();
     }
 
     #[test]

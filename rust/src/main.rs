@@ -15,7 +15,7 @@
 //! `Args` below for the tiny flag grammar.
 
 use anyhow::{bail, Context, Result};
-use cascade::config::EngineConfig;
+use cascade::config::{ControllerKind, EngineConfig};
 use cascade::coordinator::batch::BatchEngine;
 use cascade::coordinator::engine::Engine;
 use cascade::coordinator::scheduler::{Budget, Scheduler};
@@ -88,6 +88,8 @@ USAGE:
                  [--guide-strength 48] [--max-new 200]
                  [--arrivals closed|poisson|bursty|trace:<path>] [--rate R]
                  [--admission fcfs|parked-first|edf] [--slo-ms MS]
+                 [--faults off|straggler|stall|shard-kill|pool-shrink|chaos|file:<path>|<spec>]
+                 [--controller off|adaptive] [--capture-trace out.jsonl]
   cascade sweep  [--tokens 300] [--out-dir results] [--shards 1,2,4] [--rate 0.5,1,2]
                  (continuous-batching comparison: batch=1 vs 4, static-K vs Cascade;
                   --shards runs the expert-parallel K-vs-shards axis instead;
@@ -96,11 +98,14 @@ USAGE:
                  [--out-sharding BENCH_sharding.json]
                  [--out-preemption BENCH_preemption.json]
                  [--out-arrivals BENCH_arrivals.json]
+                 [--out-faults BENCH_faults.json]
                  (serial vs pipelined TPOT/bubble-fraction table at batch 1/4,
                   sharded TPOT at shards 1/2/4 x batch 1/4, eviction-policy
-                  throughput under a half-working-set pool, and per-admission
-                  p95 queueing delay under bursty arrivals, as JSON for CI)
-  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|batch|pipeline|sharding|preemption|arrivals|all>
+                  throughput under a half-working-set pool, per-admission
+                  p95 queueing delay under bursty arrivals, and chaos-plan
+                  goodput with the degradation controller on vs off, as
+                  JSON for CI)
+  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|batch|pipeline|sharding|preemption|arrivals|faults|all>
                  [--backend real|sim] [--tokens 300] [--out-dir results]
 
   --batch N > 1 serves through the continuous-batching engine: one fused
@@ -139,6 +144,17 @@ USAGE:
   earliest deadline first against --slo-ms). closed + fcfs (the default)
   is bit-exact with the legacy closed-loop scheduler (see
   rust/docs/serving.md).
+
+  --faults injects a deterministic fault plan on the virtual clock:
+  per-shard stragglers, transient verify stalls with backoff retries,
+  shard kills (placement rebuilt on survivors, victim KV replayed back),
+  and KV-pool shrinks. --controller adaptive turns on graceful
+  degradation: pool/queue/deadline pressure throttles K, then disables
+  speculation and caps the verify expert budget, while arrivals whose
+  --slo-ms deadline already passed are shed before admission. Completed
+  requests stay bit-exact with the fault-free run; --capture-trace
+  records the run's arrivals as a replayable trace file. Defaults (off /
+  off) are bit-exact with pre-fault builds. See rust/docs/faults.md.
 "
     );
     std::process::exit(2)
@@ -254,6 +270,14 @@ fn serve(args: &Args) -> Result<()> {
     let admission = cascade::config::AdmissionKind::parse(&args.get("admission", "fcfs"))?;
     let slo_s = args.get_f64("slo-ms", 0.0)? / 1e3;
     anyhow::ensure!(slo_s >= 0.0, "--slo-ms cannot be negative");
+    // Fault plan + degradation controller (rust/docs/faults.md). The spec
+    // is validated here, at the CLI boundary — the engine constructor is
+    // infallible and treats an unparseable spec as fault-free.
+    let faults_spec = args.get("faults", "off");
+    let fault_plan = cascade::coordinator::faults::FaultPlan::parse(&faults_spec)
+        .with_context(|| format!("--faults {faults_spec:?}"))?;
+    let controller = cascade::config::ControllerKind::parse(&args.get("controller", "off"))?;
+    let capture_trace = args.get("capture-trace", "");
     let d = EngineConfig::default();
     let ngram_max = args.get_usize("ngram-max", d.ngram_max)?;
     let ngram_min = args.get_usize("ngram-min", d.ngram_min)?;
@@ -286,7 +310,10 @@ fn serve(args: &Args) -> Result<()> {
         || eviction.is_on()
         || !arrival_kind.is_closed()
         || admission != cascade::config::AdmissionKind::Fcfs
-        || slo_s > 0.0;
+        || slo_s > 0.0
+        || !fault_plan.is_off()
+        || controller.is_on()
+        || !capture_trace.is_empty();
     let cfg = EngineConfig {
         model: model.clone(),
         drafter,
@@ -304,6 +331,8 @@ fn serve(args: &Args) -> Result<()> {
         max_preemptions_per_req: max_preemptions,
         admission,
         slo_s,
+        faults: faults_spec.clone(),
+        controller,
         ..EngineConfig::default()
     };
     let budget = Budget { max_tokens: tokens, max_requests: 10_000 };
@@ -315,6 +344,9 @@ fn serve(args: &Args) -> Result<()> {
             cascade::workload::arrivals::ArrivalProcess::new(arrival_kind.clone(), stream, seed)?;
         Scheduler::with_arrivals(arrivals, budget)
     };
+    if !capture_trace.is_empty() {
+        sched.capture_trace(&capture_trace);
+    }
 
     if use_batch_engine {
         // Continuous-batching path: fused verify steps, shared KV pool,
@@ -331,7 +363,29 @@ fn serve(args: &Args) -> Result<()> {
             );
         }
         let t0 = std::time::Instant::now(); // lint:allow(wall-clock): host wall-time table row only
-        let m = sched.run_batched(&mut engine)?;
+        let m = match sched.run_batched(&mut engine) {
+            Ok(m) => m,
+            // A structured engine dead-end (KV pool deadlock) is not a
+            // crash: salvage the partial run — completed requests and
+            // iteration telemetry are intact in the engine — and exit with
+            // a distinct code so harnesses can tell "stuck" from "broken".
+            Err(err) => match err.downcast_ref::<cascade::coordinator::EngineError>() {
+                Some(engine_err) => {
+                    eprintln!("error: {engine_err}");
+                    let partial = engine.finish();
+                    eprintln!(
+                        "partial run before deadlock: {} request(s) completed, \
+                         {} iteration(s), {} output tokens, clock {:.3}s",
+                        partial.run.requests.len(),
+                        partial.iters.len(),
+                        partial.run.total_tokens(),
+                        partial.clock_s
+                    );
+                    std::process::exit(3);
+                }
+                None => return Err(err),
+            },
+        };
         let wall = t0.elapsed();
 
         let mut t = Table::new(
@@ -423,6 +477,24 @@ fn serve(args: &Args) -> Result<()> {
             ]);
         }
         t.row(vec!["admission".into(), admission.label().into()]);
+        if !engine.faults().is_off() || controller.is_on() {
+            t.row(vec!["faults".into(), faults_spec.clone()]);
+            t.row(vec!["controller".into(), controller.label().into()]);
+            t.row(vec!["fault events fired".into(), m.fault_events.to_string()]);
+            t.row(vec![
+                "stall retries / time".into(),
+                format!("{} / {:.2}ms", m.total_stall_retries(), 1e3 * m.stall_s()),
+            ]);
+            t.row(vec![
+                "degraded iterations".into(),
+                format!("{:.1}%", 100.0 * m.degraded_fraction()),
+            ]);
+            t.row(vec!["shed requests".into(), m.sheds.to_string()]);
+            t.row(vec![
+                "kill recovery (sim)".into(),
+                format!("{:.2}s", m.recovery_s),
+            ]);
+        }
         if !arrival_kind.is_closed() {
             t.row(vec!["arrivals".into(), arrival_kind.label()]);
             t.row(vec![
@@ -923,6 +995,104 @@ fn bench(args: &Args) -> Result<()> {
         ("rows", json::arr(arr_rows)),
     ]);
     write_json_artifact(&arrivals_out, &arr_doc)?;
+
+    // ---- Fault-injection bench (BENCH_faults.json) ----------------------
+    // The chaos plan (one of everything: straggler, stall, shard kill,
+    // pool shrink) under the arrivals bench's contended open-loop shape,
+    // served fault-free, with faults and the controller off, and with
+    // faults and the adaptive degradation controller. The controller
+    // cannot un-fail hardware — chaos always costs goodput — but it bounds
+    // the slowdown: throttled speculation relieves the shrunken pool and
+    // unmeetable arrivals are shed before they burn verify time. Shares
+    // its cell runner with `figure faults`.
+    let faults_out = args.get("out-faults", "BENCH_faults.json");
+    let fprobe = experiments::faults::chaos_cell("off", ControllerKind::Off, seed);
+    let mut ft = Table::new(
+        format!(
+            "faults bench: mixtral/{task}/static-k3 (sim, batch 4, 2 shards, {}, pool {} blocks)",
+            fprobe.arrivals.label(),
+            fprobe.pool_blocks
+        ),
+        &[
+            "faults",
+            "controller",
+            "reqs",
+            "tokens",
+            "TPOT",
+            "goodput",
+            "E2E p99",
+            "shed",
+            "events",
+            "stall retries",
+            "degraded",
+            "recovery s",
+        ],
+    );
+    let mut fault_rows: Vec<json::Value> = Vec::new();
+    let mut tpot_fault_free = f64::NAN;
+    for (plan, controller) in [
+        ("off", ControllerKind::Off),
+        ("chaos", ControllerKind::Off),
+        ("chaos", ControllerKind::Adaptive),
+    ] {
+        let cell = experiments::faults::chaos_cell(plan, controller, seed);
+        let m = experiments::faults::run_cell(&ctx, "mixtral", &policy, &cell)?;
+        let tpot = m.tpot_s();
+        if plan == "off" {
+            tpot_fault_free = tpot;
+        }
+        ft.row(vec![
+            plan.into(),
+            controller.label().into(),
+            m.run.requests.len().to_string(),
+            m.run.total_tokens().to_string(),
+            ms(tpot),
+            format!("{:.0}%", 100.0 * m.run.slo_goodput(cell.slo_s)),
+            ms(m.run.e2e_percentile(0.99)),
+            m.sheds.to_string(),
+            m.fault_events.to_string(),
+            m.total_stall_retries().to_string(),
+            format!("{:.0}%", 100.0 * m.degraded_fraction()),
+            format!("{:.2}", m.recovery_s),
+        ]);
+        fault_rows.push(json::obj(vec![
+            ("faults", json::str(plan)),
+            ("controller", json::str(controller.label())),
+            ("requests_completed", json::num(m.run.requests.len() as f64)),
+            ("tokens", json::num(m.run.total_tokens() as f64)),
+            ("tpot_ms", json::num(1e3 * tpot)),
+            ("tpot_slowdown_vs_fault_free", json::num(tpot / tpot_fault_free)),
+            ("slo_ms", json::num(1e3 * cell.slo_s)),
+            ("slo_goodput", json::num(m.run.slo_goodput(cell.slo_s))),
+            ("ttft_p95_ms", json::num(1e3 * m.run.ttft_percentile(0.95))),
+            ("e2e_p99_ms", json::num(1e3 * m.run.e2e_percentile(0.99))),
+            ("sheds", json::num(m.sheds as f64)),
+            ("fault_events", json::num(m.fault_events as f64)),
+            ("stall_retries", json::num(m.total_stall_retries() as f64)),
+            ("stall_ms", json::num(1e3 * m.stall_s())),
+            ("degraded_fraction", json::num(m.degraded_fraction())),
+            ("recovery_s", json::num(m.recovery_s)),
+            ("evictions", json::num(m.evictions() as f64)),
+            ("readmissions", json::num(m.readmissions() as f64)),
+            ("virtual_duration_s", json::num(m.clock_s)),
+        ]));
+    }
+    println!("{}", ft.render());
+    let faults_doc = json::obj(vec![
+        ("bench", json::str("faults")),
+        ("model", json::str("mixtral")),
+        ("task", json::str(task)),
+        ("policy", json::str("static-k3")),
+        ("drafter", json::str("ngram")),
+        ("backend", json::str("sim")),
+        ("batch", json::num(4.0)),
+        ("shards", json::num(2.0)),
+        ("arrivals", json::str("bursty")),
+        ("pool_blocks", json::num(fprobe.pool_blocks as f64)),
+        ("quick", json::Value::Bool(quick)),
+        ("rows", json::arr(fault_rows)),
+    ]);
+    write_json_artifact(&faults_out, &faults_doc)?;
     Ok(())
 }
 

@@ -365,6 +365,14 @@ pub struct BatchIterRecord {
     /// victims. 0 in closed-loop serving unless pool pressure defers
     /// admission.
     pub queue_depth: usize,
+    /// Injected-stall retry attempts this iteration burned before the step
+    /// went through; their wasted time is in `cost.stall_s`. 0 with
+    /// `--faults off`.
+    pub stall_retries: usize,
+    /// The degradation controller held this iteration below the policy's
+    /// ask (K throttled or speculation halted under pressure). Always
+    /// false with `--controller off`.
+    pub degraded: bool,
 }
 
 /// Aggregate over a continuous-batching run: per-request traces (latency
@@ -383,6 +391,20 @@ pub struct BatchRunMetrics {
     /// Virtual seconds the engine sat fully idle (no slot occupied, clock
     /// advanced to the next arrival). 0 in closed-loop serving.
     pub idle_s: f64,
+    /// Queued requests shed by the degradation controller because their
+    /// TTFT deadline was already unmeetable at admission time. Shed
+    /// requests never start, so they appear in no per-request metrics —
+    /// this counter is the only trace they leave. 0 with `--controller
+    /// off`.
+    pub sheds: usize,
+    /// Fault-plan events that actually fired during the run (straggler
+    /// windows entered, stalls injected, shard kills applied, pool shrinks
+    /// applied). 0 with `--faults off`.
+    pub fault_events: usize,
+    /// Virtual seconds between each shard kill and the instant every
+    /// evicted victim of that kill was back in a slot (replay re-prefill
+    /// complete) — the recovery-time telemetry of rust/docs/faults.md.
+    pub recovery_s: f64,
 }
 
 impl BatchRunMetrics {
@@ -565,6 +587,32 @@ impl BatchRunMetrics {
             return 0.0;
         }
         self.reprefill_s() / total
+    }
+
+    // ---- Fault-injection / degradation telemetry ------------------------
+
+    /// Injected-stall retry attempts across the run (each burned a verify
+    /// window plus a backoff sleep, billed into `IterCost::stall_s`).
+    pub fn total_stall_retries(&self) -> usize {
+        self.iters.iter().map(|r| r.stall_retries).sum()
+    }
+
+    /// Simulated seconds lost to injected transient stalls across the run
+    /// (Σ per-iteration `IterCost::stall_s`). 0.0 with `--faults off`.
+    pub fn stall_s(&self) -> f64 {
+        self.iters.iter().map(|r| r.cost.stall_s).sum()
+    }
+
+    /// Fraction of committed iterations the degradation controller held
+    /// below the policy's ask (K throttled or speculation halted). 0.0
+    /// with `--controller off`; a chronically high value means the
+    /// deployment is underprovisioned, not just unlucky.
+    pub fn degraded_fraction(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 0.0;
+        }
+        let n = self.iters.iter().filter(|r| r.degraded).count();
+        n as f64 / self.iters.len() as f64
     }
 
     // ---- Expert-parallel sharding telemetry -----------------------------
@@ -766,6 +814,8 @@ mod tests {
             evictions: 0,
             readmissions: 0,
             queue_depth: 0,
+            stall_retries: 0,
+            degraded: false,
         }
     }
 
@@ -855,6 +905,34 @@ mod tests {
         let plain = BatchRunMetrics::default();
         assert_eq!(plain.evictions(), 0);
         assert_eq!(plain.thrash_fraction(), 0.0);
+    }
+
+    #[test]
+    fn fault_telemetry_aggregates() {
+        let mut b = BatchRunMetrics { max_batch: 4, ..Default::default() };
+        let mut r1 = batch_rec(4, 8, 6.0, 12.0);
+        r1.stall_retries = 2;
+        r1.cost.stall_s = 4e-3;
+        r1.degraded = true;
+        let r2 = batch_rec(2, 4, 4.0, 6.0);
+        b.iters.push(r1);
+        b.iters.push(r2);
+        b.sheds = 3;
+        b.fault_events = 5;
+        b.recovery_s = 0.25;
+        assert_eq!(b.total_stall_retries(), 2);
+        assert!((b.stall_s() - 4e-3).abs() < 1e-15);
+        assert!((b.degraded_fraction() - 0.5).abs() < 1e-12);
+        // Stall time extends the batch clock: TPOT must see the outage.
+        let mut without = b.clone();
+        without.iters[0].cost.stall_s = 0.0;
+        assert!(b.tpot_s() > without.tpot_s());
+        // Fault-free runs degrade to zeros.
+        let plain = BatchRunMetrics::default();
+        assert_eq!(plain.total_stall_retries(), 0);
+        assert_eq!(plain.stall_s(), 0.0);
+        assert_eq!(plain.degraded_fraction(), 0.0);
+        assert_eq!((plain.sheds, plain.fault_events), (0, 0));
     }
 
     #[test]

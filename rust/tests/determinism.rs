@@ -62,7 +62,7 @@ fn serve_once(seed: u64) -> String {
         shards: 2,
         ..EngineConfig::default()
     };
-    let mut engine = BatchEngine::sim(&reg, cfg, PolicyKind::Cascade).unwrap();
+    let mut engine = BatchEngine::sim(&reg, cfg, PolicyKind::Cascade(Default::default())).unwrap();
     let w = Workload::by_name("code+math").unwrap();
     let reqs = RequestStream::new(w, seed, 120).take(8);
     let m = engine.serve_all(&reqs).unwrap();
