@@ -35,6 +35,7 @@ pub const VERIFY_EXEMPT: &[(&str, &str)] = &[
     ("reject_s", "rejection sampling runs after the verify step returns"),
     ("reprefill_s", "re-prefill of evicted context happens outside the fused verify"),
     ("stall_s", "injected-stall retries waste wall time around the verify, not inside it"),
+    ("migration_s", "self-healing expert movement rides the interconnect beside the verify"),
 ];
 
 pub fn check(tree: &RepoTree, out: &mut Vec<Violation>) {

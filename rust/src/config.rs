@@ -250,6 +250,99 @@ impl ControllerKind {
     }
 }
 
+/// Straggler self-healing policy (`EngineConfig::heal`): whether the
+/// engine's per-shard health estimator (EWMA over observed verify-time
+/// inflation) feeds a capacity-weighted placement rebuild that migrates
+/// experts off a confirmed straggler — and back after recovery, behind a
+/// hysteresis band so the placement never flaps. The detector lives in
+/// `coordinator::batch`; see rust/docs/faults.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HealKind {
+    /// No detection, no healing rebuilds: today's behavior, bit-exact.
+    Off,
+    /// Detect stragglers and rebuild the placement with capacity caps
+    /// proportional to shard health (migration bytes charged into
+    /// `IterCost::migration_s`). Token streams are untouched — healing
+    /// changes only where experts live, never what is sampled.
+    Detect,
+}
+
+impl HealKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "off" => Ok(HealKind::Off),
+            "detect" => Ok(HealKind::Detect),
+            other => anyhow::bail!("unknown heal policy {other:?} (want off|detect)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            HealKind::Off => "off",
+            HealKind::Detect => "detect",
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        *self != HealKind::Off
+    }
+}
+
+/// Per-task SLO classes (`--slo-ms code=250,math=400,default=300`): each
+/// entry maps a task name to its TTFT deadline in seconds. A `default`
+/// entry sets the catch-all `EngineConfig::slo_s`; tasks without a class
+/// fall back to it. Entries keep spec order (first match wins), so the
+/// label round-trips the flag.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SloClasses {
+    pub classes: Vec<(String, f64)>,
+}
+
+impl SloClasses {
+    /// Parse the class clauses of a `--slo-ms` spec (everything of the
+    /// form `name=ms`, excluding `default=` which callers route into
+    /// `slo_s`). Milliseconds in the flag, seconds in the struct.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut classes = Vec::new();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (name, ms) = clause
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad SLO class {clause:?} (want name=ms)"))?;
+            let name = name.trim();
+            let ms: f64 = ms
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad SLO ms in {clause:?}: {e}"))?;
+            anyhow::ensure!(ms > 0.0, "SLO class {name:?} must be > 0 ms");
+            anyhow::ensure!(!name.is_empty(), "empty SLO class name in {clause:?}");
+            anyhow::ensure!(
+                classes.iter().all(|(n, _): &(String, f64)| n != name),
+                "duplicate SLO class {name:?}"
+            );
+            classes.push((name.to_string(), ms / 1e3));
+        }
+        Ok(Self { classes })
+    }
+
+    /// The class deadline for `task`, if one is configured.
+    pub fn get(&self, task: &str) -> Option<f64> {
+        self.classes.iter().find(|(n, _)| n == task).map(|&(_, s)| s)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+
+    /// Spec-order `name=ms` rendering (telemetry headers).
+    pub fn label(&self) -> String {
+        self.classes
+            .iter()
+            .map(|(n, s)| format!("{n}={}", s * 1e3))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
 /// Engine-level configuration for one serving run.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -327,9 +420,37 @@ pub struct EngineConfig {
     /// `coordinator::faults::FaultPlan`; `"off"` (default) injects nothing
     /// and is bit-exact with the fault-free engine. See rust/docs/faults.md.
     pub faults: String,
+    /// Stochastic fault-process spec (`"off"` or
+    /// `mtbf=<s>,mttr=<s>,kind=<fault>`): an MTBF/MTTR-driven renewal
+    /// process materialized at engine build into a seed-deterministic
+    /// fault schedule and merged with `faults`. `"off"` (default) merges
+    /// nothing — bit-exact with a process-free run. Parsed by
+    /// `coordinator::faults::FaultProcess`; see rust/docs/faults.md.
+    pub fault_process: String,
+    /// Straggler-aware self-healing placement (`Off` = bit-exact today's
+    /// behavior). See rust/docs/faults.md §Self-healing.
+    pub heal: HealKind,
+    /// Per-task SLO classes layered over `slo_s` (empty = every task uses
+    /// the catch-all). Deadlines, EDF ordering, controller shedding, and
+    /// per-class goodput all read `slo_for(task)`.
+    pub slo_classes: SloClasses,
     /// Graceful-degradation controller (`Off` = bit-exact today's behavior).
     pub controller: ControllerKind,
     pub cascade: CascadeParams,
+}
+
+impl EngineConfig {
+    /// The TTFT SLO for a task: its class deadline if one is configured,
+    /// else the catch-all `slo_s`. ≤ 0 means "no deadline".
+    pub fn slo_for(&self, task: &str) -> f64 {
+        self.slo_classes.get(task).unwrap_or(self.slo_s)
+    }
+
+    /// Any SLO configured at all (catch-all or per-class) — the gate for
+    /// deadline-driven shedding and goodput accounting.
+    pub fn has_slo(&self) -> bool {
+        self.slo_s > 0.0 || !self.slo_classes.is_empty()
+    }
 }
 
 impl Default for EngineConfig {
@@ -352,6 +473,9 @@ impl Default for EngineConfig {
             admission: AdmissionKind::Fcfs,
             slo_s: 0.0,
             faults: "off".into(),
+            fault_process: "off".into(),
+            heal: HealKind::Off,
+            slo_classes: SloClasses::default(),
             controller: ControllerKind::Off,
             cascade: CascadeParams::default(),
         }
@@ -419,6 +543,51 @@ mod tests {
         let cfg = EngineConfig::default();
         assert_eq!(cfg.controller, ControllerKind::Off, "degradation must be opt-in");
         assert_eq!(cfg.faults, "off", "fault injection must be opt-in");
+        assert_eq!(cfg.fault_process, "off", "stochastic faults must be opt-in");
+    }
+
+    #[test]
+    fn heal_kinds_roundtrip_and_default_off() {
+        for kind in [HealKind::Off, HealKind::Detect] {
+            assert_eq!(HealKind::parse(kind.label()).unwrap(), kind);
+            assert_eq!(kind.is_on(), kind != HealKind::Off);
+        }
+        assert!(HealKind::parse("repair").is_err());
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.heal, HealKind::Off, "self-healing must be opt-in");
+    }
+
+    #[test]
+    fn slo_classes_parse_lookup_and_label() {
+        let c = SloClasses::parse("code=250, math=400").unwrap();
+        assert_eq!(c.classes.len(), 2);
+        assert_eq!(c.get("code"), Some(0.25));
+        assert_eq!(c.get("math"), Some(0.4));
+        assert_eq!(c.get("qa"), None);
+        assert_eq!(c.label(), "code=250,math=400");
+        assert!(SloClasses::parse("").unwrap().is_empty());
+        for bad in ["code", "code=0", "code=-5", "=250", "code=250,code=300", "code=abc"] {
+            assert!(SloClasses::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn slo_for_prefers_class_over_catchall() {
+        let mut cfg = EngineConfig::default();
+        assert!(!cfg.has_slo());
+        assert_eq!(cfg.slo_for("code"), 0.0);
+        cfg.slo_s = 0.3;
+        cfg.slo_classes = SloClasses::parse("code=250").unwrap();
+        assert!(cfg.has_slo());
+        assert_eq!(cfg.slo_for("code"), 0.25, "class wins");
+        assert_eq!(cfg.slo_for("math"), 0.3, "catch-all fallback");
+        // Classes alone (no catch-all) still count as an SLO being set.
+        let classy = EngineConfig {
+            slo_classes: SloClasses::parse("math=400").unwrap(),
+            ..EngineConfig::default()
+        };
+        assert!(classy.has_slo());
+        assert_eq!(classy.slo_for("code"), 0.0, "unclassed task has no deadline");
     }
 
     #[test]

@@ -34,6 +34,11 @@ pub struct QueuedRequest {
     pub req: Request,
     /// Arrival stamp on the engine's virtual clock (simulated seconds).
     pub arrival_s: f64,
+    /// TTFT deadline (`arrival_s + slo`), stamped at push from the
+    /// request's own SLO — per-task classes make deadlines a per-entry
+    /// fact, not a queue-wide constant. `f64::INFINITY` when the request
+    /// has no SLO.
+    pub deadline_s: f64,
     /// Monotone arrival sequence number (FCFS order, EDF tie-break).
     pub seq: u64,
 }
@@ -41,7 +46,7 @@ pub struct QueuedRequest {
 /// The per-entry facts a policy may order by.
 #[derive(Debug, Clone, Copy)]
 pub struct WaitingView {
-    /// `arrival_s + slo_s` (equals the arrival time when no SLO is set).
+    /// The entry's stamped TTFT deadline (`f64::INFINITY` without an SLO).
     pub deadline_s: f64,
     pub seq: u64,
 }
@@ -163,11 +168,15 @@ impl AdmissionQueue {
         self.entries.is_empty()
     }
 
-    /// Append an arrival; returns its index (always the back).
-    pub fn push(&mut self, req: Request, arrival_s: f64) -> usize {
+    /// Append an arrival with its TTFT SLO (`slo_s ≤ 0` = no deadline);
+    /// returns its index (always the back). The deadline is stamped here —
+    /// once, from the SLO the *request's task* carries — so every later
+    /// ordering/shedding decision is a pure read of per-entry facts.
+    pub fn push(&mut self, req: Request, arrival_s: f64, slo_s: f64) -> usize {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.entries.push_back(QueuedRequest { req, arrival_s, seq });
+        let deadline_s = if slo_s > 0.0 { arrival_s + slo_s } else { f64::INFINITY };
+        self.entries.push_back(QueuedRequest { req, arrival_s, deadline_s, seq });
         self.entries.len() - 1
     }
 
@@ -192,34 +201,32 @@ impl AdmissionQueue {
     }
 
     /// Load shedding for the degradation controller (rust/docs/faults.md):
-    /// drop every waiting entry whose `arrival_s + slo_s` deadline has
-    /// already passed at `now_s` — the request cannot possibly meet its
-    /// TTFT SLO, so admitting it would burn pool blocks and verify time on
-    /// work the goodput metric must count as a miss anyway. Returns how
-    /// many entries were shed. Only the scheduler calls this, and only
-    /// with `--controller adaptive` under a positive SLO; shed requests
-    /// never reach the engine, so they appear in no per-request metrics.
-    pub fn shed_overdue(&mut self, now_s: f64, slo_s: f64) -> usize {
+    /// drop every waiting entry whose stamped deadline has already passed
+    /// at `now_s` — the request cannot possibly meet its TTFT SLO, so
+    /// admitting it would burn pool blocks and verify time on work the
+    /// goodput metric must count as a miss anyway. Entries without an SLO
+    /// (infinite deadline) are never shed. Returns how many entries were
+    /// shed. Only the scheduler calls this, and only with `--controller
+    /// adaptive` under a configured SLO; shed requests never reach the
+    /// engine, so they appear in no per-request metrics.
+    pub fn shed_overdue(&mut self, now_s: f64) -> usize {
         let before = self.entries.len();
-        self.entries.retain(|e| e.arrival_s + slo_s > now_s);
+        self.entries.retain(|e| e.deadline_s > now_s);
         before - self.entries.len()
     }
 
-    /// The tightest waiting deadline (`arrival_s + slo_s`), or `None` when
-    /// the queue is empty — the degradation controller's EDF slack signal.
-    pub fn min_deadline_s(&self, slo_s: f64) -> Option<f64> {
-        self.entries
-            .iter()
-            .map(|e| e.arrival_s + slo_s)
-            .min_by(|a, b| a.total_cmp(b))
+    /// The tightest waiting deadline, or `None` when the queue is empty —
+    /// the degradation controller's EDF slack signal.
+    pub fn min_deadline_s(&self) -> Option<f64> {
+        self.entries.iter().map(|e| e.deadline_s).min_by(|a, b| a.total_cmp(b))
     }
 
     /// Policy-ordered pick among the waiting entries.
-    pub fn select(&self, policy: &dyn AdmissionPolicy, slo_s: f64) -> Option<usize> {
+    pub fn select(&self, policy: &dyn AdmissionPolicy) -> Option<usize> {
         let views: Vec<WaitingView> = self
             .entries
             .iter()
-            .map(|e| WaitingView { deadline_s: e.arrival_s + slo_s, seq: e.seq })
+            .map(|e| WaitingView { deadline_s: e.deadline_s, seq: e.seq })
             .collect();
         policy.select(&views)
     }
@@ -239,15 +246,15 @@ mod tests {
     fn fcfs_selects_in_arrival_order() {
         let mut q = AdmissionQueue::new();
         for (i, r) in reqs(3).into_iter().enumerate() {
-            q.push(r, i as f64);
+            q.push(r, i as f64, 0.0);
         }
         let p = build_policy(AdmissionKind::Fcfs);
         assert!(!p.parked_first());
-        let i = q.select(p.as_ref(), 0.0).unwrap();
+        let i = q.select(p.as_ref()).unwrap();
         assert_eq!(i, 0, "FCFS admits the oldest arrival");
         let first = q.remove(i);
         assert_eq!(first.seq, 0);
-        assert_eq!(q.select(p.as_ref(), 0.0).unwrap(), 0);
+        assert_eq!(q.select(p.as_ref()).unwrap(), 0);
         assert_eq!(q.len(), 2);
     }
 
@@ -257,9 +264,9 @@ mod tests {
         assert!(p.parked_first());
         let mut q = AdmissionQueue::new();
         for (i, r) in reqs(2).into_iter().enumerate() {
-            q.push(r, i as f64);
+            q.push(r, i as f64, 0.0);
         }
-        assert_eq!(q.select(p.as_ref(), 0.0).unwrap(), 0);
+        assert_eq!(q.select(p.as_ref()).unwrap(), 0);
     }
 
     #[test]
@@ -268,24 +275,32 @@ mod tests {
         // Arrivals at t = 0, 1, 2 with a uniform SLO: deadlines follow
         // arrival order, so EDF == FCFS here…
         for (i, r) in reqs(3).into_iter().enumerate() {
-            q.push(r, i as f64);
+            q.push(r, i as f64, 0.5);
         }
         let p = build_policy(AdmissionKind::Edf);
         assert!(p.parked_first());
-        assert_eq!(q.select(p.as_ref(), 0.5).unwrap(), 0);
+        assert_eq!(q.select(p.as_ref()).unwrap(), 0);
         // …but an explicit earlier deadline wins regardless of queue
         // position (simulate by giving a later entry an earlier arrival).
         let mut q2 = AdmissionQueue::new();
         let rs = reqs(3);
-        q2.push(rs[0].clone(), 5.0);
-        q2.push(rs[1].clone(), 1.0);
-        q2.push(rs[2].clone(), 3.0);
-        assert_eq!(q2.select(p.as_ref(), 2.0).unwrap(), 1);
+        q2.push(rs[0].clone(), 5.0, 2.0);
+        q2.push(rs[1].clone(), 1.0, 2.0);
+        q2.push(rs[2].clone(), 3.0, 2.0);
+        assert_eq!(q2.select(p.as_ref()).unwrap(), 1);
+        // Per-entry SLOs (task classes): a later arrival with a tighter
+        // class deadline overtakes, and a no-SLO entry (infinite
+        // deadline) always yields to any deadlined one.
+        let mut q4 = AdmissionQueue::new();
+        q4.push(rs[0].clone(), 0.0, 0.0); // no SLO → infinite deadline
+        q4.push(rs[1].clone(), 1.0, 5.0); // deadline 6
+        q4.push(rs[2].clone(), 2.0, 1.0); // deadline 3 — tightest
+        assert_eq!(q4.select(p.as_ref()).unwrap(), 2);
         // Deadline ties break by arrival sequence.
         let mut q3 = AdmissionQueue::new();
-        q3.push(rs[0].clone(), 2.0);
-        q3.push(rs[1].clone(), 2.0);
-        assert_eq!(q3.select(p.as_ref(), 1.0).unwrap(), 0);
+        q3.push(rs[0].clone(), 2.0, 1.0);
+        q3.push(rs[1].clone(), 2.0, 1.0);
+        assert_eq!(q3.select(p.as_ref()).unwrap(), 0);
     }
 
     #[test]
@@ -293,7 +308,7 @@ mod tests {
         let mut q = AdmissionQueue::new();
         let mut r = reqs(1).remove(0);
         r.max_new_tokens = 100;
-        q.push(r, 0.0);
+        q.push(r, 0.0, 0.0);
         // remaining + 1, never widening.
         q.clamp(0, 40);
         assert_eq!(q.req(0).max_new_tokens, 41);
@@ -307,34 +322,39 @@ mod tests {
     fn shed_overdue_drops_only_unmeetable_deadlines() {
         let mut q = AdmissionQueue::new();
         for (i, r) in reqs(3).into_iter().enumerate() {
-            q.push(r, i as f64); // arrivals at t = 0, 1, 2
+            q.push(r, i as f64, 0.5); // arrivals at t = 0, 1, 2
         }
         // SLO 0.5s at now = 1.6: deadlines 0.5 and 1.5 are past, 2.5 holds.
-        assert_eq!(q.shed_overdue(1.6, 0.5), 2);
+        assert_eq!(q.shed_overdue(1.6), 2);
         assert_eq!(q.len(), 1);
         let p = build_policy(AdmissionKind::Fcfs);
-        let i = q.select(p.as_ref(), 0.5).unwrap();
+        let i = q.select(p.as_ref()).unwrap();
         assert_eq!(q.remove(i).arrival_s, 2.0, "the survivor is the freshest arrival");
         // A deadline exactly at `now` is already missed (strict >).
         let mut q2 = AdmissionQueue::new();
-        q2.push(reqs(1).remove(0), 1.0);
-        assert_eq!(q2.shed_overdue(1.5, 0.5), 1);
+        q2.push(reqs(1).remove(0), 1.0, 0.5);
+        assert_eq!(q2.shed_overdue(1.5), 1);
         assert!(q2.is_empty());
         // Nothing overdue: no-op.
         let mut q3 = AdmissionQueue::new();
-        q3.push(reqs(1).remove(0), 1.0);
-        assert_eq!(q3.shed_overdue(1.0, 0.5), 0);
+        q3.push(reqs(1).remove(0), 1.0, 0.5);
+        assert_eq!(q3.shed_overdue(1.0), 0);
         assert_eq!(q3.len(), 1);
         // The controller's slack signal: tightest waiting deadline.
-        assert_eq!(q3.min_deadline_s(0.5), Some(1.5));
-        assert_eq!(AdmissionQueue::new().min_deadline_s(0.5), None);
+        assert_eq!(q3.min_deadline_s(), Some(1.5));
+        assert_eq!(AdmissionQueue::new().min_deadline_s(), None);
+        // No-SLO entries are never shed, and never set a deadline.
+        let mut q5 = AdmissionQueue::new();
+        q5.push(reqs(1).remove(0), 1.0, 0.0);
+        assert_eq!(q5.shed_overdue(1e9), 0, "no deadline, nothing to miss");
+        assert_eq!(q5.min_deadline_s(), Some(f64::INFINITY));
     }
 
     #[test]
     fn empty_queue_selects_nothing() {
         let q = AdmissionQueue::new();
         for kind in [AdmissionKind::Fcfs, AdmissionKind::ParkedFirst, AdmissionKind::Edf] {
-            assert!(q.select(build_policy(kind).as_ref(), 1.0).is_none());
+            assert!(q.select(build_policy(kind).as_ref()).is_none());
         }
     }
 }

@@ -54,11 +54,11 @@ use crate::coordinator::backend::{Backend, BatchStep, VerifySpan};
 use crate::coordinator::engine::EngineDrafter;
 use crate::coordinator::eviction::{select_victim, VictimCandidate};
 use crate::coordinator::faults::{
-    degrade_level, DegradeLevel, FaultPlan, PressureSignal, THROTTLE_K_CAP,
+    degrade_level, DegradeLevel, FaultPlan, FaultProcess, PressureSignal, THROTTLE_K_CAP,
 };
 use crate::coordinator::pipeline::{plan_spec_task, reconcile_entry, run_spec_tasks, SpecDraft};
 use crate::coordinator::EngineError;
-use crate::cost::{CoActivationStats, ExpertPlacement, GpuCostModel, IterCost};
+use crate::cost::{capacity_caps, CoActivationStats, ExpertPlacement, GpuCostModel, IterCost};
 use crate::kv::KvBlockPool;
 use crate::metrics::{BatchIterRecord, BatchRunMetrics, IterRecord, RequestMetrics, RunMetrics};
 use crate::models::Registry;
@@ -251,12 +251,49 @@ pub struct BatchEngine {
     /// Pool-block shortfall summed over the previous iteration's deferred
     /// slots — the controller's admission-starvation signal.
     last_shortfall_blocks: usize,
+    /// Per-shard EWMA of the observed verify-time inflation factor (1.0 =
+    /// nominal). Fed by the straggler detector (`--heal detect`) from each
+    /// committed iteration's per-shard scales; drives the
+    /// capacity-weighted placement rebuild.
+    health: Vec<f64>,
+    /// Consecutive iterations each shard's health sat above
+    /// [`HEAL_HIGH`] / below [`HEAL_LOW`] — the hysteresis confirmation
+    /// streaks that gate marking/unmarking a shard degraded.
+    hot_streak: Vec<u32>,
+    cool_streak: Vec<u32>,
+    /// Which shards the detector currently treats as degraded (capacity
+    /// down-weighted in the healing rebuild).
+    healing: Vec<bool>,
+    /// Placement rebuilds the self-healing detector triggered (mark or
+    /// unmark edges) — the hysteresis quality metric.
+    heal_rebuilds: usize,
 }
 
 /// Fused iterations between co-activation placement rebuilds. Small enough
 /// to adapt within a serving run, large enough that the histogram has
 /// signal before the first rebuild.
 const PLACEMENT_REFRESH: usize = 32;
+
+/// Virtual-clock horizon (seconds) a stochastic fault process is
+/// materialized over. Well past any serving run this repo's budgets reach;
+/// the [`crate::coordinator::faults::MAX_PROCESS_EVENTS`] cap bounds the
+/// schedule long before a short-MTBF spec fills the horizon.
+pub const PROCESS_HORIZON_S: f64 = 30.0;
+
+/// EWMA smoothing weight of the per-shard health estimator: each committed
+/// iteration's observed inflation factor moves the estimate a quarter of
+/// the way — fast enough to confirm a straggler within a handful of
+/// iterations, slow enough that a single stall does not.
+const HEAL_ALPHA: f64 = 0.25;
+/// A shard whose health EWMA exceeds this factor is a straggler candidate…
+const HEAL_HIGH: f64 = 2.0;
+/// …and one back under this factor is a recovery candidate. The gap
+/// between the bands is the hysteresis: a shard hovering between them
+/// keeps its current designation, so the placement never flaps.
+const HEAL_LOW: f64 = 1.25;
+/// Consecutive iterations the EWMA must sit past a band edge before the
+/// detector acts on it (confirmation streak).
+const HEAL_CONFIRM: u32 = 3;
 
 /// KV page size (tokens per block) of the batched engine's shared pool —
 /// the one source of truth for anything sizing pools in blocks (the
@@ -311,7 +348,25 @@ impl BatchEngine {
             "invalid fault spec {:?}",
             cfg.faults
         );
-        let faults = FaultPlan::parse(&cfg.faults).unwrap_or_default();
+        let mut faults = FaultPlan::parse(&cfg.faults).unwrap_or_default();
+        // Stochastic fault process (`--fault-process mtbf=..,mttr=..`): the
+        // MTBF/MTTR spec is materialized into a concrete, seed-deterministic
+        // schedule up front and merged with the explicit plan, so everything
+        // downstream (stall cursor, straggler windows, kill transitions)
+        // sees one ordinary FaultPlan. `off` (the default) merges nothing —
+        // bit-exact with a process-free build.
+        debug_assert!(
+            FaultProcess::parse(&cfg.fault_process).is_ok(),
+            "invalid fault process spec {:?}",
+            cfg.fault_process
+        );
+        if let Ok(Some(process)) = FaultProcess::parse(&cfg.fault_process) {
+            faults = faults.merged(process.materialize(
+                cfg.seed,
+                n_shards,
+                PROCESS_HORIZON_S,
+            ));
+        }
         let stall_schedule = faults.stalls();
         Self {
             cfg,
@@ -353,6 +408,11 @@ impl BatchEngine {
             sheds: 0,
             degrade: DegradeLevel::Normal,
             last_shortfall_blocks: 0,
+            health: vec![1.0; n_shards],
+            hot_streak: vec![0; n_shards],
+            cool_streak: vec![0; n_shards],
+            healing: vec![false; n_shards],
+            heal_rebuilds: 0,
         }
     }
 
@@ -1270,6 +1330,16 @@ impl BatchEngine {
             self.fault_events += 1;
         }
         self.straggler_active = straggler.is_some();
+        // Detector input (`--heal detect`): this iteration's observed
+        // per-shard verify-time inflation. The simulated observable is the
+        // straggler scale vector itself — exactly what a real engine would
+        // estimate from per-shard verify timestamps — so the detector sees
+        // the same signal, EWMA-smoothed, without a second timing channel.
+        let heal_obs: Option<Vec<f64>> = if self.cfg.heal.is_on() && sharded {
+            Some(straggler.clone().unwrap_or_else(|| vec![1.0; self.n_shards]))
+        } else {
+            None
+        };
         let any_dead = self.dead_shards.iter().any(|&d| d);
         let expert_budget = if self.degrade == DegradeLevel::Halt {
             // MoE-Spec-style verify expert budget: under Halt, charge at
@@ -1357,6 +1427,7 @@ impl BatchEngine {
         // wasted *time*, not extra committed work. The cursor is monotone,
         // so each scheduled stall fires at most once, in order.
         let mut stall_retries = 0usize;
+        let mut migrated_experts = 0usize;
         if let Some(&(t0, retries, base_s)) = self.stall_schedule.get(self.stalls_fired) {
             if t0 <= self.clock_s + cost.total() {
                 let verify_s = cost.verify_s();
@@ -1368,6 +1439,62 @@ impl BatchEngine {
                 stall_retries = retries as usize;
                 self.stalls_fired += 1;
                 self.fault_events += 1;
+            }
+        }
+        // ---- Straggler detector + self-healing placement (--heal) -------
+        // Hysteresis protocol (rust/docs/faults.md): the per-shard health
+        // EWMA must sit above HEAL_HIGH for HEAL_CONFIRM consecutive
+        // iterations before a shard is marked degraded, and back below
+        // HEAL_LOW for HEAL_CONFIRM before it is unmarked — the dead band
+        // between the thresholds means a shard hovering near either edge
+        // never flaps the placement. Each mark/unmark edge triggers ONE
+        // capacity-weighted rebuild (a degraded shard keeps capacity in
+        // inverse proportion to its slowdown; all-healthy restores uniform
+        // caps), and the expert weights that actually move are charged into
+        // `IterCost::migration_s` — hidden under this iteration's draft
+        // window when the pipeline overlaps it, paid in full serially.
+        // Kill-recovery rebuilds stay out of this path: dead shards are the
+        // fault plan's jurisdiction (`apply_fault_transitions`) and already
+        // pay re-prefill + recovery time.
+        if let Some(obs) = heal_obs {
+            if !any_dead {
+                let mut edge = false;
+                for s in 0..self.n_shards {
+                    self.health[s] = (1.0 - HEAL_ALPHA) * self.health[s] + HEAL_ALPHA * obs[s];
+                    if self.health[s] > HEAL_HIGH {
+                        self.hot_streak[s] += 1;
+                        self.cool_streak[s] = 0;
+                    } else if self.health[s] < HEAL_LOW {
+                        self.cool_streak[s] += 1;
+                        self.hot_streak[s] = 0;
+                    } else {
+                        self.hot_streak[s] = 0;
+                        self.cool_streak[s] = 0;
+                    }
+                    if !self.healing[s] && self.hot_streak[s] >= HEAL_CONFIRM {
+                        self.healing[s] = true;
+                        edge = true;
+                    } else if self.healing[s] && self.cool_streak[s] >= HEAL_CONFIRM {
+                        self.healing[s] = false;
+                        edge = true;
+                    }
+                }
+                if edge {
+                    let caps = self.heal_caps();
+                    let old = std::mem::replace(
+                        &mut self.placement,
+                        self.coact.greedy_placement_capped(&caps),
+                    );
+                    migrated_experts = self.placement.moved_from(&old);
+                    let raw = self.cost.migration_s(migrated_experts);
+                    cost.migration_s = if self.cfg.pipeline {
+                        (raw - cost.draft_s).max(0.0)
+                    } else {
+                        raw
+                    };
+                    self.heal_rebuilds += 1;
+                    self.iters_since_placement = 0;
+                }
             }
         }
         // Advance the virtual clock by the fused iteration, so finalize
@@ -1548,18 +1675,31 @@ impl BatchEngine {
         // hot path). A rebuild only affects *future* iterations' costs —
         // this iteration was priced under the placement it actually ran
         // with.
-        if self.n_shards > 1
-            && self.cfg.placement == PlacementKind::CoActivation
-            && !batch.expert_ids.is_empty()
-        {
-            self.coact.observe(&batch.expert_ids);
-            self.iters_since_placement += 1;
-            if self.iters_since_placement >= PLACEMENT_REFRESH {
-                self.placement = self.coact.greedy_placement(self.n_shards);
-                // Decay after each rebuild so the next one weighs recent
-                // routing over history (adapts to workload phase shifts).
-                self.coact.decay();
-                self.iters_since_placement = 0;
+        if self.n_shards > 1 && !batch.expert_ids.is_empty() {
+            // The healing rebuild packs hottest-first from this histogram,
+            // so `--heal detect` feeds it even under the balanced strategy
+            // (which never triggers periodic rebuilds of its own).
+            if self.cfg.placement == PlacementKind::CoActivation || self.cfg.heal.is_on() {
+                self.coact.observe(&batch.expert_ids);
+            }
+            if self.cfg.placement == PlacementKind::CoActivation {
+                self.iters_since_placement += 1;
+                if self.iters_since_placement >= PLACEMENT_REFRESH {
+                    // A periodic refresh while shards are marked degraded
+                    // must keep the healing caps, or it would silently
+                    // migrate experts back onto the straggler between heal
+                    // edges. Periodic refreshes stay migration-free either
+                    // way — only detector edges charge `migration_s`.
+                    self.placement = if self.healing.iter().any(|&h| h) {
+                        self.coact.greedy_placement_capped(&self.heal_caps())
+                    } else {
+                        self.coact.greedy_placement(self.n_shards)
+                    };
+                    // Decay after each rebuild so the next one weighs recent
+                    // routing over history (adapts to workload phase shifts).
+                    self.coact.decay();
+                    self.iters_since_placement = 0;
+                }
             }
         }
 
@@ -1588,8 +1728,21 @@ impl BatchEngine {
             queue_depth: self.queue_depth_hint + self.parked.len(),
             stall_retries,
             degraded: self.degrade != DegradeLevel::Normal,
+            migrated_experts,
         });
         Ok(cost)
+    }
+
+    /// Capacity caps of a healing placement rebuild: a healthy shard
+    /// weighs 1.0, a degraded shard the inverse of its health inflation
+    /// (a confirmed 4× straggler keeps ≈ a quarter of uniform capacity).
+    /// All-healthy collapses to uniform caps, so the recovery rebuild
+    /// restores the pre-fault packing shape.
+    fn heal_caps(&self) -> Vec<usize> {
+        let weights: Vec<f64> = (0..self.n_shards)
+            .map(|s| if self.healing[s] { 1.0 / self.health[s].max(1.0) } else { 1.0 })
+            .collect();
+        capacity_caps(self.placement.n_experts(), &weights)
     }
 
     /// Move finished slots into the done list, freeing pool + backend
@@ -1625,6 +1778,7 @@ impl BatchEngine {
             sheds: self.sheds,
             fault_events: self.fault_events,
             recovery_s: self.recovery_s,
+            heal_rebuilds: self.heal_rebuilds,
         }
     }
 
@@ -1680,8 +1834,9 @@ impl BatchEngine {
         };
         let faults = if self.faults.is_off() { "" } else { "+faults" };
         let ctl = if self.cfg.controller.is_on() { "+ctl" } else { "" };
+        let heal = if self.cfg.heal.is_on() { "+heal" } else { "" };
         format!(
-            "{}/{}@b{}{pipe}{shard}{ev}{faults}{ctl}",
+            "{}/{}@b{}{pipe}{shard}{ev}{faults}{ctl}{heal}",
             self.cfg.model,
             self.policy_kind.label(),
             self.max_batch

@@ -28,7 +28,20 @@
 //! fault-free run (rust/tests/chaos.rs; see rust/docs/faults.md for the
 //! spec grammar and the recovery protocols).
 
+use crate::rng::Rng;
 use anyhow::{Context, Result};
+
+/// A correlated fault domain: one physical host carrying several shards.
+/// Declared in the `--faults` grammar as `host=<h>:shards=a,b,c`; a
+/// subsequent `shard-kill`/`straggler` clause may then target `host=<h>`
+/// and the parser expands it into one event per member shard — a
+/// whole-host outage is several simultaneous shard faults, which is
+/// exactly how correlated failures present to the engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultDomain {
+    pub host: usize,
+    pub shards: Vec<usize>,
+}
 
 /// One scheduled fault. Times are virtual-clock seconds.
 #[derive(Debug, Clone, PartialEq)]
@@ -70,6 +83,10 @@ impl FaultEvent {
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct FaultPlan {
     pub events: Vec<FaultEvent>,
+    /// Declared correlated fault domains (`host=<h>:shards=...`). Host-
+    /// targeted clauses are expanded into per-shard events at parse time;
+    /// the declarations are kept so [`FaultPlan::to_spec`] round-trips.
+    pub domains: Vec<FaultDomain>,
 }
 
 /// Built-in plan names accepted by `--faults` and their expansions
@@ -103,15 +120,20 @@ impl FaultPlan {
     /// comments allowed), or inline `;`-separated clauses:
     ///
     /// ```text
+    /// host=<h>:shards=<a>,<b>,...              (correlated domain decl)
     /// straggler@<t0>+<dur>:shard=<s>,factor=<f>
+    /// straggler@<t0>+<dur>:host=<h>,factor=<f>
     /// stall@<t0>:retries=<n>,base-ms=<ms>
-    /// shard-kill@<t0>+<dur>:shard=<s>
+    /// shard-kill@<t0>+<dur>:shard=<s>          (or host=<h>)
     /// pool-shrink@<t0>+<dur>:frac=<f>
     /// ```
     ///
-    /// Shard indices wrap modulo the run's shard count (like
-    /// `ExpertPlacement::shard_of`), so one plan is valid under any
-    /// topology. Events are sorted by `t0` on load.
+    /// A `host=` declaration names a correlated fault domain; a later
+    /// `straggler`/`shard-kill` clause targeting `host=<h>` expands into
+    /// one event per member shard (the whole host slows or dies at once).
+    /// Domains must be declared before use. Shard indices wrap modulo the
+    /// run's shard count (like `ExpertPlacement::shard_of`), so one plan
+    /// is valid under any topology. Events are sorted by `t0` on load.
     pub fn parse(spec: &str) -> Result<Self> {
         let spec = spec.trim();
         if spec.is_empty() || spec == "off" {
@@ -139,16 +161,76 @@ impl FaultPlan {
 
     fn parse_clauses(spec: &str) -> Result<Self> {
         let mut events = Vec::new();
+        let mut domains: Vec<FaultDomain> = Vec::new();
         for clause in spec.split(';') {
             let clause: String = clause.split_whitespace().collect::<Vec<_>>().join("");
             if clause.is_empty() {
                 continue;
             }
-            events.push(parse_clause(&clause).with_context(|| format!("fault clause {clause:?}"))?);
+            if let Some(rest) = clause.strip_prefix("host=") {
+                let d = parse_domain(rest).with_context(|| format!("domain clause {clause:?}"))?;
+                anyhow::ensure!(
+                    domains.iter().all(|x| x.host != d.host),
+                    "host {} declared twice",
+                    d.host
+                );
+                domains.push(d);
+                continue;
+            }
+            events.extend(
+                parse_clause(&clause, &domains)
+                    .with_context(|| format!("fault clause {clause:?}"))?,
+            );
         }
         anyhow::ensure!(!events.is_empty(), "fault spec has no events (use 'off' to disable)");
         events.sort_by(|a, b| a.t0().total_cmp(&b.t0()));
-        Ok(Self { events })
+        Ok(Self { events, domains })
+    }
+
+    /// Canonical, re-parseable spec of this plan: domain declarations
+    /// first, then every event as an inline clause (host-targeted clauses
+    /// appear *resolved* — one per-shard clause each), `;`-joined. The
+    /// round-trip law `parse(to_spec(p)) == p` is property-tested over the
+    /// builtin plans, and `figure faults` prints this so chaos configs are
+    /// copy-pasteable from output.
+    pub fn to_spec(&self) -> String {
+        if self.is_off() {
+            return "off".to_string();
+        }
+        let mut clauses: Vec<String> = self
+            .domains
+            .iter()
+            .map(|d| {
+                let shards: Vec<String> = d.shards.iter().map(|s| s.to_string()).collect();
+                format!("host={}:shards={}", d.host, shards.join(","))
+            })
+            .collect();
+        for e in &self.events {
+            clauses.push(match e {
+                FaultEvent::Straggler { t0, dur_s, shard, factor } => {
+                    format!("straggler@{t0}+{dur_s}:shard={shard},factor={factor}")
+                }
+                FaultEvent::Stall { t0, retries, base_s } => {
+                    format!("stall@{t0}:retries={retries},base-ms={}", base_s * 1e3)
+                }
+                FaultEvent::ShardKill { t0, dur_s, shard } => {
+                    format!("shard-kill@{t0}+{dur_s}:shard={shard}")
+                }
+                FaultEvent::PoolShrink { t0, dur_s, frac } => {
+                    format!("pool-shrink@{t0}+{dur_s}:frac={frac}")
+                }
+            });
+        }
+        clauses.join(";")
+    }
+
+    /// Merge another plan's events into this one (stochastic-process
+    /// events joining a scripted plan); the result stays `t0`-sorted.
+    pub fn merged(mut self, other: FaultPlan) -> FaultPlan {
+        self.events.extend(other.events);
+        self.domains.extend(other.domains);
+        self.events.sort_by(|a, b| a.t0().total_cmp(&b.t0()));
+        self
     }
 
     /// Per-shard slowdown scales at clock `t`, or `None` when every shard
@@ -224,7 +306,33 @@ impl FaultPlan {
     }
 }
 
-fn parse_clause(clause: &str) -> Result<FaultEvent> {
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.to_spec())
+    }
+}
+
+/// Parse the tail of a `host=<h>:shards=a,b,c` domain declaration (the
+/// `host=` prefix is already stripped).
+fn parse_domain(rest: &str) -> Result<FaultDomain> {
+    let (host, tail) = rest
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("expected host=<h>:shards=a,b,c"))?;
+    let host: usize = host.parse().with_context(|| format!("host {host:?}"))?;
+    let list = tail
+        .strip_prefix("shards=")
+        .ok_or_else(|| anyhow::anyhow!("expected shards=a,b,c after host={host}:"))?;
+    let mut shards = Vec::new();
+    for s in list.split(',').filter(|s| !s.is_empty()) {
+        let s: usize = s.parse().with_context(|| format!("shard {s:?}"))?;
+        anyhow::ensure!(!shards.contains(&s), "shard {s} listed twice in host {host}");
+        shards.push(s);
+    }
+    anyhow::ensure!(!shards.is_empty(), "host {host} declares no shards");
+    Ok(FaultDomain { host, shards })
+}
+
+fn parse_clause(clause: &str, domains: &[FaultDomain]) -> Result<Vec<FaultEvent>> {
     let (kind, rest) = clause
         .split_once('@')
         .ok_or_else(|| anyhow::anyhow!("expected <kind>@<t0>[+<dur>][:k=v,...]"))?;
@@ -241,6 +349,7 @@ fn parse_clause(clause: &str) -> Result<FaultEvent> {
         anyhow::ensure!(d > 0.0, "window duration must be > 0");
     }
     let mut shard = 0usize;
+    let mut host: Option<usize> = None;
     let mut factor = 4.0f64;
     let mut retries = 2u32;
     let mut base_s = 5e-3f64;
@@ -249,6 +358,7 @@ fn parse_clause(clause: &str) -> Result<FaultEvent> {
         let (k, v) = kv.split_once('=').ok_or_else(|| anyhow::anyhow!("bad param {kv:?}"))?;
         match k {
             "shard" => shard = v.parse().with_context(|| format!("shard {v:?}"))?,
+            "host" => host = Some(v.parse().with_context(|| format!("host {v:?}"))?),
             "factor" => factor = parse_f64(v, "factor")?,
             "retries" => retries = v.parse().with_context(|| format!("retries {v:?}"))?,
             "base-ms" => base_s = parse_f64(v, "base-ms")? / 1e3,
@@ -256,22 +366,44 @@ fn parse_clause(clause: &str) -> Result<FaultEvent> {
             other => anyhow::bail!("unknown param {other:?} for {kind:?}"),
         }
     }
+    // Resolve the target set: an explicit host expands to every shard of
+    // the declared domain (the correlated-failure semantics), a bare
+    // `shard=` stays a singleton.
+    let targets: Vec<usize> = match host {
+        Some(h) => domains
+            .iter()
+            .find(|d| d.host == h)
+            .ok_or_else(|| {
+                anyhow::anyhow!("host {h} not declared (add 'host={h}:shards=...' first)")
+            })?
+            .shards
+            .clone(),
+        None => vec![shard],
+    };
     let dur = dur_s.unwrap_or(1.0);
     match kind {
         "straggler" => {
             anyhow::ensure!(factor >= 1.0 && factor.is_finite(), "factor must be >= 1");
-            Ok(FaultEvent::Straggler { t0, dur_s: dur, shard, factor })
+            Ok(targets
+                .into_iter()
+                .map(|shard| FaultEvent::Straggler { t0, dur_s: dur, shard, factor })
+                .collect())
         }
         "stall" => {
+            anyhow::ensure!(host.is_none(), "stall is host-agnostic (no host= target)");
             anyhow::ensure!(dur_s.is_none(), "stall is an instant (no +dur window)");
             anyhow::ensure!(retries >= 1, "stall needs retries >= 1");
             anyhow::ensure!(base_s > 0.0 && base_s.is_finite(), "base-ms must be > 0");
-            Ok(FaultEvent::Stall { t0, retries, base_s })
+            Ok(vec![FaultEvent::Stall { t0, retries, base_s }])
         }
-        "shard-kill" => Ok(FaultEvent::ShardKill { t0, dur_s: dur, shard }),
+        "shard-kill" => Ok(targets
+            .into_iter()
+            .map(|shard| FaultEvent::ShardKill { t0, dur_s: dur, shard })
+            .collect()),
         "pool-shrink" => {
+            anyhow::ensure!(host.is_none(), "pool-shrink is host-agnostic (no host= target)");
             anyhow::ensure!(frac > 0.0 && frac <= 1.0, "frac must be in (0, 1]");
-            Ok(FaultEvent::PoolShrink { t0, dur_s: dur, frac })
+            Ok(vec![FaultEvent::PoolShrink { t0, dur_s: dur, frac }])
         }
         other => anyhow::bail!(
             "unknown fault kind {other:?} (want straggler|stall|shard-kill|pool-shrink)"
@@ -283,6 +415,134 @@ fn parse_f64(s: &str, what: &str) -> Result<f64> {
     let v: f64 = s.parse().with_context(|| format!("{what} {s:?}"))?;
     anyhow::ensure!(v.is_finite(), "{what} must be finite");
     Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Stochastic fault processes
+// ---------------------------------------------------------------------------
+
+/// Which fault kind an MTBF process emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProcessKind {
+    Straggler,
+    Stall,
+    ShardKill,
+    PoolShrink,
+}
+
+impl ProcessKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "straggler" => Ok(Self::Straggler),
+            "stall" => Ok(Self::Stall),
+            "shard-kill" => Ok(Self::ShardKill),
+            "pool-shrink" => Ok(Self::PoolShrink),
+            other => anyhow::bail!(
+                "unknown process kind {other:?} (want straggler|stall|shard-kill|pool-shrink)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Straggler => "straggler",
+            Self::Stall => "stall",
+            Self::ShardKill => "shard-kill",
+            Self::PoolShrink => "pool-shrink",
+        }
+    }
+}
+
+/// Cap on events one process materializes — sustained unreliability, not an
+/// unbounded schedule (a pathological `mtbf=1e-9` must still terminate).
+pub const MAX_PROCESS_EVENTS: usize = 64;
+
+/// An MTBF/MTTR-driven stochastic fault process (`--fault-process`):
+/// instead of hand-scripted `t0`s, fault onsets arrive as a Poisson process
+/// with exponential inter-arrival of mean `mtbf_s`, and each outage lasts
+/// an exponential duration of mean `mttr_s` — the standard renewal model of
+/// sustained unreliability. The schedule is drawn **once up front** from
+/// the crate PRNG ([`FaultProcess::materialize`]) and pinned to the virtual
+/// clock, so a (spec, seed) pair replays bit-identically: same fault
+/// schedule, same token streams, on any machine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultProcess {
+    /// Mean time between fault onsets, virtual-clock seconds (> 0).
+    pub mtbf_s: f64,
+    /// Mean time to repair — mean outage window (> 0; ignored by the
+    /// `stall` kind, whose events are instants).
+    pub mttr_s: f64,
+    /// Fault kind every event of this process carries.
+    pub kind: ProcessKind,
+}
+
+impl FaultProcess {
+    /// Parse a `--fault-process` spec: `off` (or empty) disables, else
+    /// comma-joined `mtbf=<s>,mttr=<s>,kind=<k>`. `mtbf` is required;
+    /// `mttr` defaults to 0.5 s and `kind` to `straggler`.
+    pub fn parse(spec: &str) -> Result<Option<Self>> {
+        let spec: String = spec.split_whitespace().collect::<Vec<_>>().join("");
+        if spec.is_empty() || spec == "off" {
+            return Ok(None);
+        }
+        let mut mtbf_s: Option<f64> = None;
+        let mut mttr_s = 0.5f64;
+        let mut kind = ProcessKind::Straggler;
+        for kv in spec.split(',').filter(|s| !s.is_empty()) {
+            let (k, v) = kv.split_once('=').ok_or_else(|| anyhow::anyhow!("bad param {kv:?}"))?;
+            match k {
+                "mtbf" => mtbf_s = Some(parse_f64(v, "mtbf")?),
+                "mttr" => mttr_s = parse_f64(v, "mttr")?,
+                "kind" => kind = ProcessKind::parse(v)?,
+                other => anyhow::bail!("unknown param {other:?} for fault process"),
+            }
+        }
+        let mtbf_s = mtbf_s.ok_or_else(|| {
+            anyhow::anyhow!("fault process needs mtbf=<s> (mean time between faults)")
+        })?;
+        anyhow::ensure!(mtbf_s > 0.0, "mtbf must be > 0");
+        anyhow::ensure!(mttr_s > 0.0, "mttr must be > 0");
+        Ok(Some(Self { mtbf_s, mttr_s, kind }))
+    }
+
+    /// Canonical re-parseable spec (`parse(label(p)) == Some(p)`).
+    pub fn label(&self) -> String {
+        format!("mtbf={},mttr={},kind={}", self.mtbf_s, self.mttr_s, self.kind.name())
+    }
+
+    /// Draw the concrete fault schedule: exponential inter-arrivals of mean
+    /// `mtbf_s` walk the virtual clock from 0 until `horizon_s` (or
+    /// [`MAX_PROCESS_EVENTS`]); each onset gets an exponential outage of
+    /// mean `mttr_s` (clamped to ≥ 1 ms so windows are never degenerate)
+    /// and a uniformly random target shard. The PRNG stream is forked off
+    /// the run seed with a dedicated tag, so the schedule is independent of
+    /// every other consumer of the seed — adding a fault process cannot
+    /// perturb token sampling.
+    pub fn materialize(&self, seed: u64, n_shards: usize, horizon_s: f64) -> FaultPlan {
+        let mut rng = Rng::new(seed).fork(0xFA17);
+        let mut events = Vec::new();
+        let mut t = 0.0f64;
+        while events.len() < MAX_PROCESS_EVENTS {
+            // Exponential inter-arrival: -mtbf * ln(1 - U), U in [0, 1).
+            t += -self.mtbf_s * (1.0 - rng.f64()).ln();
+            if t >= horizon_s {
+                break;
+            }
+            let dur = (-self.mttr_s * (1.0 - rng.f64()).ln()).max(1e-3);
+            let shard = rng.below(n_shards.max(1));
+            events.push(match self.kind {
+                ProcessKind::Straggler => {
+                    FaultEvent::Straggler { t0: t, dur_s: dur, shard, factor: 4.0 }
+                }
+                ProcessKind::Stall => FaultEvent::Stall { t0: t, retries: 2, base_s: 5e-3 },
+                ProcessKind::ShardKill => FaultEvent::ShardKill { t0: t, dur_s: dur, shard },
+                ProcessKind::PoolShrink => {
+                    FaultEvent::PoolShrink { t0: t, dur_s: dur, frac: 0.5 }
+                }
+            });
+        }
+        FaultPlan { events, domains: Vec::new() }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -451,6 +711,92 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         assert!(FaultPlan::parse("file:").is_err());
         assert!(FaultPlan::parse("file:/nonexistent/plan.txt").is_err());
+    }
+
+    #[test]
+    fn host_clauses_expand_to_every_member_shard() {
+        let p = FaultPlan::parse(
+            "host=0:shards=0,2; straggler@0.5+1:host=0,factor=3; shard-kill@2+1:host=0",
+        )
+        .unwrap();
+        assert_eq!(p.domains, vec![FaultDomain { host: 0, shards: vec![0, 2] }]);
+        // One event per member shard, same window.
+        assert_eq!(p.straggler_scales(0.5, 3).unwrap(), vec![3.0, 1.0, 3.0]);
+        assert_eq!(p.dead_shards(2.5, 3).unwrap(), vec![true, false, true]);
+        // A bare shard= clause still works alongside domains.
+        let q = FaultPlan::parse("host=1:shards=1,2;shard-kill@0+1:shard=0").unwrap();
+        assert_eq!(q.dead_shards(0.5, 3).unwrap(), vec![true, false, false]);
+    }
+
+    #[test]
+    fn domain_errors_are_caught() {
+        for bad in [
+            "host=0:shards=0,1;host=0:shards=2",      // duplicate host
+            "host=0:shards=1,1",                      // duplicate shard in domain
+            "host=0:shards=",                         // empty domain
+            "host=0",                                 // missing shards
+            "straggler@0+1:host=3,factor=2",          // undeclared host
+            "host=0:shards=0,1;stall@1:host=0",       // stall is host-agnostic
+            "host=0:shards=0,1;pool-shrink@0+1:host=0", // pool-shrink too
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted bad spec {bad:?}");
+        }
+    }
+
+    #[test]
+    fn to_spec_roundtrips_parse() {
+        // parse ∘ to_spec = id over every builtin plan …
+        for (name, _) in BUILTIN_PLANS {
+            let p = FaultPlan::parse(name).unwrap();
+            let back = FaultPlan::parse(&p.to_spec()).unwrap();
+            assert_eq!(p, back, "builtin {name} failed to round-trip: {}", p.to_spec());
+        }
+        // … over a domain plan (host-targeted clauses come back resolved
+        // per-shard, which re-parses to the same event set) …
+        let p = FaultPlan::parse("host=2:shards=0,1;shard-kill@1+0.5:host=2").unwrap();
+        let back = FaultPlan::parse(&p.to_spec()).unwrap();
+        assert_eq!(p, back, "{}", p.to_spec());
+        // … over a materialized stochastic schedule, and Display agrees.
+        let proc = FaultProcess::parse("mtbf=0.7,mttr=0.3,kind=straggler").unwrap().unwrap();
+        let plan = proc.materialize(42, 2, 10.0);
+        assert_eq!(plan, FaultPlan::parse(&plan.to_spec()).unwrap(), "{}", plan.to_spec());
+        assert_eq!(format!("{plan}"), plan.to_spec());
+        assert_eq!(FaultPlan::off().to_spec(), "off");
+    }
+
+    #[test]
+    fn merged_plans_stay_sorted() {
+        let a = FaultPlan::parse("stall@2:retries=1,base-ms=5").unwrap();
+        let b = FaultPlan::parse("straggler@0.5+1:shard=0,factor=2").unwrap();
+        let m = a.merged(b);
+        assert_eq!(m.events.len(), 2);
+        assert!(m.events[0].t0() <= m.events[1].t0());
+    }
+
+    #[test]
+    fn fault_process_parses_and_is_seed_deterministic() {
+        assert!(FaultProcess::parse("off").unwrap().is_none());
+        assert!(FaultProcess::parse("").unwrap().is_none());
+        let p = FaultProcess::parse("mtbf=2,mttr=0.4,kind=shard-kill").unwrap().unwrap();
+        assert_eq!(p.kind, ProcessKind::ShardKill);
+        assert_eq!(FaultProcess::parse(&p.label()).unwrap(), Some(p), "label round-trips");
+        // Defaults: mttr 0.5, kind straggler.
+        let d = FaultProcess::parse("mtbf=1").unwrap().unwrap();
+        assert_eq!((d.mttr_s, d.kind), (0.5, ProcessKind::Straggler));
+        // Same seed ⇒ identical schedule; different seed ⇒ different.
+        let s1 = d.materialize(7, 4, 20.0);
+        assert_eq!(s1, d.materialize(7, 4, 20.0));
+        assert_ne!(s1, d.materialize(8, 4, 20.0));
+        assert!(!s1.events.is_empty(), "mtbf=1 over 20 s should fire");
+        assert!(s1.events.len() <= MAX_PROCESS_EVENTS);
+        assert!(s1.events.iter().all(|e| e.t0() < 20.0));
+        assert!(s1.events.windows(2).all(|w| w[0].t0() <= w[1].t0()), "sorted by construction");
+        // A pathological rate is bounded by the event cap.
+        assert_eq!(d.materialize(7, 4, 1e12).events.len(), MAX_PROCESS_EVENTS);
+        // Bad specs.
+        for bad in ["mtbf=0", "mttr=1", "mtbf=1,mttr=0", "mtbf=1,kind=quake", "mtbf=1,zap=2"] {
+            assert!(FaultProcess::parse(bad).is_err(), "accepted bad spec {bad:?}");
+        }
     }
 
     #[test]

@@ -63,6 +63,10 @@ pub struct Scheduler {
     /// into the wait queue is recorded pre-clamp and written at the end of
     /// `run_batched` as an [`ArrivalKind::Trace`]-replayable JSONL file —
     /// turn any stochastic arrival run into a frozen regression workload.
+    /// Completed requests' token streams are appended as `"stream"` lines
+    /// (skipped by the trace replayer), so `diff-trace` can pinpoint the
+    /// first divergence between a healthy and a chaos run of the same
+    /// arrivals.
     ///
     /// [`ArrivalKind::Trace`]: crate::workload::arrivals::ArrivalKind::Trace
     capture_path: Option<String>,
@@ -106,8 +110,11 @@ impl Scheduler {
     /// Write the captured arrivals (sorted by time; the capture order is
     /// already chronological per arrival site, but closed-loop pulls can
     /// interleave with due-arrival releases) in the `ArrivalKind::Trace`
-    /// line format: `{"t": <s>, "task": "<name>", "max_new": <n>}`.
-    fn write_capture(&mut self) -> Result<()> {
+    /// line format: `{"t": <s>, "task": "<name>", "max_new": <n>}`, then
+    /// every completed request's token stream as
+    /// `{"stream": <id>, "task": "<name>", "tokens": [..]}` — ignored by
+    /// the trace replayer, consumed by the `diff-trace` subcommand.
+    fn write_capture(&mut self, metrics: &BatchRunMetrics) -> Result<()> {
         let Some(path) = self.capture_path.as_ref() else {
             return Ok(());
         };
@@ -119,6 +126,18 @@ impl Scheduler {
                 "{{\"t\": {t}, \"task\": \"{task}\", \"max_new\": {max_new}}}\n"
             ));
         }
+        // Completed streams, in id order (metrics.run.requests are sorted
+        // by id in BatchEngine::finish), so two captures of the same
+        // workload line up request-for-request.
+        for r in &metrics.run.requests {
+            let tokens: Vec<String> = r.output.iter().map(|t| t.to_string()).collect();
+            out.push_str(&format!(
+                "{{\"stream\": {}, \"task\": \"{}\", \"tokens\": [{}]}}\n",
+                r.id,
+                r.task,
+                tokens.join(", ")
+            ));
+        }
         std::fs::write(path, out)
             .map_err(|e| anyhow::anyhow!("writing arrival trace {path}: {e}"))
     }
@@ -126,7 +145,7 @@ impl Scheduler {
     /// Enqueue an explicit request (tests / replay); it is treated as
     /// having arrived at clock 0.
     pub fn enqueue(&mut self, req: Request) {
-        self.queue.push(req, 0.0);
+        self.queue.push(req, 0.0, 0.0);
     }
 
     /// Closed-loop pull: the oldest queued request, else a fresh one from
@@ -188,7 +207,7 @@ impl Scheduler {
             // Candidate: the policy's pick among arrived requests; in
             // closed-loop mode an empty queue pulls a fresh request from
             // the stream, arriving "now" by definition.
-            let idx = match self.queue.select(engine.admission(), engine.cfg.slo_s) {
+            let idx = match self.queue.select(engine.admission()) {
                 Some(i) => i,
                 None => {
                     if !self.arrivals.is_closed() {
@@ -196,7 +215,8 @@ impl Scheduler {
                     }
                     let req = self.arrivals.pull_closed();
                     self.record_arrival(engine.clock_s(), &req);
-                    self.queue.push(req, engine.clock_s())
+                    let slo = engine.cfg.slo_for(req.task.name());
+                    self.queue.push(req, engine.clock_s(), slo)
                 }
             };
             // Clamp the tail request to the remaining budget (in place, so
@@ -233,22 +253,24 @@ impl Scheduler {
             {
                 for (arrival_s, req) in self.arrivals.due(engine.clock_s()) {
                     self.record_arrival(arrival_s, &req);
-                    self.queue.push(req, arrival_s);
+                    let slo = engine.cfg.slo_for(req.task.name());
+                    self.queue.push(req, arrival_s, slo);
                 }
             }
             // Load shedding (degradation controller, rust/docs/faults.md):
-            // with an SLO configured, entries whose TTFT deadline already
-            // passed can only be served as goodput misses — drop them
-            // before they burn a slot. Opt-in: `--controller off` (the
-            // default) never sheds, keeping admission bit-exact.
-            if engine.cfg.controller.is_on() && engine.cfg.slo_s > 0.0 {
-                let shed = self.queue.shed_overdue(engine.clock_s(), engine.cfg.slo_s);
+            // with an SLO configured — catch-all or per-task class —
+            // entries whose TTFT deadline already passed can only be
+            // served as goodput misses — drop them before they burn a
+            // slot. Opt-in: `--controller off` (the default) never sheds,
+            // keeping admission bit-exact.
+            if engine.cfg.controller.is_on() && engine.cfg.has_slo() {
+                let shed = self.queue.shed_overdue(engine.clock_s());
                 engine.note_shed(shed);
             }
             self.admit_phase(engine, &mut served)?;
             engine.set_queue_depth(self.queue.len());
             engine.set_queue_deadline(
-                self.queue.min_deadline_s(engine.cfg.slo_s).unwrap_or(f64::INFINITY),
+                self.queue.min_deadline_s().unwrap_or(f64::INFINITY),
             );
             if !engine.step_iteration()? {
                 // An idle step means every slot was swept.
@@ -261,7 +283,7 @@ impl Scheduler {
                 // Engine idle with budget left: the policy's next pick must
                 // be admittable against an empty pool, otherwise it can
                 // never fit.
-                if let Some(i) = self.queue.select(engine.admission(), engine.cfg.slo_s) {
+                if let Some(i) = self.queue.select(engine.admission()) {
                     anyhow::ensure!(
                         engine.can_admit(self.queue.req(i)),
                         "request {} cannot fit the KV pool",
@@ -278,8 +300,9 @@ impl Scheduler {
                 }
             }
         }
-        self.write_capture()?;
-        Ok(engine.finish())
+        let metrics = engine.finish();
+        self.write_capture(&metrics)?;
+        Ok(metrics)
     }
 }
 
@@ -378,15 +401,26 @@ mod tests {
         let m = sched.run_batched(&mut engine).unwrap();
         assert!(!m.run.requests.is_empty());
         let text = std::fs::read_to_string(&path).unwrap();
-        let lines = text.lines().count();
-        assert!(lines > 0, "capture recorded nothing");
-        // The capture loads as a replayable trace with the same arrivals.
+        let arrival_lines = text.lines().filter(|l| l.contains("\"t\":")).count();
+        let stream_lines = text.lines().filter(|l| l.contains("\"stream\":")).count();
+        assert!(arrival_lines > 0, "capture recorded no arrivals");
+        assert_eq!(
+            stream_lines,
+            m.run.requests.len(),
+            "every completed request leaves a stream line"
+        );
+        assert!(
+            text.lines().all(|l| l.contains("\"t\":") || l.contains("\"stream\":")),
+            "unexpected capture line"
+        );
+        // The capture loads as a replayable trace with the same arrivals
+        // (stream lines are skipped by the replayer).
         let stream2 = RequestStream::new(Workload::single(Task::Code), 5, 100);
         let mut replay =
             ArrivalProcess::new(ArrivalKind::Trace { path: path.clone() }, stream2, 7)
                 .unwrap();
         let due = replay.due(f64::INFINITY);
-        assert_eq!(due.len(), lines);
+        assert_eq!(due.len(), arrival_lines);
         let _ = std::fs::remove_file(&path);
     }
 }

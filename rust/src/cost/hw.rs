@@ -31,6 +31,11 @@ pub struct HwParams {
     /// Additional all-to-all cost per in-flight token per MoE layer
     /// (activation bytes crossing the interconnect).
     pub alltoall_token_s: f64,
+    /// Effective inter-device link bandwidth for bulk expert-weight
+    /// movement (bytes/s) — what a self-healing placement rebuild pays to
+    /// relocate an expert (`IterCost::migration_s`). NVLink-class peer
+    /// copy, well below HBM streaming bandwidth.
+    pub migrate_bytes_per_s: f64,
 }
 
 impl Default for HwParams {
@@ -45,6 +50,7 @@ impl Default for HwParams {
             reject_per_token_s: 0.06e-3,
             alltoall_layer_s: 8e-6,
             alltoall_token_s: 0.2e-6,
+            migrate_bytes_per_s: 250e9,
         }
     }
 }
@@ -69,5 +75,8 @@ mod tests {
         // or sharding could never win.
         assert!(hw.alltoall_layer_s > 0.0 && hw.alltoall_layer_s < 1e-4);
         assert!(hw.alltoall_token_s > 0.0 && hw.alltoall_token_s < hw.alltoall_layer_s);
+        // Migration moves weights over the interconnect: slower than HBM
+        // streaming (or migrating would beat fetching) but nonzero.
+        assert!(hw.migrate_bytes_per_s > 0.0 && hw.migrate_bytes_per_s < hw.eff_bw());
     }
 }

@@ -13,7 +13,7 @@ mod hw;
 mod placement;
 
 pub use hw::HwParams;
-pub use placement::{CoActivationStats, ExpertPlacement};
+pub use placement::{capacity_caps, CoActivationStats, ExpertPlacement};
 
 use crate::config::DrafterKind;
 use crate::models::PaperScaleSpec;
@@ -58,6 +58,15 @@ pub struct IterCost {
     /// honestly) without polluting the verify term the utility signal
     /// prices speculation against. Always 0 with `--faults off`.
     pub stall_s: f64,
+    /// Expert-migration time charged to this iteration: when the straggler
+    /// detector triggers a self-healing placement rebuild
+    /// (rust/docs/faults.md), the experts that changed shard must move over
+    /// the inter-device link. Like `reprefill_s` it extends the decode
+    /// clock without entering the verify term. With the pipeline on, the
+    /// transfer overlaps the draft window SP-MoE-style, so only the slice
+    /// exceeding that window is charged (the engine pre-subtracts it);
+    /// serial mode pays the full transfer. Always 0 with detection off.
+    pub migration_s: f64,
 }
 
 impl IterCost {
@@ -74,6 +83,7 @@ impl IterCost {
             + self.alltoall_s
             + self.reprefill_s
             + self.stall_s
+            + self.migration_s
     }
 
     /// Drafting time that actually extends the iteration (not hidden under
@@ -143,6 +153,7 @@ impl GpuCostModel {
             alltoall_s: 0.0,
             reprefill_s: 0.0,
             stall_s: 0.0,
+            migration_s: 0.0,
         }
     }
 
@@ -196,6 +207,7 @@ impl GpuCostModel {
             alltoall_s: 0.0,
             reprefill_s: 0.0,
             stall_s: 0.0,
+            migration_s: 0.0,
         }
     }
 
@@ -271,6 +283,7 @@ impl GpuCostModel {
             alltoall_s: self.alltoall_s(n_shards, total_tokens),
             reprefill_s: 0.0,
             stall_s: 0.0,
+            migration_s: 0.0,
         }
     }
 
@@ -316,6 +329,7 @@ impl GpuCostModel {
             alltoall_s: self.alltoall_s(n_shards, total_tokens),
             reprefill_s: 0.0,
             stall_s: 0.0,
+            migration_s: 0.0,
         }
     }
 
@@ -421,6 +435,7 @@ impl GpuCostModel {
             alltoall_s: 0.0,
             reprefill_s: 0.0,
             stall_s: 0.0,
+            migration_s: 0.0,
         }
     }
 
@@ -438,6 +453,20 @@ impl GpuCostModel {
             // iteration per unit K).
             DrafterKind::EagleLite => k as f64 * self.hw.eagle_draft_bytes / self.hw.eff_bw(),
         }
+    }
+
+    /// Transfer time for moving `experts_moved` routed experts to a new
+    /// shard (self-healing placement, rust/docs/faults.md). An expert's
+    /// weights exist in every MoE layer, so the bill is
+    /// `layers · moved · expert_bytes / migrate_bw` — the inter-device
+    /// link, not HBM, is the bottleneck. Zero moves are free, and dense
+    /// models have no routed experts to migrate.
+    pub fn migration_s(&self, experts_moved: usize) -> f64 {
+        if experts_moved == 0 || !self.spec.is_moe() {
+            return 0.0;
+        }
+        self.spec.layers as f64 * experts_moved as f64 * self.spec.expert_bytes()
+            / self.hw.migrate_bytes_per_s
     }
 
     /// Analytic no-speculation baseline (K=0, T=1): exactly `top_k` experts
@@ -613,6 +642,26 @@ mod tests {
         let stalled = IterCost { stall_s: 5e-3, ..plain };
         assert!((stalled.total() - (plain.total() + 5e-3)).abs() < 1e-15);
         assert!((stalled.verify_s() - plain.verify_s()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn migration_charges_the_decode_clock_not_verify() {
+        // A self-healing expert migration extends the iteration
+        // (TPOT-visible) but is not verification work: total() grows by
+        // exactly the charge, verify_s() is untouched, the healthy default
+        // is free, and dense models have nothing to move.
+        let m = model("mixtral");
+        let plain = m.verify_cost(&[6, 6], 4, 3, DrafterKind::Ngram);
+        assert_eq!(plain.migration_s, 0.0);
+        let mig = m.migration_s(3);
+        assert!(mig > 0.0);
+        let charged = IterCost { migration_s: mig, ..plain };
+        assert!((charged.total() - (plain.total() + mig)).abs() < 1e-15);
+        assert!((charged.verify_s() - plain.verify_s()).abs() < 1e-15);
+        // Linear in experts moved; zero moves are free.
+        assert!((m.migration_s(6) - 2.0 * mig).abs() < 1e-15);
+        assert_eq!(m.migration_s(0), 0.0);
+        assert_eq!(model("llama").migration_s(3), 0.0);
     }
 
     #[test]

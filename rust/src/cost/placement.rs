@@ -114,6 +114,42 @@ impl ExpertPlacement {
             .map(|l| l.iter().copied().max().unwrap_or(0))
             .collect()
     }
+
+    /// Experts whose shard differs between `self` and `other` — the
+    /// migration volume a placement rebuild must move over the
+    /// interconnect (`CostModel::migration_s` prices it per expert per
+    /// layer). Placements must cover the same expert count.
+    pub fn moved_from(&self, other: &ExpertPlacement) -> usize {
+        debug_assert_eq!(self.n_experts(), other.n_experts());
+        (0..self.n_experts().min(other.n_experts()))
+            .filter(|&e| self.shard_of(e) != other.shard_of(e))
+            .count()
+    }
+}
+
+/// Integer per-shard expert caps proportional to `weights` (a shard's
+/// relative healthy capacity — the self-healing detector passes
+/// `1/health[s]`, so a 4× straggler gets a quarter of the experts of a
+/// healthy peer). Each cap is `ceil(E · w_s / Σw)`, so the caps always
+/// cover all experts; non-positive or non-finite weights mean "place
+/// nothing here" (cap 0). An all-degenerate weight vector falls back to
+/// the uniform `ceil(E/S)` cap.
+pub fn capacity_caps(n_experts: usize, weights: &[f64]) -> Vec<usize> {
+    let n_shards = weights.len().max(1);
+    let total: f64 = weights.iter().filter(|w| w.is_finite() && **w > 0.0).sum();
+    if total <= 0.0 {
+        return vec![n_experts.div_ceil(n_shards); n_shards];
+    }
+    weights
+        .iter()
+        .map(|&w| {
+            if !w.is_finite() || w <= 0.0 {
+                0
+            } else {
+                (n_experts as f64 * w / total).ceil() as usize
+            }
+        })
+        .collect()
 }
 
 /// Online expert co-occurrence histogram: how often each expert pair was
@@ -190,6 +226,23 @@ impl CoActivationStats {
     pub fn greedy_placement(&self, n_shards: usize) -> ExpertPlacement {
         let n_shards = n_shards.max(1).min(self.n_experts.max(1));
         let cap = self.n_experts.div_ceil(n_shards);
+        self.greedy_placement_capped(&vec![cap; n_shards])
+    }
+
+    /// The greedy packer under explicit per-shard capacities — the
+    /// self-healing rebuild: `caps[s]` bounds how many experts shard `s`
+    /// may hold (see [`capacity_caps`]; a detected straggler gets a small
+    /// cap so its verify share shrinks to match its slowdown). Caps must
+    /// cover all experts (`Σ caps >= E`; degenerate inputs fall back to
+    /// the uniform cap). Same hottest-first / min-conflict / deterministic
+    /// tie-break discipline as [`Self::greedy_placement`].
+    pub fn greedy_placement_capped(&self, caps: &[usize]) -> ExpertPlacement {
+        let n_shards = caps.len().max(1);
+        let mut caps: Vec<usize> = caps.to_vec();
+        caps.resize(n_shards, 0);
+        if caps.iter().sum::<usize>() < self.n_experts {
+            caps = vec![self.n_experts.div_ceil(n_shards); n_shards];
+        }
         // Hottest-first order; ties by id for determinism.
         let mut order: Vec<usize> = (0..self.n_experts).collect();
         order.sort_by_key(|&e| (std::cmp::Reverse(self.acts[e]), e));
@@ -199,7 +252,7 @@ impl CoActivationStats {
         for &e in &order {
             let mut best: Option<(u64, usize, usize)> = None; // (conflict, size, shard)
             for (s, m) in members.iter().enumerate() {
-                if m.len() >= cap {
+                if m.len() >= caps[s] {
                     continue;
                 }
                 let conflict: u64 = m.iter().map(|&f| self.pair(e, f)).sum();
@@ -212,7 +265,7 @@ impl CoActivationStats {
                     best = Some(key);
                 }
             }
-            let (_, _, s) = best.expect("capacity ceil(E/S) * S >= E");
+            let (_, _, s) = best.expect("caps cover all experts");
             assign[e] = s;
             members[s].push(e);
         }
@@ -353,6 +406,55 @@ mod tests {
         // A short mask treats unmentioned shards as alive.
         let short = ExpertPlacement::balanced_surviving(6, 3, &[true]);
         assert_eq!(short.shard_sizes(), vec![0, 3, 3]);
+    }
+
+    #[test]
+    fn capacity_caps_track_relative_health() {
+        // Healthy shards weight 1.0; a 4x straggler weighs 1/4 — it gets
+        // at most ceil(8 * 0.25 / 2.25) = 1 expert of 8.
+        let caps = capacity_caps(8, &[1.0, 0.25, 1.0]);
+        assert!(caps.iter().sum::<usize>() >= 8, "caps must cover all experts");
+        assert_eq!(caps[1], 1);
+        assert!(caps[0] >= 3 && caps[2] >= 3);
+        // Uniform weights reproduce the uniform cap.
+        assert_eq!(capacity_caps(8, &[1.0; 4]), vec![2; 4]);
+        // Degenerate weights: non-positive shards get nothing; an
+        // all-degenerate vector falls back to uniform.
+        assert_eq!(capacity_caps(6, &[1.0, 0.0, 1.0])[1], 0);
+        assert_eq!(capacity_caps(6, &[0.0, f64::NAN]), vec![3, 3]);
+    }
+
+    #[test]
+    fn capped_packer_respects_caps_and_generalizes_uniform() {
+        let mut stats = CoActivationStats::new(8);
+        let steps: Vec<Vec<usize>> = (0..4).cycle().take(64).map(|g| vec![g, g + 4]).collect();
+        stats.observe(&steps);
+        // Uniform caps == the plain packer.
+        let uniform = stats.greedy_placement_capped(&vec![2; 4]);
+        let plain = stats.greedy_placement(4);
+        for e in 0..8 {
+            assert_eq!(uniform.shard_of(e), plain.shard_of(e));
+        }
+        // A starved shard 1 (cap 0) holds nothing; survivors absorb all 8.
+        let healed = stats.greedy_placement_capped(&[3, 0, 3, 3]);
+        let sizes = healed.shard_sizes();
+        assert_eq!(sizes[1], 0);
+        assert_eq!(sizes.iter().sum::<usize>(), 8);
+        assert!(sizes.iter().all(|&s| s <= 3));
+        // Insufficient caps fall back to the uniform cap instead of
+        // panicking.
+        let fallback = stats.greedy_placement_capped(&[1, 0, 0, 0]);
+        assert_eq!(fallback.shard_sizes().iter().sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn moved_from_counts_the_migration_volume() {
+        let a = ExpertPlacement::balanced(8, 4);
+        assert_eq!(a.moved_from(&a), 0);
+        let b = ExpertPlacement::from_assign(vec![0, 1, 2, 3, 0, 1, 2, 0], 4);
+        // balanced assigns e % 4 = [0,1,2,3,0,1,2,3]; only expert 7 moved.
+        assert_eq!(b.moved_from(&a), 1);
+        assert_eq!(a.moved_from(&b), 1, "migration volume is symmetric");
     }
 
     #[test]

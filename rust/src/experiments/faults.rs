@@ -19,7 +19,8 @@
 //! [`FaultPlan`]: crate::coordinator::faults::FaultPlan
 
 use crate::config::{AdmissionKind, ControllerKind, EvictionKind};
-use crate::coordinator::faults::BUILTIN_PLANS;
+use crate::coordinator::batch::PROCESS_HORIZON_S;
+use crate::coordinator::faults::{FaultPlan, FaultProcess, BUILTIN_PLANS};
 use crate::coordinator::scheduler::{Budget, Scheduler};
 use crate::experiments::preemption::constrained_pool_blocks;
 use crate::experiments::runner::ExpCtx;
@@ -34,6 +35,10 @@ use anyhow::Result;
 pub struct FaultCell {
     /// `--faults` spec (`off`, a builtin plan name, or inline clauses).
     pub faults: String,
+    /// `--fault-process` spec (`off` or `mtbf=<s>,mttr=<s>,kind=<k>`),
+    /// materialized seed-deterministically by the engine and merged into
+    /// the plan above.
+    pub fault_process: String,
     pub controller: ControllerKind,
     pub arrivals: ArrivalKind,
     /// Half-working-set pool (contention is what the controller manages).
@@ -56,6 +61,7 @@ pub fn chaos_cell(faults: &str, controller: ControllerKind, seed: u64) -> FaultC
     let sample = RequestStream::new(cell_workload(), seed, max_new).take(8);
     FaultCell {
         faults: faults.to_string(),
+        fault_process: "off".to_string(),
         controller,
         arrivals: ArrivalKind::bursty(2.0),
         pool_blocks: constrained_pool_blocks(&sample, 4),
@@ -68,6 +74,26 @@ pub fn chaos_cell(faults: &str, controller: ControllerKind, seed: u64) -> FaultC
 
 fn cell_workload() -> Workload {
     Workload::by_name("code+math").expect("known mix")
+}
+
+/// Offered-load axis of the saturation sweep (mean Poisson req/s).
+pub const SATURATION_RATES: &[f64] = &[0.5, 1.0, 2.0, 4.0];
+
+/// Stochastic fault process every saturation cell serves under: straggler
+/// episodes with a 1.5 s MTBF and 0.4 s MTTR — frequent enough that each
+/// cell rides through several fault/repair cycles.
+pub const SATURATION_PROCESS: &str = "mtbf=1.5,mttr=0.4,kind=straggler";
+
+/// One saturation cell: open-loop Poisson arrivals at `rate` into the
+/// chaos shape (same pool, eviction, SLO, and budget), every cell under
+/// the [`SATURATION_PROCESS`] renewal process. Shared by `figure faults`
+/// and the bench BENCH_saturation.json emitter so the axes never drift.
+pub fn saturation_cell(rate: f64, controller: ControllerKind, seed: u64) -> FaultCell {
+    FaultCell {
+        fault_process: SATURATION_PROCESS.to_string(),
+        arrivals: ArrivalKind::Poisson { rate },
+        ..chaos_cell("off", controller, seed)
+    }
 }
 
 /// Serve one fault cell on the sim backend at batch 4 with 2 expert
@@ -87,6 +113,7 @@ pub fn run_cell(
     cfg.slo_s = cell.slo_s;
     cfg.shards = 2;
     cfg.faults = cell.faults.clone();
+    cfg.fault_process = cell.fault_process.clone();
     cfg.controller = cell.controller;
     let mut engine = ctx.batch_engine(cfg, policy)?;
     let stream = RequestStream::new(cell_workload(), ctx.seed, cell.max_new);
@@ -150,5 +177,75 @@ pub fn faults(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
             ]);
         }
     }
-    Ok(vec![t])
+    Ok(vec![t, saturation_table(ctx)?, resolved_plans_table(ctx.seed)])
+}
+
+/// Goodput vs offered load: sweep the Poisson arrival rate with the
+/// degradation controller off vs adaptive, every cell under the same
+/// stochastic MTBF straggler process. The saturation knee — where goodput
+/// stops tracking offered load — moves right with the controller on.
+pub fn saturation_table(ctx: &ExpCtx) -> Result<Table> {
+    let policy = PolicyKind::Static(3);
+    let mut t = Table::new(
+        format!(
+            "Goodput vs offered load (sim backend, code+math mix, batch 4, 2 shards): \
+             Poisson arrivals under fault process `{SATURATION_PROCESS}`"
+        ),
+        &[
+            "rate /s",
+            "controller",
+            "reqs",
+            "tokens",
+            "tok/s (virtual)",
+            "TPOT",
+            "TTFT p95",
+            "goodput",
+            "shed",
+            "events",
+            "degraded",
+        ],
+    );
+    for &rate in SATURATION_RATES {
+        for controller in [ControllerKind::Off, ControllerKind::Adaptive] {
+            let cell = saturation_cell(rate, controller, ctx.seed);
+            let m = run_cell(ctx, "mixtral", &policy, &cell)?;
+            t.row(vec![
+                format!("{rate:.1}"),
+                controller.label().into(),
+                m.run.requests.len().to_string(),
+                m.run.total_tokens().to_string(),
+                format!("{:.1}", m.run.total_tokens() as f64 / m.clock_s),
+                ms(m.tpot_s()),
+                ms(m.run.ttft_percentile(0.95)),
+                format!("{:.0}%", 100.0 * m.run.slo_goodput(cell.slo_s)),
+                m.sheds.to_string(),
+                m.fault_events.to_string(),
+                format!("{:.0}%", 100.0 * m.degraded_fraction()),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Every builtin plan's resolved spec (`FaultPlan::parse` → `to_spec`,
+/// the round-trip grammar), plus the saturation sweep's stochastic
+/// process materialized at this seed — so `figure faults` shows exactly
+/// which events each named plan and process expand into.
+fn resolved_plans_table(seed: u64) -> Table {
+    let mut t = Table::new(
+        "Resolved fault plans (parse -> to_spec round-trip)",
+        &["plan", "resolved spec"],
+    );
+    for (name, _) in BUILTIN_PLANS {
+        let plan = FaultPlan::parse(name).expect("builtin plan parses").to_spec();
+        t.row(vec![(*name).into(), plan]);
+    }
+    let process = FaultProcess::parse(SATURATION_PROCESS)
+        .expect("saturation process parses")
+        .expect("saturation process is not off");
+    t.row(vec![
+        format!("process `{SATURATION_PROCESS}`"),
+        process.materialize(seed, 2, PROCESS_HORIZON_S).to_spec(),
+    ]);
+    t
 }

@@ -87,8 +87,11 @@ USAGE:
                  [--max-preemptions 8] [--ngram-max 4] [--ngram-min 1]
                  [--guide-strength 48] [--max-new 200]
                  [--arrivals closed|poisson|bursty|trace:<path>] [--rate R]
-                 [--admission fcfs|parked-first|edf] [--slo-ms MS]
+                 [--admission fcfs|parked-first|edf]
+                 [--slo-ms MS | --slo-ms code=250,math=400,default=300]
                  [--faults off|straggler|stall|shard-kill|pool-shrink|chaos|file:<path>|<spec>]
+                 [--fault-process off|mtbf=<s>,mttr=<s>,kind=<k>]
+                 [--heal off|detect]
                  [--controller off|adaptive] [--capture-trace out.jsonl]
   cascade sweep  [--tokens 300] [--out-dir results] [--shards 1,2,4] [--rate 0.5,1,2]
                  (continuous-batching comparison: batch=1 vs 4, static-K vs Cascade;
@@ -99,14 +102,20 @@ USAGE:
                  [--out-preemption BENCH_preemption.json]
                  [--out-arrivals BENCH_arrivals.json]
                  [--out-faults BENCH_faults.json]
+                 [--out-saturation BENCH_saturation.json]
                  (serial vs pipelined TPOT/bubble-fraction table at batch 1/4,
                   sharded TPOT at shards 1/2/4 x batch 1/4, eviction-policy
                   throughput under a half-working-set pool, per-admission
-                  p95 queueing delay under bursty arrivals, and chaos-plan
-                  goodput with the degradation controller on vs off, as
-                  JSON for CI)
+                  p95 queueing delay under bursty arrivals, chaos-plan
+                  goodput with the degradation controller on vs off, and a
+                  goodput-vs-offered-load rate sweep under a stochastic
+                  MTBF fault process, as JSON for CI)
   cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|batch|pipeline|sharding|preemption|arrivals|faults|all>
                  [--backend real|sim] [--tokens 300] [--out-dir results]
+  cascade diff-trace <healthy.jsonl> <chaos.jsonl>
+                 (compare completed token streams of two --capture-trace
+                  files request-by-request; reports the first divergence
+                  point of each and exits 1 on any token mismatch)
 
   --batch N > 1 serves through the continuous-batching engine: one fused
   verify step per iteration over all in-flight requests, a shared KV block
@@ -148,13 +157,24 @@ USAGE:
   --faults injects a deterministic fault plan on the virtual clock:
   per-shard stragglers, transient verify stalls with backoff retries,
   shard kills (placement rebuilt on survivors, victim KV replayed back),
-  and KV-pool shrinks. --controller adaptive turns on graceful
+  KV-pool shrinks, and correlated host domains (host=<h>:shards=a,b —
+  one event takes out every shard of the host). --fault-process layers a
+  stochastic MTBF/MTTR renewal process on top: exponential inter-arrival
+  and repair times drawn seed-deterministically, materialized into the
+  same plan grammar. --controller adaptive turns on graceful
   degradation: pool/queue/deadline pressure throttles K, then disables
   speculation and caps the verify expert budget, while arrivals whose
-  --slo-ms deadline already passed are shed before admission. Completed
+  --slo-ms deadline already passed are shed before admission. --slo-ms
+  also accepts per-task classes (code=250,math=400,default=300): EDF
+  deadlines, shedding, and goodput become per-class. --heal detect turns
+  on straggler-aware self-healing placement: a per-shard health EWMA
+  with hysteresis detects slow shards and rebuilds the expert placement
+  capacity-weighted away from them (migration priced, hidden under the
+  draft window when pipelined), migrating back after recovery. Completed
   requests stay bit-exact with the fault-free run; --capture-trace
-  records the run's arrivals as a replayable trace file. Defaults (off /
-  off) are bit-exact with pre-fault builds. See rust/docs/faults.md.
+  records the run's arrivals plus its completed token streams (replay
+  skips the stream lines; diff-trace compares them). Defaults (off /
+  off / off) are bit-exact with pre-fault builds. See rust/docs/faults.md.
 "
     );
     std::process::exit(2)
@@ -174,8 +194,121 @@ fn main() -> Result<()> {
         "sweep" => sweep(&args),
         "bench" => bench(&args),
         "figure" => figure(&args),
+        "diff-trace" => diff_trace(&args),
         _ => usage(),
     }
+}
+
+/// Load the completed-stream records (`{"stream": id, ...}` lines) from a
+/// `--capture-trace` file: request id -> (task, output tokens). Arrival
+/// lines are skipped, mirroring the replayer's filter.
+fn load_streams(path: &str) -> Result<BTreeMap<usize, (String, Vec<u64>)>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    let mut streams = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = cascade::util::json::parse(line)
+            .with_context(|| format!("{path}:{}: not a JSON record", lineno + 1))?;
+        let Some(id) = v.get("stream") else { continue };
+        let id = id.as_usize()?;
+        let task = v.req("task")?.as_str()?.to_string();
+        let tokens = v
+            .req("tokens")?
+            .as_arr()?
+            .iter()
+            .map(|t| t.as_f64().map(|f| f as u64))
+            .collect::<Result<Vec<_>>>()?;
+        streams.insert(id, (task, tokens));
+    }
+    Ok(streams)
+}
+
+/// `diff-trace <healthy> <chaos>`: compare the completed token streams of
+/// two captured runs request-by-request and report the first divergence
+/// point of each. The losslessness contract says completed streams are
+/// bit-exact under faults — this is the field tool for checking it. Exits
+/// 1 when any shared stream's tokens diverge (requests missing from one
+/// side — shed or unfinished under chaos — are reported but are not a
+/// token divergence).
+fn diff_trace(args: &Args) -> Result<()> {
+    let (Some(healthy), Some(chaos)) = (args.positional.first(), args.positional.get(1))
+    else {
+        bail!("usage: cascade diff-trace <healthy.jsonl> <chaos.jsonl> (two --capture-trace files)");
+    };
+    let a = load_streams(healthy)?;
+    let b = load_streams(chaos)?;
+    anyhow::ensure!(!a.is_empty(), "{healthy} holds no completed-stream records");
+    anyhow::ensure!(!b.is_empty(), "{chaos} holds no completed-stream records");
+    let mut t = Table::new(
+        format!("diff-trace: {healthy} vs {chaos}"),
+        &["stream", "task", "tokens A", "tokens B", "first divergence"],
+    );
+    let mut diverged = 0usize;
+    let mut missing = 0usize;
+    let ids: Vec<usize> = a.keys().chain(b.keys()).copied().collect();
+    let mut seen = Vec::new();
+    for id in ids {
+        if seen.contains(&id) {
+            continue;
+        }
+        seen.push(id);
+        match (a.get(&id), b.get(&id)) {
+            (Some((task, ta)), Some((_, tb))) => {
+                let common = ta.iter().zip(tb.iter()).take_while(|(x, y)| x == y).count();
+                let verdict = if ta == tb {
+                    "identical".to_string()
+                } else {
+                    diverged += 1;
+                    if common < ta.len().min(tb.len()) {
+                        format!("token {common}: {} vs {}", ta[common], tb[common])
+                    } else {
+                        format!("length (prefix of {common} matches)")
+                    }
+                };
+                t.row(vec![
+                    id.to_string(),
+                    task.clone(),
+                    ta.len().to_string(),
+                    tb.len().to_string(),
+                    verdict,
+                ]);
+            }
+            (Some((task, ta)), None) => {
+                missing += 1;
+                t.row(vec![
+                    id.to_string(),
+                    task.clone(),
+                    ta.len().to_string(),
+                    "-".into(),
+                    "missing in B (shed or unfinished)".into(),
+                ]);
+            }
+            (None, Some((task, tb))) => {
+                missing += 1;
+                t.row(vec![
+                    id.to_string(),
+                    task.clone(),
+                    "-".into(),
+                    tb.len().to_string(),
+                    "missing in A (shed or unfinished)".into(),
+                ]);
+            }
+            (None, None) => unreachable!("id came from one of the maps"),
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "diff-trace: {} shared stream(s), {diverged} divergent, {missing} one-sided",
+        seen.len() - missing
+    );
+    if diverged > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
 }
 
 /// The manifest when artifacts are built, else the builtin zoo (enough for
@@ -268,14 +401,43 @@ fn serve(args: &Args) -> Result<()> {
     let arrival_kind =
         cascade::workload::arrivals::ArrivalKind::parse(&args.get("arrivals", "closed"), rate)?;
     let admission = cascade::config::AdmissionKind::parse(&args.get("admission", "fcfs"))?;
-    let slo_s = args.get_f64("slo-ms", 0.0)? / 1e3;
-    anyhow::ensure!(slo_s >= 0.0, "--slo-ms cannot be negative");
+    // --slo-ms takes either a single catch-all number of milliseconds, or
+    // per-task classes (`code=250,math=400,default=300`): a `default=`
+    // entry becomes the catch-all `slo_s`, the rest become per-class
+    // deadlines resolved by `EngineConfig::slo_for`.
+    let slo_spec = args.get("slo-ms", "0");
+    let (slo_s, slo_classes) = if slo_spec.contains('=') {
+        let parsed = cascade::config::SloClasses::parse(&slo_spec)
+            .with_context(|| format!("--slo-ms {slo_spec:?}"))?;
+        let mut catch_all = 0.0;
+        let mut classes = Vec::new();
+        for (name, s) in parsed.classes {
+            if name == "default" {
+                catch_all = s;
+            } else {
+                classes.push((name, s));
+            }
+        }
+        (catch_all, cascade::config::SloClasses { classes })
+    } else {
+        let s = args.get_f64("slo-ms", 0.0)? / 1e3;
+        anyhow::ensure!(s >= 0.0, "--slo-ms cannot be negative");
+        (s, cascade::config::SloClasses::default())
+    };
+    let has_slo = slo_s > 0.0 || !slo_classes.is_empty();
     // Fault plan + degradation controller (rust/docs/faults.md). The spec
     // is validated here, at the CLI boundary — the engine constructor is
     // infallible and treats an unparseable spec as fault-free.
     let faults_spec = args.get("faults", "off");
     let fault_plan = cascade::coordinator::faults::FaultPlan::parse(&faults_spec)
         .with_context(|| format!("--faults {faults_spec:?}"))?;
+    // Stochastic fault process (MTBF/MTTR): validated here, materialized
+    // seed-deterministically inside the engine and merged into the plan.
+    let fault_process = args.get("fault-process", "off");
+    let fault_process_on = cascade::coordinator::faults::FaultProcess::parse(&fault_process)
+        .with_context(|| format!("--fault-process {fault_process:?}"))?
+        .is_some();
+    let heal = cascade::config::HealKind::parse(&args.get("heal", "off"))?;
     let controller = cascade::config::ControllerKind::parse(&args.get("controller", "off"))?;
     let capture_trace = args.get("capture-trace", "");
     let d = EngineConfig::default();
@@ -310,8 +472,10 @@ fn serve(args: &Args) -> Result<()> {
         || eviction.is_on()
         || !arrival_kind.is_closed()
         || admission != cascade::config::AdmissionKind::Fcfs
-        || slo_s > 0.0
+        || has_slo
         || !fault_plan.is_off()
+        || fault_process_on
+        || heal.is_on()
         || controller.is_on()
         || !capture_trace.is_empty();
     let cfg = EngineConfig {
@@ -331,7 +495,10 @@ fn serve(args: &Args) -> Result<()> {
         max_preemptions_per_req: max_preemptions,
         admission,
         slo_s,
+        slo_classes: slo_classes.clone(),
         faults: faults_spec.clone(),
+        fault_process: fault_process.clone(),
+        heal,
         controller,
         ..EngineConfig::default()
     };
@@ -477,8 +644,11 @@ fn serve(args: &Args) -> Result<()> {
             ]);
         }
         t.row(vec!["admission".into(), admission.label().into()]);
-        if !engine.faults().is_off() || controller.is_on() {
+        if !engine.faults().is_off() || fault_process_on || controller.is_on() {
             t.row(vec!["faults".into(), faults_spec.clone()]);
+            if fault_process_on {
+                t.row(vec!["fault process".into(), fault_process.clone()]);
+            }
             t.row(vec!["controller".into(), controller.label().into()]);
             t.row(vec!["fault events fired".into(), m.fault_events.to_string()]);
             t.row(vec![
@@ -493,6 +663,18 @@ fn serve(args: &Args) -> Result<()> {
             t.row(vec![
                 "kill recovery (sim)".into(),
                 format!("{:.2}s", m.recovery_s),
+            ]);
+        }
+        if heal.is_on() {
+            t.row(vec!["self-heal".into(), heal.label().into()]);
+            t.row(vec!["heal rebuilds".into(), m.heal_rebuilds.to_string()]);
+            t.row(vec![
+                "experts migrated".into(),
+                m.migrated_experts().to_string(),
+            ]);
+            t.row(vec![
+                "migration (sim)".into(),
+                format!("{:.2}ms", 1e3 * m.migration_s()),
             ]);
         }
         if !arrival_kind.is_closed() {
@@ -542,6 +724,20 @@ fn serve(args: &Args) -> Result<()> {
                 format!("SLO goodput (TTFT <= {:.0}ms)", 1e3 * slo_s),
                 format!("{:.1}%", 100.0 * m.run.slo_goodput(slo_s)),
             ]);
+        }
+        if !slo_classes.is_empty() {
+            // Per-class goodput against each task's own deadline (classes
+            // without completions print nothing; tasks outside every class
+            // fall back to the catch-all when one is set).
+            for name in m.run.task_names() {
+                let class_slo = slo_classes.get(&name).unwrap_or(slo_s);
+                if class_slo > 0.0 {
+                    t.row(vec![
+                        format!("goodput[{name}] (TTFT <= {:.0}ms)", 1e3 * class_slo),
+                        format!("{:.1}%", 100.0 * m.run.slo_goodput_for(&name, class_slo)),
+                    ]);
+                }
+            }
         }
         t.row(vec![
             "test-phase fraction".into(),
@@ -1078,6 +1274,88 @@ fn bench(args: &Args) -> Result<()> {
         ]));
     }
     println!("{}", ft.render());
+
+    // ---- Saturation bench (BENCH_saturation.json) -----------------------
+    // Goodput vs offered load: Poisson arrival-rate sweep with the
+    // degradation controller off vs adaptive, every cell under the same
+    // stochastic MTBF straggler process. Shares its cell constructor with
+    // `figure faults`' saturation table so the axes can never drift. The
+    // headline: the saturation knee (goodput falling away from offered
+    // load) sits at a higher rate with the controller on.
+    let saturation_out = args.get("out-saturation", "BENCH_saturation.json");
+    let mut sat_rows: Vec<json::Value> = Vec::new();
+    let mut satt = Table::new(
+        format!(
+            "saturation bench: mixtral/{task}/static-k3 (sim, batch 4, 2 shards, \
+             fault process {})",
+            experiments::faults::SATURATION_PROCESS
+        ),
+        &[
+            "rate /s",
+            "controller",
+            "reqs",
+            "tokens",
+            "tok/s",
+            "TPOT",
+            "TTFT p95",
+            "goodput",
+            "shed",
+            "events",
+            "degraded",
+        ],
+    );
+    for &rate in experiments::faults::SATURATION_RATES {
+        for controller in [ControllerKind::Off, ControllerKind::Adaptive] {
+            let cell = experiments::faults::saturation_cell(rate, controller, seed);
+            let m = experiments::faults::run_cell(&ctx, "mixtral", &policy, &cell)?;
+            satt.row(vec![
+                format!("{rate:.1}"),
+                controller.label().into(),
+                m.run.requests.len().to_string(),
+                m.run.total_tokens().to_string(),
+                format!("{:.1}", m.run.total_tokens() as f64 / m.clock_s),
+                ms(m.tpot_s()),
+                ms(m.run.ttft_percentile(0.95)),
+                format!("{:.0}%", 100.0 * m.run.slo_goodput(cell.slo_s)),
+                m.sheds.to_string(),
+                m.fault_events.to_string(),
+                format!("{:.0}%", 100.0 * m.degraded_fraction()),
+            ]);
+            sat_rows.push(json::obj(vec![
+                ("rate_per_s", json::num(rate)),
+                ("controller", json::str(controller.label())),
+                ("requests_completed", json::num(m.run.requests.len() as f64)),
+                ("tokens", json::num(m.run.total_tokens() as f64)),
+                ("tokens_per_s_virtual", json::num(m.run.total_tokens() as f64 / m.clock_s)),
+                ("tpot_ms", json::num(1e3 * m.tpot_s())),
+                ("ttft_p95_ms", json::num(1e3 * m.run.ttft_percentile(0.95))),
+                ("e2e_p99_ms", json::num(1e3 * m.run.e2e_percentile(0.99))),
+                ("slo_ms", json::num(1e3 * cell.slo_s)),
+                ("slo_goodput", json::num(m.run.slo_goodput(cell.slo_s))),
+                ("sheds", json::num(m.sheds as f64)),
+                ("fault_events", json::num(m.fault_events as f64)),
+                ("degraded_fraction", json::num(m.degraded_fraction())),
+                ("virtual_duration_s", json::num(m.clock_s)),
+            ]));
+        }
+    }
+    println!("{}", satt.render());
+    let sat_doc = json::obj(vec![
+        ("bench", json::str("saturation")),
+        ("model", json::str("mixtral")),
+        ("task", json::str(task)),
+        ("policy", json::str("static-k3")),
+        ("drafter", json::str("ngram")),
+        ("backend", json::str("sim")),
+        ("batch", json::num(4.0)),
+        ("shards", json::num(2.0)),
+        ("arrivals", json::str("poisson")),
+        ("fault_process", json::str(experiments::faults::SATURATION_PROCESS)),
+        ("quick", json::Value::Bool(quick)),
+        ("rows", json::arr(sat_rows)),
+    ]);
+    write_json_artifact(&saturation_out, &sat_doc)?;
+
     let faults_doc = json::obj(vec![
         ("bench", json::str("faults")),
         ("model", json::str("mixtral")),

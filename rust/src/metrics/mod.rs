@@ -254,6 +254,36 @@ impl RunMetrics {
         met as f64 / self.requests.len() as f64
     }
 
+    /// Per-class SLO goodput: fraction of `task`'s completed requests whose
+    /// TTFT met that class's deadline (`--slo-ms code=250,…`). NaN when the
+    /// run completed no request of that task.
+    pub fn slo_goodput_for(&self, task: &str, slo_s: f64) -> f64 {
+        let mut total = 0usize;
+        let mut met = 0usize;
+        for r in self.requests.iter().filter(|r| r.task == task) {
+            total += 1;
+            if r.ttft_s() <= slo_s {
+                met += 1;
+            }
+        }
+        if total == 0 {
+            return f64::NAN;
+        }
+        met as f64 / total as f64
+    }
+
+    /// Distinct task names among completed requests, in first-completion
+    /// order (deterministic — no hashing on the reporting path).
+    pub fn task_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for r in &self.requests {
+            if !names.contains(&r.task) {
+                names.push(r.task.clone());
+            }
+        }
+        names
+    }
+
     /// Worst windowed slowdown across all requests relative to a baseline
     /// iteration time (paper Fig. 15: Cascade's max in-request loss).
     pub fn worst_window_slowdown(&self, window: usize, baseline_iter_s: f64) -> f64 {
@@ -373,6 +403,11 @@ pub struct BatchIterRecord {
     /// ask (K throttled or speculation halted under pressure). Always
     /// false with `--controller off`.
     pub degraded: bool,
+    /// Experts the self-healing placement rebuild moved between shards at
+    /// this commit (a detector mark/unmark edge fired); their transfer
+    /// time is in `cost.migration_s`. 0 with `--heal off` and on every
+    /// iteration without an edge.
+    pub migrated_experts: usize,
 }
 
 /// Aggregate over a continuous-batching run: per-request traces (latency
@@ -405,6 +440,10 @@ pub struct BatchRunMetrics {
     /// evicted victim of that kill was back in a slot (replay re-prefill
     /// complete) — the recovery-time telemetry of rust/docs/faults.md.
     pub recovery_s: f64,
+    /// Placement rebuilds the straggler detector triggered (mark + unmark
+    /// edges). A clean straggle-then-recover cycle costs exactly 2; more
+    /// means the hysteresis bands are flapping. 0 with `--heal off`.
+    pub heal_rebuilds: usize,
 }
 
 impl BatchRunMetrics {
@@ -615,6 +654,20 @@ impl BatchRunMetrics {
         n as f64 / self.iters.len() as f64
     }
 
+    /// Experts moved between shards by self-healing placement rebuilds
+    /// across the run (Σ per-iteration `migrated_experts`). 0 with
+    /// `--heal off`.
+    pub fn migrated_experts(&self) -> usize {
+        self.iters.iter().map(|r| r.migrated_experts).sum()
+    }
+
+    /// Simulated seconds spent relocating expert weights for self-healing
+    /// rebuilds (Σ per-iteration `IterCost::migration_s` — the exposed
+    /// charge, after any pipeline hiding). 0.0 with `--heal off`.
+    pub fn migration_s(&self) -> f64 {
+        self.iters.iter().map(|r| r.cost.migration_s).sum()
+    }
+
     // ---- Expert-parallel sharding telemetry -----------------------------
 
     /// Mean simulated verify time per fused iteration (base + experts +
@@ -816,6 +869,7 @@ mod tests {
             queue_depth: 0,
             stall_retries: 0,
             degraded: false,
+            migrated_experts: 0,
         }
     }
 
@@ -841,6 +895,50 @@ mod tests {
         assert_eq!(b.overlap_savings(), 0.0);
         assert_eq!(b.bubble_fraction(), 0.0);
         assert_eq!(b.draft_hidden_s(), 0.0);
+    }
+
+    #[test]
+    fn per_class_goodput_splits_by_task() {
+        let mut run = RunMetrics::default();
+        for (task, ttft) in
+            [("code", 0.1), ("code", 0.6), ("math", 0.2), ("math", 0.3)]
+        {
+            let mut m = RequestMetrics::default();
+            m.task = task.to_string();
+            m.arrival_s = 1.0;
+            m.first_token_s = 1.0 + ttft;
+            m.iters.push(rec(1, 0.01, IterPhase::Set));
+            run.push(m);
+        }
+        // Class deadlines: code 0.25s (1 of 2 met), math 0.25s (1 of 2 met
+        // — ttft 0.2 meets, 0.3 misses).
+        assert!((run.slo_goodput_for("code", 0.25) - 0.5).abs() < 1e-12);
+        assert!((run.slo_goodput_for("math", 0.25) - 0.5).abs() < 1e-12);
+        // A looser math class flips its goodput without touching code's.
+        assert!((run.slo_goodput_for("math", 0.4) - 1.0).abs() < 1e-12);
+        assert!(run.slo_goodput_for("extract", 0.25).is_nan(), "no such task completed");
+        assert_eq!(run.task_names(), vec!["code".to_string(), "math".to_string()]);
+        // The catch-all view still counts everyone.
+        assert!((run.slo_goodput(0.25) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn migration_aggregates_sum_over_iterations() {
+        let mut b = BatchRunMetrics { max_batch: 2, heal_rebuilds: 2, ..Default::default() };
+        let mut r1 = batch_rec(2, 4, 4.0, 6.0);
+        r1.migrated_experts = 3;
+        r1.cost.migration_s = 0.002;
+        let r2 = batch_rec(2, 4, 4.0, 6.0);
+        b.iters.push(r1);
+        b.iters.push(r2);
+        assert_eq!(b.migrated_experts(), 3);
+        assert!((b.migration_s() - 0.002).abs() < 1e-15);
+        assert_eq!(b.heal_rebuilds, 2);
+        // Default-off: a heal-free run reports exact zeros.
+        let clean = BatchRunMetrics { max_batch: 2, ..Default::default() };
+        assert_eq!(clean.migrated_experts(), 0);
+        assert_eq!(clean.migration_s(), 0.0);
+        assert_eq!(clean.heal_rebuilds, 0);
     }
 
     #[test]

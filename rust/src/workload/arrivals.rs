@@ -191,7 +191,10 @@ impl ArrivalProcess {
 
     /// Parse a JSONL trace: one `{"t": seconds, "task": name, "max_new":
     /// optional}` object per line (blank lines skipped). Entries are sorted
-    /// by `t`, so out-of-order traces replay in arrival order.
+    /// by `t`, so out-of-order traces replay in arrival order. Lines with a
+    /// `"stream"` key — the completed-output records `--capture-trace`
+    /// appends for `diff-trace` — are not arrivals and are skipped, so a
+    /// captured file replays as-is.
     fn load_trace(path: &str) -> Result<VecDeque<TraceEntry>> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading arrival trace {path}"))?;
@@ -203,6 +206,9 @@ impl ArrivalProcess {
             }
             let v = crate::util::json::parse(line)
                 .with_context(|| format!("{path}:{}: bad JSON", lineno + 1))?;
+            if v.get("stream").is_some() {
+                continue;
+            }
             let t = v.req("t")?.as_f64()?;
             anyhow::ensure!(
                 t.is_finite() && t >= 0.0,
@@ -418,6 +424,27 @@ mod tests {
         assert_eq!(b.1.max_new_tokens, 32);
         assert_eq!((c.0, c.1.task), (2.0, Task::Extract));
         assert_eq!(c.1.max_new_tokens, 64);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stream_lines_are_skipped_on_replay() {
+        // A --capture-trace file carries completed-output "stream" lines
+        // after the arrivals; the replayer must ignore them.
+        let path = std::env::temp_dir().join("cascade_arrivals_stream_lines.jsonl");
+        let text = "\
+{\"t\": 0.1, \"task\": \"code\"}\n\
+{\"stream\": 0, \"task\": \"code\", \"tokens\": [1, 2, 3]}\n\
+{\"t\": 0.7, \"task\": \"math\", \"max_new\": 16}\n\
+{\"stream\": 1, \"task\": \"math\", \"tokens\": []}\n";
+        std::fs::write(&path, text).unwrap();
+        let kind = ArrivalKind::Trace { path: path.to_string_lossy().into_owned() };
+        let mut p = ArrivalProcess::new(kind, stream(), 0).unwrap();
+        let a = p.gen_next().unwrap();
+        let b = p.gen_next().unwrap();
+        assert!(p.gen_next().is_none());
+        assert_eq!((a.0, a.1.task), (0.1, Task::Code));
+        assert_eq!((b.0, b.1.task), (0.7, Task::Math));
         let _ = std::fs::remove_file(&path);
     }
 

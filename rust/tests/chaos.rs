@@ -29,10 +29,10 @@
 //! costs, so its trajectories may differ — by design, not by accident.
 
 use cascade::config::{
-    AdmissionKind, ControllerKind, DrafterKind, EngineConfig, EvictionKind,
+    AdmissionKind, ControllerKind, DrafterKind, EngineConfig, EvictionKind, HealKind,
 };
 use cascade::coordinator::batch::BatchEngine;
-use cascade::coordinator::faults::BUILTIN_PLANS;
+use cascade::coordinator::faults::{FaultPlan, FaultProcess, BUILTIN_PLANS};
 use cascade::coordinator::scheduler::{Budget, Scheduler};
 use cascade::experiments::preemption::constrained_pool_blocks;
 use cascade::metrics::BatchRunMetrics;
@@ -281,11 +281,24 @@ fn sched_run(
     slo_s: f64,
     rate: f64,
 ) -> BatchRunMetrics {
+    sched_run_with_process(seed, faults, "off", controller, slo_s, rate)
+}
+
+/// [`sched_run`] with a `--fault-process` spec layered on the plan.
+fn sched_run_with_process(
+    seed: u64,
+    faults: &str,
+    process: &str,
+    controller: ControllerKind,
+    slo_s: f64,
+    rate: f64,
+) -> BatchRunMetrics {
     let max_new = 120usize;
     let w = Workload::by_name("code+math").unwrap();
     let sample = RequestStream::new(w.clone(), seed, max_new).take(8);
     let mut cfg = cfg(faults, EvictionKind::Lru, false);
     cfg.seed = seed;
+    cfg.fault_process = process.into();
     cfg.max_new_tokens = max_new;
     cfg.kv_pool_blocks = constrained_pool_blocks(&sample, 4);
     cfg.max_preemptions_per_req = 64;
@@ -392,4 +405,135 @@ fn faults_off_controller_off_is_bit_exact_with_default_engine() {
     assert_eq!(a.sheds, 0);
     assert_eq!(a.stall_s(), 0.0);
     assert_eq!(a.recovery_s, 0.0);
+}
+
+/// A correlated fault domain (`host=0:shards=0,1`) takes out both member
+/// shards with one clause, and the run stays lossless: every completed
+/// stream is bit-exact with the fault-free run, the victims replay back,
+/// and the recovery time is charged. The domain declaration also survives
+/// the `parse -> to_spec -> parse` round trip.
+#[test]
+fn correlated_host_kill_is_lossless() {
+    let reqs = requests("code+math", 8, 150);
+    let spec = "host=0:shards=0,1;shard-kill@0.4+1:host=0";
+    // 4 shards so the killed host (shards 0 and 1) leaves survivors.
+    let mut base_cfg = cfg("off", EvictionKind::Lru, false);
+    base_cfg.shards = 4;
+    let mut kill_cfg = cfg(spec, EvictionKind::Lru, false);
+    kill_cfg.shards = 4;
+    let base = serve(base_cfg, PolicyKind::Static(3), &reqs);
+    let m = serve(kill_cfg, PolicyKind::Static(3), &reqs);
+    assert_eq!(base.run.requests.len(), m.run.requests.len());
+    for (b, c) in base.run.requests.iter().zip(&m.run.requests) {
+        assert_eq!(b.id, c.id);
+        assert_eq!(b.output, c.output, "host kill moved tokens of request {}", b.id);
+    }
+    assert!(m.fault_events > 0, "host kill never fired");
+    assert!(m.evictions() > 0, "host kill evicted nobody");
+    assert_eq!(m.evictions(), m.readmissions(), "a host-kill victim never came back");
+    assert!(m.recovery_s > 0.0, "kill recovery was free");
+    // Parse-level: the host clause expanded into one kill per member
+    // shard (the correlation), and the spec round-trips.
+    let plan = FaultPlan::parse(spec).unwrap();
+    assert_eq!(plan.events.len(), 2, "host=0 must expand into 2 shard kills");
+    assert_eq!(plan.domains.len(), 1);
+    assert_eq!(FaultPlan::parse(&plan.to_spec()).unwrap(), plan);
+}
+
+/// The stochastic MTBF/MTTR process is seed-deterministic end to end: the
+/// same (spec, seed) draws the same schedule (which round-trips through
+/// the plan grammar) and replays the full open-loop run byte-identically;
+/// a different seed moves the schedule.
+#[test]
+fn mtbf_process_materializes_and_replays_deterministically() {
+    let spec = "mtbf=1.5,mttr=0.4,kind=straggler";
+    let p = FaultProcess::parse(spec).unwrap().expect("spec is not off");
+    let a = p.materialize(0xCA5CADE, 2, 30.0);
+    let b = p.materialize(0xCA5CADE, 2, 30.0);
+    assert_eq!(a, b, "same seed drew a different fault schedule");
+    assert!(!a.events.is_empty(), "30 s horizon at 1.5 s MTBF drew nothing");
+    assert_ne!(
+        a,
+        p.materialize(0xBEEF, 2, 30.0),
+        "seed does not reach the process schedule"
+    );
+    assert_eq!(
+        FaultPlan::parse(&a.to_spec()).unwrap(),
+        a,
+        "materialized schedule must round-trip through the plan grammar"
+    );
+    // Engine level: the process merges into the plan inside the engine,
+    // fires real events, and two identically-seeded runs are byte-equal.
+    let run = |seed: u64| {
+        sched_run_with_process(seed, "off", spec, ControllerKind::Adaptive, 0.5, 2.0)
+    };
+    let x = run(0xCA5CADE);
+    let y = run(0xCA5CADE);
+    assert_eq!(
+        chaos_metrics_json(&x, 0.5),
+        chaos_metrics_json(&y, 0.5),
+        "identical-seed MTBF runs diverged"
+    );
+    assert!(x.fault_events > 0, "the materialized process never fired in the engine");
+}
+
+/// Straggler-aware self-healing placement: under a persistent straggler,
+/// `--heal detect` migrates hot experts off the slow shard. Token streams
+/// stay bit-identical to the no-detection run (placement moves cost,
+/// never tokens), the migration is detected, counted, and charged, and
+/// the verify clock from the first migration onward is strictly cheaper
+/// than the unhealed run's over the same iterations.
+#[test]
+fn self_healing_migrates_off_the_straggler_without_moving_tokens() {
+    let reqs = requests("code+math", 8, 150);
+    // One long straggle covering the whole run: shard 1 at 6x.
+    let spec = "straggler@0.1+30:shard=1,factor=6";
+    let base_cfg = cfg(spec, EvictionKind::Off, false);
+    let mut heal_cfg = base_cfg.clone();
+    heal_cfg.heal = HealKind::Detect;
+    let base = serve(base_cfg, PolicyKind::Static(3), &reqs);
+    let heal = serve(heal_cfg, PolicyKind::Static(3), &reqs);
+    assert_eq!(base.run.requests.len(), heal.run.requests.len());
+    for (b, h) in base.run.requests.iter().zip(&heal.run.requests) {
+        assert_eq!(b.id, h.id);
+        assert_eq!(b.output, h.output, "self-healing moved tokens of request {}", b.id);
+    }
+    assert_eq!(base.heal_rebuilds, 0, "heal off must never rebuild");
+    assert!(heal.heal_rebuilds >= 1, "persistent straggler never detected");
+    assert!(heal.migrated_experts() > 0, "rebuild moved no experts");
+    assert!(heal.migration_s() > 0.0, "expert migration was free");
+    // Identical tokens + static K => identical iteration structure, so
+    // the runs compare verify-for-verify.
+    assert_eq!(base.iters.len(), heal.iters.len(), "iteration structure changed");
+    let first = heal
+        .iters
+        .iter()
+        .position(|r| r.migrated_experts > 0)
+        .expect("a rebuild must mark its iteration");
+    let tail_verify = |m: &BatchRunMetrics| {
+        m.iters[first..].iter().map(|r| r.cost.verify_s()).sum::<f64>()
+    };
+    assert!(
+        tail_verify(&heal) < tail_verify(&base),
+        "migration did not cut the straggled verify clock ({} >= {})",
+        tail_verify(&heal),
+        tail_verify(&base)
+    );
+}
+
+/// Hysteresis: one straggle/recover cycle causes at most two placement
+/// rebuilds (migrate off the slow shard, migrate back after recovery) —
+/// the dead band between the mark and clear thresholds prevents flapping.
+#[test]
+fn hysteresis_bounds_rebuilds_across_a_straggle_recover_cycle() {
+    let reqs = requests("code+math", 8, 150);
+    let mut heal_cfg = cfg("straggler@0.2+1.5:shard=1,factor=6", EvictionKind::Off, false);
+    heal_cfg.heal = HealKind::Detect;
+    let m = serve(heal_cfg, PolicyKind::Static(3), &reqs);
+    assert!(m.heal_rebuilds >= 1, "straggle window never detected");
+    assert!(
+        m.heal_rebuilds <= 2,
+        "hysteresis failed: {} rebuilds across one straggle/recover cycle",
+        m.heal_rebuilds
+    );
 }
