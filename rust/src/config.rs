@@ -436,6 +436,16 @@ pub struct EngineConfig {
     pub slo_classes: SloClasses,
     /// Graceful-degradation controller (`Off` = bit-exact today's behavior).
     pub controller: ControllerKind,
+    /// Prefix sharing (`--prefix-share P`, rust/docs/prefix_cache.md):
+    /// `> 0` switches the KV pool into copy-on-write sharing mode with a
+    /// prefix trie over committed token ids, and — on the workload side —
+    /// gives every generated request a fixed-length preamble drawn from a
+    /// small shared template pool with probability `P` (else unique), so
+    /// `P` sweeps the cache hit rate. Must be in `[0, 1]`. `0.0` (default)
+    /// keeps the counts-only pool and the template-free workload
+    /// bit-exactly. Sharing changes only block accounting and
+    /// virtual-clock charges, never token output.
+    pub prefix_share: f64,
     pub cascade: CascadeParams,
 }
 
@@ -477,6 +487,7 @@ impl Default for EngineConfig {
             heal: HealKind::Off,
             slo_classes: SloClasses::default(),
             controller: ControllerKind::Off,
+            prefix_share: 0.0,
             cascade: CascadeParams::default(),
         }
     }
@@ -555,6 +566,7 @@ mod tests {
         assert!(HealKind::parse("repair").is_err());
         let cfg = EngineConfig::default();
         assert_eq!(cfg.heal, HealKind::Off, "self-healing must be opt-in");
+        assert_eq!(cfg.prefix_share, 0.0, "prefix sharing must be opt-in");
     }
 
     #[test]

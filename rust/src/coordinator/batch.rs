@@ -41,6 +41,16 @@
 //!   losslessness guarantee (rust/docs/preemption.md,
 //!   rust/tests/preemption.rs). `eviction = off` (the default) keeps the
 //!   legacy shrink-then-defer behavior and the deadlock bail bit-exactly.
+//! * **Prefix sharing** (`EngineConfig::prefix_share`) — the pool runs in
+//!   copy-on-write sharing mode with a prefix trie over committed token
+//!   ids: an admission whose leading full blocks are cached attaches them
+//!   instead of allocating, charging only the novel suffix's prefill on
+//!   the virtual clock; eviction is refcount-aware end to end (victims
+//!   are scored and feasibility-checked at *exclusive* blocks, and
+//!   preemption replay re-attaches to surviving shared blocks). Token
+//!   output is untouched — sharing changes only block accounting and
+//!   clock charges (rust/docs/prefix_cache.md). Off (the default) keeps
+//!   the counts-only pool bit-exactly.
 //!
 //! Per-request `RequestMetrics` keep the *latency* view (each iteration's
 //! full fused cost — that is what the request waited for); the
@@ -59,6 +69,7 @@ use crate::coordinator::faults::{
 use crate::coordinator::pipeline::{plan_spec_task, reconcile_entry, run_spec_tasks, SpecDraft};
 use crate::coordinator::EngineError;
 use crate::cost::{capacity_caps, CoActivationStats, ExpertPlacement, GpuCostModel, IterCost};
+use crate::kv::prefix::PrefixTrie;
 use crate::kv::KvBlockPool;
 use crate::metrics::{BatchIterRecord, BatchRunMetrics, IterRecord, RequestMetrics, RunMetrics};
 use crate::models::Registry;
@@ -267,6 +278,18 @@ pub struct BatchEngine {
     /// Placement rebuilds the self-healing detector triggered (mark or
     /// unmark edges) — the hysteresis quality metric.
     heal_rebuilds: usize,
+    /// Prefix cache (`--prefix-share`, rust/docs/prefix_cache.md): `Some`
+    /// iff `cfg.prefix_share > 0`, in which case the pool runs in
+    /// copy-on-write sharing mode and admissions attach any resident
+    /// prefix instead of re-prefilling it. `None` keeps the counts-only
+    /// pool and every pre-sharing code path bit-exactly.
+    prefix: Option<PrefixTrie>,
+    /// Admissions (fresh + re-admissions) that attached ≥ 1 cached block.
+    prefix_hits: usize,
+    /// Admissions that found no cached prefix block.
+    prefix_misses: usize,
+    /// Prompt tokens served from the cache instead of the prefill path.
+    prefix_hit_tokens: u64,
 }
 
 /// Fused iterations between co-activation placement rebuilds. Small enough
@@ -323,7 +346,16 @@ impl BatchEngine {
         } else {
             auto
         };
-        let pool = KvBlockPool::new(total_blocks, kv_block);
+        let mut pool = KvBlockPool::new(total_blocks, kv_block);
+        // Prefix cache: sharing mode must be on before the first admission
+        // maps a block, so the decision is taken here, once, from the
+        // config knob (rust/docs/prefix_cache.md).
+        let prefix = if cfg.prefix_share > 0.0 {
+            pool.enable_sharing();
+            Some(PrefixTrie::new(kv_block))
+        } else {
+            None
+        };
         let mut slots = Vec::with_capacity(max_batch);
         slots.resize_with(max_batch, || None);
         // Expert-parallel setup: shards beyond the expert count cannot hold
@@ -413,6 +445,10 @@ impl BatchEngine {
             cool_streak: vec![0; n_shards],
             healing: vec![false; n_shards],
             heal_rebuilds: 0,
+            prefix,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            prefix_hit_tokens: 0,
         }
     }
 
@@ -663,9 +699,22 @@ impl BatchEngine {
 
     /// Would `admit` succeed for this request right now?
     pub fn can_admit(&self, req: &Request) -> bool {
-        self.has_free_slot()
-            && req.prompt.len() + 2 <= self.backend.mini().max_seq
-            && self.pool.can_admit(req.prompt.len())
+        if !self.has_free_slot() || req.prompt.len() + 2 > self.backend.mini().max_seq {
+            return false;
+        }
+        match &self.prefix {
+            None => self.pool.can_admit(req.prompt.len()),
+            Some(trie) => {
+                // Resident prefix blocks attach for free; the fresh
+                // remainder can additionally draw on cache-only
+                // (trie-pinned, refcount-1) blocks, which admission
+                // reclaims LRU-first before allocating.
+                let shared = trie.peek(&req.prompt);
+                let total = req.prompt.len().max(1).div_ceil(self.kv_block);
+                total - shared.len()
+                    <= self.pool.free_blocks() + trie.reclaimable(&self.pool, &shared)
+            }
+        }
     }
 
     /// Fresh per-request drafter mirroring `Engine`'s wiring.
@@ -719,7 +768,7 @@ impl BatchEngine {
         policy.reset();
 
         self.backend.begin_slot(slot, &req)?;
-        self.pool.admit(req.id, req.prompt.len())?;
+        let hit_tokens = self.attach_prefix(req.id, &req.prompt)?;
 
         let mut metrics = RequestMetrics {
             id: req.id,
@@ -744,9 +793,16 @@ impl BatchEngine {
                 return Err(e);
             }
         };
+        // Record the prompt's full blocks in the prefix cache only after
+        // the prefill succeeded: the error path above released the pool
+        // mapping, so inserting earlier would pin blocks of a request that
+        // never served.
+        self.note_prefix(&req.prompt, req.id)?;
         // Prefill charge: chunked full-parallel steps (excluded from TPOT,
         // but on the virtual clock — the first token exists only after it).
-        metrics.prefill_s = self.prefill_charge(req.prompt.len());
+        // Cached prefix tokens are the bytes never re-fetched: only the
+        // novel suffix is charged, so TTFT collapses for cache hits.
+        metrics.prefill_s = self.prefill_charge(req.prompt.len() - hit_tokens);
         self.clock_s += metrics.prefill_s;
         metrics.first_token_s = self.clock_s;
 
@@ -983,7 +1039,20 @@ impl BatchEngine {
                 // set could free. When no victim set can satisfy the
                 // reservation, evicting would trash other requests' state
                 // and still defer — skip straight to defer/deadlock.
-                let shortfall = self.pool.reserve_shortfall(req_id, 1 + k);
+                //
+                // With the prefix cache on, cache-only (trie-pinned,
+                // refcount-1) blocks are cheaper relief than any
+                // preemption: reclaim LRU leaves first and re-measure. And
+                // the victim set is priced at *exclusive* blocks — a block
+                // another slot (or the trie) also maps merely loses one
+                // reference when its holder is evicted, freeing nothing.
+                let mut shortfall = self.pool.reserve_shortfall(req_id, 1 + k);
+                if shortfall > 0 {
+                    if let Some(trie) = self.prefix.as_mut() {
+                        trie.reclaim(&mut self.pool, shortfall, &[])?;
+                        shortfall = self.pool.reserve_shortfall(req_id, 1 + k);
+                    }
+                }
                 if shortfall > 0 {
                     let evictable: usize = self
                         .victim_candidates(plan.slot, &in_spans, plans)
@@ -1017,6 +1086,15 @@ impl BatchEngine {
                 // releases free blocks. A deferred slot's lookahead entry
                 // stays buffered: its context has not moved, so it may
                 // still hit next iteration.
+                if let Some(trie) = self.prefix.as_mut() {
+                    // Sharing under `eviction=off`: cache-only blocks are
+                    // the only relief valve — return LRU trie pins before
+                    // shrinking this slot's speculation.
+                    let need = self.pool.reserve_shortfall(req_id, 1 + k);
+                    if need > 0 {
+                        trie.reclaim(&mut self.pool, need, &[])?;
+                    }
+                }
                 while k > 0 && !self.pool.can_reserve(req_id, 1 + k) {
                     k -= 1;
                 }
@@ -1093,7 +1171,10 @@ impl BatchEngine {
     /// already part of this iteration's fused step. The feasibility
     /// pre-check sums this set's blocks; [`select_victim`] picks from it
     /// (filtering requests at the preemption cap). With one active request
-    /// there are no candidates — the sole slot is never evicted.
+    /// there are no candidates — the sole slot is never evicted. Blocks
+    /// are priced *exclusive* ([`KvBlockPool::exclusive_blocks_of`]): with
+    /// the prefix cache on, evicting a slot whose blocks others share
+    /// frees nothing, and both scoring and feasibility must know it.
     fn victim_candidates(
         &self,
         stuck: usize,
@@ -1113,7 +1194,7 @@ impl BatchEngine {
                 req_id: s.req.id,
                 admitted_seq: s.admitted_seq,
                 planned_k: planned_k(slot),
-                blocks: self.pool.blocks_of(s.req.id),
+                blocks: self.pool.exclusive_blocks_of(s.req.id),
                 last_utility: s.last_utility,
                 preemptions: self.pool.preemptions(s.req.id),
             });
@@ -1157,6 +1238,47 @@ impl BatchEngine {
         chunks as f64 * self.cost.baseline_cost().total()
     }
 
+    /// Bind request `id`'s committed span to the pool, attaching any
+    /// cached prefix: trie-hit blocks are mapped copy-on-write (charging
+    /// nothing against the free budget), cache-only LRU blocks are
+    /// reclaimed when the fresh remainder does not fit, and the hit/miss
+    /// telemetry is stamped. Returns the token count served from the
+    /// cache — 0 without `--prefix-share`, where this is a plain
+    /// [`KvBlockPool::admit`].
+    fn attach_prefix(&mut self, id: u64, committed: &[u32]) -> Result<usize> {
+        let Some(trie) = self.prefix.as_mut() else {
+            self.pool.admit(id, committed.len())?;
+            return Ok(0);
+        };
+        let shared = trie.lookup(committed);
+        let total = committed.len().max(1).div_ceil(self.kv_block);
+        let fresh = total - shared.len();
+        if fresh > self.pool.free_blocks() {
+            let need = fresh - self.pool.free_blocks();
+            trie.reclaim(&mut self.pool, need, &shared)?;
+        }
+        self.pool.admit_shared(id, committed.len(), &shared)?;
+        if shared.is_empty() {
+            self.prefix_misses += 1;
+        } else {
+            self.prefix_hits += 1;
+            self.prefix_hit_tokens += (shared.len() * self.kv_block) as u64;
+        }
+        Ok(shared.len() * self.kv_block)
+    }
+
+    /// Record the full blocks of a just-(re)prefilled span in the prefix
+    /// trie, pinning any genuinely new block so the cached prefix survives
+    /// this request's lifetime. No-op with sharing off.
+    fn note_prefix(&mut self, committed: &[u32], id: u64) -> Result<()> {
+        if self.prefix.is_none() {
+            return Ok(());
+        }
+        let mapped = self.pool.mapped_blocks(id);
+        let trie = self.prefix.as_mut().expect("checked above");
+        trie.insert(committed, &mapped, &mut self.pool)
+    }
+
     /// Re-admit parked (evicted) requests while free slots and pool blocks
     /// allow: re-prefill the committed context through the prefill path,
     /// replay the recorded decode history so a history-dependent backend
@@ -1180,11 +1302,27 @@ impl BatchEngine {
                 let s = self.parked.front().expect("checked non-empty");
                 s.req.prompt.len() + s.history.iter().map(|h| h.advance).sum::<usize>()
             };
-            if !self.pool.can_admit(committed) {
+            // Sharing mode: the victim's cached prefix re-attaches for
+            // free, so feasibility charges only the fresh remainder (and
+            // can draw on trie-reclaimable blocks for it). `context` holds
+            // exactly `committed + 1` tokens — the newest emitted token is
+            // not yet pool-committed — so the committed span is a prefix
+            // slice of it.
+            let feasible = match &self.prefix {
+                None => self.pool.can_admit(committed),
+                Some(trie) => {
+                    let s = self.parked.front().expect("checked non-empty");
+                    let shared = trie.peek(&s.context[..committed]);
+                    let total = committed.max(1).div_ceil(self.kv_block);
+                    total - shared.len()
+                        <= self.pool.free_blocks() + trie.reclaimable(&self.pool, &shared)
+                }
+            };
+            if !feasible {
                 break;
             }
             let mut state = self.parked.pop_front().expect("checked non-empty");
-            self.pool.admit(state.req.id, committed)?;
+            let hit_tokens = self.attach_prefix(state.req.id, &state.context[..committed])?;
             self.backend.begin_slot(slot, &state.req)?;
             // Identical call sequence as the original admission + decode:
             // prefill the prompt, then replay every recorded verify span
@@ -1211,10 +1349,16 @@ impl BatchEngine {
                 self.backend.step_batch(std::slice::from_ref(&span))?;
                 self.backend.advance_slot(slot, h.advance);
             }
+            // Re-attached blocks survived the eviction resident, so the
+            // replay above reconstructs backend state without re-fetching
+            // them: the trie pins are what make preemption cheaper under
+            // sharing. Cache the re-prefilled span for the next victim.
+            self.note_prefix(&state.context[..committed], state.req.id)?;
             // The honest price of the thrash: the same chunked prefill law
-            // as admission, but over the whole committed span and billed on
-            // the decode clock because decode-time pool pressure caused it.
-            let charge = self.prefill_charge(committed);
+            // as admission, but over the whole committed span — minus the
+            // cache-resident prefix — and billed on the decode clock
+            // because decode-time pool pressure caused it.
+            let charge = self.prefill_charge(committed - hit_tokens);
             self.pending_reprefill_s += charge;
             state.metrics.reprefill_s += charge;
             // The parked interval is out-of-service wait: queueing delay on
@@ -1779,6 +1923,11 @@ impl BatchEngine {
             fault_events: self.fault_events,
             recovery_s: self.recovery_s,
             heal_rebuilds: self.heal_rebuilds,
+            prefix_hits: self.prefix_hits,
+            prefix_misses: self.prefix_misses,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+            shared_blocks_peak: self.pool.shared_blocks_peak,
+            prefix_reclaimed_blocks: self.prefix.as_ref().map_or(0, |t| t.reclaimed_blocks),
         }
     }
 
@@ -1835,8 +1984,9 @@ impl BatchEngine {
         let faults = if self.faults.is_off() { "" } else { "+faults" };
         let ctl = if self.cfg.controller.is_on() { "+ctl" } else { "" };
         let heal = if self.cfg.heal.is_on() { "+heal" } else { "" };
+        let px = if self.prefix.is_some() { "+px" } else { "" };
         format!(
-            "{}/{}@b{}{pipe}{shard}{ev}{faults}{ctl}{heal}",
+            "{}/{}@b{}{pipe}{shard}{ev}{faults}{ctl}{heal}{px}",
             self.cfg.model,
             self.policy_kind.label(),
             self.max_batch

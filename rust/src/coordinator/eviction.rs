@@ -46,7 +46,11 @@ pub struct VictimCandidate {
     pub admitted_seq: u64,
     /// Speculation length planned for this slot this iteration.
     pub planned_k: usize,
-    /// KV blocks the slot currently holds (freed if evicted).
+    /// KV blocks evicting the slot would actually free: its *exclusive*
+    /// blocks (refcount 1 under prefix sharing — a block another slot or
+    /// the trie also maps merely loses one reference). Without sharing
+    /// every held block is exclusive, so this is simply the slot's block
+    /// count.
     pub blocks: usize,
     /// Marginal utility last observed by the slot's policy feedback
     /// (tokens per simulated second); `f64::INFINITY` before the first

@@ -8,6 +8,7 @@ pub mod faults;
 pub mod figures;
 pub mod pipeline;
 pub mod preemption;
+pub mod prefix;
 pub mod related;
 pub mod runner;
 pub mod sharding;
@@ -112,6 +113,11 @@ pub fn all() -> Vec<Experiment> {
             id: "preemption",
             caption: "EXTENSION: KV-pool preemption, throughput vs pool size with/without eviction (sim)",
             run: preemption::preemption,
+        },
+        Experiment {
+            id: "prefix",
+            caption: "EXTENSION: prefix sharing, TTFT vs template share ratio under COW KV reuse (sim)",
+            run: prefix::prefix,
         },
         Experiment {
             id: "arrivals",

@@ -1,0 +1,145 @@
+//! Prefix-sharing experiment (extension beyond the paper's evaluation):
+//! TTFT and throughput vs the template share ratio, under copy-on-write KV
+//! prefix reuse (rust/docs/prefix_cache.md).
+//!
+//! Template-heavy serving — every request opens with a fixed-length
+//! preamble, drawn from a small shared template pool with probability
+//! `share` and request-unique otherwise (`workload::with_prefix_templates`)
+//! — is the regime the prefix trie is built for: a trie hit maps the
+//! resident preamble blocks into the new request and charges only the
+//! novel suffix's prefill on the virtual clock. The cells run **open-loop**
+//! (Poisson arrivals fast enough to keep a queue standing): under backlog
+//! a saved prefill chunk shortens not just the hitting request's TTFT but
+//! every queued request behind it, so the p50 TTFT falls monotonically as
+//! `share` rises. Every share level streams the *identical* prompt-length
+//! and corpus distribution — only the preamble's cacheability changes — so
+//! the TTFT deltas are attributable to cache hits alone. Shared by
+//! `figure prefix` and the `bench` BENCH_prefix.json emitter so the two
+//! can never drift.
+
+use crate::coordinator::scheduler::{Budget, Scheduler};
+use crate::experiments::runner::ExpCtx;
+use crate::metrics::BatchRunMetrics;
+use crate::spec::policy::PolicyKind;
+use crate::util::table::{ms, Table};
+use crate::workload::arrivals::{ArrivalKind, ArrivalProcess};
+use crate::workload::{RequestStream, Workload};
+use anyhow::Result;
+
+/// Template share ratios on the experiment axis (0 = sharing off: the
+/// engine runs without a trie and every preamble is request-unique).
+pub const SHARES: [f64; 4] = [0.0, 0.3, 0.6, 0.9];
+
+/// Batch sizes on the experiment axis.
+pub const BATCHES: [usize; 2] = [1, 4];
+
+/// Requests per cell the budget is sized for: enough template draws that
+/// each share level separates (at 4 templates, share 0.3 re-draws a seen
+/// template a handful of times; share 0.9 almost always).
+const CELL_REQUESTS: usize = 24;
+
+/// One prefix-sharing serving cell.
+pub struct PrefixCell {
+    /// Probability a request's preamble comes from the shared template
+    /// pool; also the engine's `prefix_share` (0 disables the trie).
+    pub share: f64,
+    pub batch: usize,
+    /// Poisson arrival rate (req/s on the virtual clock): deliberately
+    /// above the service rate of both batch sizes, so a queue stands and
+    /// prefill savings compound across waiting requests.
+    pub rate: f64,
+    /// Per-request output cap (short decodes keep the cell
+    /// prefill-dominated — the axis under test).
+    pub max_new: usize,
+    /// Output-token budget of the cell.
+    pub tokens: usize,
+}
+
+/// The canonical contended cell for a (share, batch) point.
+pub fn cell(share: f64, batch: usize) -> PrefixCell {
+    let max_new = 48usize;
+    PrefixCell { share, batch, rate: 16.0, max_new, tokens: CELL_REQUESTS * max_new }
+}
+
+fn cell_workload() -> Workload {
+    // code+math: both tasks leave headroom for the 128-token preamble
+    // within the model's max_seq (extract's long passages do not).
+    Workload::by_name("code+math").expect("known mix")
+}
+
+/// Serve one open-loop prefix cell on the sim backend.
+pub fn run_cell(
+    ctx: &ExpCtx,
+    model: &str,
+    policy: &PolicyKind,
+    cell: &PrefixCell,
+) -> Result<BatchRunMetrics> {
+    let mut cfg = ctx.batch_cfg(model, cell.batch);
+    cfg.max_new_tokens = cell.max_new;
+    cfg.prefix_share = cell.share;
+    let mut engine = ctx.batch_engine(cfg, policy)?;
+    let stream = RequestStream::with_prefix_templates(
+        cell_workload(),
+        ctx.seed,
+        cell.max_new,
+        cell.share,
+    );
+    let arrivals =
+        ArrivalProcess::new(ArrivalKind::Poisson { rate: cell.rate }, stream, ctx.seed)?;
+    let mut sched = Scheduler::with_arrivals(
+        arrivals,
+        Budget { max_tokens: cell.tokens, max_requests: 10_000 },
+    );
+    sched.run_batched(&mut engine)
+}
+
+/// `figure prefix`: p50/p95 TTFT, throughput, and hit telemetry vs the
+/// template share ratio at batch 1 and 4 (sim backend, open-loop).
+pub fn prefix(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let probe = cell(0.0, 1);
+    let mut t = Table::new(
+        format!(
+            "Prefix sharing (sim backend, code+math mix, poisson {:.0}/s open-loop): \
+             TTFT vs template share ratio under copy-on-write KV reuse",
+            probe.rate
+        ),
+        &[
+            "batch",
+            "share",
+            "reqs",
+            "tokens",
+            "tok/s",
+            "TTFT p50",
+            "TTFT p95",
+            "prefix_hits",
+            "prefix_misses",
+            "hit rate",
+            "prefix_hit_tokens",
+            "shared_blocks_peak",
+            "prefix_reclaimed_blocks",
+        ],
+    );
+    let policy = PolicyKind::Static(3);
+    for &batch in &BATCHES {
+        for &share in &SHARES {
+            let c = cell(share, batch);
+            let m = run_cell(ctx, "mixtral", &policy, &c)?;
+            t.row(vec![
+                batch.to_string(),
+                format!("{share:.1}"),
+                m.run.requests.len().to_string(),
+                m.run.total_tokens().to_string(),
+                format!("{:.1}", m.run.total_tokens() as f64 / m.clock_s),
+                ms(m.run.ttft_percentile(0.50)),
+                ms(m.run.ttft_percentile(0.95)),
+                m.prefix_hits.to_string(),
+                m.prefix_misses.to_string(),
+                format!("{:.0}%", 100.0 * m.prefix_hit_rate()),
+                m.prefix_hit_tokens.to_string(),
+                m.shared_blocks_peak.to_string(),
+                m.prefix_reclaimed_blocks.to_string(),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}

@@ -16,6 +16,19 @@
 //! request itself is parked by the engine and later re-admitted with a
 //! recomputed (re-prefilled) KV span — see `coordinator::batch` and
 //! rust/docs/preemption.md.
+//!
+//! With **sharing mode** enabled ([`KvBlockPool::enable_sharing`], the
+//! `--prefix-share` path), every block additionally carries a physical
+//! identity and a refcount, so multiple requests (and the prefix trie,
+//! [`prefix::PrefixTrie`]) can map the same committed prefix block
+//! copy-on-write: admission maps resident prefix blocks instead of
+//! allocating fresh ones, divergence past the shared prefix allocates
+//! private blocks (blocks are append-only, so a shared block is never
+//! mutated), and a block is returned to the free budget only when its last
+//! holder lets go — see rust/docs/prefix_cache.md. Sharing off keeps the
+//! original counts-only accounting bit-exactly.
+
+pub mod prefix;
 
 use anyhow::{bail, Result};
 
@@ -152,6 +165,10 @@ struct PoolAlloc {
     committed: usize,
     lookahead: usize,
     blocks: usize,
+    /// Sharing mode only: the physical block ids this request maps, in
+    /// span order (shared prefix blocks first, then privately allocated
+    /// ones); `mapped.len() == blocks`. Empty in counts-only mode.
+    mapped: Vec<u64>,
 }
 
 /// Multi-request block pool for continuous batching.
@@ -180,6 +197,21 @@ pub struct KvBlockPool {
     /// (unlike `allocs`), so the engine's `max_preemptions_per_req` cap has
     /// a durable source of truth.
     preemptions: std::collections::BTreeMap<u64, u32>,
+    /// Copy-on-write sharing mode (prefix cache). Off by default: the pool
+    /// stays counts-only and bit-exact with the pre-sharing engine.
+    sharing: bool,
+    /// Sharing mode: physical block id → holder count (mapping requests
+    /// plus external trie pins). A block exists iff its refcount ≥ 1.
+    refcounts: std::collections::BTreeMap<u64, u32>,
+    /// Sharing mode: monotone physical block id source.
+    next_block_id: u64,
+    /// Sharing mode: references held outside any request allocation (the
+    /// prefix trie's pins), tracked so refcount conservation is exact:
+    /// Σ mapped + external_refs == Σ refcounts.
+    external_refs: u64,
+    /// Sharing telemetry: peak count of blocks with refcount ≥ 2 (mapped
+    /// by more than one holder at once).
+    pub shared_blocks_peak: usize,
 }
 
 impl KvBlockPool {
@@ -195,7 +227,24 @@ impl KvBlockPool {
             total_evicted: 0,
             total_evicted_blocks: 0,
             preemptions: std::collections::BTreeMap::new(),
+            sharing: false,
+            refcounts: std::collections::BTreeMap::new(),
+            next_block_id: 0,
+            external_refs: 0,
+            shared_blocks_peak: 0,
         }
+    }
+
+    /// Switch the pool into copy-on-write sharing mode. Must happen before
+    /// any admission: retrofitting identities onto counts-only allocations
+    /// would have to invent block ids nobody else can already map.
+    pub fn enable_sharing(&mut self) {
+        assert!(self.allocs.is_empty(), "sharing must be enabled before any admission");
+        self.sharing = true;
+    }
+
+    pub fn sharing(&self) -> bool {
+        self.sharing
     }
 
     fn blocks_for(&self, tokens: usize) -> usize {
@@ -207,7 +256,13 @@ impl KvBlockPool {
     }
 
     pub fn blocks_in_use(&self) -> usize {
-        self.allocs.values().map(|a| a.blocks).sum()
+        if self.sharing {
+            // Physical occupancy: each live block once, however many
+            // holders map it (including trie-only pins).
+            self.refcounts.len()
+        } else {
+            self.allocs.values().map(|a| a.blocks).sum()
+        }
     }
 
     pub fn free_blocks(&self) -> usize {
@@ -223,10 +278,102 @@ impl KvBlockPool {
         self.allocs.get(&id).map_or(0, |a| a.committed)
     }
 
-    /// Blocks currently held by one request (0 if unknown) — what an
-    /// eviction of it would free.
+    /// Blocks currently held by one request (0 if unknown). In sharing
+    /// mode this counts mapped blocks, shared or not — see
+    /// [`Self::exclusive_blocks_of`] for what an eviction would free.
     pub fn blocks_of(&self, id: u64) -> usize {
         self.allocs.get(&id).map_or(0, |a| a.blocks)
+    }
+
+    /// Blocks only this request holds (refcount 1) — exactly what evicting
+    /// it would return to the free budget. Counts-only mode has no sharing,
+    /// so every block is exclusive and this equals [`Self::blocks_of`].
+    pub fn exclusive_blocks_of(&self, id: u64) -> usize {
+        match self.allocs.get(&id) {
+            None => 0,
+            Some(a) if !self.sharing => a.blocks,
+            Some(a) => a.mapped.iter().filter(|b| self.refcount(**b) == 1).count(),
+        }
+    }
+
+    /// The physical block ids request `id` maps, in span order (empty when
+    /// unknown or in counts-only mode) — what the prefix trie records.
+    pub fn mapped_blocks(&self, id: u64) -> Vec<u64> {
+        self.allocs.get(&id).map_or_else(Vec::new, |a| a.mapped.clone())
+    }
+
+    /// Current holder count of a physical block (0 = freed/unknown).
+    pub fn refcount(&self, block: u64) -> u32 {
+        self.refcounts.get(&block).copied().unwrap_or(0)
+    }
+
+    /// Blocks currently mapped by more than one holder.
+    pub fn shared_blocks(&self) -> usize {
+        self.refcounts.values().filter(|&&rc| rc >= 2).count()
+    }
+
+    fn alloc_block(&mut self) -> u64 {
+        let id = self.next_block_id;
+        self.next_block_id += 1;
+        self.refcounts.insert(id, 1);
+        id
+    }
+
+    fn incref(&mut self, block: u64) -> Result<()> {
+        match self.refcounts.get_mut(&block) {
+            Some(rc) => {
+                *rc += 1;
+                Ok(())
+            }
+            None => bail!("incref of unknown block {block}"),
+        }
+    }
+
+    /// Drop one reference; returns whether the block was freed (refcount
+    /// reached 0 and its slot returned to the shared budget).
+    fn decref(&mut self, block: u64) -> Result<bool> {
+        let Some(rc) = self.refcounts.get_mut(&block) else {
+            bail!("decref of unknown block {block}");
+        };
+        *rc -= 1;
+        if *rc == 0 {
+            self.refcounts.remove(&block);
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+
+    fn note_shared_peak(&mut self) {
+        let shared = self.shared_blocks();
+        if shared > self.shared_blocks_peak {
+            self.shared_blocks_peak = shared;
+        }
+    }
+
+    /// Pin a block from outside any request allocation (the prefix trie's
+    /// hold, which keeps cached prefixes resident across request
+    /// lifetimes). Sharing mode only.
+    pub fn retain_block(&mut self, block: u64) -> Result<()> {
+        if !self.sharing {
+            bail!("retain_block requires sharing mode");
+        }
+        self.incref(block)?;
+        self.external_refs += 1;
+        self.note_shared_peak();
+        Ok(())
+    }
+
+    /// Drop an external (trie) pin; returns whether the block was freed.
+    pub fn release_block(&mut self, block: u64) -> Result<bool> {
+        if !self.sharing {
+            bail!("release_block requires sharing mode");
+        }
+        self.external_refs = self
+            .external_refs
+            .checked_sub(1)
+            .ok_or_else(|| anyhow::anyhow!("external ref underflow on block {block}"))?;
+        self.decref(block)
     }
 
     /// Can a request with `prompt_tokens` committed tokens be admitted now?
@@ -235,8 +382,12 @@ impl KvBlockPool {
     }
 
     /// Admit a request, allocating blocks for its (already prefilled)
-    /// prompt span.
+    /// prompt span. In sharing mode this is a prefix-less
+    /// [`Self::admit_shared`].
     pub fn admit(&mut self, id: u64, prompt_tokens: usize) -> Result<()> {
+        if self.sharing {
+            return self.admit_shared(id, prompt_tokens, &[]);
+        }
         if self.allocs.contains_key(&id) {
             bail!("request {id} already admitted");
         }
@@ -248,8 +399,61 @@ impl KvBlockPool {
                 self.total_blocks
             );
         }
-        self.allocs.insert(id, PoolAlloc { committed: prompt_tokens, lookahead: 0, blocks });
+        self.allocs.insert(
+            id,
+            PoolAlloc { committed: prompt_tokens, lookahead: 0, blocks, mapped: Vec::new() },
+        );
         self.peak_blocks = self.peak_blocks.max(self.blocks_in_use());
+        Ok(())
+    }
+
+    /// Admit a request whose leading full blocks are already resident:
+    /// map `shared` (incrementing each block's refcount — the copy-on-write
+    /// attach) and allocate fresh blocks only for the remainder of the
+    /// `committed_tokens` span. Only the fresh remainder is charged against
+    /// the free budget. Sharing mode only.
+    pub fn admit_shared(&mut self, id: u64, committed_tokens: usize, shared: &[u64]) -> Result<()> {
+        if !self.sharing {
+            bail!("admit_shared requires sharing mode");
+        }
+        if self.allocs.contains_key(&id) {
+            bail!("request {id} already admitted");
+        }
+        let total = self.blocks_for(committed_tokens.max(1));
+        if shared.len() > total {
+            bail!(
+                "request {id}: {} shared prefix blocks exceed its {total}-block span",
+                shared.len()
+            );
+        }
+        for &b in shared {
+            if self.refcount(b) == 0 {
+                bail!("request {id}: shared prefix block {b} is not resident");
+            }
+        }
+        let fresh = total - shared.len();
+        if fresh > self.free_blocks() {
+            bail!(
+                "pool exhausted: request {id} needs {fresh} fresh blocks, {} free of {}",
+                self.free_blocks(),
+                self.total_blocks
+            );
+        }
+        let mut mapped = Vec::with_capacity(total);
+        for &b in shared {
+            self.incref(b).expect("residency checked above");
+            mapped.push(b);
+        }
+        for _ in 0..fresh {
+            let b = self.alloc_block();
+            mapped.push(b);
+        }
+        self.allocs.insert(
+            id,
+            PoolAlloc { committed: committed_tokens, lookahead: 0, blocks: total, mapped },
+        );
+        self.peak_blocks = self.peak_blocks.max(self.blocks_in_use());
+        self.note_shared_peak();
         Ok(())
     }
 
@@ -279,7 +483,9 @@ impl KvBlockPool {
         }
     }
 
-    /// Reserve lookahead slots for one request's verify step.
+    /// Reserve lookahead slots for one request's verify step. In sharing
+    /// mode the speculative growth is always freshly allocated (fork on
+    /// write: positions past the shared prefix are private to the request).
     pub fn reserve(&mut self, id: u64, t: usize) -> Result<()> {
         if !self.can_reserve(id, t) {
             bail!(
@@ -287,45 +493,78 @@ impl KvBlockPool {
                 self.free_blocks()
             );
         }
-        let needed = {
+        let (needed, grow) = {
             let a = self.allocs.get(&id).expect("checked by can_reserve");
-            self.blocks_for(a.committed + t).max(a.blocks)
+            let needed = self.blocks_for(a.committed + t).max(a.blocks);
+            (needed, needed - a.blocks)
         };
+        let fresh: Vec<u64> =
+            if self.sharing { (0..grow).map(|_| self.alloc_block()).collect() } else { Vec::new() };
         let a = self.allocs.get_mut(&id).expect("checked by can_reserve");
         a.lookahead = t;
         a.blocks = needed;
+        a.mapped.extend(fresh);
         self.total_reserved += t as u64;
         self.peak_blocks = self.peak_blocks.max(self.blocks_in_use());
         Ok(())
     }
 
     /// Commit `advance` of the reserved tokens; roll the rest back and
-    /// return speculative-only blocks to the shared budget.
+    /// return speculative-only blocks to the shared budget. The sharing
+    /// path pops mapped ids from the private tail — the committed span can
+    /// never shrink below the shared prefix (committed tokens only grow),
+    /// so a shared block is never dropped here; the decref is still the
+    /// honest operation in case the tail block happens to be pinned.
     pub fn commit(&mut self, id: u64, advance: usize) -> Result<()> {
         let block_size = self.block_size;
-        let a = self
-            .allocs
-            .get_mut(&id)
-            .ok_or_else(|| anyhow::anyhow!("commit for unknown request {id}"))?;
-        if advance > a.lookahead {
-            bail!("commit {advance} exceeds reserved lookahead {}", a.lookahead);
+        let sharing = self.sharing;
+        let (rolled_back, to_drop) = {
+            let a = self
+                .allocs
+                .get_mut(&id)
+                .ok_or_else(|| anyhow::anyhow!("commit for unknown request {id}"))?;
+            if advance > a.lookahead {
+                bail!("commit {advance} exceeds reserved lookahead {}", a.lookahead);
+            }
+            let rolled_back = (a.lookahead - advance) as u64;
+            a.committed += advance;
+            a.lookahead = 0;
+            let new_blocks = a.committed.max(1).div_ceil(block_size);
+            let mut to_drop = Vec::new();
+            if sharing {
+                while a.blocks > new_blocks {
+                    to_drop.push(a.mapped.pop().expect("mapped covers blocks"));
+                    a.blocks -= 1;
+                }
+            } else {
+                a.blocks = new_blocks;
+            }
+            (rolled_back, to_drop)
+        };
+        self.total_rolled_back += rolled_back;
+        for b in to_drop {
+            self.decref(b)?;
         }
-        self.total_rolled_back += (a.lookahead - advance) as u64;
-        a.committed += advance;
-        a.lookahead = 0;
-        a.blocks = a.committed.max(1).div_ceil(block_size);
         Ok(())
     }
 
-    /// Release a finished request's blocks.
+    /// Release a finished request's blocks (sharing mode: drop its refs;
+    /// blocks survive while the trie or another request still maps them).
     pub fn release(&mut self, id: u64) {
-        self.allocs.remove(&id);
+        if let Some(a) = self.allocs.remove(&id) {
+            for b in a.mapped {
+                self.decref(b).expect("mapped block has a refcount");
+            }
+        }
     }
 
     /// Evict a live request: release its blocks back to the shared budget
-    /// and record the preemption. Returns the number of blocks freed. The
-    /// caller owns the rest of the preemption protocol (parking the request,
-    /// invalidating its lookahead, re-prefilling on re-admission).
+    /// and record the preemption. Returns the number of blocks freed — in
+    /// sharing mode only the *exclusive* ones actually come back (blocks
+    /// another holder maps merely lose one reference), and the eviction
+    /// ledger counts the same honest number. The caller owns the rest of
+    /// the preemption protocol (parking the request, invalidating its
+    /// lookahead, re-prefilling on re-admission).
     pub fn evict(&mut self, id: u64) -> Result<usize> {
         let a = self
             .allocs
@@ -336,9 +575,20 @@ impl KvBlockPool {
         // keeps meaning "tokens that ended up committed".
         self.total_rolled_back += a.lookahead as u64;
         self.total_evicted += 1;
-        self.total_evicted_blocks += a.blocks as u64;
+        let freed = if self.sharing {
+            let mut freed = 0usize;
+            for b in a.mapped {
+                if self.decref(b)? {
+                    freed += 1;
+                }
+            }
+            freed
+        } else {
+            a.blocks
+        };
+        self.total_evicted_blocks += freed as u64;
         *self.preemptions.entry(id).or_insert(0) += 1;
-        Ok(a.blocks)
+        Ok(freed)
     }
 
     /// How many times request `id` has been evicted so far (0 if never).
@@ -363,14 +613,26 @@ impl KvBlockPool {
         self.total_blocks
     }
 
-    /// Fraction of pool capacity in use (committed + lookahead tokens).
+    /// Fraction of pool capacity in use. Counts-only mode reports the
+    /// token-level view (committed + lookahead tokens over capacity);
+    /// sharing mode reports physical block occupancy, because Σ per-request
+    /// tokens double-counts shared prefixes and could exceed 1.0.
     pub fn utilization(&self) -> f64 {
+        if self.sharing {
+            return self.blocks_in_use() as f64 / self.total_blocks as f64;
+        }
         let used: usize = self.allocs.values().map(|a| a.committed + a.lookahead).sum();
         used as f64 / (self.total_blocks * self.block_size) as f64
     }
 
     /// Invariants the property tests drive: the shared budget is never
-    /// exceeded, and every request's span is covered by its blocks.
+    /// exceeded, and every request's span is covered by its blocks. In
+    /// sharing mode, refcount conservation on top: every live block has
+    /// refcount ≥ 1, no request maps a freed block, every mapping is
+    /// block-backed (`mapped.len() == blocks`, so Σ per-request mapped
+    /// blocks ≥ blocks_in_use once trie pins are netted out), and the
+    /// reference ledger balances exactly —
+    /// Σ mapped + external pins == Σ refcounts.
     pub fn check_invariants(&self) -> Result<()> {
         if self.blocks_in_use() > self.total_blocks {
             bail!(
@@ -384,7 +646,52 @@ impl KvBlockPool {
                 bail!("request {id}: span not covered by blocks");
             }
         }
+        if self.sharing {
+            let mut sum_mapped = 0u64;
+            for (id, a) in &self.allocs {
+                if a.mapped.len() != a.blocks {
+                    bail!(
+                        "request {id}: {} mapped block ids cover {} blocks",
+                        a.mapped.len(),
+                        a.blocks
+                    );
+                }
+                for &b in &a.mapped {
+                    if self.refcount(b) == 0 {
+                        bail!("request {id} maps freed block {b}");
+                    }
+                }
+                sum_mapped += a.mapped.len() as u64;
+            }
+            for (b, &rc) in &self.refcounts {
+                if rc == 0 {
+                    bail!("block {b} is live with refcount 0");
+                }
+            }
+            let sum_refs: u64 = self.refcounts.values().map(|&rc| rc as u64).sum();
+            if sum_mapped + self.external_refs != sum_refs {
+                bail!(
+                    "refcount conservation violated: {sum_mapped} mapped + {} external != {sum_refs} refs",
+                    self.external_refs
+                );
+            }
+        }
         Ok(())
+    }
+
+    /// Test-only tamper hook: inflate one live block's refcount so the
+    /// conservation invariant must trip (proves `check_invariants` has
+    /// teeth — rust/tests/proptests.rs). Returns false when no block is
+    /// live to corrupt.
+    #[doc(hidden)]
+    pub fn debug_inflate_refcount(&mut self) -> bool {
+        match self.refcounts.values_mut().next() {
+            Some(rc) => {
+                *rc += 1;
+                true
+            }
+            None => false,
+        }
     }
 }
 
@@ -702,6 +1009,95 @@ mod tests {
         // rolls it back, keeping reserved − rolled_back == committed mass.
         assert_eq!(pool.total_reserved, 8);
         assert_eq!(pool.total_rolled_back, 8);
+    }
+
+    #[test]
+    fn sharing_admit_maps_prefix_and_charges_only_the_remainder() {
+        let mut pool = KvBlockPool::new(8, 16);
+        pool.enable_sharing();
+        assert!(pool.sharing());
+        pool.admit(1, 40).unwrap(); // 3 blocks, all fresh
+        assert_eq!(pool.blocks_in_use(), 3);
+        let mapped = pool.mapped_blocks(1);
+        assert_eq!(mapped.len(), 3);
+        // A second request shares the first two blocks: one fresh block.
+        pool.admit_shared(2, 40, &mapped[..2]).unwrap();
+        assert_eq!(pool.blocks_in_use(), 4);
+        assert_eq!(pool.shared_blocks(), 2);
+        assert_eq!(pool.shared_blocks_peak, 2);
+        // Exclusive views: each request exclusively holds only its tail.
+        assert_eq!(pool.blocks_of(1), 3);
+        assert_eq!(pool.exclusive_blocks_of(1), 1);
+        assert_eq!(pool.exclusive_blocks_of(2), 1);
+        pool.check_invariants().unwrap();
+        // Evicting request 2 frees only its exclusive block.
+        let freed = pool.evict(2).unwrap();
+        assert_eq!(freed, 1);
+        assert_eq!(pool.total_evicted_blocks, 1);
+        assert_eq!(pool.blocks_in_use(), 3);
+        assert_eq!(pool.exclusive_blocks_of(1), 3);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharing_fork_on_write_allocates_private_growth() {
+        let mut pool = KvBlockPool::new(8, 16);
+        pool.enable_sharing();
+        pool.admit(1, 32).unwrap(); // 2 full blocks
+        let mapped = pool.mapped_blocks(1);
+        pool.admit_shared(2, 32, &mapped).unwrap(); // full attach, 0 fresh
+        assert_eq!(pool.blocks_in_use(), 2);
+        // Request 2 decodes past the shared prefix: growth is private.
+        pool.reserve(2, 4).unwrap();
+        assert_eq!(pool.blocks_in_use(), 3);
+        let forked = pool.mapped_blocks(2);
+        assert_eq!(forked[..2], mapped[..]);
+        assert_eq!(pool.refcount(forked[2]), 1, "fork block is private");
+        pool.commit(2, 1).unwrap(); // 33 committed: keeps the fork block
+        assert_eq!(pool.blocks_in_use(), 3);
+        // Rolling back a speculative-only block returns it to the budget.
+        pool.reserve(2, 16).unwrap(); // 33+16 → 4 blocks
+        assert_eq!(pool.blocks_in_use(), 4);
+        pool.commit(2, 0).unwrap();
+        assert_eq!(pool.blocks_in_use(), 3);
+        assert_eq!(pool.mapped_blocks(2).len(), 3);
+        // Request 1's view never changed under request 2's writes.
+        assert_eq!(pool.mapped_blocks(1), mapped);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharing_external_pins_keep_blocks_resident() {
+        let mut pool = KvBlockPool::new(4, 16);
+        pool.enable_sharing();
+        pool.admit(1, 20).unwrap(); // 2 blocks
+        let mapped = pool.mapped_blocks(1);
+        pool.retain_block(mapped[0]).unwrap();
+        pool.release(1);
+        // The pinned block survives the release; the other came back.
+        assert_eq!(pool.blocks_in_use(), 1);
+        assert_eq!(pool.refcount(mapped[0]), 1);
+        assert_eq!(pool.refcount(mapped[1]), 0);
+        pool.check_invariants().unwrap();
+        // Re-attach to the surviving block, then drop the pin.
+        pool.admit_shared(2, 16, &mapped[..1]).unwrap();
+        assert!(!pool.release_block(mapped[0]).unwrap(), "request 2 still maps it");
+        pool.release(2);
+        assert_eq!(pool.blocks_in_use(), 0);
+        assert!(pool.retain_block(mapped[0]).is_err(), "freed blocks cannot be pinned");
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharing_invariant_tamper_trips_conservation() {
+        let mut pool = KvBlockPool::new(4, 16);
+        pool.enable_sharing();
+        assert!(!pool.debug_inflate_refcount(), "no live block yet");
+        pool.admit(1, 16).unwrap();
+        pool.check_invariants().unwrap();
+        assert!(pool.debug_inflate_refcount());
+        let err = pool.check_invariants().unwrap_err().to_string();
+        assert!(err.contains("refcount conservation"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,326 @@
+//! Block-granular prefix trie over committed token ids — the lookup
+//! structure of the copy-on-write prefix cache (rust/docs/prefix_cache.md).
+//!
+//! Each node covers exactly one KV block (`block_size` token ids on its
+//! edge) and pins one physical block of the sharing-mode [`KvBlockPool`]
+//! via [`KvBlockPool::retain_block`], so cached prefixes stay resident
+//! across request lifetimes: a request can release or be evicted and a
+//! later identical prefix still re-attaches to the same blocks. Only
+//! *full* blocks are ever inserted — a partial tail block will have decode
+//! tokens appended in place, so it is never shareable.
+//!
+//! Children are keyed by the block's token ids in a `BTreeMap`, keeping
+//! every walk deterministic (the repo-wide no-unordered-maps rule on the
+//! serving path). Reclaim frees least-recently-used leaves whose block the
+//! trie alone holds (refcount 1): dropping a pinned-elsewhere leaf would
+//! free no memory, and dropping an interior node would orphan the cached
+//! suffixes below it, so pruning cascades bottom-up instead.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::KvBlockPool;
+
+#[derive(Debug, Clone)]
+struct Node {
+    /// Physical pool block holding this edge's token span.
+    block: u64,
+    /// Logical LRU stamp: the trie clock at the last lookup/insert that
+    /// touched this node.
+    stamp: u64,
+    children: BTreeMap<Vec<u32>, Node>,
+}
+
+/// Prefix cache index over a sharing-mode [`KvBlockPool`].
+#[derive(Debug, Clone)]
+pub struct PrefixTrie {
+    block_size: usize,
+    children: BTreeMap<Vec<u32>, Node>,
+    /// Logical clock for LRU stamps (bumped per lookup/insert — no host
+    /// time on the serving path).
+    clock: u64,
+    /// Cumulative blocks reclaimed from the cache (telemetry).
+    pub reclaimed_blocks: u64,
+}
+
+impl PrefixTrie {
+    pub fn new(block_size: usize) -> Self {
+        assert!(block_size > 0);
+        Self { block_size, children: BTreeMap::new(), clock: 0, reclaimed_blocks: 0 }
+    }
+
+    /// Nodes (= pinned blocks) currently in the cache.
+    pub fn len(&self) -> usize {
+        fn count(children: &BTreeMap<Vec<u32>, Node>) -> usize {
+            children.values().map(|n| 1 + count(&n.children)).sum()
+        }
+        count(&self.children)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.children.is_empty()
+    }
+
+    /// Read-only prefix match (admission feasibility): physical block ids
+    /// covering the longest resident full-block prefix of `tokens`.
+    pub fn peek(&self, tokens: &[u32]) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut cur = &self.children;
+        for chunk in tokens.chunks_exact(self.block_size) {
+            match cur.get(chunk) {
+                Some(node) => {
+                    out.push(node.block);
+                    cur = &node.children;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Prefix match that also refreshes the LRU stamps along the matched
+    /// path (the admission-time hit).
+    pub fn lookup(&mut self, tokens: &[u32]) -> Vec<u64> {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut out = Vec::new();
+        let mut cur = &mut self.children;
+        for chunk in tokens.chunks_exact(self.block_size) {
+            match cur.get_mut(chunk) {
+                Some(node) => {
+                    node.stamp = clock;
+                    out.push(node.block);
+                    cur = &mut node.children;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Record the full blocks of `tokens` in the trie: `mapped[i]` is the
+    /// physical block the inserting request maps at block position `i`
+    /// ([`KvBlockPool::mapped_blocks`]). Nodes already present are
+    /// stamp-refreshed and keep their block id (the caller mapped exactly
+    /// those ids for its matched prefix); each genuinely new node pins its
+    /// block via [`KvBlockPool::retain_block`].
+    pub fn insert(&mut self, tokens: &[u32], mapped: &[u64], pool: &mut KvBlockPool) -> Result<()> {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut cur = &mut self.children;
+        for (i, chunk) in tokens.chunks_exact(self.block_size).enumerate() {
+            let Some(&block) = mapped.get(i) else { break };
+            if !cur.contains_key(chunk) {
+                pool.retain_block(block)?;
+                cur.insert(
+                    chunk.to_vec(),
+                    Node { block, stamp: clock, children: BTreeMap::new() },
+                );
+            }
+            let node = cur.get_mut(chunk).expect("inserted above");
+            node.stamp = clock;
+            cur = &mut node.children;
+        }
+        Ok(())
+    }
+
+    /// Blocks an exhaustive reclaim could return to the free budget right
+    /// now: nodes in subtrees held *only* by the trie (every block at
+    /// refcount 1), excluding `protect`ed ids (a match about to be
+    /// attached must not be counted as freeable and shareable at once).
+    /// The engine's admission feasibility adds this to `free_blocks()`.
+    pub fn reclaimable(&self, pool: &KvBlockPool, protect: &[u64]) -> usize {
+        // Returns (freeable nodes in this forest, whole forest freeable).
+        fn walk(
+            children: &BTreeMap<Vec<u32>, Node>,
+            pool: &KvBlockPool,
+            protect: &[u64],
+        ) -> (usize, bool) {
+            let mut count = 0usize;
+            let mut all_free = true;
+            for node in children.values() {
+                let (sub, sub_all) = walk(&node.children, pool, protect);
+                let own =
+                    sub_all && pool.refcount(node.block) == 1 && !protect.contains(&node.block);
+                count += sub + usize::from(own);
+                all_free &= own;
+            }
+            (count, all_free)
+        }
+        walk(&self.children, pool, protect).0
+    }
+
+    /// Free least-recently-used cache-only leaves (block refcount 1) until
+    /// `need` blocks came back or nothing more is freeable. Pruning a leaf
+    /// can expose its parent as the next candidate, so eviction cascades
+    /// exactly over the [`Self::reclaimable`] set. Returns blocks freed.
+    pub fn reclaim(&mut self, pool: &mut KvBlockPool, need: usize, protect: &[u64]) -> Result<usize> {
+        let mut freed = 0usize;
+        while freed < need {
+            let Some(path) = self.oldest_free_leaf(pool, protect) else { break };
+            if self.remove_leaf(&path, pool)? {
+                freed += 1;
+                self.reclaimed_blocks += 1;
+            }
+        }
+        Ok(freed)
+    }
+
+    /// Path (edge keys root→leaf) of the oldest-stamped leaf whose block
+    /// only the trie holds. Ties break on trie order (deterministic).
+    fn oldest_free_leaf(&self, pool: &KvBlockPool, protect: &[u64]) -> Option<Vec<Vec<u32>>> {
+        fn walk(
+            children: &BTreeMap<Vec<u32>, Node>,
+            pool: &KvBlockPool,
+            protect: &[u64],
+            path: &mut Vec<Vec<u32>>,
+            best: &mut Option<(u64, Vec<Vec<u32>>)>,
+        ) {
+            for (key, node) in children {
+                path.push(key.clone());
+                if node.children.is_empty() {
+                    if pool.refcount(node.block) == 1
+                        && !protect.contains(&node.block)
+                        && best.as_ref().is_none_or(|(stamp, _)| node.stamp < *stamp)
+                    {
+                        *best = Some((node.stamp, path.clone()));
+                    }
+                } else {
+                    walk(&node.children, pool, protect, path, best);
+                }
+                path.pop();
+            }
+        }
+        let mut best = None;
+        walk(&self.children, pool, protect, &mut Vec::new(), &mut best);
+        best.map(|(_, path)| path)
+    }
+
+    /// Remove the leaf at `path` and drop its pool pin; returns whether
+    /// the block actually came back to the free budget.
+    fn remove_leaf(&mut self, path: &[Vec<u32>], pool: &mut KvBlockPool) -> Result<bool> {
+        let (last, parents) = path.split_last().expect("reclaim path is never empty");
+        let mut cur = &mut self.children;
+        for key in parents {
+            cur = &mut cur
+                .get_mut(key)
+                .ok_or_else(|| anyhow::anyhow!("prefix trie reclaim path vanished"))?
+                .children;
+        }
+        let node = cur
+            .remove(last)
+            .ok_or_else(|| anyhow::anyhow!("prefix trie reclaim leaf vanished"))?;
+        anyhow::ensure!(node.children.is_empty(), "prefix trie reclaim removed a non-leaf");
+        pool.release_block(node.block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block_tokens(tag: u32, block_size: usize) -> Vec<u32> {
+        (0..block_size as u32).map(|i| tag * 1000 + i).collect()
+    }
+
+    fn pool() -> KvBlockPool {
+        let mut p = KvBlockPool::new(16, 4);
+        p.enable_sharing();
+        p
+    }
+
+    #[test]
+    fn lookup_matches_longest_full_block_prefix() {
+        let mut pool = pool();
+        let mut trie = PrefixTrie::new(4);
+        let mut prompt = block_tokens(1, 4);
+        prompt.extend(block_tokens(2, 4));
+        prompt.extend([7, 8]); // partial tail: never cached
+        pool.admit_shared(10, prompt.len(), &[]).unwrap();
+        let mapped = pool.mapped_blocks(10);
+        trie.insert(&prompt, &mapped, &mut pool).unwrap();
+        assert_eq!(trie.len(), 2, "only full blocks are cached");
+        pool.check_invariants().unwrap();
+
+        // Identical prefix, divergent second block: one-block match.
+        let mut other = block_tokens(1, 4);
+        other.extend(block_tokens(9, 4));
+        assert_eq!(trie.peek(&other), vec![mapped[0]]);
+        // Full match including the partial tail's owner prompt.
+        assert_eq!(trie.lookup(&prompt), vec![mapped[0], mapped[1]]);
+        // Sub-block prompts can never match.
+        assert!(trie.peek(&prompt[..3]).is_empty());
+    }
+
+    #[test]
+    fn cache_survives_request_release_and_reattaches() {
+        let mut pool = pool();
+        let mut trie = PrefixTrie::new(4);
+        let prompt = block_tokens(3, 4);
+        pool.admit_shared(1, prompt.len(), &[]).unwrap();
+        let mapped = pool.mapped_blocks(1);
+        trie.insert(&prompt, &mapped, &mut pool).unwrap();
+        pool.release(1);
+        // The trie pin keeps the block resident…
+        assert_eq!(pool.blocks_in_use(), 1);
+        let shared = trie.lookup(&prompt);
+        assert_eq!(shared, mapped);
+        // …and a later request re-attaches without any fresh allocation.
+        let free = pool.free_blocks();
+        pool.admit_shared(2, prompt.len(), &shared).unwrap();
+        assert_eq!(pool.free_blocks(), free);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reclaim_frees_lru_leaves_and_cascades() {
+        let mut pool = pool();
+        let mut trie = PrefixTrie::new(4);
+        // Two chains: A = a0→a1 (older), B = b0 (newer).
+        let mut chain_a = block_tokens(1, 4);
+        chain_a.extend(block_tokens(2, 4));
+        let chain_b = block_tokens(5, 4);
+        pool.admit_shared(1, chain_a.len(), &[]).unwrap();
+        trie.insert(&chain_a, &pool.mapped_blocks(1), &mut pool).unwrap();
+        pool.release(1);
+        pool.admit_shared(2, chain_b.len(), &[]).unwrap();
+        trie.insert(&chain_b, &pool.mapped_blocks(2), &mut pool).unwrap();
+        pool.release(2);
+        assert_eq!(trie.len(), 3);
+        assert_eq!(trie.reclaimable(&pool, &[]), 3);
+
+        // Need 2: the A chain's leaf goes first (oldest), which exposes its
+        // parent — the cascade frees the whole A chain before touching B.
+        let freed = trie.reclaim(&mut pool, 2, &[]).unwrap();
+        assert_eq!(freed, 2);
+        assert_eq!(trie.len(), 1);
+        assert!(trie.peek(&chain_a).is_empty());
+        assert_eq!(trie.peek(&chain_b).len(), 1);
+        assert_eq!(pool.blocks_in_use(), 1);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reclaim_skips_blocks_other_holders_map() {
+        let mut pool = pool();
+        let mut trie = PrefixTrie::new(4);
+        let prompt = block_tokens(4, 4);
+        pool.admit_shared(1, prompt.len(), &[]).unwrap();
+        trie.insert(&prompt, &pool.mapped_blocks(1), &mut pool).unwrap();
+        // Request 1 still maps the block (refcount 2): nothing to free.
+        assert_eq!(trie.reclaimable(&pool, &[]), 0);
+        assert_eq!(trie.reclaim(&mut pool, 8, &[]).unwrap(), 0);
+        assert_eq!(trie.len(), 1);
+        // Protecting a block behaves the same even once it is trie-only.
+        pool.release(1);
+        let id = trie.peek(&prompt)[0];
+        assert_eq!(trie.reclaimable(&pool, &[id]), 0);
+        assert_eq!(trie.reclaim(&mut pool, 8, &[id]).unwrap(), 0);
+        // Unprotected, it finally goes.
+        assert_eq!(trie.reclaim(&mut pool, 8, &[]).unwrap(), 1);
+        assert!(trie.is_empty());
+        assert_eq!(pool.blocks_in_use(), 0);
+        pool.check_invariants().unwrap();
+    }
+}

@@ -84,6 +84,7 @@ USAGE:
                  [--tokens 400] [--backend real|sim] [--seed N] [--batch 1]
                  [--pipeline on|off] [--shards 1] [--placement balanced|coactivation]
                  [--kv-pool-blocks N] [--eviction off|lru|most-lookahead|cost-aware]
+                 [--prefix-share P]
                  [--max-preemptions 8] [--ngram-max 4] [--ngram-min 1]
                  [--guide-strength 48] [--max-new 200]
                  [--arrivals closed|poisson|bursty|trace:<path>] [--rate R]
@@ -103,14 +104,16 @@ USAGE:
                  [--out-arrivals BENCH_arrivals.json]
                  [--out-faults BENCH_faults.json]
                  [--out-saturation BENCH_saturation.json]
+                 [--out-prefix BENCH_prefix.json]
                  (serial vs pipelined TPOT/bubble-fraction table at batch 1/4,
                   sharded TPOT at shards 1/2/4 x batch 1/4, eviction-policy
                   throughput under a half-working-set pool, per-admission
                   p95 queueing delay under bursty arrivals, chaos-plan
-                  goodput with the degradation controller on vs off, and a
+                  goodput with the degradation controller on vs off, a
                   goodput-vs-offered-load rate sweep under a stochastic
-                  MTBF fault process, as JSON for CI)
-  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|batch|pipeline|sharding|preemption|arrivals|faults|all>
+                  MTBF fault process, and TTFT vs prefix-sharing template
+                  share ratio, as JSON for CI)
+  cascade figure <table1|fig1c|fig4|fig5|fig6|fig7|fig8|fig13|fig15|fig16|fig17|fig18|sens|batch|pipeline|sharding|preemption|prefix|arrivals|faults|all>
                  [--backend real|sim] [--tokens 300] [--out-dir results]
   cascade diff-trace <healthy.jsonl> <chaos.jsonl>
                  (compare completed token streams of two --capture-trace
@@ -144,6 +147,15 @@ USAGE:
   committed context re-prefilled on re-admission, the recompute charged
   into TPOT). An evicted-then-readmitted request's token stream is
   bit-exact with an uncontended run (see rust/docs/preemption.md).
+
+  --prefix-share P > 0 turns on copy-on-write prefix sharing: KV blocks
+  are refcounted, committed prompts are published to a prefix trie, and a
+  new request whose prompt prefix is resident maps the shared blocks
+  instead of re-prefilling them (only the novel suffix is charged on the
+  virtual clock, so TTFT collapses for hits). The request stream switches
+  to a template-heavy shape: every prompt opens with a 128-token preamble,
+  shared with probability P. P = 0 (the default) disables both and is
+  bit-exact with pre-sharing builds. See rust/docs/prefix_cache.md.
 
   --arrivals opens the serving loop: requests arrive on the engine's
   virtual clock (poisson / bursty at --rate req/s, or a JSONL trace) and
@@ -396,6 +408,17 @@ fn serve(args: &Args) -> Result<()> {
     let placement = cascade::config::PlacementKind::parse(&args.get("placement", "balanced"))?;
     let kv_pool_blocks = args.get_usize("kv-pool-blocks", 0)?;
     let eviction = cascade::config::EvictionKind::parse(&args.get("eviction", "off"))?;
+    let prefix_share = args.get_f64("prefix-share", 0.0)?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&prefix_share),
+        "--prefix-share must lie in [0, 1]"
+    );
+    anyhow::ensure!(
+        prefix_share == 0.0 || !workload.tasks.contains(&cascade::workload::Task::Extract),
+        "--prefix-share needs a code/math workload: extract's long passages leave no \
+         room for the {}-token shared preamble within the model's context window",
+        cascade::workload::PREFIX_PREAMBLE_TOKENS
+    );
     let max_preemptions = args.get_usize("max-preemptions", 8)?;
     let rate = args.get_f64("rate", 0.0)?;
     let arrival_kind =
@@ -470,6 +493,7 @@ fn serve(args: &Args) -> Result<()> {
         || (shards > 1 && backend == BackendKind::Sim)
         || kv_pool_blocks > 0
         || eviction.is_on()
+        || prefix_share > 0.0
         || !arrival_kind.is_closed()
         || admission != cascade::config::AdmissionKind::Fcfs
         || has_slo
@@ -492,6 +516,7 @@ fn serve(args: &Args) -> Result<()> {
         placement,
         kv_pool_blocks,
         eviction,
+        prefix_share,
         max_preemptions_per_req: max_preemptions,
         admission,
         slo_s,
@@ -503,7 +528,20 @@ fn serve(args: &Args) -> Result<()> {
         ..EngineConfig::default()
     };
     let budget = Budget { max_tokens: tokens, max_requests: 10_000 };
-    let stream = RequestStream::new(workload.clone(), seed, cfg.max_new_tokens);
+    // --prefix-share 0 (the default) keeps the plain preamble-free stream:
+    // bit-exact with builds that predate prefix sharing. Any positive
+    // share switches to the template-heavy stream AND enables the engine's
+    // prefix trie via cfg.prefix_share.
+    let stream = if prefix_share > 0.0 {
+        RequestStream::with_prefix_templates(
+            workload.clone(),
+            seed,
+            cfg.max_new_tokens,
+            prefix_share,
+        )
+    } else {
+        RequestStream::new(workload.clone(), seed, cfg.max_new_tokens)
+    };
     let mut sched = if arrival_kind.is_closed() {
         Scheduler::new(stream, budget)
     } else {
@@ -641,6 +679,30 @@ fn serve(args: &Args) -> Result<()> {
             t.row(vec![
                 "thrash fraction".into(),
                 format!("{:.1}%", 100.0 * m.thrash_fraction()),
+            ]);
+        }
+        if prefix_share > 0.0 {
+            t.row(vec![
+                "prefix sharing".into(),
+                format!(
+                    "share {prefix_share:.2}, {} templates",
+                    cascade::workload::PREFIX_TEMPLATE_COUNT
+                ),
+            ]);
+            t.row(vec![
+                "prefix_hits / prefix_misses".into(),
+                format!(
+                    "{} / {} ({:.0}% hit rate)",
+                    m.prefix_hits,
+                    m.prefix_misses,
+                    100.0 * m.prefix_hit_rate()
+                ),
+            ]);
+            t.row(vec!["prefix_hit_tokens".into(), m.prefix_hit_tokens.to_string()]);
+            t.row(vec!["shared_blocks_peak".into(), m.shared_blocks_peak.to_string()]);
+            t.row(vec![
+                "prefix_reclaimed_blocks".into(),
+                m.prefix_reclaimed_blocks.to_string(),
             ]);
         }
         t.row(vec!["admission".into(), admission.label().into()]);
@@ -1355,6 +1417,86 @@ fn bench(args: &Args) -> Result<()> {
         ("rows", json::arr(sat_rows)),
     ]);
     write_json_artifact(&saturation_out, &sat_doc)?;
+
+    // ---- Prefix-sharing bench (BENCH_prefix.json) -----------------------
+    // Throughput and p50 TTFT vs the template share ratio at batch 1 and 4,
+    // under open-loop Poisson arrivals fast enough to keep a queue standing
+    // (each trie hit then shortens the backlog for everyone behind it, so
+    // p50 TTFT falls as share rises). Shares its cell runner with
+    // `figure prefix` so the two can never drift.
+    let prefix_out = args.get("out-prefix", "BENCH_prefix.json");
+    let pprobe = experiments::prefix::cell(0.0, 1);
+    let mut pxt = Table::new(
+        format!(
+            "prefix bench: mixtral/{task}/static-k3 (sim, poisson {:.0}/s open-loop)",
+            pprobe.rate
+        ),
+        &[
+            "batch",
+            "share",
+            "reqs",
+            "tokens",
+            "tok/s",
+            "TTFT p50",
+            "TTFT p95",
+            "hits",
+            "misses",
+            "hit tokens",
+            "shared peak",
+            "reclaimed",
+        ],
+    );
+    let mut prefix_rows: Vec<json::Value> = Vec::new();
+    for &pbatch in &experiments::prefix::BATCHES {
+        for &share in &experiments::prefix::SHARES {
+            let cell = experiments::prefix::cell(share, pbatch);
+            let m = experiments::prefix::run_cell(&ctx, "mixtral", &policy, &cell)?;
+            pxt.row(vec![
+                pbatch.to_string(),
+                format!("{share:.1}"),
+                m.run.requests.len().to_string(),
+                m.run.total_tokens().to_string(),
+                format!("{:.1}", m.run.total_tokens() as f64 / m.clock_s),
+                ms(m.run.ttft_percentile(0.50)),
+                ms(m.run.ttft_percentile(0.95)),
+                m.prefix_hits.to_string(),
+                m.prefix_misses.to_string(),
+                m.prefix_hit_tokens.to_string(),
+                m.shared_blocks_peak.to_string(),
+                m.prefix_reclaimed_blocks.to_string(),
+            ]);
+            prefix_rows.push(json::obj(vec![
+                ("batch", json::num(pbatch as f64)),
+                ("share", json::num(share)),
+                ("requests_completed", json::num(m.run.requests.len() as f64)),
+                ("tokens", json::num(m.run.total_tokens() as f64)),
+                ("tokens_per_s_virtual", json::num(m.run.total_tokens() as f64 / m.clock_s)),
+                ("ttft_p50_ms", json::num(1e3 * m.run.ttft_percentile(0.50))),
+                ("ttft_p95_ms", json::num(1e3 * m.run.ttft_percentile(0.95))),
+                ("prefix_hits", json::num(m.prefix_hits as f64)),
+                ("prefix_misses", json::num(m.prefix_misses as f64)),
+                ("prefix_hit_rate", json::num(m.prefix_hit_rate())),
+                ("prefix_hit_tokens", json::num(m.prefix_hit_tokens as f64)),
+                ("shared_blocks_peak", json::num(m.shared_blocks_peak as f64)),
+                ("prefix_reclaimed_blocks", json::num(m.prefix_reclaimed_blocks as f64)),
+                ("virtual_duration_s", json::num(m.clock_s)),
+            ]));
+        }
+    }
+    println!("{}", pxt.render());
+    let prefix_doc = json::obj(vec![
+        ("bench", json::str("prefix")),
+        ("model", json::str("mixtral")),
+        ("task", json::str(task)),
+        ("policy", json::str("static-k3")),
+        ("drafter", json::str("ngram")),
+        ("backend", json::str("sim")),
+        ("arrivals", json::str("poisson")),
+        ("rate_per_s", json::num(pprobe.rate)),
+        ("quick", json::Value::Bool(quick)),
+        ("rows", json::arr(prefix_rows)),
+    ]);
+    write_json_artifact(&prefix_out, &prefix_doc)?;
 
     let faults_doc = json::obj(vec![
         ("bench", json::str("faults")),

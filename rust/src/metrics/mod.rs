@@ -444,9 +444,37 @@ pub struct BatchRunMetrics {
     /// edges). A clean straggle-then-recover cycle costs exactly 2; more
     /// means the hysteresis bands are flapping. 0 with `--heal off`.
     pub heal_rebuilds: usize,
+    /// Admissions (fresh + re-admissions after eviction) that attached at
+    /// least one cached prefix block copy-on-write instead of prefilling
+    /// it (rust/docs/prefix_cache.md). 0 with `--prefix-share 0`.
+    pub prefix_hits: usize,
+    /// Admissions that found no cached prefix block. With sharing on,
+    /// `prefix_hits + prefix_misses` counts every admission; 0 with
+    /// `--prefix-share 0`.
+    pub prefix_misses: usize,
+    /// Committed tokens served from the prefix cache — prompt (and
+    /// replayed-context) tokens whose prefill charge was skipped on the
+    /// virtual clock. 0 with `--prefix-share 0`.
+    pub prefix_hit_tokens: u64,
+    /// Peak count of KV blocks mapped by two or more holders at once
+    /// (requests plus trie pins). 0 with `--prefix-share 0`.
+    pub shared_blocks_peak: usize,
+    /// Cache-only (trie-pinned, refcount-1) blocks reclaimed LRU-first
+    /// under pool pressure. 0 with `--prefix-share 0`.
+    pub prefix_reclaimed_blocks: u64,
 }
 
 impl BatchRunMetrics {
+    /// Prefix-cache hit rate over all admissions (fresh + re-admissions):
+    /// hits / (hits + misses), 0.0 when sharing never admitted anything.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / total as f64
+    }
+
     /// Batch-clock TPOT: total fused iteration time over total tokens —
     /// the throughput figure of merit for batched serving. (Per-request
     /// `run.tpot_s()` is the *latency* each request observed.)

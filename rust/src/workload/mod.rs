@@ -99,6 +99,26 @@ pub struct Request {
     pub max_new_tokens: usize,
 }
 
+/// Preamble length of the template-heavy prefix-sharing mode, in tokens:
+/// 8 KV blocks of 16 and exactly 2 prefill chunks of 64, so a template hit
+/// skips whole blocks *and* whole chunk charges
+/// (rust/docs/prefix_cache.md).
+pub const PREFIX_PREAMBLE_TOKENS: usize = 128;
+
+/// Number of distinct shared templates the prefix-sharing mode draws from.
+pub const PREFIX_TEMPLATE_COUNT: usize = 4;
+
+/// The fixed token body of shared template `idx` (taken modulo
+/// [`PREFIX_TEMPLATE_COUNT`]): a deterministic printable-byte sequence, so
+/// every stream — whatever its seed — agrees on what "template 2" is and
+/// the prefix trie can share it across requests and runs.
+pub fn template_preamble(idx: usize) -> Vec<u32> {
+    let idx = idx % PREFIX_TEMPLATE_COUNT;
+    (0..PREFIX_PREAMBLE_TOKENS)
+        .map(|i| (32 + (idx * 53 + i * 17 + (i * i) % 31) % 95) as u32)
+        .collect()
+}
+
 /// Deterministic request stream over a workload (round-robin across the
 /// mix's tasks, per the paper's equal-share mixes).
 pub struct RequestStream {
@@ -106,11 +126,46 @@ pub struct RequestStream {
     rng: Rng,
     next_id: u64,
     max_new_tokens: usize,
+    /// Template-heavy preamble mode (`with_prefix_templates`); off for
+    /// [`Self::new`] streams, which stay preamble-free.
+    preamble: bool,
+    /// Probability that a request's preamble is drawn from the shared
+    /// template pool rather than being request-unique.
+    prefix_share: f64,
 }
 
 impl RequestStream {
     pub fn new(workload: Workload, seed: u64, max_new_tokens: usize) -> Self {
-        Self { workload, rng: Rng::new(seed), next_id: 0, max_new_tokens }
+        Self {
+            workload,
+            rng: Rng::new(seed),
+            next_id: 0,
+            max_new_tokens,
+            preamble: false,
+            prefix_share: 0.0,
+        }
+    }
+
+    /// A template-heavy stream for prefix-sharing runs: **every** request
+    /// gets a [`PREFIX_PREAMBLE_TOKENS`]-token preamble prepended to its
+    /// prompt — with probability `share` one of the
+    /// [`PREFIX_TEMPLATE_COUNT`] shared templates, otherwise a
+    /// request-unique preamble of the same length. Prompt-length and
+    /// corpus-content distributions are therefore identical across `share`
+    /// values — `share == 0` still prepends (all-unique) preambles — so
+    /// TTFT differences between two shares are attributable to cache hits
+    /// alone. Preamble draws come after corpus generation on the request's
+    /// forked rng, so the corpus content itself is share-independent.
+    pub fn with_prefix_templates(
+        workload: Workload,
+        seed: u64,
+        max_new_tokens: usize,
+        share: f64,
+    ) -> Self {
+        let mut s = Self::new(workload, seed, max_new_tokens);
+        s.preamble = true;
+        s.prefix_share = share.clamp(0.0, 1.0);
+        s
     }
 
     /// Generate the next request (round-robin task per the workload mix).
@@ -125,10 +180,23 @@ impl RequestStream {
     pub fn next_request_for(&mut self, task: Task) -> Request {
         let mut rng = self.rng.fork(self.next_id);
         let (prompt_text, reference_text) = corpus::generate(task, &mut rng);
+        let mut prompt = tokenizer::encode(&prompt_text);
+        if self.preamble {
+            // Preamble draws come *after* corpus generation on the
+            // request's forked rng, so enabling the mode never perturbs
+            // the corpus content (and other requests fork fresh).
+            let mut preamble = if rng.chance(self.prefix_share) {
+                template_preamble(rng.below(PREFIX_TEMPLATE_COUNT))
+            } else {
+                (0..PREFIX_PREAMBLE_TOKENS).map(|_| (32 + rng.below(95)) as u32).collect()
+            };
+            preamble.append(&mut prompt);
+            prompt = preamble;
+        }
         let req = Request {
             id: self.next_id,
             task,
-            prompt: tokenizer::encode(&prompt_text),
+            prompt,
             reference: tokenizer::encode(&reference_text),
             eps: task.deviation_eps(),
             max_new_tokens: self.max_new_tokens,
@@ -197,5 +265,92 @@ mod tests {
         let a = s.next_request();
         let b = s.next_request();
         assert_ne!(a.reference, b.reference);
+    }
+
+    #[test]
+    fn preamble_mode_wraps_the_plain_stream_and_share_zero_is_all_unique() {
+        let w = Workload::by_name("code+math").unwrap();
+        let plain = RequestStream::new(w.clone(), 11, 80).take(6);
+        let wrapped = RequestStream::with_prefix_templates(w, 11, 80, 0.0).take(6);
+        let templates: Vec<Vec<u32>> =
+            (0..PREFIX_TEMPLATE_COUNT).map(template_preamble).collect();
+        for (x, y) in plain.iter().zip(&wrapped) {
+            // The corpus suffix is exactly the plain stream's prompt: the
+            // mode only prepends, never rewrites.
+            assert_eq!(y.prompt.len(), x.prompt.len() + PREFIX_PREAMBLE_TOKENS);
+            assert_eq!(y.prompt[PREFIX_PREAMBLE_TOKENS..], x.prompt[..]);
+            assert_eq!(x.reference, y.reference);
+            let head = y.prompt[..PREFIX_PREAMBLE_TOKENS].to_vec();
+            assert!(
+                !templates.contains(&head),
+                "share 0 preambles must be request-unique, not templates"
+            );
+        }
+        // Unique preambles really are unique across requests.
+        let heads: Vec<&[u32]> =
+            wrapped.iter().map(|r| &r.prompt[..PREFIX_PREAMBLE_TOKENS]).collect();
+        for (i, h) in heads.iter().enumerate() {
+            assert!(!heads[..i].contains(h), "unique preambles collided");
+        }
+    }
+
+    #[test]
+    fn template_preambles_are_shared_deterministic_and_in_vocab() {
+        let w = Workload::single(Task::Code);
+        let a = RequestStream::with_prefix_templates(w.clone(), 4, 80, 1.0).take(8);
+        let b = RequestStream::with_prefix_templates(w, 4, 80, 1.0).take(8);
+        let templates: Vec<Vec<u32>> =
+            (0..PREFIX_TEMPLATE_COUNT).map(template_preamble).collect();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt, "template streams must be deterministic");
+            let head = &x.prompt[..PREFIX_PREAMBLE_TOKENS];
+            assert!(
+                templates.iter().any(|t| t == head),
+                "share=1 preamble must come from the shared pool"
+            );
+            assert!(x.prompt.iter().all(|&t| (t as usize) < tokenizer::VOCAB));
+        }
+        // With 8 draws over 4 templates at least two requests collide —
+        // the whole point of the mode (pigeonhole, no randomness needed).
+        let heads: Vec<&[u32]> =
+            a.iter().map(|r| &r.prompt[..PREFIX_PREAMBLE_TOKENS]).collect();
+        assert!(
+            heads.iter().enumerate().any(|(i, h)| heads[..i].contains(h)),
+            "8 template draws over 4 templates must repeat one"
+        );
+    }
+
+    #[test]
+    fn share_changes_cacheability_not_length_or_corpus() {
+        let w = Workload::single(Task::Math);
+        let lo = RequestStream::with_prefix_templates(w.clone(), 6, 80, 0.3).take(5);
+        let hi = RequestStream::with_prefix_templates(w, 6, 80, 0.9).take(5);
+        for (x, y) in lo.iter().zip(&hi) {
+            assert_eq!(x.prompt.len(), y.prompt.len(), "length distribution must match");
+            assert_eq!(
+                x.prompt[PREFIX_PREAMBLE_TOKENS..],
+                y.prompt[PREFIX_PREAMBLE_TOKENS..],
+                "corpus suffix must be share-independent"
+            );
+            assert_eq!(x.reference, y.reference);
+        }
+    }
+
+    #[test]
+    fn preamble_is_whole_blocks_and_whole_chunks() {
+        // 16-token KV blocks and 64-token prefill chunks both divide the
+        // preamble, so a template hit frees whole blocks and whole chunk
+        // charges (rust/docs/prefix_cache.md).
+        assert_eq!(PREFIX_PREAMBLE_TOKENS % 16, 0);
+        assert_eq!(PREFIX_PREAMBLE_TOKENS % 64, 0);
+        for i in 0..PREFIX_TEMPLATE_COUNT {
+            for j in 0..PREFIX_TEMPLATE_COUNT {
+                assert_eq!(
+                    template_preamble(i) == template_preamble(j),
+                    i == j,
+                    "templates must be distinct exactly when indices differ"
+                );
+            }
+        }
     }
 }

@@ -1,0 +1,248 @@
+//! Copy-on-write prefix sharing (sim backend; no artifacts needed):
+//!
+//! * **losslessness battery** — template-heavy streams served with sharing
+//!   on emit exactly the token streams (and per-iteration accept
+//!   structure) of the same list served with sharing off, across eviction
+//!   (off / lru / cost-aware) × the drafting pipeline (on / off) × expert
+//!   shards (1 / 2). Sharing changes only block accounting and
+//!   virtual-clock charges, never backend calls, so static-K streams are
+//!   bit-exact by construction (rust/docs/prefix_cache.md) — this battery
+//!   is the regression net over that claim;
+//! * the battery also proves it is **exercising the cache** (≥ 1 trie hit
+//!   per uncontended run, non-zero hits overall) and **exercising
+//!   preemption under sharing** (evictions > 0 in the contended cells);
+//! * **all-shared pools skip eviction** — when every candidate victim's
+//!   blocks are shared (refcount > 1), evicting would free nothing: the
+//!   feasibility pre-check must go straight to the deadlock bail with
+//!   `total_evicted == 0`, never trash a victim's state for zero relief.
+//!
+//! Losslessness is asserted for static-K policies only: Cascade
+//! legitimately adapts K to the (honest, hit-discounted) costs, so its
+//! trajectories may differ — by design, not by accident.
+
+use cascade::config::{DrafterKind, EngineConfig, EvictionKind};
+use cascade::coordinator::batch::{BatchEngine, KV_BLOCK};
+use cascade::metrics::BatchRunMetrics;
+use cascade::models::{default_artifacts_dir, Registry};
+use cascade::spec::policy::PolicyKind;
+use cascade::workload::{template_preamble, Request, RequestStream, Task, Workload};
+
+fn registry() -> Registry {
+    Registry::load_or_builtin(default_artifacts_dir())
+}
+
+/// Template-heavy corpus stream for the uncontended cells: every request
+/// opens with a preamble from the shared template pool (share = 1.0) over
+/// real code+math prompts, so trie hits are guaranteed by the pigeonhole
+/// principle (8 requests, 4 templates) while outputs stay corpus-driven.
+fn stream_requests(n: usize, max_new: usize) -> Vec<Request> {
+    let w = Workload::by_name("code+math").unwrap();
+    RequestStream::with_prefix_templates(w, 0xCA5CADE, max_new, 1.0).take(n)
+}
+
+/// Deterministic template-headed requests for the contended cells: a
+/// shared 128-token preamble (8 full blocks, alternating between two
+/// templates) plus a request-unique 40-token tail, eps = 0 and a reference
+/// longer than the budget so every token is guided, nothing hits EOS
+/// early, and two concurrent 20-block spans must overflow the 24-block
+/// pool — eviction under sharing is guaranteed by construction.
+fn crafted_template_requests(n: usize, max_new: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            let mut prompt = template_preamble(i % 2);
+            prompt.extend((0..40).map(|p| 1 + ((p + 3 * i) % 200) as u32));
+            // Non-trivially periodic, EOS/PAD-free reference (EOS = 258;
+            // these stay in [1, 200]).
+            let reference: Vec<u32> =
+                (0..max_new + 16).map(|p| 1 + ((p * 7 + i) % 200) as u32).collect();
+            Request {
+                id: i as u64,
+                task: Task::Code,
+                prompt,
+                reference,
+                eps: 0.0,
+                max_new_tokens: max_new,
+            }
+        })
+        .collect()
+}
+
+fn cfg(
+    pool_blocks: usize,
+    eviction: EvictionKind,
+    pipeline: bool,
+    shards: usize,
+    prefix_share: f64,
+) -> EngineConfig {
+    EngineConfig {
+        model: "mixtral".into(),
+        drafter: DrafterKind::Ngram,
+        max_batch: 4,
+        kv_pool_blocks: pool_blocks,
+        eviction,
+        max_preemptions_per_req: 100,
+        pipeline,
+        shards,
+        prefix_share,
+        ..Default::default()
+    }
+}
+
+fn serve(cfg: EngineConfig, policy: PolicyKind, reqs: &[Request]) -> (BatchRunMetrics, u64) {
+    let reg = registry();
+    let mut engine = BatchEngine::sim(&reg, cfg, policy).unwrap();
+    let m = engine.serve_all(reqs).unwrap();
+    (m, engine.pool.total_evicted)
+}
+
+/// The losslessness battery: eviction {off, lru, cost-aware} × pipeline
+/// {off, on} × shards {1, 2} — 12 cells, each serving the identical
+/// request list with sharing on (`prefix_share = 1.0`) and off (`0.0`) and
+/// asserting bit-exact per-request streams and iteration structure.
+/// Eviction-off cells run uncontended (corpus requests, real eps);
+/// eviction-on cells run a 24-block pool that must preempt mid-battery.
+#[test]
+fn sharing_is_lossless_across_eviction_pipeline_and_shards() {
+    let policy = PolicyKind::Static(3);
+    let mut total_hits = 0usize;
+    let mut contended_evictions = 0u64;
+    for eviction in [EvictionKind::Off, EvictionKind::Lru, EvictionKind::CostAware] {
+        let contended = eviction.is_on();
+        let (pool_blocks, reqs) = if contended {
+            (1, crafted_template_requests(8, 150))
+        } else {
+            (0, stream_requests(8, 48))
+        };
+        for pipeline in [false, true] {
+            for shards in [1usize, 2] {
+                let label = format!("{eviction:?} pipeline={pipeline} shards={shards}");
+                let (base, base_evicted) = serve(
+                    cfg(pool_blocks, eviction, pipeline, shards, 0.0),
+                    policy.clone(),
+                    &reqs,
+                );
+                let (shared, shared_evicted) = serve(
+                    cfg(pool_blocks, eviction, pipeline, shards, 1.0),
+                    policy.clone(),
+                    &reqs,
+                );
+                assert_eq!(
+                    base.prefix_hits, 0,
+                    "{label}: sharing off must never report trie hits"
+                );
+                assert_eq!(base.run.requests.len(), shared.run.requests.len());
+                for (b, s) in base.run.requests.iter().zip(&shared.run.requests) {
+                    assert_eq!(b.id, s.id);
+                    assert_eq!(
+                        b.output, s.output,
+                        "{label}: request {} diverged between sharing off and on",
+                        b.id
+                    );
+                    assert_eq!(
+                        b.iters.len(),
+                        s.iters.len(),
+                        "{label}: request {} iteration structure changed",
+                        b.id
+                    );
+                    for (bi, si) in b.iters.iter().zip(&s.iters) {
+                        assert_eq!(bi.k_chosen, si.k_chosen);
+                        assert_eq!(bi.drafted, si.drafted);
+                        assert_eq!(bi.accepted, si.accepted);
+                        assert_eq!(bi.emitted, si.emitted);
+                    }
+                }
+                total_hits += shared.prefix_hits;
+                if contended {
+                    // The contended cells must actually preempt — with the
+                    // 8-block shared preambles resident, victims are priced
+                    // at *exclusive* blocks and still must be worth paying.
+                    assert!(
+                        shared_evicted > 0,
+                        "{label}: the oversubscribed sharing pool never evicted — \
+                         the cell is not exercising preemption under sharing"
+                    );
+                    contended_evictions += base_evicted + shared_evicted;
+                } else {
+                    assert_eq!(
+                        base_evicted + shared_evicted,
+                        0,
+                        "{label}: the uncontended cells must never evict"
+                    );
+                    // 8 single-template-pool requests over 4 templates:
+                    // repeats are guaranteed, so the trie must hit.
+                    assert!(
+                        shared.prefix_hits > 0,
+                        "{label}: template-heavy stream never hit the cache"
+                    );
+                }
+            }
+        }
+    }
+    assert!(total_hits > 0, "battery finished without a single cache hit");
+    assert!(contended_evictions > 0, "battery finished without a single eviction");
+}
+
+/// Hit accounting is block-granular: attached tokens are whole cached
+/// blocks, so `prefix_hit_tokens` is always a multiple of the block size
+/// and never exceeds what the hitting prompts could share.
+#[test]
+fn hit_token_accounting_is_block_granular() {
+    let reqs = stream_requests(8, 48);
+    let (m, _) = serve(cfg(0, EvictionKind::Off, false, 1, 1.0), PolicyKind::Static(3), &reqs);
+    assert!(m.prefix_hits > 0);
+    assert_eq!(m.prefix_hits + m.prefix_misses, reqs.len());
+    assert_eq!(
+        m.prefix_hit_tokens % KV_BLOCK as u64,
+        0,
+        "attached prefixes must cover whole blocks"
+    );
+    assert!(m.prefix_hit_tokens >= (m.prefix_hits * KV_BLOCK) as u64);
+    assert!(m.shared_blocks_peak > 0, "hits without shared residency make no sense");
+}
+
+/// Feasibility under total sharing: four slots whose every mapped block is
+/// shared (two requests per prompt, plus the trie's pins) fill the
+/// 24-block pool exactly; the first decode token then needs a fresh block
+/// in every slot, but evicting any victim frees *nothing* — all candidate
+/// blocks have refcount > 1. The engine must recognize the zero-relief
+/// victim set, skip eviction entirely, and surface the deadlock bail.
+#[test]
+fn all_shared_pool_skips_eviction_and_surfaces_deadlock() {
+    let max_new = 64;
+    // Two prompt families sized in whole blocks: 16 + 8 = 24 = the whole
+    // pool once each family is mapped exactly once and shared by its pair.
+    let long: Vec<u32> = (0..16 * KV_BLOCK).map(|p| 1 + ((p * 5) % 200) as u32).collect();
+    let short: Vec<u32> = (0..8 * KV_BLOCK).map(|p| 1 + ((p * 11 + 7) % 200) as u32).collect();
+    let reqs: Vec<Request> = (0..4usize)
+        .map(|i| Request {
+            id: i as u64,
+            task: Task::Code,
+            prompt: if i < 2 { long.clone() } else { short.clone() },
+            reference: (0..max_new + 16).map(|p| 1 + ((p * 7 + i) % 200) as u32).collect(),
+            eps: 0.0,
+            max_new_tokens: max_new,
+        })
+        .collect();
+    let reg = registry();
+    let mut engine = BatchEngine::sim(
+        &reg,
+        cfg(1, EvictionKind::Lru, false, 1, 1.0),
+        PolicyKind::Static(3),
+    )
+    .unwrap();
+    let err = engine.serve_all(&reqs).expect_err(
+        "a pool whose every block is shared has no victim worth evicting \
+         and must deadlock, not complete",
+    );
+    let msg = err.to_string();
+    assert!(msg.contains("KV pool deadlock"), "unexpected error: {msg}");
+    assert_eq!(
+        engine.pool.total_evicted, 0,
+        "evicting an all-shared victim frees nothing — eviction must be skipped"
+    );
+    assert_eq!(
+        engine.pool.shared_blocks(),
+        engine.pool.total_blocks(),
+        "the scenario is meant to share every block in the pool"
+    );
+}

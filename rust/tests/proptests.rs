@@ -160,6 +160,130 @@ fn prop_theorem_4_2_on_engine_traces() {
     }
 }
 
+/// Copy-on-write sharing pool state machine: hundreds of random
+/// admit / admit-with-shared-prefix (the fork-on-write attach) /
+/// reserve+partial-commit / release / evict / trie-style pin-unpin
+/// sequences, with [`cascade::kv::KvBlockPool::check_invariants`] —
+/// budget, span coverage, and exact refcount conservation
+/// (Σ mapped + external pins == Σ refcounts) — asserted after every op,
+/// and a drained pool at the end of every case.
+#[test]
+fn prop_sharing_pool_state_machine() {
+    use cascade::kv::KvBlockPool;
+    let block = 16usize;
+    let mut rng = Rng::new(0xC0117);
+    for case in 0..80 {
+        let total = rng.range(8, 40);
+        let mut pool = KvBlockPool::new(total, block);
+        pool.enable_sharing();
+        let mut live: Vec<u64> = Vec::new();
+        let mut pins: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for step in 0..160 {
+            match rng.below(6) {
+                // Admit, forking off a random live donor's mapped prefix
+                // with high probability (the copy-on-write attach).
+                0 | 1 => {
+                    let committed = rng.range(1, 4 * block);
+                    let span = committed.div_ceil(block);
+                    let mut shared: Vec<u64> = Vec::new();
+                    if !live.is_empty() && rng.chance(0.7) {
+                        let donor = live[rng.below(live.len())];
+                        let mapped = pool.mapped_blocks(donor);
+                        let take = rng.below(mapped.len().min(span) + 1);
+                        shared.extend_from_slice(&mapped[..take]);
+                    }
+                    if span - shared.len() <= pool.free_blocks() {
+                        pool.admit_shared(next_id, committed, &shared).unwrap();
+                        live.push(next_id);
+                        next_id += 1;
+                    }
+                }
+                // Reserve a verify step, then commit a random part of it
+                // (speculative tail blocks roll back to the free budget).
+                2 => {
+                    if !live.is_empty() {
+                        let id = live[rng.below(live.len())];
+                        let t = 1 + rng.below(8);
+                        if pool.can_reserve(id, t) {
+                            pool.reserve(id, t).unwrap();
+                            pool.commit(id, rng.below(t + 1)).unwrap();
+                        }
+                    }
+                }
+                // Finish a request: shared blocks must survive while any
+                // other holder (request or pin) still maps them.
+                3 => {
+                    if !live.is_empty() {
+                        let id = live.swap_remove(rng.below(live.len()));
+                        pool.release(id);
+                    }
+                }
+                // Preempt a request: only its exclusive blocks come back.
+                4 => {
+                    if !live.is_empty() {
+                        let id = live.swap_remove(rng.below(live.len()));
+                        let in_use = pool.blocks_in_use();
+                        let exclusive = pool.exclusive_blocks_of(id);
+                        let freed = pool.evict(id).unwrap();
+                        assert_eq!(
+                            freed, exclusive,
+                            "case {case} step {step}: eviction freed {freed} blocks, \
+                             not the victim's {exclusive} exclusive ones"
+                        );
+                        assert_eq!(pool.blocks_in_use(), in_use - freed);
+                    }
+                }
+                // Trie-style external pin or unpin of a mapped block.
+                _ => {
+                    if rng.chance(0.5) && !live.is_empty() {
+                        let id = live[rng.below(live.len())];
+                        let mapped = pool.mapped_blocks(id);
+                        if !mapped.is_empty() {
+                            let b = mapped[rng.below(mapped.len())];
+                            pool.retain_block(b).unwrap();
+                            pins.push(b);
+                        }
+                    } else if !pins.is_empty() {
+                        let b = pins.swap_remove(rng.below(pins.len()));
+                        pool.release_block(b).unwrap();
+                    }
+                }
+            }
+            pool.check_invariants()
+                .unwrap_or_else(|e| panic!("case {case} step {step}: {e}"));
+            assert!(pool.blocks_in_use() <= pool.total_blocks());
+        }
+        // Drain: every holder gone means every block gone.
+        for id in live.drain(..) {
+            pool.release(id);
+        }
+        for b in pins.drain(..) {
+            pool.release_block(b).unwrap();
+        }
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.blocks_in_use(), 0, "case {case}: drained pool still holds blocks");
+    }
+}
+
+/// The conservation check has teeth: corrupting one refcount via the
+/// test-only tamper hook must trip `check_invariants` with the exact
+/// conservation message.
+#[test]
+fn sharing_invariants_catch_refcount_tampering() {
+    use cascade::kv::KvBlockPool;
+    let mut pool = KvBlockPool::new(8, 16);
+    pool.enable_sharing();
+    pool.admit(1, 20).unwrap();
+    pool.check_invariants().unwrap();
+    assert!(pool.debug_inflate_refcount(), "a live block must exist to corrupt");
+    let msg = pool
+        .check_invariants()
+        .expect_err("an inflated refcount must trip conservation")
+        .to_string();
+    assert!(msg.contains("refcount conservation violated"), "unexpected error: {msg}");
+}
+
 /// Scheduler conservation: the sum of per-request tokens equals the run
 /// total and respects the budget within one request's overshoot.
 #[test]
