@@ -6,10 +6,12 @@
 
 use cascade::bench::Bench;
 use cascade::config::{CascadeParams, DrafterKind, EngineConfig};
+use cascade::coordinator::batch::BatchEngine;
 use cascade::coordinator::engine::Engine;
-use cascade::cost::GpuCostModel;
+use cascade::coordinator::scheduler::{Budget, Scheduler};
+use cascade::cost::{ExpertBitmap, GpuCostModel};
 use cascade::kv::KvBlockManager;
-use cascade::models::{default_artifacts_dir, paper_spec, Registry};
+use cascade::models::{artifacts_available, default_artifacts_dir, paper_spec, Registry};
 use cascade::rng::Rng;
 use cascade::runtime::ModelRuntime;
 use cascade::sampling::sample_guided;
@@ -17,10 +19,13 @@ use cascade::spec::manager::CascadeManager;
 use cascade::spec::{greedy_verify, NgramDrafter};
 use cascade::spec::policy::PolicyKind;
 use cascade::tokenizer;
+use cascade::workload::arrivals::{ArrivalKind, ArrivalProcess};
 use cascade::workload::{RequestStream, Task, Workload};
+use std::collections::BTreeSet;
 
 fn main() -> anyhow::Result<()> {
-    let reg = Registry::load(default_artifacts_dir())?;
+    // Builtin specs keep every non-PJRT cell runnable without artifacts.
+    let reg = Registry::load_or_builtin(default_artifacts_dir());
 
     // ---- pure components -------------------------------------------------
     let mut b = Bench::new("component");
@@ -74,6 +79,41 @@ fn main() -> anyhow::Result<()> {
         tokenizer::encode("let x = 42; // the quick brown fox\n").len()
     });
 
+    // ---- expert-set kernels ----------------------------------------------
+    // The bitmap cells time the rebuilt hot-path set algebra; the BTreeSet
+    // cells time the representation it replaced, on identical id streams
+    // (benches sit outside the hot-path-set lint scope on purpose — the
+    // legacy kernel lives on here as the speedup baseline).
+    let mut b = Bench::new("expert_set");
+    let id_sets: Vec<Vec<usize>> = {
+        let mut rng = Rng::new(0x5E7_B17);
+        (0..8).map(|_| (0..16).map(|_| rng.below(64)).collect()).collect()
+    };
+    b.bench("bitmap_union_marginal_8x16", || {
+        let mut once = ExpertBitmap::new();
+        let mut twice = ExpertBitmap::new();
+        for ids in &id_sets {
+            let set = ExpertBitmap::from_ids(ids);
+            twice.union_with(&set.and(&once));
+            once.union_with(&set);
+        }
+        once.and_not(&twice).count() + twice.count()
+    });
+    b.bench("btreeset_union_marginal_8x16", || {
+        let mut once: BTreeSet<usize> = BTreeSet::new();
+        let mut twice: BTreeSet<usize> = BTreeSet::new();
+        for ids in &id_sets {
+            let set: BTreeSet<usize> = ids.iter().copied().collect();
+            for &e in set.intersection(&once) {
+                twice.insert(e);
+            }
+            for &e in &set {
+                once.insert(e);
+            }
+        }
+        once.difference(&twice).count() + twice.len()
+    });
+
     // ---- sim engine ------------------------------------------------------
     let mut b = Bench::new("sim");
     b.bench("sim_iteration_mixtral_code_k3", || {
@@ -83,6 +123,40 @@ fn main() -> anyhow::Result<()> {
         let mut s = RequestStream::new(Workload::single(Task::Code), 3, 40);
         engine.serve_request(&s.next_request()).unwrap().tokens_emitted()
     });
+
+    // Full batched serving loop — the end-to-end cell the simspeed artifact
+    // (BENCH_simspeed.json, rust/docs/perf.md) tracks: open-loop Poisson
+    // arrivals into batch 4, 2 expert shards, pipelined drafting,
+    // everything on the rebuilt arena path.
+    let serve_cell = || {
+        let cfg = EngineConfig {
+            model: "mixtral".into(),
+            max_batch: 4,
+            shards: 2,
+            pipeline: true,
+            max_new_tokens: 48,
+            ..Default::default()
+        };
+        let mut engine = BatchEngine::sim(&reg, cfg, PolicyKind::Static(3)).unwrap();
+        let stream = RequestStream::new(Workload::single(Task::Code), 9, 48);
+        let arrivals =
+            ArrivalProcess::new(ArrivalKind::Poisson { rate: 64.0 }, stream, 9).unwrap();
+        let mut sched =
+            Scheduler::with_arrivals(arrivals, Budget { max_tokens: 192, max_requests: 12 });
+        sched.run_batched(&mut engine).unwrap()
+    };
+    let iters_per_serve = serve_cell().iters.len().max(1);
+    let mean_ns = b.bench("batch_serve_b4_s2_pipeline_4x48tok", serve_cell).mean_ns();
+    b.report(
+        "batch_engine_iterations_per_sec",
+        iters_per_serve as f64 / (mean_ns / 1e9),
+        "iters/s",
+    );
+
+    if !artifacts_available() {
+        println!("pjrt/e2e cells skipped: no model artifacts in this environment");
+        return Ok(());
+    }
 
     // ---- real runtime (PJRT) ----------------------------------------------
     let mut b = Bench::new("pjrt");

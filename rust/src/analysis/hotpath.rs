@@ -1,0 +1,130 @@
+//! Hot-path expert-set lint.
+//!
+//! The per-iteration serving loop was rebuilt around
+//! [`crate::cost::bitmap::ExpertBitmap`] — fixed-size word arrays whose
+//! union/intersection/difference/popcount are a handful of integer ops with
+//! zero allocation (rust/docs/perf.md). A tree set on that path would
+//! silently reintroduce the per-id allocation and pointer-chasing tax the
+//! rebuild removed, and nothing in the type system stops it: the old code
+//! compiled fine. This rule does — `BTreeSet` may not appear in code lines
+//! of `rust/src/sim/`, `rust/src/coordinator/`, or `rust/src/cost/`.
+//!
+//! The one exemption is the bitmap module itself: its differential tests
+//! deliberately hold the tree set as the *reference model* the bitmap is
+//! pinned against. Anywhere else, a genuine off-hot-path need takes a
+//! justified per-line allow (rust/docs/lints.md).
+
+use super::{allowed, code_portion, contains_word, RepoTree, SourceFile, Violation};
+
+/// Banned token, assembled from pieces so this file never flags itself.
+const NEEDLE: &str = concat!("BTree", "Set");
+
+/// The sanctioned dense-set module: its tests use the tree set as the
+/// differential reference the bitmap is verified against.
+const EXEMPT: &str = "rust/src/cost/bitmap.rs";
+
+/// Directories whose per-iteration code must stay on `ExpertBitmap`.
+const HOT_DIRS: &[&str] = &["rust/src/sim/", "rust/src/coordinator/", "rust/src/cost/"];
+
+/// Is `path` subject to the rule?
+pub fn in_scope(path: &str) -> bool {
+    path != EXEMPT && HOT_DIRS.iter().any(|d| path.starts_with(d))
+}
+
+/// Sweep every in-scope crate source.
+pub fn check(tree: &RepoTree, out: &mut Vec<Violation>) {
+    for file in tree.rust_sources() {
+        if in_scope(&file.path) {
+            check_file(file, out);
+        }
+    }
+}
+
+/// Line sweep over one file (the fixture self-tests drive this directly).
+pub fn check_file(file: &SourceFile, out: &mut Vec<Violation>) {
+    let lines: Vec<&str> = file.text.lines().collect();
+    for (i, raw) in lines.iter().enumerate() {
+        let code = code_portion(raw);
+        if contains_word(code, NEEDLE) && !allowed(&lines, i, "hot-path-set") {
+            out.push(Violation {
+                rule: "hot-path-set",
+                path: file.path.clone(),
+                line: i + 1,
+                msg: format!(
+                    "`{NEEDLE}` on the serving hot path: expert sets in sim/, \
+                     coordinator/, and cost/ use cost::bitmap::ExpertBitmap \
+                     (word-ops, no per-id allocation; rust/docs/perf.md)"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::ALLOW_TOKEN;
+
+    fn sweep(path: &str, text: String) -> Vec<Violation> {
+        let file = SourceFile { path: path.into(), text };
+        let mut out = Vec::new();
+        if in_scope(&file.path) {
+            check_file(&file, &mut out);
+        }
+        out
+    }
+
+    #[test]
+    fn clean_hot_path_source_passes() {
+        let v = sweep(
+            "rust/src/sim/fixture.rs",
+            "use crate::cost::ExpertBitmap;\nfn f() { let s = ExpertBitmap::new(); }\n"
+                .to_string(),
+        );
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn tree_set_in_hot_dir_flagged_with_file_and_line() {
+        let ty = concat!("BTree", "Set");
+        let v = sweep(
+            "rust/src/coordinator/fixture.rs",
+            format!("fn f() {{\n    let s: std::collections::{ty}<usize> = Default::default();\n}}\n"),
+        );
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "hot-path-set");
+        assert_eq!((v[0].path.as_str(), v[0].line), ("rust/src/coordinator/fixture.rs", 2));
+    }
+
+    #[test]
+    fn outside_hot_dirs_and_bitmap_module_are_exempt() {
+        let ty = concat!("BTree", "Set");
+        let text = format!("fn f() {{ let s: std::collections::{ty}<u32> = Default::default(); }}\n");
+        assert!(sweep("rust/src/metrics/mod.rs", text.clone()).is_empty());
+        assert!(sweep("rust/src/cost/bitmap.rs", text).is_empty());
+    }
+
+    #[test]
+    fn justified_allow_suppresses() {
+        let ty = concat!("BTree", "Set");
+        let v = sweep(
+            "rust/src/cost/fixture.rs",
+            format!(
+                "fn f() {{\n    // {ALLOW_TOKEN}(hot-path-set): cold-path audit \
+                 aggregation, runs once per serve\n    let s: std::collections::{ty}<usize> \
+                 = Default::default();\n}}\n"
+            ),
+        );
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn tree_set_in_comment_is_ignored() {
+        let ty = concat!("BTree", "Set");
+        let v = sweep(
+            "rust/src/sim/fixture.rs",
+            format!("fn f() {{}} // the {ty} these bitmaps replaced\n"),
+        );
+        assert!(v.is_empty(), "{v:?}");
+    }
+}

@@ -15,7 +15,10 @@
 //!   CLI/bench/figure emitter, and every `EngineConfig` field is reachable
 //!   from a `main.rs` flag and mentioned in `rust/docs/`;
 //! * [`docs`] — relative markdown links in README.md and rust/docs/*.md
-//!   resolve to real files.
+//!   resolve to real files;
+//! * [`hotpath`] — no tree-set expert collections on the serving hot path
+//!   (`sim/`, `coordinator/`, `cost/`): expert sets there are
+//!   [`crate::cost::bitmap::ExpertBitmap`] word arrays (rust/docs/perf.md).
 //!
 //! Violations are suppressible only per line, with a named rule and a
 //! written justification (see rust/docs/lints.md for the directive
@@ -25,6 +28,7 @@
 pub mod cost;
 pub mod determinism;
 pub mod docs;
+pub mod hotpath;
 pub mod telemetry;
 
 use anyhow::{Context, Result};
@@ -41,6 +45,7 @@ pub const KNOWN_RULES: &[&str] = &[
     "telemetry-dead-field",
     "config-coverage",
     "doc-links",
+    "hot-path-set",
     "lint-allow",
 ];
 
@@ -151,6 +156,7 @@ pub fn run_all(tree: &RepoTree) -> Vec<Violation> {
     cost::check(tree, &mut v);
     telemetry::check(tree, &mut v);
     docs::check(tree, &mut v);
+    hotpath::check(tree, &mut v);
     v.sort_by(|a, b| {
         (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
     });

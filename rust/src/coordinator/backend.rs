@@ -5,6 +5,7 @@
 //! model sharing the same interface, used for fast sweeps and property
 //! tests; cross-validated against the real backend in integration tests).
 
+use crate::cost::ExpertBitmap;
 use crate::models::MiniConfig;
 use crate::rng::Rng;
 use crate::runtime::{ModelRuntime, RequestState};
@@ -21,7 +22,7 @@ use std::rc::Rc;
 pub type SharedRuntime = Rc<RefCell<ModelRuntime>>;
 
 /// Outputs of one target-model step over T in-flight tokens.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct BackendStep {
     /// The target model's (guided-greedy) token for each position.
     pub sampled: Vec<u32>,
@@ -41,7 +42,7 @@ pub struct VerifySpan {
 }
 
 /// One slot's share of a batched step's outputs.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct SlotStep {
     pub slot: usize,
     pub step: BackendStep,
@@ -51,15 +52,20 @@ pub struct SlotStep {
     /// identities (sequential fallback) this equals the slot's own unique
     /// counts: with no de-duplication every fetch is marginal.
     pub marginal_unique_experts: Vec<usize>,
-    /// Per mini layer, the expert *ids* only this slot activated —
+    /// Per mini layer, the expert *id set* only this slot activated —
     /// the id-level view of `marginal_unique_experts`, which the engine
     /// groups by shard for the max-over-shards marginal charge under
     /// expert parallelism. Empty without id attribution.
-    pub marginal_expert_ids: Vec<Vec<usize>>,
+    pub marginal_expert_ids: Vec<ExpertBitmap>,
 }
 
 /// Outputs of one fused verify step over several requests.
-#[derive(Debug, Clone)]
+///
+/// The engine owns one `BatchStep` as a reusable iteration arena: it hands
+/// the previous iteration's buffers back to the backend through
+/// [`Backend::submit_batch_reusing`], which clears and refills them in
+/// place. `Default` is the empty arena.
+#[derive(Debug, Clone, Default)]
 pub struct BatchStep {
     pub slots: Vec<SlotStep>,
     /// Unique experts per mini layer across **all** slots' tokens,
@@ -69,16 +75,28 @@ pub struct BatchStep {
     /// Per-layer sum of per-slot unique counts — the no-dedup upper bound;
     /// the gap to `batch_unique_experts` is cross-request expert overlap.
     pub summed_unique_experts: Vec<usize>,
-    /// Per mini layer, the **sorted deduped expert ids** across the whole
-    /// batch — the id-level view of `batch_unique_experts`, which the
-    /// engine groups by shard under expert parallelism and feeds to the
+    /// Per mini layer, the deduped expert id set across the whole batch —
+    /// the id-level view of `batch_unique_experts`, which the engine
+    /// groups by shard under expert parallelism and feeds to the
     /// co-activation histogram. Only id-attributing backends (SimBackend)
     /// populate this; empty otherwise and for dense models.
-    pub expert_ids: Vec<Vec<usize>>,
-    /// Per mini layer, the sorted ids activated by **two or more** slots —
+    pub expert_ids: Vec<ExpertBitmap>,
+    /// Per mini layer, the id set activated by **two or more** slots —
     /// the shared expert mass the marginal-cost fairness floor amortizes.
     /// Empty without id attribution.
-    pub shared_expert_ids: Vec<Vec<usize>>,
+    pub shared_expert_ids: Vec<ExpertBitmap>,
+}
+
+impl BatchStep {
+    /// Reset for arena reuse: empties every collection while keeping their
+    /// allocations (including each recycled `SlotStep`'s inner vectors,
+    /// which the backend harvests via `slots.pop()` when refilling).
+    pub fn reset(&mut self) {
+        self.batch_unique_experts.clear();
+        self.summed_unique_experts.clear();
+        self.expert_ids.clear();
+        self.shared_expert_ids.clear();
+    }
 }
 
 /// A target model the engine can serve with.
@@ -215,6 +233,26 @@ pub trait Backend {
     /// host execution is sequential.
     fn submit_batch(&mut self, spans: &[VerifySpan]) -> Result<PendingBatch> {
         Ok(PendingBatch { step: self.step_batch(spans)? })
+    }
+
+    /// [`Backend::step_batch`] with a recycled [`BatchStep`] arena: the
+    /// engine hands back the previous iteration's buffers so an
+    /// arena-aware backend (SimBackend) can refill them in place instead
+    /// of reallocating. The default simply drops the scratch and steps
+    /// fresh — correct for every backend, merely not allocation-free.
+    fn step_batch_reusing(&mut self, spans: &[VerifySpan], scratch: BatchStep) -> Result<BatchStep> {
+        drop(scratch);
+        self.step_batch(spans)
+    }
+
+    /// [`Backend::submit_batch`] through the arena path — what the engine
+    /// calls every iteration.
+    fn submit_batch_reusing(
+        &mut self,
+        spans: &[VerifySpan],
+        scratch: BatchStep,
+    ) -> Result<PendingBatch> {
+        Ok(PendingBatch { step: self.step_batch_reusing(spans, scratch)? })
     }
 
     /// Block on a verify step issued by [`Backend::submit_batch`].

@@ -66,7 +66,9 @@ use crate::coordinator::eviction::{select_victim, VictimCandidate};
 use crate::coordinator::faults::{
     degrade_level, DegradeLevel, FaultPlan, FaultProcess, PressureSignal, THROTTLE_K_CAP,
 };
-use crate::coordinator::pipeline::{plan_spec_task, reconcile_entry, run_spec_tasks, SpecDraft};
+use crate::coordinator::pipeline::{
+    plan_spec_task, reconcile_entry, run_spec_tasks, DraftPool, SpecDraft,
+};
 use crate::coordinator::EngineError;
 use crate::cost::{capacity_caps, CoActivationStats, ExpertPlacement, GpuCostModel, IterCost};
 use crate::kv::prefix::PrefixTrie;
@@ -157,6 +159,33 @@ struct ReconcileTally {
     misses: usize,
     /// Lookahead entries discarded because an assumption broke.
     recomputes: usize,
+}
+
+/// Reusable per-iteration buffers owned by the engine (rust/docs/perf.md):
+/// after the first iteration the hot serving loop allocates nothing
+/// proportional to batch size. Every recycled buffer is cleared before
+/// reuse — recycling only trades allocator traffic for retained capacity
+/// and is bit-invisible to serving semantics.
+#[derive(Default)]
+struct IterArena {
+    /// Last iteration's `BatchStep`, threaded back into the backend via
+    /// `submit_batch_reusing` so its slot-step buffers and per-layer
+    /// bitmap vectors are recycled instead of reallocated.
+    step: BatchStep,
+    /// Retired span token buffers, refilled by the next draft stage.
+    token_bufs: Vec<Vec<u32>>,
+    /// Retired span guide buffers, refilled by the next draft stage.
+    guide_bufs: Vec<Vec<Option<u32>>>,
+    /// Plan / span / planned vector shells recycled across iterations.
+    plans: Vec<SlotPlan>,
+    spans: Vec<VerifySpan>,
+    planned: Vec<PlannedSpan>,
+    /// Scratch for the sharded per-request marginal load maxima
+    /// (`ExpertPlacement::max_loads_into`) — replaces the per-span clone
+    /// of `SlotStep::marginal_unique_experts`.
+    marginal_scratch: Vec<usize>,
+    /// Scratch for the iteration's shared-tier expert counts.
+    shared_scratch: Vec<usize>,
 }
 
 /// Continuous-batching engine: one backend (multi-slot where supported),
@@ -290,6 +319,15 @@ pub struct BatchEngine {
     prefix_misses: usize,
     /// Prompt tokens served from the cache instead of the prefill path.
     prefix_hit_tokens: u64,
+    /// Iteration-scoped buffers recycled across the serving loop
+    /// (rust/docs/perf.md).
+    arena: IterArena,
+    /// Persistent speculative-draft workers, spawned once here and fed per
+    /// iteration over channels — `Some` iff `cfg.pipeline`. Replaces the
+    /// scoped-threads-per-iteration drafting; results are re-sequenced by
+    /// submission index, so output order (and therefore every downstream
+    /// byte) matches the serial `run_spec_tasks` path exactly.
+    draft_pool: Option<DraftPool>,
 }
 
 /// Fused iterations between co-activation placement rebuilds. Small enough
@@ -400,6 +438,10 @@ impl BatchEngine {
             ));
         }
         let stall_schedule = faults.stalls();
+        // Spawn the persistent draft workers once, before the serving loop:
+        // pipelined engines fan each iteration's speculative scans out to
+        // them instead of spawning scoped threads per iteration.
+        let draft_pool = if cfg.pipeline { Some(DraftPool::new(max_batch)) } else { None };
         Self {
             cfg,
             backend,
@@ -449,6 +491,8 @@ impl BatchEngine {
             prefix_hits: 0,
             prefix_misses: 0,
             prefix_hit_tokens: 0,
+            arena: IterArena::default(),
+            draft_pool,
         }
     }
 
@@ -877,12 +921,17 @@ impl BatchEngine {
         self.readmit_parked()?;
 
         // ---- Stage 1: plan ----------------------------------------------
-        let plans = self.plan_stage();
+        let mut plans = self.plan_stage();
 
         // ---- Stage 2: draft ---------------------------------------------
-        let (spans, planned, reconcile, deferred, evicted) = self.draft_stage(&plans)?;
+        let (mut spans, mut planned, reconcile, deferred, evicted) = self.draft_stage(&plans)?;
+        plans.clear();
+        self.arena.plans = plans;
 
         if spans.is_empty() {
+            self.arena.spans = spans;
+            planned.clear();
+            self.arena.planned = planned;
             // Nothing to verify; finalize any slots that just ran out of
             // window room. Their released blocks — like any blocks evicted
             // this pass — may unblock a deferred request, so both count as
@@ -919,7 +968,10 @@ impl BatchEngine {
 
         // ---- Stage 3: verify (+ pipelined draft of iteration i+1) -------
         let iter_wall = Instant::now(); // lint:allow(wall-clock): host-wall verify telemetry, never the virtual clock
-        let pending = self.backend.submit_batch(&spans)?;
+        // Hand last iteration's `BatchStep` back to the backend as scratch:
+        // its slot buffers are reused in place instead of reallocated.
+        let scratch = std::mem::take(&mut self.arena.step);
+        let pending = self.backend.submit_batch_reusing(&spans, scratch)?;
         let mut spec_wall_ns = 0u64;
         if self.cfg.pipeline {
             // While the backend verifies, draft next iteration's proposals
@@ -950,6 +1002,21 @@ impl BatchEngine {
         }
 
         self.sweep_finished();
+
+        // Recycle the iteration's buffers into the arena: the committed
+        // BatchStep becomes next iteration's backend scratch, and the span
+        // token/guide vectors return to the draft-stage pools.
+        self.arena.step = batch;
+        for span in spans.drain(..) {
+            let VerifySpan { mut tokens, mut guides, .. } = span;
+            tokens.clear();
+            guides.clear();
+            self.arena.token_bufs.push(tokens);
+            self.arena.guide_bufs.push(guides);
+        }
+        self.arena.spans = spans;
+        planned.clear();
+        self.arena.planned = planned;
         Ok(true)
     }
 
@@ -972,7 +1039,8 @@ impl BatchEngine {
             DegradeLevel::Throttle => THROTTLE_K_CAP,
             DegradeLevel::Halt => 0,
         };
-        let mut plans: Vec<SlotPlan> = Vec::new();
+        let mut plans: Vec<SlotPlan> = std::mem::take(&mut self.arena.plans);
+        plans.clear();
         for slot in 0..self.slots.len() {
             let Some(state) = self.slots[slot].as_mut() else { continue };
             if state.finished {
@@ -1007,8 +1075,10 @@ impl BatchEngine {
         plans: &[SlotPlan],
     ) -> Result<(Vec<VerifySpan>, Vec<PlannedSpan>, ReconcileTally, usize, usize)> {
         let pipeline = self.cfg.pipeline;
-        let mut spans: Vec<VerifySpan> = Vec::with_capacity(plans.len());
-        let mut planned: Vec<PlannedSpan> = Vec::with_capacity(plans.len());
+        let mut spans: Vec<VerifySpan> = std::mem::take(&mut self.arena.spans);
+        spans.clear();
+        let mut planned: Vec<PlannedSpan> = std::mem::take(&mut self.arena.planned);
+        planned.clear();
         let mut tally = ReconcileTally::default();
         let mut deferred = 0usize;
         let mut evicted = 0usize;
@@ -1139,7 +1209,11 @@ impl BatchEngine {
 
             let t = 1 + drafted;
             self.pool.reserve(state.req.id, t)?;
-            let mut tokens = Vec::with_capacity(t);
+            // Span buffers come from the arena pools (cleared on retire),
+            // so steady-state iterations build spans allocation-free.
+            let mut tokens = self.arena.token_bufs.pop().unwrap_or_default();
+            debug_assert!(tokens.is_empty());
+            tokens.reserve(t);
             // Every admitted slot owns at least its prefill token; a bare
             // output here means slot bookkeeping corrupted — surface it as
             // an error, not a serve-path panic.
@@ -1148,9 +1222,9 @@ impl BatchEngine {
             };
             tokens.push(head_token);
             tokens.extend_from_slice(&drafts);
-            let guides: Vec<Option<u32>> = (0..t)
-                .map(|i| state.req.reference.get(plan.out_idx + i).copied())
-                .collect();
+            let mut guides = self.arena.guide_bufs.pop().unwrap_or_default();
+            debug_assert!(guides.is_empty());
+            guides.extend((0..t).map(|i| state.req.reference.get(plan.out_idx + i).copied()));
             spans.push(VerifySpan { slot: plan.slot, tokens, guides, eps: state.req.eps });
             planned.push(PlannedSpan {
                 slot: plan.slot,
@@ -1414,7 +1488,14 @@ impl BatchEngine {
         // Entries for slots that sat this iteration out (pool-deferred)
         // stay valid and are kept; planned slots consumed theirs in the
         // draft stage, so this extend cannot duplicate a slot.
-        let fresh = run_spec_tasks(tasks);
+        //
+        // The persistent pool returns drafts in submission order — the
+        // same order the serial fallback produces — so which path runs is
+        // bit-invisible downstream (rust/docs/perf.md).
+        let fresh = match &self.draft_pool {
+            Some(pool) => pool.run(tasks),
+            None => run_spec_tasks(tasks),
+        };
         self.lookahead.extend(fresh);
     }
 
@@ -1666,23 +1747,27 @@ impl BatchEngine {
         // max-over-shards counts; unsharded, shared is derived as
         // union − Σ marginals (zero under the no-dedup fallback, where
         // every fetch is marginal — so the floor is inert there).
-        let shared_counts: Vec<usize> = if sharded {
-            self.placement.max_loads(&batch.shared_expert_ids)
+        // Both count buffers are arena scratch (taken as locals so the
+        // loop's `self` borrows stay disjoint) — no per-iteration or
+        // per-span allocation, and no clone of the slot-step counts.
+        let mut shared_scratch = std::mem::take(&mut self.arena.shared_scratch);
+        if sharded {
+            self.placement.max_loads_into(&batch.shared_expert_ids, &mut shared_scratch);
         } else {
-            batch
-                .batch_unique_experts
-                .iter()
-                .enumerate()
-                .map(|(l, &u)| {
+            shared_scratch.clear();
+            shared_scratch.extend(batch.batch_unique_experts.iter().enumerate().map(
+                |(l, &u)| {
                     let excl: usize = batch
                         .slots
                         .iter()
                         .map(|s| s.marginal_unique_experts.get(l).copied().unwrap_or(0))
                         .sum();
                     u.saturating_sub(excl)
-                })
-                .collect()
-        };
+                },
+            ));
+        }
+        let shared_counts: &[usize] = &shared_scratch;
+        let mut marginal_scratch = std::mem::take(&mut self.arena.marginal_scratch);
         let mut emitted_total = 0usize;
         // Host wall of the verify+commit window, excluding the speculative
         // next-iteration scans that ran inside it (they belong to the
@@ -1726,16 +1811,20 @@ impl BatchEngine {
             // exclusive contribution) — the batched Cascade utility
             // signal — with its own draft slice discounted when it ran
             // hidden in the pipeline.
-            let marginal_counts: Vec<usize> = if sharded {
+            let marginal_counts: &[usize] = if sharded {
                 // Max-over-shards view of the request's exclusive experts:
-                // its contribution to the expert-parallel critical path.
-                self.placement.max_loads(&slot_step.marginal_expert_ids)
+                // its contribution to the expert-parallel critical path —
+                // computed into reusable scratch, not a fresh Vec.
+                self.placement
+                    .max_loads_into(&slot_step.marginal_expert_ids, &mut marginal_scratch);
+                &marginal_scratch
             } else {
-                slot_step.marginal_unique_experts.clone()
+                // Unsharded: borrow the arena-owned counts directly.
+                &slot_step.marginal_unique_experts
             };
             let req_cost_full = self.cost.marginal_request_cost(
-                &marginal_counts,
-                &shared_counts,
+                marginal_counts,
+                shared_counts,
                 n_active,
                 span.tokens.len(),
                 plan.drafted,
@@ -1784,6 +1873,8 @@ impl BatchEngine {
                 state.finished = true;
             }
         }
+        self.arena.shared_scratch = shared_scratch;
+        self.arena.marginal_scratch = marginal_scratch;
 
         // Per-shard telemetry: mean per-layer load per shard, the critical
         // path (max shard), and imbalance = max / (union / shards) — 1.0 is

@@ -298,7 +298,9 @@ pub fn run_spec_task(task: SpecTask) -> SpecDraft {
 
 /// Fan speculative drafts out across scoped threads — per-slot n-gram
 /// scans are independent CPU work. A single task runs inline (thread
-/// spawn overhead would dwarf the scan).
+/// spawn overhead would dwarf the scan). The serial reference the
+/// persistent [`DraftPool`] must match token-for-token; kept as the
+/// fallback for engines without a pool and as the equivalence oracle.
 pub fn run_spec_tasks(tasks: Vec<SpecTask>) -> Vec<SpecDraft> {
     if tasks.len() <= 1 {
         return tasks.into_iter().map(run_spec_task).collect();
@@ -313,6 +315,93 @@ pub fn run_spec_tasks(tasks: Vec<SpecTask>) -> Vec<SpecDraft> {
             .map(|h| h.join().expect("speculative draft thread panicked"))
             .collect()
     })
+}
+
+/// Persistent draft worker pool: threads are spawned **once** (at
+/// `BatchEngine::new`) and fed per-iteration through channels, replacing
+/// the `thread::scope` respawn that previously paid thread start-up cost
+/// every step.
+///
+/// Determinism argument (rust/docs/perf.md): each [`SpecTask`] owns its
+/// entire input (context, reference, drafter snapshot) and every proposal
+/// is a pure function of that input, so *which* worker executes a task
+/// cannot change its output. Tasks are tagged with their submission index
+/// and results are re-ordered by that tag before returning, so
+/// [`DraftPool::run`] returns exactly what [`run_spec_tasks`] returns, in
+/// the same order — only `draft_wall_ns` (host telemetry, never part of
+/// the simulated clock or metrics) may differ.
+#[derive(Debug)]
+pub struct DraftPool {
+    /// `None` only during drop (closing the channel stops the workers).
+    tx: Option<std::sync::mpsc::Sender<(usize, SpecTask)>>,
+    rx: std::sync::mpsc::Receiver<(usize, SpecDraft)>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl DraftPool {
+    /// Spawn a pool of `max_workers.min(available_parallelism)` threads
+    /// (at least one).
+    pub fn new(max_workers: usize) -> Self {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let n = max_workers.clamp(1, hw.max(1));
+        let (tx, task_rx) = std::sync::mpsc::channel::<(usize, SpecTask)>();
+        let (done_tx, rx) = std::sync::mpsc::channel::<(usize, SpecDraft)>();
+        let task_rx = std::sync::Arc::new(std::sync::Mutex::new(task_rx));
+        let workers = (0..n)
+            .map(|_| {
+                let task_rx = std::sync::Arc::clone(&task_rx);
+                let done_tx = done_tx.clone();
+                std::thread::spawn(move || loop {
+                    // Hold the lock only for the dequeue, not the scan.
+                    let next = task_rx.lock().expect("draft pool task queue poisoned").recv();
+                    match next {
+                        Ok((idx, task)) => {
+                            // The engine may drop the pool with results in
+                            // flight; a closed result channel just means
+                            // shutdown.
+                            let _ = done_tx.send((idx, run_spec_task(task)));
+                        }
+                        Err(_) => break, // task channel closed: shut down
+                    }
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), rx, workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Execute `tasks` across the pool and return the drafts **in task
+    /// order** — the same order serial execution produces, so callers are
+    /// agnostic to which worker ran what. A single task runs inline, like
+    /// [`run_spec_tasks`].
+    pub fn run(&self, tasks: Vec<SpecTask>) -> Vec<SpecDraft> {
+        if tasks.len() <= 1 {
+            return tasks.into_iter().map(run_spec_task).collect();
+        }
+        let n = tasks.len();
+        let tx = self.tx.as_ref().expect("draft pool already shut down");
+        for (idx, task) in tasks.into_iter().enumerate() {
+            tx.send((idx, task)).expect("draft pool workers gone");
+        }
+        let mut out: Vec<Option<SpecDraft>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (idx, draft) = self.rx.recv().expect("draft pool workers gone");
+            out[idx] = Some(draft);
+        }
+        out.into_iter().map(|d| d.expect("every submitted task reports back")).collect()
+    }
+}
+
+impl Drop for DraftPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the task channel: workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -401,6 +490,35 @@ mod tests {
             assert_eq!(a.drafts, b.drafts);
             assert_eq!(a.expected_tail, b.expected_tail);
             assert_eq!(a.k_assumed, b.k_assumed);
+        }
+    }
+
+    #[test]
+    fn persistent_pool_matches_serial_execution() {
+        // The pool must be a drop-in for run_spec_tasks: same drafts, same
+        // order, across repeated submissions (reused workers) and batch
+        // sizes including 0, 1, and more tasks than workers.
+        let r = req((0..60).map(|i| 20 + (i % 9)).collect(), 200);
+        let policy = StaticK::new(4);
+        let drafter = ngram_drafter();
+        let mk = |slot: usize| {
+            let ctx: Vec<u32> = (0..30).map(|i| 20 + ((i + slot) % 9) as u32).collect();
+            plan_spec_task(slot, &r, &policy, &drafter, &ctx, 10, 30, 384, &[21, 22], 2, 0.01, 0.0)
+                .expect("predictable")
+        };
+        let pool = DraftPool::new(3);
+        assert!(pool.workers() >= 1);
+        for batch in [0usize, 1, 2, 3, 7, 12] {
+            let serial = run_spec_tasks((0..batch).map(mk).collect());
+            let pooled = pool.run((0..batch).map(mk).collect());
+            assert_eq!(serial.len(), pooled.len());
+            for (a, b) in serial.iter().zip(&pooled) {
+                assert_eq!(a.slot, b.slot, "batch {batch}");
+                assert_eq!(a.drafts, b.drafts, "batch {batch}");
+                assert_eq!(a.expected_tail, b.expected_tail, "batch {batch}");
+                assert_eq!(a.expected_ctx_len, b.expected_ctx_len, "batch {batch}");
+                assert_eq!(a.k_assumed, b.k_assumed, "batch {batch}");
+            }
         }
     }
 }

@@ -1,0 +1,262 @@
+//! Fixed-size expert-set bitmaps for the per-iteration hot path.
+//!
+//! Every expert-set operation the engine performs per iteration — routing
+//! dedup, cross-request union, marginal/shared attribution, per-shard load
+//! counting — is a set operation over expert ids drawn from `[0, E)` where
+//! `E` is tiny (the model zoo tops out at 64 experts/layer; Table 1 of the
+//! paper). A `BTreeSet<usize>` pays an allocation and pointer-chasing tax
+//! per element; a fixed `[u64; 4]` word array answers the same queries with
+//! a handful of OR/AND/POPCNT instructions and lives happily on the stack
+//! or inside a reusable arena. Iteration order is ascending expert id, so
+//! anything that used to consume a `BTreeSet`'s sorted order is unchanged.
+//!
+//! See rust/docs/perf.md for the layout and the ownership rules of the
+//! structures that embed these bitmaps.
+
+/// Hard cap on experts per layer representable by [`ExpertBitmap`].
+/// `256 = 4 x 64` covers every model in the zoo (max 64) with headroom;
+/// inserting an id `>= MAX_EXPERTS` panics in debug and is masked off in
+/// release via the debug assertion contract below.
+pub const MAX_EXPERTS: usize = 256;
+
+const WORDS: usize = MAX_EXPERTS / 64;
+
+/// A set of expert ids in `[0, MAX_EXPERTS)` as a fixed word array.
+///
+/// `Copy` and allocation-free: 32 bytes, so cloning one per layer per
+/// iteration is a register move, not a heap round-trip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ExpertBitmap {
+    words: [u64; WORDS],
+}
+
+impl ExpertBitmap {
+    /// The empty set.
+    pub const fn new() -> Self {
+        Self { words: [0; WORDS] }
+    }
+
+    /// Build from a slice of expert ids (duplicates collapse, any order).
+    pub fn from_ids(ids: &[usize]) -> Self {
+        let mut b = Self::new();
+        for &id in ids {
+            b.insert(id);
+        }
+        b
+    }
+
+    /// Insert `id`; returns true when the id was not already present.
+    #[inline]
+    pub fn insert(&mut self, id: usize) -> bool {
+        debug_assert!(id < MAX_EXPERTS, "expert id {id} exceeds bitmap capacity");
+        let w = id / 64;
+        let bit = 1u64 << (id % 64);
+        let fresh = self.words[w] & bit == 0;
+        self.words[w] |= bit;
+        fresh
+    }
+
+    /// Membership test.
+    #[inline]
+    pub fn contains(&self, id: usize) -> bool {
+        debug_assert!(id < MAX_EXPERTS, "expert id {id} exceeds bitmap capacity");
+        self.words[id / 64] & (1u64 << (id % 64)) != 0
+    }
+
+    /// Number of ids present (popcount over the words).
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True when no id is present.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Remove every id (the arena-reuse reset).
+    #[inline]
+    pub fn clear(&mut self) {
+        self.words = [0; WORDS];
+    }
+
+    /// `self |= other` — the cross-request union accumulator.
+    #[inline]
+    pub fn union_with(&mut self, other: &Self) {
+        for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
+            *a |= *b;
+        }
+    }
+
+    /// `self &= other`.
+    #[inline]
+    pub fn intersect_with(&mut self, other: &Self) {
+        for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
+            *a &= *b;
+        }
+    }
+
+    /// `self & other` without mutation.
+    #[inline]
+    pub fn and(&self, other: &Self) -> Self {
+        let mut out = *self;
+        out.intersect_with(other);
+        out
+    }
+
+    /// `self & !other` — the marginal-attribution kernel (ids of `self`
+    /// not claimed by `other`).
+    #[inline]
+    pub fn and_not(&self, other: &Self) -> Self {
+        let mut out = Self::new();
+        for ((o, a), b) in out.words.iter_mut().zip(self.words.iter()).zip(other.words.iter()) {
+            *o = *a & !*b;
+        }
+        out
+    }
+
+    /// `|self & other|` without materialising the intersection — the
+    /// per-shard load count (`placement mask & activated set`).
+    #[inline]
+    pub fn count_and(&self, other: &Self) -> usize {
+        self.words
+            .iter()
+            .zip(other.words.iter())
+            .map(|(a, b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+
+    /// Ascending iteration over the ids present — identical order to the
+    /// sorted iteration of the `BTreeSet<usize>` these bitmaps replaced.
+    pub fn iter(&self) -> BitmapIter<'_> {
+        BitmapIter { words: &self.words, word: 0, rest: self.words[0] }
+    }
+
+    /// Collect the ids into a fresh `Vec` (cold paths / tests).
+    pub fn to_ids(&self) -> Vec<usize> {
+        self.iter().collect()
+    }
+
+    /// Append the ids (ascending) into `out` without allocating here.
+    pub fn fill(&self, out: &mut Vec<usize>) {
+        out.extend(self.iter());
+    }
+}
+
+impl FromIterator<usize> for ExpertBitmap {
+    fn from_iter<T: IntoIterator<Item = usize>>(iter: T) -> Self {
+        let mut b = Self::new();
+        for id in iter {
+            b.insert(id);
+        }
+        b
+    }
+}
+
+/// Ascending-id iterator over an [`ExpertBitmap`].
+pub struct BitmapIter<'a> {
+    words: &'a [u64; WORDS],
+    word: usize,
+    rest: u64,
+}
+
+impl Iterator for BitmapIter<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        while self.rest == 0 {
+            self.word += 1;
+            if self.word >= WORDS {
+                return None;
+            }
+            self.rest = self.words[self.word];
+        }
+        let bit = self.rest.trailing_zeros() as usize;
+        self.rest &= self.rest - 1;
+        Some(self.word * 64 + bit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use std::collections::BTreeSet;
+
+    fn random_ids(rng: &mut Rng, n: usize, universe: usize) -> Vec<usize> {
+        (0..n).map(|_| rng.below(universe)).collect()
+    }
+
+    #[test]
+    fn insert_contains_count() {
+        let mut b = ExpertBitmap::new();
+        assert!(b.is_empty());
+        assert!(b.insert(3));
+        assert!(!b.insert(3));
+        assert!(b.insert(64));
+        assert!(b.insert(255));
+        assert!(b.contains(3) && b.contains(64) && b.contains(255));
+        assert!(!b.contains(4));
+        assert_eq!(b.count(), 3);
+        b.clear();
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn iter_is_ascending_and_matches_btreeset() {
+        let mut rng = Rng::new(0xB17);
+        for universe in [8, 64, 100, 256] {
+            for n in [0, 1, 5, 40, 300] {
+                let ids = random_ids(&mut rng, n, universe);
+                let reference: BTreeSet<usize> = ids.iter().copied().collect();
+                let bitmap = ExpertBitmap::from_ids(&ids);
+                let got: Vec<usize> = bitmap.iter().collect();
+                let want: Vec<usize> = reference.iter().copied().collect();
+                assert_eq!(got, want, "universe {universe} n {n}");
+                assert_eq!(bitmap.count(), reference.len());
+                assert_eq!(bitmap.to_ids(), want);
+            }
+        }
+    }
+
+    #[test]
+    fn union_intersection_difference_match_btreeset() {
+        let mut rng = Rng::new(0xB18);
+        for _ in 0..200 {
+            let xs = random_ids(&mut rng, rng.below(40), 200);
+            let ys = random_ids(&mut rng, rng.below(40), 200);
+            let sx: BTreeSet<usize> = xs.iter().copied().collect();
+            let sy: BTreeSet<usize> = ys.iter().copied().collect();
+            let bx = ExpertBitmap::from_ids(&xs);
+            let by = ExpertBitmap::from_ids(&ys);
+
+            let mut u = bx;
+            u.union_with(&by);
+            let su: Vec<usize> = sx.union(&sy).copied().collect();
+            assert_eq!(u.to_ids(), su);
+
+            let si: Vec<usize> = sx.intersection(&sy).copied().collect();
+            assert_eq!(bx.and(&by).to_ids(), si);
+            assert_eq!(bx.count_and(&by), si.len());
+
+            let sd: Vec<usize> = sx.difference(&sy).copied().collect();
+            assert_eq!(bx.and_not(&by).to_ids(), sd);
+        }
+    }
+
+    #[test]
+    fn fill_appends_without_clearing() {
+        let b = ExpertBitmap::from_ids(&[9, 2, 9, 70]);
+        let mut out = vec![42];
+        b.fill(&mut out);
+        assert_eq!(out, vec![42, 2, 9, 70]);
+    }
+
+    #[test]
+    fn from_iterator_collects() {
+        let b: ExpertBitmap = [5usize, 1, 5, 63].into_iter().collect();
+        assert_eq!(b.to_ids(), vec![1, 5, 63]);
+    }
+}

@@ -9,9 +9,11 @@
 //! iteration times the paper reports in §6: ≈6 ms (OLMoE) … ≈28 ms
 //! (Mixtral). See DESIGN.md §Substitutions.
 
+pub mod bitmap;
 mod hw;
 mod placement;
 
+pub use bitmap::ExpertBitmap;
 pub use hw::HwParams;
 pub use placement::{capacity_caps, CoActivationStats, ExpertPlacement};
 

@@ -19,6 +19,12 @@
 //! fused `step_batch` reports per-layer expert-id unions); all operations
 //! are deterministic — placement may only move *cost*, never tokens, and
 //! runs must replay bit-for-bit under a fixed seed.
+//!
+//! Per-layer expert sets arrive as [`ExpertBitmap`]s, so the per-shard
+//! load query — the per-iteration hot path — is a masked popcount against
+//! precomputed per-shard residency masks instead of a per-id hash/walk.
+
+use crate::cost::bitmap::{ExpertBitmap, MAX_EXPERTS};
 
 /// Immutable expert → shard map.
 #[derive(Debug, Clone)]
@@ -26,20 +32,28 @@ pub struct ExpertPlacement {
     n_shards: usize,
     /// `assign[e]` = shard holding expert `e`.
     assign: Vec<usize>,
+    /// `masks[s]` = the experts resident on shard `s`, precomputed from
+    /// `assign` so `shard_loads` is one `count_and` per shard per layer.
+    masks: Vec<ExpertBitmap>,
 }
 
 impl ExpertPlacement {
     /// Round-robin placement: expert `e` lives on shard `e % n_shards`.
     pub fn balanced(n_experts: usize, n_shards: usize) -> Self {
         let n_shards = n_shards.max(1);
-        Self { n_shards, assign: (0..n_experts).map(|e| e % n_shards).collect() }
+        Self::from_assign((0..n_experts).map(|e| e % n_shards).collect(), n_shards)
     }
 
     /// Placement from an explicit assignment (greedy packer output).
     pub fn from_assign(assign: Vec<usize>, n_shards: usize) -> Self {
         let n_shards = n_shards.max(1);
         debug_assert!(assign.iter().all(|&s| s < n_shards));
-        Self { n_shards, assign }
+        debug_assert!(assign.len() <= MAX_EXPERTS, "expert count exceeds bitmap capacity");
+        let mut masks = vec![ExpertBitmap::new(); n_shards];
+        for (e, &s) in assign.iter().enumerate() {
+            masks[s].insert(e);
+        }
+        Self { n_shards, assign, masks }
     }
 
     pub fn n_shards(&self) -> usize {
@@ -71,17 +85,12 @@ impl ExpertPlacement {
     /// unique counts**: `loads[l][s]` = experts of shard `s` that layer
     /// `l`'s fused step must fetch. The cost model's expert term is the
     /// per-layer max over shards; `Σ_s loads[l][s]` equals the unsharded
-    /// union count (every expert lives on exactly one shard).
-    pub fn shard_loads(&self, per_layer_ids: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    /// union count (every expert lives on exactly one shard). One masked
+    /// popcount per shard per layer against the residency masks.
+    pub fn shard_loads(&self, per_layer_ids: &[ExpertBitmap]) -> Vec<Vec<usize>> {
         per_layer_ids
             .iter()
-            .map(|ids| {
-                let mut loads = vec![0usize; self.n_shards];
-                for &e in ids {
-                    loads[self.shard_of(e)] += 1;
-                }
-                loads
-            })
+            .map(|ids| self.masks.iter().map(|m| m.count_and(ids)).collect())
             .collect()
     }
 
@@ -103,16 +112,25 @@ impl ExpertPlacement {
             return Self::balanced(n_experts, n_shards);
         }
         let assign = (0..n_experts).map(|e| alive[e % alive.len()]).collect();
-        Self { n_shards, assign }
+        Self::from_assign(assign, n_shards)
     }
 
     /// Per-layer max-over-shards load — the expert-parallel critical path
     /// the sharded cost model charges.
-    pub fn max_loads(&self, per_layer_ids: &[Vec<usize>]) -> Vec<usize> {
-        self.shard_loads(per_layer_ids)
-            .iter()
-            .map(|l| l.iter().copied().max().unwrap_or(0))
-            .collect()
+    pub fn max_loads(&self, per_layer_ids: &[ExpertBitmap]) -> Vec<usize> {
+        let mut out = Vec::with_capacity(per_layer_ids.len());
+        self.max_loads_into(per_layer_ids, &mut out);
+        out
+    }
+
+    /// [`Self::max_loads`] into a caller-owned buffer (cleared first) —
+    /// the allocation-free form the engine's per-slot marginal pricing
+    /// loop uses with its arena scratch.
+    pub fn max_loads_into(&self, per_layer_ids: &[ExpertBitmap], out: &mut Vec<usize>) {
+        out.clear();
+        for ids in per_layer_ids {
+            out.push(self.masks.iter().map(|m| m.count_and(ids)).max().unwrap_or(0));
+        }
     }
 
     /// Experts whose shard differs between `self` and `other` — the
@@ -187,10 +205,19 @@ impl CoActivationStats {
 
     /// Record one fused step: `per_layer_ids[l]` is the deduped expert-id
     /// set layer `l` activated (ids must be < `n_experts`; the sim backend
-    /// guarantees this by construction).
-    pub fn observe(&mut self, per_layer_ids: &[Vec<usize>]) {
-        for ids in per_layer_ids {
+    /// guarantees this by construction). The bitmap is unpacked once into
+    /// a stack buffer (ascending ids, the order the old sorted-set walk
+    /// produced) so the pair loop stays a plain slice double-walk.
+    pub fn observe(&mut self, per_layer_ids: &[ExpertBitmap]) {
+        let mut buf = [0usize; MAX_EXPERTS];
+        for set in per_layer_ids {
             self.steps += 1;
+            let mut n = 0;
+            for e in set.iter() {
+                buf[n] = e;
+                n += 1;
+            }
+            let ids = &buf[..n];
             for (i, &a) in ids.iter().enumerate() {
                 self.acts[a] += 1;
                 for &b in &ids[i + 1..] {
@@ -277,6 +304,11 @@ impl CoActivationStats {
 mod tests {
     use super::*;
 
+    /// Per-layer id lists → per-layer bitmaps (test convenience).
+    fn layers(ids: &[Vec<usize>]) -> Vec<ExpertBitmap> {
+        ids.iter().map(|l| ExpertBitmap::from_ids(l)).collect()
+    }
+
     #[test]
     fn balanced_round_robin_is_weight_balanced() {
         let p = ExpertPlacement::balanced(8, 4);
@@ -292,14 +324,19 @@ mod tests {
     #[test]
     fn shard_loads_partition_the_union() {
         let p = ExpertPlacement::balanced(8, 4);
-        let ids = vec![vec![0, 1, 2, 5], vec![3, 7]];
+        let raw = vec![vec![0, 1, 2, 5], vec![3, 7]];
+        let ids = layers(&raw);
         let loads = p.shard_loads(&ids);
         assert_eq!(loads.len(), 2);
-        for (l, ids_l) in loads.iter().zip(&ids) {
+        for (l, ids_l) in loads.iter().zip(&raw) {
             assert_eq!(l.iter().sum::<usize>(), ids_l.len());
         }
         // layer0: shard1 holds {1,5}; layer1: shard3 holds {3,7}.
         assert_eq!(p.max_loads(&ids), vec![2, 2]);
+        // The _into form matches and reuses its buffer.
+        let mut scratch = vec![99; 7];
+        p.max_loads_into(&ids, &mut scratch);
+        assert_eq!(scratch, vec![2, 2]);
     }
 
     #[test]
@@ -313,7 +350,7 @@ mod tests {
     #[test]
     fn observe_counts_pairs_symmetrically() {
         let mut stats = CoActivationStats::new(4);
-        stats.observe(&[vec![0, 2], vec![0, 2], vec![1, 3]]);
+        stats.observe(&layers(&[vec![0, 2], vec![0, 2], vec![1, 3]]));
         assert_eq!(stats.steps(), 3);
         assert_eq!(stats.pair(0, 2), 2);
         assert_eq!(stats.pair(2, 0), 2);
@@ -329,7 +366,8 @@ mod tests {
         // e % 4 puts each pair on ONE shard (max load 2). The packer must
         // split every pair (max load 1) while keeping 2 experts per shard.
         let mut stats = CoActivationStats::new(8);
-        let steps: Vec<Vec<usize>> = (0..4).cycle().take(64).map(|g| vec![g, g + 4]).collect();
+        let steps: Vec<ExpertBitmap> =
+            (0..4).cycle().take(64).map(|g| ExpertBitmap::from_ids(&[g, g + 4])).collect();
         stats.observe(&steps);
 
         let balanced = ExpertPlacement::balanced(8, 4);
@@ -347,8 +385,12 @@ mod tests {
         // — (0,5),(1,6),(2,7),(3,4) — must dominate the histogram, so the
         // next rebuild separates B's pairs.
         let mut stats = CoActivationStats::new(8);
-        let phase = |rot: usize| -> Vec<Vec<usize>> {
-            (0..4).cycle().take(64).map(|g| vec![g, 4 + (g + rot) % 4]).collect()
+        let phase = |rot: usize| -> Vec<ExpertBitmap> {
+            (0..4)
+                .cycle()
+                .take(64)
+                .map(|g| ExpertBitmap::from_ids(&[g, 4 + (g + rot) % 4]))
+                .collect()
         };
         let a = phase(0);
         let b = phase(1);
@@ -361,7 +403,7 @@ mod tests {
         assert_eq!(worst_b, 1, "placement still tuned to the old phase");
         // Halving really halves.
         let mut s = CoActivationStats::new(2);
-        s.observe(&[vec![0, 1], vec![0, 1], vec![0]]);
+        s.observe(&layers(&[vec![0, 1], vec![0, 1], vec![0]]));
         assert_eq!((s.acts[0], s.pair(0, 1), s.steps()), (3, 2, 3));
         s.decay();
         assert_eq!((s.acts[0], s.pair(0, 1), s.steps()), (1, 1, 1));
@@ -371,8 +413,8 @@ mod tests {
     fn packer_is_deterministic() {
         let mut a = CoActivationStats::new(16);
         let mut b = CoActivationStats::new(16);
-        let steps: Vec<Vec<usize>> = (0..50)
-            .map(|i| vec![i % 16, (i * 7 + 3) % 16, (i * 5 + 1) % 16])
+        let steps: Vec<ExpertBitmap> = (0..50)
+            .map(|i| ExpertBitmap::from_ids(&[i % 16, (i * 7 + 3) % 16, (i * 5 + 1) % 16]))
             .collect();
         a.observe(&steps);
         b.observe(&steps);
@@ -393,7 +435,7 @@ mod tests {
         assert_eq!(sizes.iter().sum::<usize>(), 8);
         assert!(sizes.iter().max().unwrap() - [sizes[0], sizes[2], sizes[3]].iter().min().unwrap() <= 1);
         // The survivors carry a worse critical path than the healthy map.
-        let ids = vec![(0..8).collect::<Vec<_>>()];
+        let ids = vec![(0..8).collect::<ExpertBitmap>()];
         let healthy = ExpertPlacement::balanced(8, 4);
         assert!(p.max_loads(&ids)[0] > healthy.max_loads(&ids)[0]);
         // No dead shards (or an all-dead mask) degenerates to balanced.
@@ -427,7 +469,8 @@ mod tests {
     #[test]
     fn capped_packer_respects_caps_and_generalizes_uniform() {
         let mut stats = CoActivationStats::new(8);
-        let steps: Vec<Vec<usize>> = (0..4).cycle().take(64).map(|g| vec![g, g + 4]).collect();
+        let steps: Vec<ExpertBitmap> =
+            (0..4).cycle().take(64).map(|g| ExpertBitmap::from_ids(&[g, g + 4])).collect();
         stats.observe(&steps);
         // Uniform caps == the plain packer.
         let uniform = stats.greedy_placement_capped(&vec![2; 4]);
@@ -460,7 +503,7 @@ mod tests {
     #[test]
     fn single_shard_placement_is_identity_load() {
         let p = ExpertPlacement::balanced(8, 1);
-        let ids = vec![vec![0, 3, 7], vec![1]];
+        let ids = layers(&[vec![0, 3, 7], vec![1]]);
         assert_eq!(p.max_loads(&ids), vec![3, 1]);
         assert_eq!(p.shard_sizes(), vec![8]);
     }

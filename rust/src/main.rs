@@ -19,12 +19,13 @@ use cascade::config::{ControllerKind, EngineConfig};
 use cascade::coordinator::batch::BatchEngine;
 use cascade::coordinator::engine::Engine;
 use cascade::coordinator::scheduler::{Budget, Scheduler};
+use cascade::cost::ExpertBitmap;
 use cascade::experiments::{self, BackendKind, ExpCtx};
 use cascade::models::{default_artifacts_dir, Registry};
 use cascade::spec::policy::PolicyKind;
 use cascade::util::table::{ms, Table};
 use cascade::workload::{RequestStream, Workload};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Tiny `--flag value` parser: positional args + string flags.
 struct Args {
@@ -105,6 +106,7 @@ USAGE:
                  [--out-faults BENCH_faults.json]
                  [--out-saturation BENCH_saturation.json]
                  [--out-prefix BENCH_prefix.json]
+                 [--out-simspeed BENCH_simspeed.json]
                  (serial vs pipelined TPOT/bubble-fraction table at batch 1/4,
                   sharded TPOT at shards 1/2/4 x batch 1/4, eviction-policy
                   throughput under a half-working-set pool, per-admission
@@ -1497,6 +1499,163 @@ fn bench(args: &Args) -> Result<()> {
         ("rows", json::arr(prefix_rows)),
     ]);
     write_json_artifact(&prefix_out, &prefix_doc)?;
+
+    // ---- Hot-path simspeed bench (BENCH_simspeed.json) ------------------
+    // Two views of the hot-path rebuild (rust/docs/perf.md):
+    //
+    // 1. `kernel`: the per-iteration expert-set algebra (per-layer union
+    //    plus the shared/marginal partition) timed on identical synthetic
+    //    routing data under both representations. The legacy tree-set
+    //    kernel is re-implemented here — main.rs sits outside the
+    //    hot-path-set lint scope precisely so the pre-refactor baseline
+    //    can live on as a measurable artifact.
+    // 2. `engine`: end-to-end simulated iterations/sec of an open-loop
+    //    batch-4 × shards-2 × pipelined serving cell on the rebuilt path
+    //    (same shape as the `expert_set`/`sim` cells in
+    //    rust/benches/hot_paths.rs).
+    let simspeed_out = args.get("out-simspeed", "BENCH_simspeed.json");
+    let kernel_iters = if quick { 2_000 } else { 20_000 };
+    // Synthetic routing data: 8 layers × 4 slots × 16 draws in [0, 64),
+    // fixed seed — both kernels consume the exact same id streams.
+    let kernel_sets: Vec<Vec<Vec<usize>>> = {
+        let mut krng = cascade::rng::Rng::new(0x51A5_9EED_u64 ^ seed);
+        (0..8)
+            .map(|_| (0..4).map(|_| (0..16).map(|_| krng.below(64)).collect()).collect())
+            .collect()
+    };
+    let legacy_pass = |sets: &[Vec<Vec<usize>>]| -> usize {
+        let mut acc = 0usize;
+        for layer in sets {
+            let slot_sets: Vec<BTreeSet<usize>> =
+                layer.iter().map(|ids| ids.iter().copied().collect()).collect();
+            let mut mult: BTreeMap<usize, u32> = BTreeMap::new();
+            for s in &slot_sets {
+                for &e in s {
+                    *mult.entry(e).or_insert(0) += 1;
+                }
+            }
+            let shared: BTreeSet<usize> =
+                mult.iter().filter(|&(_, &c)| c >= 2).map(|(&e, _)| e).collect();
+            for s in &slot_sets {
+                acc += s.difference(&shared).count();
+            }
+            acc += mult.len() + shared.len();
+        }
+        acc
+    };
+    let bitmap_pass = |sets: &[Vec<Vec<usize>>]| -> usize {
+        let mut acc = 0usize;
+        for layer in sets {
+            let mut once = ExpertBitmap::new();
+            let mut twice = ExpertBitmap::new();
+            let slot_sets: Vec<ExpertBitmap> =
+                layer.iter().map(|ids| ExpertBitmap::from_ids(ids)).collect();
+            for s in &slot_sets {
+                twice.union_with(&s.and(&once));
+                once.union_with(s);
+            }
+            for s in &slot_sets {
+                acc += s.and_not(&twice).count();
+            }
+            acc += once.count() + twice.count();
+        }
+        acc
+    };
+    // Same inputs must mean same answers before the timings mean anything.
+    anyhow::ensure!(
+        legacy_pass(&kernel_sets) == bitmap_pass(&kernel_sets),
+        "expert-set kernels disagree on identical inputs"
+    );
+    let time_kernel = |f: &dyn Fn(&[Vec<Vec<usize>>]) -> usize| -> f64 {
+        let mut sink = 0usize;
+        let t0 = std::time::Instant::now(); // lint:allow(wall-clock): host wall-time kernel timing only
+        for _ in 0..kernel_iters {
+            sink = sink.wrapping_add(std::hint::black_box(f(&kernel_sets)));
+        }
+        let per_iter = t0.elapsed().as_nanos() as f64 / kernel_iters as f64;
+        std::hint::black_box(sink);
+        per_iter
+    };
+    let legacy_ns = time_kernel(&legacy_pass);
+    let bitmap_ns = time_kernel(&bitmap_pass);
+    let kernel_speedup = legacy_ns / bitmap_ns.max(1e-9);
+
+    // End-to-end open-loop cell on the rebuilt path.
+    let mut sim_cfg = ctx.batch_cfg("mixtral", 4);
+    sim_cfg.shards = 2;
+    sim_cfg.pipeline = true;
+    let sim_budget = if quick { 600 } else { 2_400 };
+    let t0 = std::time::Instant::now(); // lint:allow(wall-clock): host wall-time bench column only
+    let sim_m = {
+        let mut engine = ctx.batch_engine(sim_cfg, &policy)?;
+        let stream = RequestStream::new(workload.clone(), seed, ctx.max_new_tokens);
+        let arrivals = cascade::workload::arrivals::ArrivalProcess::new(
+            cascade::workload::arrivals::ArrivalKind::Poisson { rate: 64.0 },
+            stream,
+            seed,
+        )?;
+        let mut sched = Scheduler::with_arrivals(
+            arrivals,
+            Budget { max_tokens: sim_budget, max_requests: 10_000 },
+        );
+        sched.run_batched(&mut engine)?
+    };
+    let sim_host_s = t0.elapsed().as_secs_f64();
+    let sim_iters = sim_m.iters.len();
+    let iters_per_sec = sim_iters as f64 / sim_host_s.max(1e-9);
+
+    let mut sst = Table::new(
+        "simspeed bench: expert-set kernel + open-loop engine (host wall time)",
+        &["cell", "value", "unit"],
+    );
+    sst.row(vec!["kernel_btreeset".into(), format!("{legacy_ns:.0}"), "ns/pass".into()]);
+    sst.row(vec!["kernel_bitmap".into(), format!("{bitmap_ns:.0}"), "ns/pass".into()]);
+    sst.row(vec!["kernel_speedup".into(), format!("{kernel_speedup:.2}x"), "".into()]);
+    sst.row(vec!["engine_iterations".into(), sim_iters.to_string(), "iters".into()]);
+    sst.row(vec![
+        "engine_iterations_per_sec".into(),
+        format!("{iters_per_sec:.0}"),
+        "iters/s".into(),
+    ]);
+    println!("{}", sst.render());
+
+    let simspeed_doc = json::obj(vec![
+        ("bench", json::str("simspeed")),
+        ("model", json::str("mixtral")),
+        ("task", json::str(task)),
+        ("policy", json::str("static-k3")),
+        ("backend", json::str("sim")),
+        ("batch", json::num(4.0)),
+        ("shards", json::num(2.0)),
+        ("pipeline", json::Value::Bool(true)),
+        ("arrivals", json::str("poisson")),
+        ("rate_per_s", json::num(64.0)),
+        ("quick", json::Value::Bool(quick)),
+        (
+            "kernel",
+            json::obj(vec![
+                ("passes", json::num(kernel_iters as f64)),
+                ("btreeset_ns_per_pass", json::num(legacy_ns)),
+                ("bitmap_ns_per_pass", json::num(bitmap_ns)),
+                ("speedup_bitmap_over_btreeset", json::num(kernel_speedup)),
+            ]),
+        ),
+        (
+            "engine",
+            json::obj(vec![
+                ("iterations", json::num(sim_iters as f64)),
+                ("host_wall_s", json::num(sim_host_s)),
+                ("iterations_per_sec_host", json::num(iters_per_sec)),
+                ("tokens", json::num(sim_m.run.total_tokens() as f64)),
+                (
+                    "tokens_per_sec_host",
+                    json::num(sim_m.run.total_tokens() as f64 / sim_host_s.max(1e-9)),
+                ),
+                ("virtual_duration_s", json::num(sim_m.clock_s)),
+            ]),
+        ),
+    ]);
+    write_json_artifact(&simspeed_out, &simspeed_doc)?;
 
     let faults_doc = json::obj(vec![
         ("bench", json::str("faults")),

@@ -22,34 +22,48 @@
 //! cross-check against the real backend (rust/tests/engine_integration.rs).
 
 use crate::coordinator::backend::{Backend, BackendStep, BatchStep, SlotStep, VerifySpan};
+use crate::cost::ExpertBitmap;
 use crate::models::MiniConfig;
-use crate::rng::Rng;
+use crate::rng::BufRng;
 use crate::workload::Request;
 use anyhow::Result;
-use std::collections::BTreeSet;
 
 /// Most in-flight requests the sim backend tracks.
 pub const SIM_MAX_SLOTS: usize = 64;
 
-/// Per-request routing state.
+/// Per-request routing state. All hot collections are flat and reused
+/// across iterations: the previous token's top-k picks live in one
+/// `layers × top_k` array (rewritten in place each token), and the
+/// per-step trajectory is one `tokens × layers × top_k` array resized —
+/// never reallocated once warm — per step.
 struct SimSlot {
-    rng: Rng,
+    rng: BufRng,
     cache_len: usize,
-    /// Previous token's expert set per layer.
-    prev_experts: Vec<Vec<usize>>,
-    /// Per-token routing-state trajectory of the last step, so `advance`
-    /// can roll the affinity state back to the accepted position (matching
-    /// the real backend's rstate rollback).
-    traj: Vec<Vec<Vec<usize>>>,
+    /// Previous token's expert picks, flattened: layer `l` owns
+    /// `[l*k, (l+1)*k)`. Slot positions are meaningful (the affinity
+    /// process keeps *slot* `i`'s pick with probability `affinity`).
+    prev_experts: Vec<usize>,
+    /// Whether layer `l` has routed at least one token — gates the
+    /// affinity reuse draw exactly like the old empty-set check did.
+    prev_filled: Vec<bool>,
+    /// Routing-state trajectory of the last step (token-major, same
+    /// per-layer stride as `prev_experts`), so `advance` can roll the
+    /// affinity state back to the accepted position (matching the real
+    /// backend's rstate rollback).
+    traj: Vec<usize>,
+    /// Tokens recorded in `traj` by the last step.
+    traj_tokens: usize,
 }
 
 impl SimSlot {
-    fn fresh(layers: usize) -> Self {
+    fn fresh(layers: usize, top_k: usize) -> Self {
         Self {
-            rng: Rng::new(0),
+            rng: BufRng::new(0),
             cache_len: 0,
-            prev_experts: vec![Vec::new(); layers],
+            prev_experts: vec![0; layers * top_k],
+            prev_filled: vec![false; layers],
             traj: Vec::new(),
+            traj_tokens: 0,
         }
     }
 }
@@ -64,72 +78,85 @@ pub struct SimBackend {
 
 impl SimBackend {
     pub fn new(mini: MiniConfig, seed: u64) -> Self {
-        let layers = mini.layers;
-        Self { mini, seed, slots: vec![SimSlot::fresh(layers)] }
+        let (layers, top_k) = (mini.layers, mini.top_k);
+        Self { mini, seed, slots: vec![SimSlot::fresh(layers, top_k)] }
     }
 
-    /// Advance one slot's routing process by one token on one layer.
-    fn route_layer(mini: &MiniConfig, s: &mut SimSlot, layer: usize) -> Vec<usize> {
+    /// Advance one layer's routing process by one token, in place: `set`
+    /// holds the previous token's picks on entry (when `filled`) and the
+    /// new token's picks on exit. Draw order is exactly the historical
+    /// sequence — per slot position, one `chance` draw iff `filled`, one
+    /// `below` draw iff not reused, then the duplicate-resample draws —
+    /// so the stream is bit-identical to the `Vec`-based router.
+    fn route_layer(mini: &MiniConfig, rng: &mut BufRng, filled: bool, set: &mut [usize]) {
         let e = mini.n_experts;
-        let k = mini.top_k;
         let a = mini.affinity;
-        let prev = std::mem::take(&mut s.prev_experts[layer]);
-        let mut set: Vec<usize> = Vec::with_capacity(k);
-        for slot in 0..k {
-            let reuse = slot < prev.len() && s.rng.chance(a);
-            let pick = if reuse {
-                prev[slot]
-            } else {
-                s.rng.below(e)
-            };
-            set.push(pick);
+        for i in 0..set.len() {
+            let reuse = filled && rng.chance(a);
+            if !reuse {
+                set[i] = rng.below(e);
+            }
         }
         // Top-k picks are distinct in the real router: resample duplicates.
         for i in 0..set.len() {
             while set[..i].contains(&set[i]) {
-                set[i] = s.rng.below(e);
+                set[i] = rng.below(e);
             }
         }
-        s.prev_experts[layer] = set.clone();
-        set
     }
 
-    /// Route one token across all layers on one slot.
-    fn route_token(mini: &MiniConfig, s: &mut SimSlot) -> Vec<Vec<usize>> {
-        (0..mini.layers).map(|l| Self::route_layer(mini, s, l)).collect()
+    /// Route one token across all layers on one slot, updating the
+    /// previous-token state in place.
+    fn route_token(mini: &MiniConfig, s: &mut SimSlot) {
+        let k = mini.top_k;
+        let SimSlot { rng, prev_experts, prev_filled, .. } = s;
+        for l in 0..mini.layers {
+            Self::route_layer(mini, rng, prev_filled[l], &mut prev_experts[l * k..(l + 1) * k]);
+            prev_filled[l] = true;
+        }
     }
 
-    /// Route + sample one span on one slot. Returns the per-layer unique
-    /// expert-id sets (empty sets for dense) and the sampled tokens.
+    /// Route + sample one span on one slot. Unions each routed set into
+    /// `unique` (one bitmap per layer, caller-cleared; untouched for
+    /// dense) and refills `sampled` with the span's tokens — both are
+    /// caller-owned scratch so the batched step allocates nothing here.
     fn step_slot(
         &mut self,
         slot: usize,
         t: usize,
         guides: &[Option<u32>],
         eps: f64,
-    ) -> (Vec<BTreeSet<usize>>, Vec<u32>) {
+        unique: &mut [ExpertBitmap],
+        sampled: &mut Vec<u32>,
+    ) {
         let mini = &self.mini;
         let s = &mut self.slots[slot];
-        let mut unique: Vec<BTreeSet<usize>> = vec![Default::default(); mini.layers];
+        let k = mini.top_k;
+        let stride = mini.layers * k;
         s.traj.clear();
-        if mini.is_moe {
-            for _ in 0..t {
-                let sets = Self::route_token(mini, s);
-                for (l, set) in sets.iter().enumerate() {
-                    unique[l].extend(set.iter().copied());
+        s.traj_tokens = 0;
+        if mini.is_moe && k > 0 {
+            s.traj.resize(t * stride, 0);
+            s.traj_tokens = t;
+            for tok in 0..t {
+                Self::route_token(mini, s);
+                let base = tok * stride;
+                s.traj[base..base + stride].copy_from_slice(&s.prev_experts);
+                for (l, set) in s.prev_experts.chunks_exact(k).enumerate() {
+                    for &e in set {
+                        unique[l].insert(e);
+                    }
                 }
-                s.traj.push(sets);
             }
         }
-        let sampled = guides
-            .iter()
-            .map(|g| match g {
+        sampled.clear();
+        for g in guides {
+            sampled.push(match g {
                 Some(g) if !s.rng.chance(eps) => *g,
                 // Deviation: an arbitrary-but-deterministic "model" token.
                 _ => s.rng.below(mini.vocab) as u32,
-            })
-            .collect();
-        (unique, sampled)
+            });
+        }
     }
 }
 
@@ -151,11 +178,13 @@ impl Backend for SimBackend {
     }
 
     fn step(&mut self, tokens: &[u32], guides: &[Option<u32>], eps: f64) -> Result<BackendStep> {
-        let (unique, sampled) = self.step_slot(0, tokens.len(), guides, eps);
+        let mut unique = vec![ExpertBitmap::new(); self.mini.layers];
+        let mut sampled = Vec::with_capacity(tokens.len());
+        self.step_slot(0, tokens.len(), guides, eps, &mut unique, &mut sampled);
         Ok(BackendStep {
             sampled,
             unique_experts: if self.mini.is_moe {
-                unique.into_iter().map(|s| s.len()).collect()
+                unique.iter().map(|s| s.count()).collect()
             } else {
                 Vec::new()
             },
@@ -182,17 +211,16 @@ impl Backend for SimBackend {
 
     fn begin_slot(&mut self, slot: usize, req: &Request) -> Result<()> {
         anyhow::ensure!(slot < SIM_MAX_SLOTS, "sim backend: slot {slot} out of range");
-        let layers = self.mini.layers;
+        let (layers, top_k) = (self.mini.layers, self.mini.top_k);
         while self.slots.len() <= slot {
-            self.slots.push(SimSlot::fresh(layers));
+            self.slots.push(SimSlot::fresh(layers, top_k));
         }
         let s = &mut self.slots[slot];
-        s.rng = Rng::new(self.seed ^ req.id.wrapping_mul(0xA24B_AED4_963E_E407));
+        s.rng.reseed(self.seed ^ req.id.wrapping_mul(0xA24B_AED4_963E_E407));
         s.cache_len = 0;
-        for p in &mut s.prev_experts {
-            p.clear();
-        }
+        s.prev_filled.iter_mut().for_each(|f| *f = false);
         s.traj.clear();
+        s.traj_tokens = 0;
         Ok(())
     }
 
@@ -218,11 +246,14 @@ impl Backend for SimBackend {
     }
 
     fn advance_slot(&mut self, slot: usize, n: usize) {
+        let stride = self.mini.layers * self.mini.top_k;
+        let is_moe = self.mini.is_moe;
         let s = &mut self.slots[slot];
         s.cache_len += n;
         // Roll the affinity state back to the last accepted token.
-        if self.mini.is_moe && n >= 1 && n <= s.traj.len() {
-            s.prev_experts = s.traj[n - 1].clone();
+        if is_moe && n >= 1 && n <= s.traj_tokens {
+            let base = (n - 1) * stride;
+            s.prev_experts.copy_from_slice(&s.traj[base..base + stride]);
         }
     }
 
@@ -232,7 +263,7 @@ impl Backend for SimBackend {
 
     fn release_slot(&mut self, slot: usize) {
         if slot < self.slots.len() {
-            self.slots[slot] = SimSlot::fresh(self.mini.layers);
+            self.slots[slot] = SimSlot::fresh(self.mini.layers, self.mini.top_k);
         }
     }
 
@@ -240,88 +271,84 @@ impl Backend for SimBackend {
     /// pass, and expert ids are unioned per layer across the whole batch —
     /// the de-duplicated fetch set a fused MoE verify kernel would move.
     /// Because routing is id-attributable here, each slot also gets its
-    /// **marginal** expert counts — experts no other span touched — which
-    /// feed the per-request utility signal of the batched Cascade policy.
+    /// **marginal** expert set — experts no other span touched — which
+    /// feeds the per-request utility signal of the batched Cascade policy.
     fn step_batch(&mut self, spans: &[VerifySpan]) -> Result<BatchStep> {
+        self.step_batch_reusing(spans, BatchStep::default())
+    }
+
+    /// The arena form of [`Backend::step_batch`]: refills `out`'s buffers
+    /// in place. Union and shared sets are built with a once/twice
+    /// accumulator pair — `twice |= once & routed; once |= routed` — so an
+    /// expert sits in `twice` exactly when ≥ 2 spans activated it
+    /// (multiplicity ≥ 2 in the old per-id counting), and each slot's
+    /// marginal set is `routed & !twice` (multiplicity == 1). Word-ops
+    /// only; no per-id maps, no allocation once the arena is warm.
+    fn step_batch_reusing(&mut self, spans: &[VerifySpan], mut out: BatchStep) -> Result<BatchStep> {
         let layers = self.mini.layers;
         let is_moe = self.mini.is_moe;
-        let mut union: Vec<BTreeSet<usize>> = vec![Default::default(); layers];
-        let mut summed = vec![0usize; layers];
-        // Route every span first, keeping the per-slot id sets so marginal
-        // contributions can be computed against the whole batch.
-        let mut routed: Vec<(Vec<BTreeSet<usize>>, Vec<u32>)> = Vec::with_capacity(spans.len());
+        out.reset();
+        // Recycle the previous iteration's SlotStep shells (and their
+        // inner vectors) instead of allocating fresh ones.
+        let mut stash = std::mem::take(&mut out.slots);
+        if is_moe {
+            // `expert_ids` doubles as the "once" accumulator and
+            // `shared_expert_ids` as "twice"; both end up holding exactly
+            // their documented final contents.
+            out.expert_ids.resize(layers, ExpertBitmap::new());
+            out.shared_expert_ids.resize(layers, ExpertBitmap::new());
+            out.summed_unique_experts.resize(layers, 0);
+        }
         for span in spans {
             anyhow::ensure!(
                 span.slot < self.slots.len(),
                 "sim backend: step on unbound slot {}",
                 span.slot
             );
-            let (sets, sampled) = self.step_slot(span.slot, span.tokens.len(), &span.guides, span.eps);
+            let mut slot_step = stash.pop().unwrap_or_default();
+            slot_step.slot = span.slot;
+            slot_step.marginal_expert_ids.clear();
             if is_moe {
-                for (l, set) in sets.iter().enumerate() {
-                    summed[l] += set.len();
-                    union[l].extend(set.iter().copied());
+                slot_step.marginal_expert_ids.resize(layers, ExpertBitmap::new());
+            }
+            self.step_slot(
+                span.slot,
+                span.tokens.len(),
+                &span.guides,
+                span.eps,
+                &mut slot_step.marginal_expert_ids,
+                &mut slot_step.step.sampled,
+            );
+            slot_step.step.unique_experts.clear();
+            if is_moe {
+                // `marginal_expert_ids` holds the slot's *full* routed sets
+                // until the post-pass below subtracts the shared mass.
+                for (l, set) in slot_step.marginal_expert_ids.iter().enumerate() {
+                    let unique = set.count();
+                    slot_step.step.unique_experts.push(unique);
+                    out.summed_unique_experts[l] += unique;
+                    let overlap = out.expert_ids[l].and(set);
+                    out.shared_expert_ids[l].union_with(&overlap);
+                    out.expert_ids[l].union_with(set);
                 }
             }
-            routed.push((sets, sampled));
+            out.slots.push(slot_step);
         }
-        // Per layer, how many spans activated each expert; an expert with
-        // multiplicity 1 is marginal to its sole activator.
-        let mut multiplicity: Vec<std::collections::BTreeMap<usize, usize>> =
-            vec![Default::default(); layers];
         if is_moe {
-            for (sets, _) in &routed {
-                for (l, set) in sets.iter().enumerate() {
-                    for &e in set {
-                        *multiplicity[l].entry(e).or_insert(0) += 1;
-                    }
+            out.batch_unique_experts.extend(out.expert_ids.iter().map(|s| s.count()));
+            for slot_step in &mut out.slots {
+                slot_step.marginal_unique_experts.clear();
+                for (l, set) in slot_step.marginal_expert_ids.iter_mut().enumerate() {
+                    *set = set.and_not(&out.shared_expert_ids[l]);
+                    slot_step.marginal_unique_experts.push(set.count());
                 }
             }
+        } else {
+            for slot_step in &mut out.slots {
+                slot_step.marginal_unique_experts.clear();
+            }
         }
-        let mut slots = Vec::with_capacity(spans.len());
-        for (span, (sets, sampled)) in spans.iter().zip(routed) {
-            let (unique_experts, marginal_unique_experts, marginal_expert_ids) = if is_moe {
-                let unique: Vec<usize> = sets.iter().map(|s| s.len()).collect();
-                let marginal_ids: Vec<Vec<usize>> = sets
-                    .iter()
-                    .enumerate()
-                    .map(|(l, set)| {
-                        set.iter().copied().filter(|e| multiplicity[l][e] == 1).collect()
-                    })
-                    .collect();
-                let marginal: Vec<usize> = marginal_ids.iter().map(|ids| ids.len()).collect();
-                (unique, marginal, marginal_ids)
-            } else {
-                (Vec::new(), Vec::new(), Vec::new())
-            };
-            slots.push(SlotStep {
-                slot: span.slot,
-                step: BackendStep { sampled, unique_experts },
-                marginal_unique_experts,
-                marginal_expert_ids,
-            });
-        }
-        let (batch_unique_experts, summed_unique_experts, expert_ids, shared_expert_ids) =
-            if is_moe {
-                // Ids activated by >= 2 slots: the shared mass the marginal
-                // fairness floor amortizes (BTreeMap keeps them sorted).
-                let shared: Vec<Vec<usize>> = multiplicity
-                    .iter()
-                    .map(|m| m.iter().filter(|&(_, &c)| c >= 2).map(|(&e, _)| e).collect())
-                    .collect();
-                let ids: Vec<Vec<usize>> =
-                    union.iter().map(|s| s.iter().copied().collect()).collect();
-                (union.into_iter().map(|s| s.len()).collect(), summed, ids, shared)
-            } else {
-                (Vec::new(), Vec::new(), Vec::new(), Vec::new())
-            };
-        Ok(BatchStep {
-            slots,
-            batch_unique_experts,
-            summed_unique_experts,
-            expert_ids,
-            shared_expert_ids,
-        })
+        Ok(out)
     }
 }
 
@@ -534,16 +561,16 @@ mod tests {
             .collect();
         let out = b.step_batch(&spans).unwrap();
         for l in 0..2 {
-            let union = &out.expert_ids[l];
+            let union = out.expert_ids[l].to_ids();
             assert_eq!(union.len(), out.batch_unique_experts[l]);
             assert!(union.windows(2).all(|w| w[0] < w[1]), "union not sorted/deduped");
-            let mut rebuilt: Vec<usize> = out.shared_expert_ids[l].clone();
+            let mut rebuilt: Vec<usize> = out.shared_expert_ids[l].to_ids();
             for s in &out.slots {
-                assert_eq!(s.marginal_expert_ids[l].len(), s.marginal_unique_experts[l]);
-                rebuilt.extend(s.marginal_expert_ids[l].iter().copied());
+                assert_eq!(s.marginal_expert_ids[l].count(), s.marginal_unique_experts[l]);
+                rebuilt.extend(s.marginal_expert_ids[l].iter());
             }
             rebuilt.sort_unstable();
-            assert_eq!(&rebuilt, union, "marginal + shared ids != union at layer {l}");
+            assert_eq!(rebuilt, union, "marginal + shared ids != union at layer {l}");
         }
     }
 

@@ -84,6 +84,38 @@ fn a_dead_metrics_field_fails() {
 }
 
 #[test]
+fn a_tree_set_on_the_hot_path_fails_with_rule_and_location() {
+    let mut tree = load();
+    tree.files.push(SourceFile {
+        path: "rust/src/coordinator/tampered.rs".into(),
+        text: format!(
+            "fn f() {{ let s: std::collections::{}<usize> = Default::default(); }}\n",
+            concat!("BTree", "Set")
+        ),
+    });
+    let v = analysis::run_all(&tree);
+    assert!(
+        v.iter().any(|v| v.rule == "hot-path-set"
+            && v.path == "rust/src/coordinator/tampered.rs"
+            && v.line == 1),
+        "{}",
+        analysis::report(&v)
+    );
+}
+
+#[test]
+fn the_bitmap_reference_model_stays_exempt() {
+    // The differential tests in cost/bitmap.rs hold the tree set as the
+    // reference model on purpose; the rule must never flag them.
+    let v = analysis::run_all(&load());
+    assert!(
+        !v.iter().any(|v| v.rule == "hot-path-set"),
+        "{}",
+        analysis::report(&v)
+    );
+}
+
+#[test]
 fn a_blanket_allow_fails() {
     let mut tree = load();
     tree.files.push(SourceFile {

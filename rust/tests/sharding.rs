@@ -13,7 +13,7 @@
 
 use cascade::config::{DrafterKind, EngineConfig, PlacementKind};
 use cascade::coordinator::batch::BatchEngine;
-use cascade::cost::{ExpertPlacement, GpuCostModel};
+use cascade::cost::{ExpertBitmap, ExpertPlacement, GpuCostModel};
 use cascade::metrics::BatchRunMetrics;
 use cascade::models::{default_artifacts_dir, paper_spec, Registry};
 use cascade::spec::policy::PolicyKind;
@@ -114,13 +114,8 @@ fn balanced_expert_cost_monotone_nonincreasing_over_doubling_shards() {
         (state >> 33) as usize % 64
     };
     for _ in 0..20 {
-        let per_layer: Vec<Vec<usize>> = (0..2)
-            .map(|_| {
-                let mut ids: Vec<usize> = (0..24).map(|_| next()).collect();
-                ids.sort_unstable();
-                ids.dedup();
-                ids
-            })
+        let per_layer: Vec<ExpertBitmap> = (0..2)
+            .map(|_| (0..24).map(|_| next()).collect::<ExpertBitmap>())
             .collect();
         let mut prev = f64::INFINITY;
         for shards in [1usize, 2, 4, 8] {
